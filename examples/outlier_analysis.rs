@@ -1,0 +1,81 @@
+//! Walk the paper's outlier analysis (Figures 2b, 7, 8, 9) on the trained
+//! model: collect real activations, classify outliers, measure smoothness
+//! under X / R / RS / RRS, and run the victim-effect Monte Carlo.
+//!
+//!     cargo run --release --example outlier_analysis
+
+use rrs::eval::smoothness::{
+    collect_mu, outlier_histogram, prob_less_smooth_after_rotation, victim_u,
+    SmoothMode,
+};
+use rrs::harness::Ctx;
+use rrs::model::engine::capture_activations;
+use rrs::model::tokenizer;
+use rrs::model::weights::OutlierProfile;
+use rrs::util::rng::Pcg;
+use rrs::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::load("artifacts", "reports", true)?;
+    let profile = OutlierProfile::builtin("llama3-70b-like").unwrap();
+    let w = ctx.weights_for(&profile)?;
+    let toks = tokenizer::encode(&ctx.val_text);
+    let acts = capture_activations(&w, &ctx.mcfg, &toks[..192]);
+
+    println!("== outlier analysis on profile '{}' ==\n", profile.name);
+
+    println!("-- Fig 2b: P(token less smooth after rotation)");
+    for (name, list) in [("qkv", &acts.qkv), ("down", &acts.down)] {
+        let p: Vec<f32> =
+            list.iter().map(prob_less_smooth_after_rotation).collect();
+        println!("  {name:<6} {:.4}", stats::mean(&p));
+    }
+    let mut rng = Pcg::new(3);
+    let g = rrs::linalg::gemm::Mat::from_vec(
+        96, ctx.mcfg.dim, rng.normal_vec(96 * ctx.mcfg.dim));
+    println!("  random {:.4}\n", prob_less_smooth_after_rotation(&g));
+
+    println!("-- Fig 7: down-projector magnitude histogram (x token median)");
+    let edges = [10.0, 50.0, 100.0, 500.0, 1000.0];
+    let mut counts = vec![0usize; edges.len() + 1];
+    for a in &acts.down {
+        for (c, n) in counts.iter_mut().zip(outlier_histogram(a, &edges)) {
+            *c += n;
+        }
+    }
+    println!("  <10x: {}  10-50x: {}  50-100x: {}  100-500x: {}  \
+              500-1000x: {}  >=1000x: {}\n",
+             counts[0], counts[1], counts[2], counts[3], counts[4], counts[5]);
+
+    println!("-- Fig 8: victim effect u vs #spike tokens (Monte Carlo)");
+    for l in [1usize, 2, 8, 32] {
+        let mut rs = Vec::new();
+        let mut rrs_ = Vec::new();
+        for t in 0..32 {
+            let mut r1 = Pcg::new(900 + t);
+            rs.push(victim_u(ctx.mcfg.dim, 64, l, 1000.0, false, &mut r1));
+            let mut r2 = Pcg::new(900 + t);
+            rrs_.push(victim_u(ctx.mcfg.dim, 64, l, 1000.0, true, &mut r2));
+        }
+        println!("  l={l:<3} u_RS={:.3}  u_RRS={:.3}",
+                 stats::mean(&rs), stats::mean(&rrs_));
+    }
+    println!();
+
+    println!("-- Fig 9: mean token mu per projector (X / R / RS / RRS)");
+    for (kind, list) in [
+        ("QKV ", &acts.qkv), ("O   ", &acts.o),
+        ("GtUp", &acts.gate_up), ("Down", &acts.down),
+    ] {
+        print!("  {kind}");
+        for mode in SmoothMode::ALL {
+            let mut mus = Vec::new();
+            for a in list {
+                mus.extend(collect_mu(a, mode));
+            }
+            print!("  {}={:.2}", mode.name(), stats::mean(&mus));
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Reproduce one Table-1 row interactively: perplexity of every method on
+//! a chosen outlier profile and scheme.
+//!
+//!     cargo run --release --example quant_eval -- [profile] [scheme]
+//!     (defaults: llama3-like a4w4kv16)
+
+use rrs::eval::perplexity::format_ppl;
+use rrs::harness::{table1, Ctx};
+use rrs::model::weights::OutlierProfile;
+use rrs::model::EngineConfig;
+use rrs::quant::{Method, Scheme};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let profile_name = args.get(1).map(|s| s.as_str()).unwrap_or("llama3-like");
+    let scheme = match args.get(2).map(|s| s.as_str()).unwrap_or("a4w4kv16") {
+        "a4w4kv4" => Scheme::A4W4KV4,
+        "a4w16kv16" => Scheme::A4W16KV16,
+        _ => Scheme::A4W4KV16,
+    };
+    let ctx = Ctx::load("artifacts", "reports", false)?;
+    let profile = OutlierProfile::builtin(profile_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown profile {profile_name}"))?;
+
+    println!("profile: {profile_name}, scheme: {}", scheme.label());
+    let fp = ctx.ppl(&profile, &EngineConfig {
+        method: Method::Fp,
+        scheme: Scheme::FP,
+        gptq: false,
+        ..Default::default()
+    })?;
+    println!("  {:<14} ppl {}", "FP16", format_ppl(fp));
+    for method in table1::METHODS {
+        let ppl = ctx.ppl(&profile, &table1::ecfg_like_table1(method, scheme))?;
+        println!("  {:<14} ppl {}", method.name(), format_ppl(ppl));
+    }
+    Ok(())
+}

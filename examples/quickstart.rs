@@ -1,0 +1,49 @@
+//! Quickstart: load the trained model, prepare it for INT4 inference with
+//! Rotated Runtime Smooth, and generate text through the coordinator.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use rrs::coordinator::{Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::model::sampler::Sampling;
+use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::runtime::Artifacts;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifacts (trained weights + manifest)
+    let artifacts = Artifacts::load("artifacts")?;
+    let weights = Weights::load(artifacts.weights_path(), &artifacts.model)?;
+
+    // 2. offline preparation: GPTQ INT4 weights in the rotated space,
+    //    INT4 KV cache, Runtime Smooth group = 128 (the fused-kernel cfg)
+    let val = artifacts.val_text()?;
+    let calib = tokenizer::encode(&val[..512.min(val.len())]);
+    let ecfg = EngineConfig {
+        method: Method::Rrs,
+        scheme: Scheme::A4W4KV4,
+        group: 128,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(
+        &weights, &artifacts.model, &ecfg, Some(&calib), None)?;
+    println!("prepared {} for inference", ecfg.label());
+
+    // 3. serve a request through the coordinator
+    let coord = Coordinator::start(
+        RustServeEngine::new(model), SchedulerConfig::default());
+    for prompt in ["arlo is", "count: 1 2 3 4", "senna likes"] {
+        let resp = coord
+            .generate(tokenizer::encode(prompt), 24, Sampling::Greedy,
+                      Some(b'.' as u32))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "  {:<20} -> {:?}  ({} tok, {:.1} ms)",
+            format!("{prompt:?}"),
+            tokenizer::decode(&resp.tokens),
+            resp.tokens.len(),
+            resp.total_ms
+        );
+    }
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! start the coordinator on the trained model under A4W4KV4 RRS, fire a
+//! batch of concurrent generation requests through the real TCP front-end
+//! and report per-request latency + aggregate throughput.
+//!
+//!     make artifacts && cargo run --release --example serve_batch
+//!
+//! Results are recorded in EXPERIMENTS.md ("End-to-end serving run").
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::runtime::Artifacts;
+use rrs::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::load("artifacts")?;
+    let weights = Weights::load(artifacts.weights_path(), &artifacts.model)?;
+    let val = artifacts.val_text()?;
+    let toks = tokenizer::encode(&val);
+    let calib: Vec<u32> =
+        (0..8).flat_map(|i| toks[i * 64..i * 64 + 64].to_vec()).collect();
+
+    let ecfg = EngineConfig {
+        method: Method::Rrs,
+        scheme: Scheme::A4W4KV4,
+        group: 128,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(
+        &weights, &artifacts.model, &ecfg, Some(&calib), None)?;
+    println!("engine: {} (rust INT4 path, fused RS GEMM)", ecfg.label());
+
+    let coord = Arc::new(Coordinator::start(
+        RustServeEngine::new(model),
+        SchedulerConfig { max_batch: 8, queue_capacity: 128, ..Default::default() },
+    ));
+
+    // bind the TCP server on an ephemeral port in a background thread
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    drop(listener); // server re-binds; tiny race acceptable for the demo
+    let c2 = coord.clone();
+    std::thread::spawn(move || {
+        let _ = server::serve(c2, &format!("127.0.0.1:{port}"));
+    });
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    println!("server on 127.0.0.1:{port}");
+
+    // 24 concurrent clients over the wire
+    let prompts = [
+        "arlo is", "brin the", "count: 2 3 4", "abc: a b c",
+        "senna likes", "at the lake", "double: 3 6", "mira is a",
+    ];
+    let n_clients = 24;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_clients {
+        let prompt = prompts[i % prompts.len()].to_string();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(String, Json)> {
+            let stream = TcpStream::connect(("127.0.0.1", port))?;
+            let mut w = stream.try_clone()?;
+            let mut r = BufReader::new(stream);
+            let req = format!(
+                r#"{{"prompt": "{prompt}", "max_tokens": 24, "stop": "."}}"#
+            );
+            w.write_all(req.as_bytes())?;
+            w.write_all(b"\n")?;
+            let mut line = String::new();
+            r.read_line(&mut line)?;
+            Ok((prompt, Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?))
+        }));
+    }
+    let mut total_tokens = 0usize;
+    let mut lats = Vec::new();
+    for h in handles {
+        let (prompt, resp) = h.join().unwrap()?;
+        let text = resp.get("text").and_then(Json::as_str).unwrap_or("<err>");
+        let tokens = resp.get("tokens").and_then(Json::as_usize).unwrap_or(0);
+        let ms = resp.get("total_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        total_tokens += tokens;
+        lats.push(ms as f32);
+        println!("  {:<14} -> {:<28} {:>3} tok {:>8.1} ms",
+                 format!("{prompt:?}"), format!("{text:?}"), tokens, ms);
+    }
+    let wall = t0.elapsed().as_secs_f32();
+    let s = rrs::util::stats::Summary::of(&lats);
+    println!("\n== serve_batch summary ==");
+    println!("requests:        {n_clients}");
+    println!("wall time:       {wall:.2} s");
+    println!("throughput:      {:.1} tokens/s", total_tokens as f32 / wall);
+    println!("latency p50/p90: {:.1} / {:.1} ms", s.p50, s.p90);
+    let m = coord.metrics.snapshot_json();
+    println!("coordinator:     {}", m.dump());
+
+    // shut the server down over the wire
+    let stream = TcpStream::connect(("127.0.0.1", port))?;
+    let mut w = stream.try_clone()?;
+    w.write_all(b"{\"cmd\": \"shutdown\"}\n")?;
+    Ok(())
+}

@@ -1,0 +1,333 @@
+"""AOT driver: train -> quantize -> lower -> export artifacts/ (build time).
+
+Run once via ``make artifacts``.  Produces, under artifacts/:
+
+  weights.rrsw       fp32 trained parameters (rust engine input)
+  spinquant_r.rrsw   learned rotation matrices (Table 3)
+  goldens.rrsw       golden inputs/outputs for rust unit+integration tests
+  qa_tasks.json      zero-shot QA task instances (Table 2)
+  profiles.json      outlier-injection profile table (Table 1 columns)
+  val.txt            held-out corpus split (perplexity stand-in)
+  train_log.csv      loss curve of the build-time training run
+  manifest.json      artifact index: graphs, shapes, configs
+  *.hlo.txt          lowered HLO text (prefill/decode per variant + demo)
+
+HLO **text** is the interchange format (not serialized protos): jax>=0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are baked into the graphs as constants, so the rust request path
+feeds only (tokens | token,kv,pos) - no parameter marshalling.  The
+outlier-profile sweep for Table 1 runs in the rust engine from
+weights.rrsw; the PJRT artifacts cover the "base" profile and serve as the
+L1/L2 numerics oracle plus the serving FP reference.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, gptq, io_rrsw, outliers, spinquant, train
+from .kernels import ref, rrs_gemm
+from .model import (
+    ModelConfig, QuantConfig, calib_absmax, capture_activations, decode_step,
+    forward, init_params, layer_names, prepare_weights,
+)
+
+CFG = ModelConfig()
+PREFILL_B, PREFILL_T = 1, 96
+DECODE_B, MAX_T = 4, 160
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: weights are baked into the graphs; the
+    # default elides them as `constant({...})`, which the rust-side text
+    # parser would reject (or silently zero).
+    return comp.as_hlo_text(True)
+
+
+def lower_and_write(fn, args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"bytes": len(text)}
+
+
+def np_params(params):
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def gptq_weights_for(params, cfg, qcfg, acts_by_layer):
+    """Offline GPTQ in the correct variant space for each linear layer."""
+    out = {}
+    for name in layer_names(cfg):
+        w = np.asarray(params[name])
+        x = acts_by_layer[name]
+        if qcfg.variant in ("quarot", "rrs"):
+            w = np.asarray(ref.rotate(jnp.asarray(w)))
+            x = np.asarray(ref.rotate(jnp.asarray(x)))
+        wq, sw = gptq.gptq_quantize(w, x[:256])
+        out[name] = (jnp.asarray(wq), jnp.asarray(sw))
+    return out
+
+
+def acts_per_layer(params, cfg, tokens):
+    """Map linear-name -> calibration activations (inputs to that linear)."""
+    acts = capture_activations(params, cfg, tokens)
+    out = {}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        out[p + "wq"] = np.asarray(acts["qkv"][i])
+        out[p + "wk"] = out[p + "wq"]
+        out[p + "wv"] = out[p + "wq"]
+        out[p + "wo"] = np.asarray(acts["o"][i])
+        out[p + "w_gate"] = np.asarray(acts["gate_up"][i])
+        out[p + "w_up"] = out[p + "w_gate"]
+        out[p + "w_down"] = np.asarray(acts["down"][i])
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--spin-steps", type=int, default=120)
+    ap.add_argument("--finetune-steps", type=int, default=200)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    wpath = os.path.join(out, "weights.rrsw")
+    if os.path.exists(wpath) and not args.force:
+        print("loading cached weights", flush=True)
+        raw = io_rrsw.read_rrsw(wpath)
+        params = {k: jnp.asarray(v) for k, v in raw.items()}
+        _, val_text, kb = data.build_corpus()
+        log = []
+    else:
+        params, log, _, val_text = train.train(CFG, steps=args.steps)
+        _, _, kb = data.build_corpus()
+        io_rrsw.write_rrsw(wpath, np_params(params))
+        with open(os.path.join(out, "train_log.csv"), "w") as f:
+            f.write("step,loss,seconds\n")
+            for s, l, sec in log:
+                f.write(f"{s},{l:.6f},{sec:.2f}\n")
+    print(f"[{time.time()-t0:.0f}s] weights ready "
+          f"({CFG.param_count(params)} params)", flush=True)
+
+    with open(os.path.join(out, "val.txt"), "w") as f:
+        f.write(val_text)
+    train_text, _, _ = data.build_corpus()
+
+    # ---------------- per-profile outlier model variants (Table 1 columns)
+    # inject uncompensated outlier structure, then finetune the rest of
+    # the network around the frozen outlier tensors -> healthy fp models
+    # that genuinely carry channel-wise + spike activation outliers.
+    profile_fp = {}
+    for name, prof in outliers.PROFILES.items():
+        if name == "base":
+            continue
+        ppath = os.path.join(out, f"weights_{name}.rrsw")
+        if os.path.exists(ppath) and not args.force:
+            print(f"[{time.time()-t0:.0f}s] cached profile '{name}'", flush=True)
+            continue
+        pparams, frozen = outliers.inject_uncompensated(params, prof)
+        pparams, last = train.finetune(
+            pparams, CFG, train_text, frozen, steps=args.finetune_steps
+        )
+        nll = train.eval_nll(pparams, CFG, val_text)
+        profile_fp[name] = float(np.exp(nll))
+        io_rrsw.write_rrsw(ppath, np_params(pparams))
+        print(f"[{time.time()-t0:.0f}s] profile '{name}': final loss "
+              f"{last:.3f}, val ppl {np.exp(nll):.3f}", flush=True)
+    with open(os.path.join(out, "qa_tasks.json"), "w") as f:
+        json.dump(data.build_qa_tasks(kb), f)
+    with open(os.path.join(out, "profiles.json"), "w") as f:
+        json.dump({k: v.to_dict() for k, v in outliers.PROFILES.items()}, f,
+                  indent=1)
+
+    # ---------------- calibration + offline weight quant (base profile)
+    val_toks = train.encode(val_text)
+    calib = np.stack([val_toks[i * 64 : i * 64 + 64] for i in range(8)])
+    calib_j = jnp.asarray(calib)
+    acts_map = acts_per_layer(params, CFG, calib_j)
+    print(f"[{time.time()-t0:.0f}s] calibration captured", flush=True)
+
+    manifest = {
+        "model": {
+            "vocab": CFG.vocab, "dim": CFG.dim, "n_layers": CFG.n_layers,
+            "n_heads": CFG.n_heads, "n_kv_heads": CFG.n_kv_heads,
+            "ffn": CFG.ffn, "max_seq": CFG.max_seq,
+            "rope_theta": CFG.rope_theta,
+            "params": int(CFG.param_count(params)),
+        },
+        "prefill": {"batch": PREFILL_B, "seq": PREFILL_T},
+        "decode": {"batch": DECODE_B, "max_t": MAX_T},
+        "graphs": {},
+    }
+
+    # ---------------- lower prefill + decode graphs per variant
+    variants = {
+        "fp": QuantConfig("fp"),
+        "rtn": QuantConfig("rtn", w_bits=4, kv_bits=4),
+        "rrs": QuantConfig("rrs", w_bits=4, kv_bits=4, group=128),
+    }
+    kd = CFG.n_kv_heads * CFG.head_dim
+    for vname, qcfg in variants.items():
+        gq = (gptq_weights_for(params, CFG, qcfg, acts_map)
+              if qcfg.w_bits == 4 else None)
+        prep = prepare_weights(params, CFG, qcfg, gptq_weights=gq)
+
+        def prefill_fn(tokens, _prep=prep, _q=qcfg):
+            return (forward(params, _prep, CFG, _q, tokens),)
+
+        toks_spec = jax.ShapeDtypeStruct((PREFILL_B, PREFILL_T), jnp.int32)
+        path = os.path.join(out, f"prefill_{vname}.hlo.txt")
+        info = lower_and_write(prefill_fn, (toks_spec,), path)
+        manifest["graphs"][f"prefill_{vname}"] = {
+            "file": os.path.basename(path),
+            "inputs": [["tokens", "i32", [PREFILL_B, PREFILL_T]]],
+            "outputs": [["logits", "f32", [PREFILL_B, PREFILL_T, CFG.vocab]]],
+            "quant": vars(qcfg) | {"variant": qcfg.variant},
+            **info,
+        }
+        print(f"[{time.time()-t0:.0f}s] lowered prefill_{vname} "
+              f"({info['bytes']} bytes)", flush=True)
+
+        def decode_fn(token, kc, vc, pos, _prep=prep, _q=qcfg):
+            return decode_step(params, _prep, CFG, _q, token, kc, vc, pos)
+
+        tok_spec = jax.ShapeDtypeStruct((DECODE_B, 1), jnp.int32)
+        kv_spec = jax.ShapeDtypeStruct(
+            (CFG.n_layers, DECODE_B, MAX_T, CFG.n_kv_heads, CFG.head_dim),
+            jnp.float32)
+        pos_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+        path = os.path.join(out, f"decode_{vname}.hlo.txt")
+        info = lower_and_write(
+            decode_fn, (tok_spec, kv_spec, kv_spec, pos_spec), path)
+        manifest["graphs"][f"decode_{vname}"] = {
+            "file": os.path.basename(path),
+            "inputs": [
+                ["token", "i32", [DECODE_B, 1]],
+                ["kcache", "f32", list(kv_spec.shape)],
+                ["vcache", "f32", list(kv_spec.shape)],
+                ["pos", "i32", [1]],
+            ],
+            "outputs": [
+                ["logits", "f32", [DECODE_B, 1, CFG.vocab]],
+                ["kcache", "f32", list(kv_spec.shape)],
+                ["vcache", "f32", list(kv_spec.shape)],
+            ],
+            "quant": vars(qcfg) | {"variant": qcfg.variant},
+            **info,
+        }
+        print(f"[{time.time()-t0:.0f}s] lowered decode_{vname}", flush=True)
+
+    # ---------------- standalone fused-kernel demo artifact (quickstart)
+    rngd = np.random.default_rng(3)
+    demo_w = rngd.normal(size=(128, 128)).astype(np.float32)
+    demo_wq, demo_sw = ref.quant_per_channel_w(ref.rotate(jnp.asarray(demo_w)))
+
+    def demo_fn(x):
+        return (rrs_gemm.rrs_gemm(x, demo_wq, demo_sw, group=64),)
+
+    demo_spec = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+    path = os.path.join(out, "demo_rrs_gemm.hlo.txt")
+    info = lower_and_write(demo_fn, (demo_spec,), path)
+    manifest["graphs"]["demo_rrs_gemm"] = {
+        "file": "demo_rrs_gemm.hlo.txt",
+        "inputs": [["x", "f32", [16, 128]]],
+        "outputs": [["y", "f32", [16, 128]]],
+        **info,
+    }
+
+    # ---------------- SpinQuant trained rotation (Table 3)
+    xs = [acts_map[f"layers.{i}.wq"] for i in range(CFG.n_layers)]
+    ws = [np.asarray(params[f"layers.{i}.wq"]) for i in range(CFG.n_layers)]
+    r, spin_log = spinquant.train_rotation(
+        xs, ws, CFG.dim, steps=args.spin_steps)
+    xs_d = [acts_map[f"layers.{i}.w_down"] for i in range(CFG.n_layers)]
+    ws_d = [np.asarray(params[f"layers.{i}.w_down"]) for i in range(CFG.n_layers)]
+    r_ffn, spin_log_ffn = spinquant.train_rotation(
+        xs_d, ws_d, CFG.ffn, steps=args.spin_steps)
+    io_rrsw.write_rrsw(os.path.join(out, "spinquant_r.rrsw"),
+                       {"r_dim": r, "r_ffn": r_ffn})
+    manifest["spinquant"] = {"loss_log_dim": spin_log,
+                             "loss_log_ffn": spin_log_ffn}
+    print(f"[{time.time()-t0:.0f}s] spinquant rotations trained", flush=True)
+
+    # ---------------- golden vectors for rust tests
+    rng = np.random.default_rng(0)
+    gx = rng.normal(size=(16, 128)).astype(np.float32)
+    gx[:, 3] *= 40.0  # channel outlier
+    gx[5, 77] = 90.0  # spike outlier
+    gw = rng.normal(size=(64, 128)).astype(np.float32)
+    gxj, gwj = jnp.asarray(gx), jnp.asarray(gw)
+    q, s = ref.quant_per_token(gxj)
+    wq, sw = ref.quant_per_channel_w(gwj)
+    wqr, swr = ref.quant_per_channel_w(ref.rotate(gwj))
+    goldens = {
+        "x": gx, "w": gw,
+        "quant_q": np.asarray(q), "quant_s": np.asarray(s),
+        "rotate": np.asarray(ref.rotate(gxj)),
+        "gemm_fp": np.asarray(ref.gemm_fp(gxj, gwj)),
+        "gemm_rtn": np.asarray(ref.gemm_a4w4_per_channel(gxj, gwj)),
+        "gemm_sub": np.asarray(ref.gemm_a4w4_sub_channel(gxj, gwj, 32)),
+        "gemm_rs_g1": np.asarray(ref.gemm_rs(gxj, gwj, group=1)),
+        "gemm_rs_g32": np.asarray(ref.gemm_rs(gxj, gwj, group=32)),
+        "gemm_quarot": np.asarray(ref.gemm_quarot(gxj, gwj)),
+        "gemm_rrs_g32": np.asarray(ref.gemm_rrs(gxj, gwj, group=32)),
+        "kv_fq_g32": np.asarray(ref.kv_fake_quant(gxj, 32)),
+        "smooth_mu": np.asarray(ref.smoothness_mu(gxj)),
+        "wq": np.asarray(wq), "sw": np.asarray(sw),
+        "wq_rot": np.asarray(wqr), "sw_rot": np.asarray(swr),
+    }
+    # GPTQ golden (small, deterministic)
+    gq, gsc = gptq.gptq_quantize(gw, gx)
+    goldens["gptq_wq"] = gq
+    goldens["gptq_sw"] = gsc
+    # smoothquant golden
+    am = np.abs(gx).max(axis=0)
+    sq_s = np.asarray(ref.smoothquant_scales(jnp.asarray(am), gwj))
+    goldens["sq_scales"] = sq_s
+    goldens["gemm_sq"] = np.asarray(ref.gemm_smoothquant(gxj, gwj, jnp.asarray(sq_s)))
+    # model-level goldens (base profile): fp + rrs prefill logits
+    gt = np.asarray(val_toks[: PREFILL_B * PREFILL_T], dtype=np.int32).reshape(
+        PREFILL_B, PREFILL_T
+    )
+    goldens["prefill_tokens"] = gt
+    for vname, qcfg in variants.items():
+        gq_w = (gptq_weights_for(params, CFG, qcfg, acts_map)
+                if qcfg.w_bits == 4 else None)
+        prep = prepare_weights(params, CFG, qcfg, gptq_weights=gq_w)
+        lg = forward(params, prep, CFG, qcfg, jnp.asarray(gt))
+        goldens[f"prefill_logits_{vname}"] = np.asarray(lg)
+    # demo kernel golden
+    demo_x = rng.normal(size=(16, 128)).astype(np.float32)
+    goldens["demo_x"] = demo_x
+    goldens["demo_y"] = np.asarray(demo_fn(jnp.asarray(demo_x))[0])
+    goldens["demo_w"] = demo_w
+    io_rrsw.write_rrsw(os.path.join(out, "goldens.rrsw"), goldens)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{time.time()-t0:.0f}s] artifacts complete -> {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Synthetic corpus + QA-task generator (build-time substrate).
+
+The paper evaluates on WikiText-2 perplexity and Common Sense QA
+(OBQA/BoolQ/ARC-e/ARC-c).  Neither dataset nor the LLaMA/Qwen checkpoints
+are available in this environment (repro band 0/5), so we substitute a
+deterministic synthetic corpus with enough latent structure for a small
+transformer to learn:
+
+  * an entity/attribute/relation knowledge base rendered through sentence
+    templates (gives the model "facts" it can be quizzed on),
+  * arithmetic and sequence patterns (gives sharply-peaked next-token
+    distributions so quantization damage is visible in perplexity),
+  * a held-out split used for teacher-forced perplexity (WikiText-2 stand-in).
+
+Four zero-shot QA tasks mirror the paper's benchmark protocol (score each
+candidate continuation by log-likelihood, pick the argmax):
+
+  * ``boolq``  - yes/no fact verification            (BoolQ stand-in)
+  * ``obqa``   - 4-way attribute completion          (OBQA stand-in)
+  * ``arc_e``  - 4-way easy pattern completion       (ARC-e stand-in)
+  * ``arc_c``  - 4-way hard relational inference     (ARC-c stand-in)
+
+Everything is generated from a seeded PRNG; the same generator is mirrored
+in rust/src/eval/qa.rs via the exported JSON task files, so python and rust
+score identical task instances.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from dataclasses import dataclass, field
+
+ENTITIES = [
+    "arlo", "brin", "ceda", "dorn", "elba", "fenn", "gilo", "hesta",
+    "irin", "jova", "kels", "lumo", "mira", "nollo", "opal", "pryn",
+    "quill", "rava", "senna", "tovo", "ursa", "velt", "wren", "xilo",
+    "yara", "zemo",
+]
+COLORS = ["red", "blue", "green", "gold", "gray", "pink", "teal", "black"]
+ANIMALS = ["fox", "owl", "cat", "elk", "bee", "yak", "hen", "ram"]
+PLACES = ["hill", "lake", "cave", "reef", "dune", "glen", "moor", "peak"]
+SIZES = ["tiny", "small", "big", "huge"]
+
+
+@dataclass
+class KnowledgeBase:
+    """Entity -> attribute assignments plus a cyclic 'likes' relation."""
+
+    color: dict = field(default_factory=dict)
+    animal: dict = field(default_factory=dict)
+    place: dict = field(default_factory=dict)
+    size: dict = field(default_factory=dict)
+    likes: dict = field(default_factory=dict)
+
+
+def build_kb(rng: random.Random) -> KnowledgeBase:
+    kb = KnowledgeBase()
+    for e in ENTITIES:
+        kb.color[e] = rng.choice(COLORS)
+        kb.animal[e] = rng.choice(ANIMALS)
+        kb.place[e] = rng.choice(PLACES)
+        kb.size[e] = rng.choice(SIZES)
+    shuffled = ENTITIES[:]
+    rng.shuffle(shuffled)
+    for a, b in zip(shuffled, shuffled[1:] + shuffled[:1]):
+        kb.likes[a] = b
+    return kb
+
+
+def fact_sentences(kb: KnowledgeBase, rng: random.Random, n: int) -> list:
+    """Render KB facts through a small set of templates."""
+    out = []
+    for _ in range(n):
+        e = rng.choice(ENTITIES)
+        t = rng.randrange(6)
+        if t == 0:
+            out.append(f"{e} is {kb.color[e]}.")
+        elif t == 1:
+            out.append(f"{e} the {kb.animal[e]} lives at the {kb.place[e]}.")
+        elif t == 2:
+            out.append(f"{e} is a {kb.size[e]} {kb.animal[e]}.")
+        elif t == 3:
+            out.append(f"{e} likes {kb.likes[e]}.")
+        elif t == 4:
+            out.append(
+                f"the {kb.animal[e]} named {e} is {kb.color[e]} and {kb.size[e]}."
+            )
+        else:
+            out.append(f"at the {kb.place[e]} you can find {e}.")
+    return out
+
+
+def pattern_sentences(rng: random.Random, n: int) -> list:
+    """Low-entropy sequences: counting, alphabet runs, doubling."""
+    out = []
+    for _ in range(n):
+        t = rng.randrange(4)
+        if t == 0:
+            a = rng.randrange(1, 6)
+            seq = " ".join(str(a + i) for i in range(5))
+            out.append(f"count: {seq}.")
+        elif t == 1:
+            a = rng.randrange(0, 20)
+            out.append(f"sum: {a} plus {a + 1} is {2 * a + 1}.")
+        elif t == 2:
+            start = rng.randrange(0, 22)
+            run = "".join(chr(ord("a") + (start + i) % 26) for i in range(6))
+            out.append(f"abc: {' '.join(run)}.")
+        else:
+            a = rng.randrange(1, 9)
+            out.append(f"double: {a} {2 * a} {4 * a}.")
+    return out
+
+
+def build_corpus(seed: int = 1234, n_facts: int = 24000, n_patterns: int = 8000):
+    """Return (train_text, val_text, kb). Deterministic in ``seed``."""
+    rng = random.Random(seed)
+    kb = build_kb(rng)
+    sents = fact_sentences(kb, rng, n_facts) + pattern_sentences(rng, n_patterns)
+    rng.shuffle(sents)
+    n_val = max(1, len(sents) // 20)
+    val = " ".join(sents[:n_val])
+    train = " ".join(sents[n_val:])
+    return train, val, kb
+
+
+# ---------------------------------------------------------------- QA tasks
+
+
+def qa_boolq(kb: KnowledgeBase, rng: random.Random, n: int) -> list:
+    """Yes/no verification. candidates = [' yes', ' no']."""
+    items = []
+    for _ in range(n):
+        e = rng.choice(ENTITIES)
+        truth = rng.random() < 0.5
+        color = kb.color[e] if truth else rng.choice(
+            [c for c in COLORS if c != kb.color[e]]
+        )
+        items.append(
+            {
+                "prompt": f"{e} is {color}. true?",
+                "candidates": [" yes", " no"],
+                "answer": 0 if truth else 1,
+            }
+        )
+    return items
+
+
+def qa_obqa(kb: KnowledgeBase, rng: random.Random, n: int) -> list:
+    """4-way attribute completion: 'X is a <size> <animal>' -> animal."""
+    items = []
+    for _ in range(n):
+        e = rng.choice(ENTITIES)
+        gold = kb.animal[e]
+        distract = rng.sample([a for a in ANIMALS if a != gold], 3)
+        cands = distract + [gold]
+        rng.shuffle(cands)
+        items.append(
+            {
+                "prompt": f"{e} is a {kb.size[e]}",
+                "candidates": [f" {c}." for c in cands],
+                "answer": cands.index(gold),
+            }
+        )
+    return items
+
+
+def qa_arc_e(rng: random.Random, n: int) -> list:
+    """Easy pattern completion: next number in a counting run."""
+    items = []
+    for _ in range(n):
+        a = rng.randrange(1, 6)
+        prompt = "count: " + " ".join(str(a + i) for i in range(4))
+        gold = str(a + 4)
+        pool = {str(a + 4 + d) for d in (1, 2, 3)}
+        cands = sorted(pool) + [gold]
+        rng.shuffle(cands)
+        items.append(
+            {
+                "prompt": prompt,
+                "candidates": [f" {c}." for c in cands],
+                "answer": cands.index(gold),
+            }
+        )
+    return items
+
+
+def qa_arc_c(kb: KnowledgeBase, rng: random.Random, n: int) -> list:
+    """Hard relational hop: who does X like -> that entity's color."""
+    items = []
+    for _ in range(n):
+        e = rng.choice(ENTITIES)
+        target = kb.likes[e]
+        gold = kb.color[target]
+        distract = rng.sample([c for c in COLORS if c != gold], 3)
+        cands = distract + [gold]
+        rng.shuffle(cands)
+        items.append(
+            {
+                "prompt": f"{e} likes {target}. {target} is",
+                "candidates": [f" {c}." for c in cands],
+                "answer": cands.index(gold),
+            }
+        )
+    return items
+
+
+def build_qa_tasks(kb: KnowledgeBase, seed: int = 99, n_per_task: int = 200) -> dict:
+    rng = random.Random(seed)
+    return {
+        "boolq": qa_boolq(kb, rng, n_per_task),
+        "obqa": qa_obqa(kb, rng, n_per_task),
+        "arc_e": qa_arc_e(rng, n_per_task),
+        "arc_c": qa_arc_c(kb, rng, n_per_task),
+    }
+
+
+def export_qa(tasks: dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(tasks, f)
+
+
+if __name__ == "__main__":
+    train, val, kb = build_corpus()
+    print(f"train={len(train)} chars val={len(val)} chars")
+    tasks = build_qa_tasks(kb)
+    for k, v in tasks.items():
+        print(k, len(v), v[0])

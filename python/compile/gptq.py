@@ -1,0 +1,83 @@
+"""GPTQ weight quantization (Frantar et al., 2022) - build-time substrate.
+
+The paper quantizes weights with per-channel symmetric GPTQ using 128
+calibration sequences; activations are RTN.  This module implements the
+standard GPTQ column sweep with Cholesky-factored inverse Hessian and
+error feedback, in numpy (build-time only; the rust engine has its own
+implementation in rust/src/quant/gptq.rs tested against this one through
+the golden vectors).
+
+For variant spaces: pass ``x_calib`` already transformed the way the
+activation reaches the GEMM (rotated for quarot/rrs, smoothed for sq), and
+``w`` in the same space - GPTQ then compensates in that space.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QMAX = 7.0
+
+
+def quantize_rtn_col(col: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return np.clip(np.round(col / scale), -QMAX, QMAX)
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    x_calib: np.ndarray,
+    damp: float = 0.01,
+    block: int = 64,
+):
+    """Quantize W [M,K] given calibration activations X [N,K].
+
+    Returns (wq int8 [M,K], scale f32 [M,1]).  Per-output-channel symmetric
+    scales are fixed from absmax upfront (the paper's per-channel scheme);
+    GPTQ redistributes rounding error along K using H = 2 X^T X.
+    """
+    m, k = w.shape
+    w = w.astype(np.float64).copy()
+    h = 2.0 * (x_calib.astype(np.float64).T @ x_calib.astype(np.float64))
+    # dampen: mean of diag keeps conditioning scale-free
+    dmean = float(np.mean(np.diag(h)))
+    if dmean <= 0:
+        dmean = 1.0
+    h[np.diag_indices(k)] += damp * dmean
+    # dead channels: no calib signal -> freeze via large diagonal
+    dead = np.diag(h) <= 0
+    h[dead, dead] = dmean
+
+    scale = np.maximum(np.abs(w).max(axis=1, keepdims=True), 1e-8) / QMAX
+
+    # Upper Cholesky factor U of H^{-1}: Hinv = L L^T with L lower, so
+    # U = L^T satisfies Hinv = U^T U (the factor GPTQ's sweep consumes).
+    linv = np.linalg.inv(np.linalg.cholesky(h))
+    hinv = linv.T @ linv  # H^{-1}
+    hinv_u = np.linalg.cholesky(hinv).T
+
+    q = np.zeros_like(w)
+    for b0 in range(0, k, block):
+        b1 = min(b0 + block, k)
+        werr = np.zeros((m, b1 - b0))
+        for j in range(b0, b1):
+            d = hinv_u[j, j]
+            col = w[:, j]
+            qcol = quantize_rtn_col(col, scale[:, 0])
+            q[:, j] = qcol
+            err = (col - qcol * scale[:, 0]) / d
+            # update remaining columns inside the block
+            if j + 1 < b1:
+                w[:, j + 1 : b1] -= np.outer(err, hinv_u[j, j + 1 : b1])
+            werr[:, j - b0] = err
+        # propagate block error to the tail
+        if b1 < k:
+            w[:, b1:] -= werr @ hinv_u[b0:b1, b1:]
+    return q.astype(np.int8), scale.astype(np.float32)
+
+
+def gptq_layer_error(w, wq, scale, x_calib) -> float:
+    """Relative output MSE of the quantized layer on the calib batch."""
+    y = x_calib @ w.T
+    yq = x_calib @ (wq.astype(np.float32) * scale).T
+    denom = float(np.mean(y * y)) + 1e-12
+    return float(np.mean((y - yq) ** 2)) / denom

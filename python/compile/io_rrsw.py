@@ -1,0 +1,63 @@
+"""`.rrsw` tensor container - the python<->rust weight/golden interchange.
+
+Binary layout (little-endian):
+
+    magic   b"RRSW1\\n"                      6 bytes
+    u32     n_tensors
+    per tensor:
+        u16  name_len,  name (utf-8)
+        u8   dtype      0=f32  1=i8  2=i32  3=u8
+        u8   ndim
+        u32  dims[ndim]
+        raw  data (C order, LE)
+
+Mirrored by rust/src/util/io.rs; both sides are round-trip tested against
+the golden files written by compile/aot.py.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"RRSW1\n"
+_DTYPES = {0: np.float32, 1: np.int8, 2: np.int32, 3: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1,
+          np.dtype(np.int32): 2, np.dtype(np.uint8): 3}
+
+
+def write_rrsw(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in _CODES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_rrsw(path: str) -> Dict[str, np.ndarray]:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(6) == MAGIC, f"{path}: bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code])
+            count = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(
+                f.read(count * dt.itemsize), dtype=dt
+            ).reshape(dims).copy()
+    return out

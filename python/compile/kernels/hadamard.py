@@ -1,0 +1,83 @@
+"""Pallas Hadamard-rotation kernel (L1, interpret=True).
+
+The QuaRot/RRS online rotation is ``x @ H_K`` with H the normalized
+Sylvester-Hadamard matrix.  On TPU the natural formulation is a dense
+matmul against the +-1/sqrt(K) matrix: the MXU executes a (bn,K)x(K,K)
+tile at full systolic utilization and H lives in VMEM once (K<=512 here,
+so H is at most 1MB in f32 - far under the ~16MB VMEM budget).  This is
+the Hardware-Adaptation of the paper's CUDA "online Hadamard" (which uses
+warp-level butterflies): on TPU, log-depth butterflies would be
+VPU-serial, while the dense form is MXU-parallel.
+
+A butterfly (FWHT) variant is included for cross-checking and for the
+K > VMEM regime; it performs log2(K) in-VMEM passes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _rotate_kernel(x_ref, h_ref, o_ref):
+    # One (bn, K) tile times the (K, K) Hadamard, f32 accumulate.
+    o_ref[...] = jnp.dot(
+        x_ref[...], h_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rotate(x, block_rows: int = 8):
+    """x @ hadamard(K) via a row-blocked Pallas matmul kernel. [N,K]->[N,K]."""
+    n, k = x.shape
+    h = jnp.asarray(ref.hadamard(k))
+    br = min(block_rows, n)
+    assert n % br == 0
+    return pl.pallas_call(
+        _rotate_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, h)
+
+
+def _fwht_kernel(x_ref, o_ref):
+    # Full FWHT on a (br, K) tile: log2(K) butterfly stages in VMEM.
+    x = x_ref[...]
+    br, k = x.shape
+    h = 1
+    while h < k:
+        x = x.reshape(br, k // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        h *= 2
+    o_ref[...] = x.reshape(br, k) * (1.0 / np.sqrt(k))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def rotate_fwht(x, block_rows: int = 8):
+    """FWHT butterfly variant of ``rotate`` (O(K log K) per row)."""
+    n, k = x.shape
+    assert k & (k - 1) == 0
+    br = min(block_rows, n)
+    assert n % br == 0
+    return pl.pallas_call(
+        _fwht_kernel,
+        grid=(n // br,),
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,286 @@
+"""Pure-jnp reference oracles for every quantization primitive.
+
+These are the single source of truth for the numerics: the Pallas kernels
+(python/compile/kernels/*.py), the L2 model variants (compile/model.py) and
+the rust engine (rust/src/quant/*) are all tested against this module
+(directly via pytest, and indirectly via the golden vectors exported by
+compile/aot.py).
+
+Conventions (match the paper, Section 2.1):
+  * symmetric round-to-nearest INT4: q = clip(round(x/s), -7, 7),
+    s = absmax/7  (2^{N-1}-1 levels; -8 is unused, as in the paper).
+  * activations are quantized **per-token** (each row of the [N,K] matrix),
+    which the paper calls "per-channel" for activations;
+    weights are quantized **per-output-channel** (each row of [M,K]).
+  * sub-channel = groups of ``group`` along K, one scale per group.
+  * Runtime Smooth: s_j = max_i |X_ij| per input channel j, X/s quantized,
+    and the channel (group) scale re-applied on the de-quantized output:
+        Y = sum_j  Xq_j Wq_j^T * s_j          (paper eq. 1-3)
+  * RRS: Hadamard-rotate X and W along K first, then Runtime Smooth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = 7.0  # 2^{4-1} - 1
+
+
+# --------------------------------------------------------------- RTN INT4
+
+
+def quant_scale(absmax):
+    """Symmetric INT4 scale with a floor to avoid div-by-zero."""
+    return jnp.maximum(absmax, 1e-8) / QMAX
+
+
+def rtn_quant(x, scale):
+    """q = clip(round(x / scale), -7, 7) as int8 container."""
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX)
+    return q.astype(jnp.int8)
+
+
+def quant_per_token(x):
+    """[N,K] -> (q[N,K] int8, scale[N,1])."""
+    s = quant_scale(jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    return rtn_quant(x, s), s
+
+
+def quant_per_channel_w(w):
+    """[M,K] -> (q[M,K] int8, scale[M,1]) - per-output-channel."""
+    return quant_per_token(w)
+
+
+def quant_sub_channel(x, group: int):
+    """[N,K] -> (q[N,K] int8, scale[N,K//group]). K % group == 0."""
+    n, k = x.shape
+    xg = x.reshape(n, k // group, group)
+    s = quant_scale(jnp.max(jnp.abs(xg), axis=-1))  # [N, K//group]
+    q = rtn_quant(xg, s[..., None]).reshape(n, k)
+    return q, s
+
+
+def dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ------------------------------------------------------ fake-quant GEMMs
+
+
+def igemm(xq, wq):
+    """int8 x int8 -> int32 exact integer GEMM, [N,K]x[M,K] -> [N,M]."""
+    return jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def gemm_fp(x, w):
+    return x @ w.T
+
+
+def gemm_a4w4_per_channel(x, w, wq_pre=None):
+    """Per-token activation / per-channel weight INT4 GEMM (RTN baseline)."""
+    xq, sx = quant_per_token(x)
+    wq, sw = wq_pre if wq_pre is not None else quant_per_channel_w(w)
+    acc = igemm(xq, wq).astype(jnp.float32)
+    return acc * sx * sw.T
+
+
+def gemm_a4w4_sub_channel(x, w, group: int = 128):
+    """Sub-channel INT4 GEMM: per-group scales for both operands."""
+    n, k = x.shape
+    m, _ = w.shape
+    xq, sx = quant_sub_channel(x, group)  # [N,K],[N,G]
+    wq, sw = quant_sub_channel(w, group)  # [M,K],[M,G]
+    xg = xq.reshape(n, k // group, group).astype(jnp.int32)
+    wg = wq.reshape(m, k // group, group).astype(jnp.int32)
+    # per-group integer partials, scaled per group: sum_g sx[:,g] sw[:,g] P_g
+    acc = jnp.einsum("ngk,mgk->gnm", xg, wg).astype(jnp.float32)
+    acc = acc * sx.T[:, :, None] * sw.T[:, None, :]
+    return acc.sum(axis=0)
+
+
+# -------------------------------------------------------- Runtime Smooth
+
+
+def rs_channel_scale(x):
+    """Runtime smoothing scale: per-input-channel absmax (paper eq. 1)."""
+    return jnp.maximum(jnp.max(jnp.abs(x), axis=0), 1e-8)  # [K]
+
+
+def rs_reorder_perm(s):
+    """Descending-magnitude channel permutation (paper pipeline step 1)."""
+    return jnp.argsort(-s)
+
+
+def rs_group_scales(s_perm, group: int):
+    """Group-wise max over the reordered scales (pipeline step 2)."""
+    k = s_perm.shape[0]
+    return jnp.max(s_perm.reshape(k // group, group), axis=-1)  # [K//group]
+
+
+def gemm_rs(x, w, group: int = 1, wq_pre=None):
+    """Runtime Smooth INT4 GEMM (paper eq. 1-3 + kernel-fusion grouping).
+
+    group=1 reproduces the exact per-channel runtime scale (Table 1 'RS');
+    group=128 is the fused-kernel configuration (Table 4 ablation).
+    ``wq_pre`` optionally supplies offline-quantized weights (q, scale) so
+    GPTQ weights can be used instead of RTN.
+    """
+    n, k = x.shape
+    s = rs_channel_scale(x)  # [K]
+    perm = rs_reorder_perm(s)
+    xp = x[:, perm]
+    sg = rs_group_scales(s[perm], group)  # [K//group]
+    # smooth: divide each channel group by its group scale
+    x_sm = xp / jnp.repeat(sg, group)[None, :]
+    xq, sx = quant_per_token(x_sm)
+    wq, sw = wq_pre if wq_pre is not None else quant_per_channel_w(w)
+    wqp = wq[:, perm]
+    # block-wise integer partials; re-apply group scale on dequant (eq. 3)
+    g = k // group
+    m = wqp.shape[0]
+    xg = xq.reshape(n, g, group).astype(jnp.int32)
+    wg = wqp.reshape(m, g, group).astype(jnp.int32)
+    acc = jnp.einsum("ngk,mgk->gnm", xg, wg).astype(jnp.float32)
+    acc = acc * sg[:, None, None]
+    return acc.sum(axis=0) * sx * sw.T
+
+
+def gemm_rtn_a4w16(x, w):
+    """Activation-only INT4 (A4W16): isolates activation quant error."""
+    xq, sx = quant_per_token(x)
+    return dequant(xq, sx) @ w.T
+
+
+def gemm_rs_a4w16(x, w, group: int = 1):
+    """Runtime Smooth with fp weights (paper Fig. 3 A4W16 ablation)."""
+    s = rs_channel_scale(x)
+    perm = rs_reorder_perm(s)
+    sg = rs_group_scales(s[perm], group)
+    sg_full = jnp.repeat(sg, group)
+    x_sm = x[:, perm] / sg_full[None, :]
+    xq, sx = quant_per_token(x_sm)
+    xdq = dequant(xq, sx) * sg_full[None, :]
+    return xdq @ w[:, perm].T
+
+
+# --------------------------------------------------------------- Rotation
+
+
+def hadamard(k: int) -> np.ndarray:
+    """Normalized Sylvester-Hadamard matrix, k a power of two."""
+    assert k & (k - 1) == 0, f"hadamard dim {k} not a power of two"
+    h = np.array([[1.0]], dtype=np.float64)
+    while h.shape[0] < k:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(k)).astype(np.float32)
+
+
+def fwht(x):
+    """Fast Walsh-Hadamard transform along the last axis, normalized.
+
+    Equivalent to x @ hadamard(K) but O(K log K).
+    """
+    k = x.shape[-1]
+    assert k & (k - 1) == 0
+    orig = x.shape
+    y = x.reshape(-1, k)
+    h = 1
+    while h < k:
+        y = y.reshape(-1, k // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+        h *= 2
+    y = y.reshape(-1, k)
+    return (y.reshape(orig) / jnp.sqrt(k)).astype(x.dtype)
+
+
+def rotate(x):
+    """x @ H with H the normalized Hadamard (output-equivalent pairing)."""
+    return fwht(x)
+
+
+def gemm_quarot(x, w, wq_pre=None):
+    """QuaRot baseline: rotate both operands, per-channel INT4 GEMM."""
+    xr = rotate(x)
+    wq, sw = wq_pre if wq_pre is not None else quant_per_channel_w(rotate(w))
+    xq, sx = quant_per_token(xr)
+    return igemm(xq, wq).astype(jnp.float32) * sx * sw.T
+
+
+def gemm_rrs_a4w16(x, w, group: int = 1):
+    """Rotated Runtime Smooth with fp weights (activation-only ablation)."""
+    return gemm_rs_a4w16(rotate(x), rotate(w), group=group)
+
+
+def gemm_rrs(x, w, group: int = 128, wq_pre=None):
+    """Rotated Runtime Smooth: rotate, then Runtime Smooth (paper 3.3).
+
+    ``w`` is the *unrotated* weight when wq_pre is None; with wq_pre the
+    caller passes offline-quantized **rotated** weights.
+    """
+    xr = rotate(x)
+    if wq_pre is None:
+        wq_pre = quant_per_channel_w(rotate(w))
+    return gemm_rs(xr, None, group=group, wq_pre=wq_pre)
+
+
+# ----------------------------------------------------------- SmoothQuant
+
+
+def smoothquant_scales(calib_absmax_x, w, alpha: float = 0.5):
+    """s_j = max|X_j|^a / max|W_j|^(1-a) (paper 2.2), from *calibration*."""
+    wmax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)
+    s = jnp.power(jnp.maximum(calib_absmax_x, 1e-8), alpha) / jnp.power(
+        wmax, 1.0 - alpha
+    )
+    return jnp.maximum(s, 1e-8)
+
+
+def gemm_smoothquant(x, w, s, wq_pre=None):
+    """SmoothQuant INT4 GEMM with offline scales merged into the weight."""
+    x_sm = x / s[None, :]
+    xq, sx = quant_per_token(x_sm)
+    if wq_pre is None:
+        wq_pre = quant_per_channel_w(w * s[None, :])
+    wq, sw = wq_pre
+    return igemm(xq, wq).astype(jnp.float32) * sx * sw.T
+
+
+# ------------------------------------------------------------- KV quant
+
+
+def kv_quant(x, group: int = 128):
+    """Sub-channel symmetric INT4 KV-cache quantization (paper 4.1)."""
+    g = min(group, x.shape[-1])
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    q, s = quant_sub_channel(x2, g)
+    return q.reshape(orig), s.reshape(orig[:-1] + (orig[-1] // g,))
+
+
+def kv_dequant(q, s):
+    g = q.shape[-1] // s.shape[-1]
+    return (
+        q.astype(jnp.float32).reshape(q.shape[:-1] + (s.shape[-1], g))
+        * s[..., None]
+    ).reshape(q.shape)
+
+
+def kv_fake_quant(x, group: int = 128):
+    q, s = kv_quant(x, group)
+    return kv_dequant(q, s)
+
+
+# ---------------------------------------------------------- smoothness u
+
+
+def smoothness_mu(t):
+    """mu = absmax(t)/RMS(t) per token (paper Fig. 2b); [N,K] -> [N]."""
+    absmax = jnp.max(jnp.abs(t), axis=-1)
+    rms = jnp.sqrt(jnp.mean(t * t, axis=-1) + 1e-12)
+    return absmax / rms

@@ -1,0 +1,144 @@
+"""Fused Runtime-Smooth INT4 GEMM - the paper's compute hot-spot (L1).
+
+Implements the Figure-4 pipeline as a Pallas kernel:
+
+  1. (wrapper, "runtime" stage) channel-wise absmax -> reorder permutation
+     -> group-wise smoothing scales -> smooth + per-token INT4 quantize.
+     On CUDA the paper fuses this prologue into the GEMM; under XLA it
+     stages into the same lowered module, so rust still sees ONE artifact.
+  2. (kernel) blocked integer GEMM: each (bn x bm) output tile accumulates
+     over K-blocks; the *group* smoothing scale is one scalar per K-block
+     (group size == block size, exactly the paper's fusion constraint), so
+     de-quantization is `acc += sg[g] * (Xq_blk @ Wq_blkT)` - a single
+     scalar multiply per tile, the reason RS adds negligible overhead over
+     plain per-channel A4W4 (paper 3.2, Fig. 6).
+  3. (kernel epilogue) per-token activation scale and per-output-channel
+     weight scale applied once on the final K-block.
+
+TPU mapping (DESIGN.md section 7): block sizes default to MXU-friendly
+(8,128)x(128,128) tiles; Xq/Wq tiles live in VMEM as int8, the f32
+accumulator in VMEM scratch; `interpret=True` makes the same kernel run
+on the CPU PJRT client for this reproduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _rs_gemm_kernel(xq_ref, wq_ref, sg_ref, sx_ref, sw_ref, o_ref, *, sub: int):
+    """One (bn,bm) output tile x one K-block step.
+
+    sub = number of smoothing groups inside this K-block (1 when
+    group == block_k, the fused-kernel configuration).
+    """
+    kblk = pl.program_id(2)
+
+    @pl.when(kblk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = xq_ref[...].astype(jnp.int32)  # (bn, bk)
+    wq = wq_ref[...].astype(jnp.int32)  # (bm, bk)
+    sg = sg_ref[...]  # (sub,)
+    bn, bk = xq.shape
+    bm = wq.shape[0]
+    g = bk // sub
+    if sub == 1:
+        # group == block: one integer GEMM + one scalar multiply (hot path)
+        part = jnp.dot(xq, wq.T, preferred_element_type=jnp.int32)
+        o_ref[...] += part.astype(jnp.float32) * sg[0]
+    else:
+        # fine-grained groups inside the block (group-size ablation path)
+        xs = xq.reshape(bn, sub, g)
+        ws = wq.reshape(bm, sub, g)
+        part = jnp.einsum(
+            "nsg,msg->snm", xs, ws, preferred_element_type=jnp.int32
+        ).astype(jnp.float32)
+        o_ref[...] += jnp.sum(part * sg[:, None, None], axis=0)
+
+    @pl.when(kblk == pl.num_programs(2) - 1)
+    def _epilogue():
+        o_ref[...] *= sx_ref[...] * sw_ref[...].T
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group", "block_n", "block_m", "block_k")
+)
+def rs_gemm_prequant(
+    xq, sx, wq, sw, sg,
+    group: int = 128,
+    block_n: int = 8,
+    block_m: int = 128,
+    block_k: int = 128,
+):
+    """Blocked INT4 GEMM over pre-quantized operands.
+
+    xq [N,K] int8, sx [N,1] f32, wq [M,K] int8, sw [M,1] f32,
+    sg [K//group] f32 (group smoothing scales, reordered layout).
+    Returns [N,M] f32 = (sum_g sg_g Xq_g Wq_g^T) * sx * sw^T.
+    """
+    n, k = xq.shape
+    m = wq.shape[0]
+    bn = min(block_n, n)
+    bm = min(block_m, m)
+    bk = min(block_k, k)
+    assert n % bn == 0 and m % bm == 0 and k % bk == 0, (n, m, k, bn, bm, bk)
+    assert bk % group == 0 or group % bk == 0
+    if group > bk:
+        bk = group
+    sub = bk // group
+    kernel = functools.partial(_rs_gemm_kernel, sub=sub)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, g_: (i, g_)),
+            pl.BlockSpec((bm, bk), lambda i, j, g_: (j, g_)),
+            pl.BlockSpec((sub,), lambda i, j, g_: (g_,)),
+            pl.BlockSpec((bn, 1), lambda i, j, g_: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, g_: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, g_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(xq, wq, sg, sx, sw)
+
+
+def rs_prepare(x, group: int):
+    """Runtime stage: perm, group scales, smoothed+quantized activation.
+
+    Returns (xq [N,K] int8, sx [N,1], perm [K] int32, sg [K//group]).
+    """
+    s = ref.rs_channel_scale(x)
+    perm = ref.rs_reorder_perm(s)
+    xp = x[:, perm]
+    sg = ref.rs_group_scales(s[perm], group)
+    x_sm = xp / jnp.repeat(sg, group)[None, :]
+    xq, sx = ref.quant_per_token(x_sm)
+    return xq, sx, perm, sg
+
+
+def rs_gemm(x, wq, sw, group: int = 128, **blocks):
+    """Runtime Smooth INT4 GEMM: f32 activation x offline-quantized weight.
+
+    wq/sw are the offline per-output-channel INT4 weight (RTN or GPTQ).
+    """
+    xq, sx, perm, sg = rs_prepare(x, group)
+    return rs_gemm_prequant(xq, sx, wq[:, perm], sw, sg, group=group, **blocks)
+
+
+def rrs_gemm(x, wq_rot, sw_rot, group: int = 128, **blocks):
+    """Rotated Runtime Smooth GEMM: Hadamard-rotate x, then rs_gemm.
+
+    wq_rot/sw_rot quantize the *offline-rotated* weight (W @ H), so the
+    product equals X W^T up to quantization error (paper Fig. 2a).
+    """
+    xr = ref.rotate(x)
+    return rs_gemm(xr, wq_rot, sw_rot, group=group, **blocks)

@@ -1,0 +1,411 @@
+"""L2: LLaMA-architecture transformer in JAX with quantized-linear variants.
+
+Build-time only.  The forward graph (prefill and single-step decode) is
+lowered by compile/aot.py to HLO text and executed from rust via PJRT;
+python never runs on the request path.
+
+Architecture (matches the rust engine in rust/src/model/):
+  byte-level embedding -> n_layers x [RMSNorm -> GQA attention (RoPE)
+  -> RMSNorm -> SwiGLU MLP] -> RMSNorm -> LM head.
+All weights are stored [out_features, in_features] so every linear is
+``y = x @ W.T`` and quantization conventions follow kernels/ref.py.
+
+Quantized-linear variants (``QuantVariant``):
+  fp      - f32 matmul (FP16-reference stand-in)
+  rtn     - per-token/per-channel INT4 RTN on X and W        (Table 1 'RTN')
+  sq      - SmoothQuant: offline calib scales merged into W  ('SmoothQuant')
+  rs      - Runtime Smooth, Pallas fused kernel              ('RS')
+  quarot  - Hadamard-rotate X and W, per-channel INT4        ('QuaRot')
+  rrs     - rotate + Runtime Smooth, Pallas fused kernel     ('RRS')
+
+Weight quantization is applied offline by ``prepare_weights`` (RTN here;
+GPTQ in compile/gptq.py), mirroring the paper's setup where weights are
+quantized with GPTQ before inference.  The KV cache is optionally
+INT4-fake-quantized (sub-channel, group<=128) to model A4W4KV4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref, rrs_gemm
+
+VARIANTS = ("fp", "rtn", "sq", "rs", "quarot", "rrs")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    dim: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    ffn: int = 256
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = init_params(self, jax.random.PRNGKey(0))
+        return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """One cell of the paper's scheme matrix, e.g. A4W4KV4 + method."""
+
+    variant: str = "fp"  # activation-smoothing method
+    w_bits: int = 16     # 4 -> offline INT4 weights (RTN or GPTQ)
+    kv_bits: int = 16    # 4 -> sub-channel INT4 KV cache
+    group: int = 128     # runtime-smooth group size (Table 4 ablation)
+    kv_group: int = 128
+    use_pallas: bool = True  # rs/rrs via the fused Pallas kernel
+
+
+def layer_names(cfg: ModelConfig):
+    for i in range(cfg.n_layers):
+        for n in ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"):
+            yield f"layers.{i}.{n}"
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """He-style init; flat dict name -> array (stable, sorted order)."""
+    kd = cfg.n_kv_heads * cfg.head_dim
+    shapes = {"embed": (cfg.vocab, cfg.dim), "head": (cfg.vocab, cfg.dim),
+              "final_norm": (cfg.dim,)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "attn_norm"] = (cfg.dim,)
+        shapes[p + "mlp_norm"] = (cfg.dim,)
+        shapes[p + "wq"] = (cfg.dim, cfg.dim)
+        shapes[p + "wk"] = (kd, cfg.dim)
+        shapes[p + "wv"] = (kd, cfg.dim)
+        shapes[p + "wo"] = (cfg.dim, cfg.dim)
+        shapes[p + "w_gate"] = (cfg.ffn, cfg.dim)
+        shapes[p + "w_up"] = (cfg.ffn, cfg.dim)
+        shapes[p + "w_down"] = (cfg.dim, cfg.ffn)
+    params = {}
+    for name in sorted(shapes):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 1.0 / np.sqrt(shape[-1])
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+    return params
+
+
+# ------------------------------------------------------------ components
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope_cos_sin(cfg: ModelConfig, positions):
+    """positions [T] -> (cos, sin) each [T, head_dim/2]."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2) / hd))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B,T,H,hd]; rotate-half convention (matches rust engine)."""
+    h = x.shape[-1] // 2
+    x1, x2 = x[..., :h], x[..., h:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# ------------------------------------------------------- quantized linear
+
+
+def prepare_weights(params, cfg: ModelConfig, qcfg: QuantConfig,
+                    calib_absmax: Optional[Dict[str, jnp.ndarray]] = None,
+                    gptq_weights: Optional[Dict[str, Any]] = None):
+    """Offline weight preparation per variant.
+
+    Returns dict name -> dict with keys among {w, wq, sw, smooth}:
+      fp/rtn/rs: quantize W as-is.   sq: merge calib smooth scales into W.
+      quarot/rrs: quantize W @ H (offline rotation).
+    When ``gptq_weights`` provides (wq, sw) for a layer (from compile/gptq),
+    they take precedence over RTN (already in the correct variant space).
+    """
+    out = {}
+    for name in layer_names(cfg):
+        w = params[name]
+        entry: Dict[str, Any] = {}
+        if qcfg.variant == "sq":
+            am = (calib_absmax or {}).get(name)
+            if am is None:
+                am = jnp.ones((w.shape[1],), jnp.float32)
+            s = ref.smoothquant_scales(am, w)
+            entry["smooth"] = s
+            w_eff = w * s[None, :]
+        elif qcfg.variant in ("quarot", "rrs"):
+            w_eff = ref.rotate(w)
+        else:
+            w_eff = w
+        if qcfg.w_bits == 4:
+            if gptq_weights and name in gptq_weights:
+                entry["wq"], entry["sw"] = gptq_weights[name]
+            else:
+                entry["wq"], entry["sw"] = ref.quant_per_channel_w(w_eff)
+        else:
+            entry["w"] = w_eff
+        out[name] = entry
+    return out
+
+
+def qlinear(x2d, prep: Dict[str, Any], qcfg: QuantConfig):
+    """Dispatch one [N,K] x [M,K]^T linear through the variant path."""
+    v = qcfg.variant
+    if qcfg.w_bits == 4:
+        wq, sw = prep["wq"], prep["sw"]
+        w_for_act = ref.dequant(wq, sw)  # only used by fp-act paths
+    else:
+        w_for_act = prep["w"]
+        wq = sw = None
+
+    def _act_quant_gemm(xs):
+        """per-token INT4 x (INT4|f32) weight."""
+        xq, sx = ref.quant_per_token(xs)
+        if wq is not None:
+            return ref.igemm(xq, wq).astype(jnp.float32) * sx * sw.T
+        return ref.dequant(xq, sx) @ w_for_act.T
+
+    if v == "fp":
+        if wq is not None:
+            return x2d @ w_for_act.T
+        return x2d @ w_for_act.T
+    if v == "rtn":
+        return _act_quant_gemm(x2d)
+    if v == "sq":
+        return _act_quant_gemm(x2d / prep["smooth"][None, :])
+    if v == "quarot":
+        return _act_quant_gemm(ref.rotate(x2d))
+    if v in ("rs", "rrs"):
+        xs = ref.rotate(x2d) if v == "rrs" else x2d
+        if wq is not None and qcfg.use_pallas:
+            return rrs_gemm.rs_gemm(xs, wq, sw, group=qcfg.group)
+        # A4W16 / no-pallas path via the jnp oracle
+        if wq is not None:
+            return ref.gemm_rs(xs, None, group=qcfg.group, wq_pre=(wq, sw))
+        # activation-only quantization (A4W16): smooth, quantize, fp gemm
+        s = ref.rs_channel_scale(xs)
+        perm = ref.rs_reorder_perm(s)
+        sg = ref.rs_group_scales(s[perm], qcfg.group)
+        x_sm = xs[:, perm] / jnp.repeat(sg, qcfg.group)[None, :]
+        xq, sx = ref.quant_per_token(x_sm)
+        xdq = ref.dequant(xq, sx) * jnp.repeat(sg, qcfg.group)[None, :]
+        return xdq @ w_for_act[:, perm].T
+    raise ValueError(f"unknown variant {v}")
+
+
+# ----------------------------------------------------------- forward pass
+
+
+def _attention(q, k, v, causal_from: int = 0):
+    """q [B,Tq,H,hd], k/v [B,Tk,Hkv,hd] -> [B,Tq,H,hd] with GQA + causal."""
+    b, tq, h, hd = q.shape
+    tk = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    qpos = causal_from + jnp.arange(tq)
+    kpos = jnp.arange(tk)
+    mask = kpos[None, :] <= qpos[:, None]
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", att, v)
+
+
+def forward(params, prep, cfg: ModelConfig, qcfg: QuantConfig, tokens,
+            kv_cache=None, pos: int = 0, return_kv: bool = False):
+    """Forward pass.
+
+    tokens [B,T] int32.  With ``kv_cache`` (list of (k,v) [B,Tpast,Hkv,hd])
+    this is a decode step continuing at ``pos``; otherwise a prefill from 0.
+    Returns logits [B,T,V] (+ per-layer new (k,v) when return_kv).
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    cos, sin = rope_cos_sin(cfg, pos + jnp.arange(t))
+    new_kv = []
+    kd = cfg.n_kv_heads * cfg.head_dim
+
+    def lin(name, h2d):
+        if qcfg.variant == "fp" and qcfg.w_bits != 4:
+            return h2d @ params[name].T
+        return qlinear(h2d, prep[name], qcfg)
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        h2 = h.reshape(b * t, cfg.dim)
+        q = lin(p + "wq", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = lin(p + "wk", h2).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v = lin(p + "wv", h2).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if qcfg.kv_bits == 4:
+            k = ref.kv_fake_quant(k, qcfg.kv_group)
+            v = ref.kv_fake_quant(v, qcfg.kv_group)
+        new_kv.append((k, v))
+        if kv_cache is not None:
+            k = jnp.concatenate([kv_cache[i][0], k], axis=1)
+            v = jnp.concatenate([kv_cache[i][1], v], axis=1)
+        att = _attention(q, k, v, causal_from=pos)
+        x = x + lin(p + "wo", att.reshape(b * t, cfg.dim)).reshape(b, t, cfg.dim)
+
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        h2 = h.reshape(b * t, cfg.dim)
+        gate = lin(p + "w_gate", h2)
+        up = lin(p + "w_up", h2)
+        act = jax.nn.silu(gate) * up
+        x = x + lin(p + "w_down", act).reshape(b, t, cfg.dim)
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x.reshape(b * t, cfg.dim) @ params["head"].T).reshape(b, t, cfg.vocab)
+    if return_kv:
+        return logits, new_kv
+    return logits
+
+
+def decode_step(params, prep, cfg: ModelConfig, qcfg: QuantConfig,
+                token, kcache, vcache, pos):
+    """Single-token decode over padded KV caches (the PJRT decode artifact).
+
+    token  [B,1] i32;  kcache/vcache [L,B,maxT,Hkv,hd] f32;  pos [1] i32
+    (number of tokens already in the cache).  Returns
+    (logits [B,1,V], updated kcache, updated vcache).  Cache updates happen
+    inside the graph via dynamic_update_slice so rust only swaps buffers.
+    """
+    b = token.shape[0]
+    x = params["embed"][token]  # [B,1,D]
+    p0 = pos[0]
+    cos, sin = rope_cos_sin(cfg, p0 + jnp.arange(1))
+    maxt = kcache.shape[2]
+
+    def lin(name, h2d):
+        if qcfg.variant == "fp" and qcfg.w_bits != 4:
+            return h2d @ params[name].T
+        return qlinear(h2d, prep[name], qcfg)
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        h2 = h.reshape(b, cfg.dim)
+        q = lin(p + "wq", h2).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = lin(p + "wk", h2).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = lin(p + "wv", h2).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if qcfg.kv_bits == 4:
+            k = ref.kv_fake_quant(k, qcfg.kv_group)
+            v = ref.kv_fake_quant(v, qcfg.kv_group)
+        kcache = jax.lax.dynamic_update_slice(
+            kcache, k[None], (i, 0, p0, 0, 0))
+        vcache = jax.lax.dynamic_update_slice(
+            vcache, v[None], (i, 0, p0, 0, 0))
+        kf = kcache[i]  # [B,maxT,Hkv,hd]
+        vf = vcache[i]
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(cfg.head_dim)
+        valid = (jnp.arange(maxt) <= p0)[None, None, None, :]
+        att = jnp.where(valid, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, vf)
+        x = x + lin(p + "wo", o.reshape(b, cfg.dim)).reshape(b, 1, cfg.dim)
+
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        h2 = h.reshape(b, cfg.dim)
+        act = jax.nn.silu(lin(p + "w_gate", h2)) * lin(p + "w_up", h2)
+        x = x + lin(p + "w_down", act).reshape(b, 1, cfg.dim)
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x.reshape(b, cfg.dim) @ params["head"].T).reshape(b, 1, cfg.vocab)
+    return logits, kcache, vcache
+
+
+def loss_fn(params, cfg: ModelConfig, tokens):
+    """Next-token cross entropy over [B,T+1] token windows (fp path)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, None, cfg, QuantConfig("fp"), inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------- activation capture (Fig. 7/9)
+
+
+PROJ_KINDS = ("qkv", "o", "gate_up", "down")
+
+
+def capture_activations(params, cfg: ModelConfig, tokens):
+    """fp32 forward that records the input activation of every linear.
+
+    Returns {proj_kind: [per-layer 2-D activations]} for Figures 7 and 9
+    and for SmoothQuant/GPTQ calibration.
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    cos, sin = rope_cos_sin(cfg, jnp.arange(t))
+    acts = {k: [] for k in PROJ_KINDS}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rmsnorm(x, params[p + "attn_norm"])
+        h2 = h.reshape(b * t, cfg.dim)
+        acts["qkv"].append(h2)
+        q = (h2 @ params[p + "wq"].T).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h2 @ params[p + "wk"].T).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v = (h2 @ params[p + "wv"].T).reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = _attention(q, k, v)
+        a2 = att.reshape(b * t, cfg.dim)
+        acts["o"].append(a2)
+        x = x + (a2 @ params[p + "wo"].T).reshape(b, t, cfg.dim)
+        h = rmsnorm(x, params[p + "mlp_norm"])
+        h2 = h.reshape(b * t, cfg.dim)
+        acts["gate_up"].append(h2)
+        act = jax.nn.silu(h2 @ params[p + "w_gate"].T) * (h2 @ params[p + "w_up"].T)
+        acts["down"].append(act)
+        x = x + (act @ params[p + "w_down"].T).reshape(b, t, cfg.dim)
+    return acts
+
+
+def calib_absmax(params, cfg: ModelConfig, tokens) -> Dict[str, jnp.ndarray]:
+    """Per-linear input-channel absmax from a calibration batch (SmoothQuant)."""
+    acts = capture_activations(params, cfg, tokens)
+    out = {}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        qkv = jnp.max(jnp.abs(acts["qkv"][i]), axis=0)
+        out[p + "wq"] = qkv
+        out[p + "wk"] = qkv
+        out[p + "wv"] = qkv
+        out[p + "wo"] = jnp.max(jnp.abs(acts["o"][i]), axis=0)
+        gu = jnp.max(jnp.abs(acts["gate_up"][i]), axis=0)
+        out[p + "w_gate"] = gu
+        out[p + "w_up"] = gu
+        out[p + "w_down"] = jnp.max(jnp.abs(acts["down"][i]), axis=0)
+    return out

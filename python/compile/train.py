@@ -1,0 +1,133 @@
+"""Build-time training of the tiny LLaMA-style model on the synthetic corpus.
+
+Hand-rolled AdamW (optax is not available in this environment).  Runs once
+under ``make artifacts``; the trained weights are exported to
+artifacts/weights.rrsw and re-used by both the PJRT artifacts and the rust
+engine.  The loss curve is logged to artifacts/train_log.csv (end-to-end
+validation evidence, see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import ModelConfig, init_params, loss_fn
+
+
+def encode(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def batches(tokens: np.ndarray, bs: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=bs)
+        yield np.stack([tokens[i : i + seq + 1] for i in idx])
+
+
+def adamw_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "wd"))
+def train_step(params, opt, tokens, cfg: ModelConfig, lr, wd: float):
+    """One AdamW step.  ``lr`` must be a traced scalar (NOT static): the
+    cosine schedule changes it every step, and a static lr would force a
+    fresh XLA compilation per step, exhausting the LLVM JIT allocator."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens)
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm / (jnp.sqrt(vv) + eps) + wd * p),
+        params, mh, vh,
+    )
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int = 400,
+    bs: int = 16,
+    seq: int = 96,
+    lr: float = 3e-3,
+    wd: float = 0.01,
+    seed: int = 1234,
+    log_every: int = 20,
+) -> Tuple[dict, list, str, str]:
+    """Returns (params, loss_log, train_text, val_text)."""
+    train_text, val_text, kb = data.build_corpus(seed=seed)
+    toks = encode(train_text)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    log = []
+    t0 = time.time()
+    for step, batch in enumerate(batches(toks, bs, seq, steps, seed)):
+        # cosine decay with short warmup
+        warm = min(1.0, (step + 1) / 20)
+        cos = 0.5 * (1 + np.cos(np.pi * step / steps))
+        cur_lr = lr * warm * (0.1 + 0.9 * cos)
+        params, opt, loss = train_step(params, opt, jnp.asarray(batch), cfg,
+                                       jnp.float32(cur_lr), wd)
+        if step % log_every == 0 or step == steps - 1:
+            log.append((step, float(loss), time.time() - t0))
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    return params, log, train_text, val_text
+
+
+def finetune(
+    params,
+    cfg: ModelConfig,
+    train_text: str,
+    frozen: list,
+    steps: int = 150,
+    bs: int = 16,
+    seq: int = 96,
+    lr: float = 1e-3,
+    seed: int = 4321,
+):
+    """Finetune around frozen (outlier-carrying) tensors.
+
+    Used to build the per-profile model variants: after
+    outliers.inject_uncompensated, the network re-learns to use the
+    amplified channels/rows, producing a healthy fp model with genuine
+    activation outliers (see DESIGN.md section 2).
+    """
+    toks = encode(train_text)
+    frozen_vals = {k: params[k] for k in frozen}
+    opt = adamw_init(params)
+    last = None
+    for step, batch in enumerate(batches(toks, bs, seq, steps, seed)):
+        warm = min(1.0, (step + 1) / 10)
+        params, opt, loss = train_step(
+            params, opt, jnp.asarray(batch), cfg, jnp.float32(lr * warm), 0.01
+        )
+        params = dict(params)
+        params.update(frozen_vals)  # re-pin the outlier tensors
+        last = float(loss)
+        if step % 50 == 0:
+            print(f"  finetune step {step} loss {last:.4f}", flush=True)
+    return params, last
+
+
+def eval_nll(params, cfg: ModelConfig, text: str, seq: int = 96,
+             max_windows: int = 32, seed: int = 7) -> float:
+    """Teacher-forced mean NLL (nats/byte) on held-out text."""
+    toks = encode(text)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(toks) - seq - 1, size=max_windows)
+    batch = np.stack([toks[i : i + seq + 1] for i in idx])
+    return float(loss_fn(params, cfg, jnp.asarray(batch)))

@@ -1,0 +1,133 @@
+"""Corpus/QA generator determinism + .rrsw container round-trip + AOT lowering."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, io_rrsw
+from compile.model import ModelConfig, QuantConfig, forward, init_params
+from compile import outliers
+
+
+class TestData:
+    def test_corpus_deterministic(self):
+        a = data.build_corpus(seed=7)
+        b = data.build_corpus(seed=7)
+        assert a[0] == b[0] and a[1] == b[1]
+
+    def test_corpus_split_disjoint_lengths(self):
+        train, val, _ = data.build_corpus()
+        assert len(train) > 10 * len(val) > 0
+
+    def test_corpus_is_ascii(self):
+        train, val, _ = data.build_corpus()
+        assert max(train.encode()) < 128 and max(val.encode()) < 128
+
+    def test_qa_tasks_valid(self):
+        _, _, kb = data.build_corpus()
+        tasks = data.build_qa_tasks(kb, n_per_task=50)
+        assert set(tasks) == {"boolq", "obqa", "arc_e", "arc_c"}
+        for name, items in tasks.items():
+            assert len(items) == 50
+            for it in items:
+                assert 0 <= it["answer"] < len(it["candidates"])
+                assert len(set(it["candidates"])) == len(it["candidates"])
+
+    def test_qa_answers_consistent_with_kb(self):
+        _, _, kb = data.build_corpus()
+        tasks = data.build_qa_tasks(kb, n_per_task=20)
+        for it in tasks["obqa"]:
+            ent = it["prompt"].split()[0]
+            gold = it["candidates"][it["answer"]].strip(" .")
+            assert gold == kb.animal[ent]
+
+
+class TestRrsw:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a": rng.normal(size=(3, 4)).astype(np.float32),
+            "b": rng.integers(-7, 8, size=(2, 5)).astype(np.int8),
+            "c": np.arange(6, dtype=np.int32).reshape(2, 3),
+            "scalarish": np.array([1.5], dtype=np.float32),
+        }
+        p = str(tmp_path / "t.rrsw")
+        io_rrsw.write_rrsw(p, tensors)
+        back = io_rrsw.read_rrsw(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(back[k], tensors[k])
+            assert back[k].dtype == tensors[k].dtype
+
+    def test_rejects_bad_magic(self, tmp_path):
+        p = str(tmp_path / "bad.rrsw")
+        with open(p, "wb") as f:
+            f.write(b"NOTRRSW")
+        with pytest.raises(AssertionError):
+            io_rrsw.read_rrsw(p)
+
+
+class TestOutlierInjection:
+    def test_base_profile_identity(self):
+        cfg = ModelConfig(n_layers=1)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        out = outliers.inject(params, outliers.PROFILES["base"])
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(params[k]))
+
+    def test_injection_creates_channel_outliers(self):
+        cfg = ModelConfig(n_layers=2)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prof = outliers.PROFILES["llama3-like"]
+        inj = outliers.inject(params, prof)
+        g0 = np.asarray(params["layers.0.attn_norm"])
+        g1 = np.asarray(inj["layers.0.attn_norm"])
+        assert abs((g1 / g0).max() - prof.channel_gain) < 1e-3
+
+    def test_injection_profiles_ordered_by_severity(self):
+        """Stronger profiles produce higher kurtosis activations."""
+        cfg = ModelConfig(n_layers=2)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, 255, size=(2, 32), dtype=np.int32))
+        mus = {}
+        from compile.kernels import ref as R
+        from compile.model import capture_activations
+        for name in ("base", "llama2-like", "llama3-70b-like"):
+            inj = outliers.inject(params, outliers.PROFILES[name])
+            acts = capture_activations(inj, cfg, toks)
+            mus[name] = float(np.mean(np.asarray(
+                R.smoothness_mu(jnp.asarray(acts["qkv"][1])))))
+        assert mus["base"] < mus["llama2-like"] < mus["llama3-70b-like"]
+
+
+class TestAotLowering:
+    def test_hlo_text_contains_constants(self):
+        """Lowered text must NOT elide weights as `constant({...})`."""
+        from compile.aot import to_hlo_text
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                        dtype=jnp.float32)
+
+        def fn(x):
+            return (x @ w.T,)
+
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((4, 64), jnp.float32))
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text
+        assert "constant({...})" not in text
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                        "../../artifacts/manifest.json")),
+        reason="artifacts not built")
+    def test_manifest_graphs_exist(self):
+        import json
+        root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        with open(os.path.join(root, "manifest.json")) as f:
+            man = json.load(f)
+        for g, info in man["graphs"].items():
+            assert os.path.exists(os.path.join(root, info["file"])), g

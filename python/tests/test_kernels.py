@@ -1,0 +1,186 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes and asserts allclose against ref - this is
+the core correctness signal for the compute hot-spot.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard, quant, ref, rrs_gemm
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=shape) * scale).astype(
+        np.float32
+    )
+
+
+pow2 = st.sampled_from([32, 64, 128, 256])
+
+
+class TestQuantKernel:
+    @given(n=st.sampled_from([1, 2, 8, 16, 24]), k=pow2,
+           seed=st.integers(0, 10_000), scale=st.sampled_from([0.01, 1.0, 50.0]))
+    def test_matches_ref(self, n, k, seed, scale):
+        x = rand((n, k), seed, scale)
+        q1, s1 = quant.quant_per_token(jnp.asarray(x))
+        q2, s2 = ref.quant_per_token(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+    @given(n=st.sampled_from([4, 8]), k=pow2, seed=st.integers(0, 100))
+    def test_roundtrip_error_bound(self, n, k, seed):
+        """|x - dq(q(x))| <= scale/2 + eps, elementwise (RTN property)."""
+        x = rand((n, k), seed)
+        q, s = quant.quant_per_token(jnp.asarray(x))
+        xr = np.asarray(quant.dequant_per_token(q, s))
+        bound = np.asarray(s) / 2 + 1e-6
+        assert (np.abs(xr - x) <= bound).all()
+
+    def test_codes_in_range(self):
+        x = rand((8, 64), 1, 100.0)
+        q, _ = quant.quant_per_token(jnp.asarray(x))
+        q = np.asarray(q)
+        assert q.min() >= -7 and q.max() <= 7
+        # absmax element hits +-7 exactly
+        assert (np.abs(q).max(axis=1) == 7).all()
+
+
+class TestHadamardKernel:
+    @given(n=st.sampled_from([1, 8, 16]), k=pow2, seed=st.integers(0, 1000))
+    def test_matches_dense(self, n, k, seed):
+        x = rand((n, k), seed)
+        want = x @ ref.hadamard(k)
+        got = np.asarray(hadamard.rotate(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    @given(n=st.sampled_from([8, 16]), k=pow2, seed=st.integers(0, 1000))
+    def test_fwht_variant_matches(self, n, k, seed):
+        x = rand((n, k), seed)
+        a = np.asarray(hadamard.rotate(jnp.asarray(x)))
+        b = np.asarray(hadamard.rotate_fwht(jnp.asarray(x)))
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+    @given(k=pow2)
+    def test_involution(self, k):
+        """Sylvester Hadamard is symmetric: rotate twice == identity."""
+        x = rand((8, k), 3)
+        y = np.asarray(hadamard.rotate(hadamard.rotate(jnp.asarray(x))))
+        np.testing.assert_allclose(y, x, atol=1e-4)
+
+    @given(k=pow2, seed=st.integers(0, 50))
+    def test_norm_preserved(self, k, seed):
+        x = rand((4, k), seed)
+        y = np.asarray(ref.rotate(jnp.asarray(x)))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=1), np.linalg.norm(x, axis=1), rtol=1e-4
+        )
+
+
+class TestRsGemmKernel:
+    @given(
+        n=st.sampled_from([8, 16]),
+        k=st.sampled_from([64, 128, 256]),
+        m=st.sampled_from([32, 64, 128]),
+        group=st.sampled_from([1, 16, 32, 64]),
+        seed=st.integers(0, 1000),
+    )
+    def test_matches_ref(self, n, k, m, group, seed):
+        x = rand((n, k), seed)
+        w = rand((m, k), seed + 1)
+        wq, sw = ref.quant_per_channel_w(jnp.asarray(w))
+        got = np.asarray(rrs_gemm.rs_gemm(jnp.asarray(x), wq, sw, group=group))
+        want = np.asarray(
+            ref.gemm_rs(jnp.asarray(x), jnp.asarray(w), group=group,
+                        wq_pre=(wq, sw))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @given(seed=st.integers(0, 500), group=st.sampled_from([32, 128]))
+    def test_rrs_matches_ref(self, seed, group):
+        x = rand((16, 128), seed)
+        w = rand((64, 128), seed + 7)
+        wr = ref.rotate(jnp.asarray(w))
+        wq, sw = ref.quant_per_channel_w(wr)
+        got = np.asarray(rrs_gemm.rrs_gemm(jnp.asarray(x), wq, sw, group=group))
+        want = np.asarray(ref.gemm_rrs(jnp.asarray(x), jnp.asarray(w), group=group))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_channel_outliers_smoothed(self):
+        """RS beats plain RTN on activations with channel-wise outliers.
+
+        Compared under A4W16 (the paper's Fig. 3 setting) so the shared
+        weight-quantization error does not mask the activation effect.
+        """
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(32, 128)).astype(np.float32)
+        # channel-wise outliers are *consistent* across tokens (paper Fig 2c:
+        # "a collection of vectors with the same direction"); that is what
+        # makes channel-wise smoothing exact.
+        x[:, 5] = 100.0 * np.sign(rng.normal(size=32)) * (1 + 0.05 * rng.normal(size=32))
+        x[:, 60] = -50.0 * (1 + 0.05 * rng.normal(size=32))
+        w = rand((64, 128), 1)
+        y_fp = x @ w.T
+        y_rtn = np.asarray(ref.gemm_rtn_a4w16(jnp.asarray(x), jnp.asarray(w)))
+        y_rs = np.asarray(ref.gemm_rs_a4w16(jnp.asarray(x), jnp.asarray(w), group=1))
+        err = lambda y: np.abs(y - y_fp).mean()
+        assert err(y_rs) < 0.4 * err(y_rtn)
+
+    def test_spike_outliers_need_rotation(self):
+        """Victim effect: spikes hurt RS; RRS recovers (paper Fig. 1c/5).
+
+        A4W16 so the (identical) weight-quant error does not mask the
+        activation-side effect.
+        """
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(64, 128)).astype(np.float32)
+        n_spikes = 8
+        chans = rng.choice(128, size=n_spikes, replace=False)
+        for t, c in enumerate(chans):
+            x[t, c] = 1000.0  # spike tokens stretch channel scales
+        w = rand((64, 128), 1)
+        y_fp = x @ w.T
+        y_rs = np.asarray(ref.gemm_rs_a4w16(jnp.asarray(x), jnp.asarray(w), group=1))
+        y_rrs = np.asarray(ref.gemm_rrs_a4w16(jnp.asarray(x), jnp.asarray(w), group=1))
+        # victims = the NORMAL tokens (paper 2.2); their error under RS
+        # grows with spike count while RRS stays flat
+        err = lambda y: np.abs(y - y_fp)[n_spikes:].mean()
+        assert err(y_rrs) < 0.7 * err(y_rs)
+
+    @given(group=st.sampled_from([1, 32, 128]))
+    def test_perm_is_lossless_reordering(self, group):
+        """The reorder permutation never changes the exact product, only
+        the grouping quality: summing over permuted channels is exact."""
+        x = rand((8, 128), 2)
+        w = rand((32, 128), 3)
+        # with float32 weights (no weight quant), RS at group=1 equals
+        # quantizing X/s then rescaling - independent of permutation order
+        y1 = np.asarray(ref.gemm_rs(jnp.asarray(x), jnp.asarray(w), group=group))
+        assert np.isfinite(y1).all()
+
+
+class TestSubChannel:
+    @given(seed=st.integers(0, 200), group=st.sampled_from([16, 32, 64]))
+    def test_subchannel_beats_perchannel_with_outliers(self, seed, group):
+        x = rand((16, 128), seed)
+        x[:, 3] *= 80.0
+        w = rand((32, 128), seed + 1)
+        y_fp = x @ w.T
+        y_pc = np.asarray(ref.gemm_a4w4_per_channel(jnp.asarray(x), jnp.asarray(w)))
+        y_sc = np.asarray(ref.gemm_a4w4_sub_channel(jnp.asarray(x), jnp.asarray(w), group))
+        assert np.abs(y_sc - y_fp).mean() <= np.abs(y_pc - y_fp).mean()
+
+
+class TestKvQuant:
+    @given(seed=st.integers(0, 100), group=st.sampled_from([16, 32, 64]))
+    def test_roundtrip_bound(self, seed, group):
+        x = rand((4, 8, 2, 64), seed)
+        y = np.asarray(ref.kv_fake_quant(jnp.asarray(x), group))
+        # groupwise absmax/7/2 bound
+        assert np.abs(y - x).max() <= np.abs(x).max() / 7 / 2 + 1e-5

@@ -1,0 +1,153 @@
+"""Method-level properties: GPTQ, SpinQuant, SmoothQuant, paper invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gptq, spinquant
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def correlated_calib(n, k, seed=0):
+    """Calibration activations with channel structure (like LM residuals)."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(n, k)).astype(np.float32)
+    gains = np.exp(rng.normal(size=k)).astype(np.float32)
+    return base * gains[None, :]
+
+
+class TestGptq:
+    def test_beats_rtn_on_calib(self):
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(32, 64)).astype(np.float32)
+        x = correlated_calib(256, 64)
+        wq_g, s_g = gptq.gptq_quantize(w, x)
+        wq_r, s_r = (np.asarray(a) for a in ref.quant_per_channel_w(jnp.asarray(w)))
+        e_g = gptq.gptq_layer_error(w, wq_g, s_g, x)
+        e_r = gptq.gptq_layer_error(w, wq_r, s_r, x)
+        assert e_g <= e_r * 1.001, (e_g, e_r)
+
+    def test_codes_in_range(self):
+        rng = np.random.default_rng(1)
+        w = rng.normal(size=(16, 32)).astype(np.float32)
+        x = correlated_calib(64, 32, 1)
+        wq, s = gptq.gptq_quantize(w, x)
+        assert wq.dtype == np.int8
+        assert wq.min() >= -7 and wq.max() <= 7
+        assert (s > 0).all()
+
+    @given(seed=st.integers(0, 100))
+    def test_deterministic(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(8, 32)).astype(np.float32)
+        x = correlated_calib(64, 32, seed)
+        a = gptq.gptq_quantize(w, x)
+        b = gptq.gptq_quantize(w, x)
+        np.testing.assert_array_equal(a[0], b[0])
+
+
+class TestSpinQuant:
+    def test_cayley_orthogonal(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32) * 0.1)
+        r = np.asarray(spinquant.cayley(a))
+        assert spinquant.rotation_orthogonality_error(r) < 1e-4
+
+    def test_training_reduces_loss(self):
+        rng = np.random.default_rng(0)
+        xs = [correlated_calib(128, 32, i) for i in range(2)]
+        ws = [rng.normal(size=(16, 32)).astype(np.float32) for _ in range(2)]
+        r, log = spinquant.train_rotation(xs, ws, 32, steps=60, lr=3e-3)
+        assert log[-1] < log[0]
+        assert spinquant.rotation_orthogonality_error(r) < 1e-3
+
+
+class TestSmoothQuant:
+    def test_scale_formula(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+        am = jnp.asarray(np.abs(rng.normal(size=32)).astype(np.float32) + 0.1)
+        s = np.asarray(ref.smoothquant_scales(am, w, alpha=0.5))
+        wmax = np.abs(np.asarray(w)).max(axis=0)
+        want = np.sqrt(np.asarray(am)) / np.sqrt(wmax)
+        np.testing.assert_allclose(s, np.maximum(want, 1e-8), rtol=1e-4)
+
+    def test_unmatched_calibration_fails(self):
+        """Paper Fig. 1a: calib scales from the wrong distribution do not
+        smooth a shifted outlier pattern; runtime smooth does."""
+        rng = np.random.default_rng(0)
+        x_cal = rng.normal(size=(64, 128)).astype(np.float32)
+        x_cal[:, 10] *= 100.0  # calib outlier at channel 10
+        x_run = rng.normal(size=(64, 128)).astype(np.float32)
+        x_run[:, 90] *= 100.0  # runtime outlier moved to channel 90
+        w = rng.normal(size=(64, 128)).astype(np.float32)
+        s = ref.smoothquant_scales(
+            jnp.max(jnp.abs(jnp.asarray(x_cal)), axis=0), jnp.asarray(w))
+        y_fp = x_run @ w.T
+        y_sq = np.asarray(ref.gemm_smoothquant(jnp.asarray(x_run), jnp.asarray(w), s))
+        y_rs = np.asarray(ref.gemm_rs(jnp.asarray(x_run), jnp.asarray(w), group=1))
+        err = lambda y: np.abs(y - y_fp).mean()
+        assert err(y_rs) < 0.5 * err(y_sq)
+
+
+class TestPaperInvariants:
+    """Quantified claims from Sections 2-3 of the paper."""
+
+    def test_rotation_spreads_spikes(self):
+        """Eq. 4: a token with one spike becomes near-constant magnitude."""
+        k = 128
+        t = np.full((1, k), 0.01, dtype=np.float32)
+        t[0, 17] = 100.0
+        tr = np.asarray(ref.rotate(jnp.asarray(t)))
+        # all rotated entries ~ |O|/sqrt(K)
+        expect = 100.0 / np.sqrt(k)
+        assert np.abs(np.abs(tr) - expect).max() < 1.0
+
+    def test_rotation_keeps_channelwise_consistency(self):
+        """Fig. 2c: rank-1-ish channel-outlier activations stay channel-
+        consistent after rotation (rotation maps columns together)."""
+        rng = np.random.default_rng(0)
+        token_gain = np.abs(rng.normal(size=(64, 1))).astype(np.float32) + 0.5
+        direction = rng.normal(size=(1, 128)).astype(np.float32)
+        x = token_gain * direction  # rank-1: same direction every token
+        xr = np.asarray(ref.rotate(jnp.asarray(x)))
+        # still rank-1 => channel-wise consistent after rotation
+        s = np.linalg.svd(xr, compute_uv=False)
+        assert s[1] < 1e-3 * s[0]
+
+    def test_victim_effect(self):
+        """Appendix A.1 protocol (eq. 8-10): normal tokens = all-ones; spike
+        tokens stretch per-channel smoothing scales; u = max/RMS of the
+        smoothed normal token.  Many spikes -> many RS victims -> u grows;
+        rotation spreads the spikes into a consistent scale -> u stays ~1.
+        """
+        rng = np.random.default_rng(1)
+        k, n_spikes = 128, 16
+        x = rng.normal(size=(64, k)).astype(np.float32)
+        chans = rng.choice(k, size=n_spikes, replace=False)
+        for t, c in enumerate(chans):
+            x[t, c] = 1000.0  # spike tokens
+        # u = mu(1 / scale): smoothness of an all-ones normal token after
+        # division by the smoothing scales (eq. 9-10)
+        s = np.asarray(ref.rs_channel_scale(jnp.asarray(x)))
+        u_rs = float(np.asarray(
+            ref.smoothness_mu(jnp.asarray(1.0 / s[None, :])))[0])
+        sr = np.asarray(ref.rs_channel_scale(ref.rotate(jnp.asarray(x))))
+        u_rrs = float(np.asarray(
+            ref.smoothness_mu(jnp.asarray(1.0 / sr[None, :])))[0])
+        assert u_rrs < u_rs
+
+    @given(seed=st.integers(0, 50))
+    def test_rotation_lowers_mu_for_llm_like(self, seed):
+        """Fig. 2b: activations with structure get smoother under rotation
+        (in expectation over tokens)."""
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(64, 128)).astype(np.float32)
+        x[:, rng.integers(0, 128, 4)] *= 50.0  # channel outliers
+        mu_x = np.asarray(ref.smoothness_mu(jnp.asarray(x))).mean()
+        mu_r = np.asarray(ref.smoothness_mu(ref.rotate(jnp.asarray(x)))).mean()
+        assert mu_r < mu_x

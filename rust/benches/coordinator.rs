@@ -1,0 +1,111 @@
+//! Coordinator-overhead bench: queue throughput and scheduler cost over a
+//! no-op engine — isolates L3 so it provably is not the bottleneck
+//! (DESIGN.md section 8: L3 target).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rrs::coordinator::{Coordinator, SchedulerConfig, ServeEngine};
+use rrs::linalg::gemm::Mat;
+use rrs::model::sampler::Sampling;
+use rrs::util::bench::{black_box, Bencher};
+
+/// Engine that does no math: measures pure coordination cost.
+struct NullEngine {
+    vocab: usize,
+}
+
+struct NullSeq {
+    len: usize,
+}
+
+impl ServeEngine for NullEngine {
+    type Seq = NullSeq;
+
+    fn max_seq(&self) -> usize {
+        4096
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn new_seq(&self) -> NullSeq {
+        NullSeq { len: 0 }
+    }
+
+    fn prefill(&self, seq: &mut NullSeq, tokens: &[u32]) -> Vec<f32> {
+        seq.len += tokens.len();
+        vec![0.0; self.vocab]
+    }
+
+    fn decode(&self, batch: &mut [(&mut NullSeq, u32)]) -> Mat {
+        for (seq, _) in batch.iter_mut() {
+            seq.len += 1;
+        }
+        Mat::zeros(batch.len(), self.vocab)
+    }
+
+    fn seq_len(&self, seq: &NullSeq) -> usize {
+        seq.len
+    }
+
+    fn seq_bytes(&self, _seq: &NullSeq) -> usize {
+        0
+    }
+}
+
+fn main() {
+    // queue micro-bench
+    let b = Bencher::default();
+    let q = rrs::coordinator::RequestQueue::new(1_000_000);
+    let (tx, _rx) = std::sync::mpsc::channel();
+    let mut i = 0u64;
+    let r = b.run("queue submit+drain", || {
+        let req = rrs::coordinator::Request {
+            id: i,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            sampling: Sampling::Greedy,
+            stop_token: None,
+            submitted_at: Instant::now(),
+            reply: tx.clone(),
+        };
+        i += 1;
+        q.submit(req).unwrap();
+        black_box(q.drain_now(1));
+    });
+    println!("{}", r.report_line());
+
+    // end-to-end coordination cost per generated token (no model math)
+    for max_batch in [1usize, 4, 16] {
+        let coord = Arc::new(Coordinator::start(
+            NullEngine { vocab: 256 },
+            SchedulerConfig { max_batch, queue_capacity: 4096, ..Default::default() },
+        ));
+        let n_req = 256;
+        let toks_per = 16;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for j in 0..n_req {
+            let c = coord.clone();
+            handles.push(std::thread::spawn(move || {
+                c.generate(vec![j as u32 % 250 + 1, 2, 3], toks_per,
+                           Sampling::Greedy, None)
+                    .unwrap()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f32();
+        let tokens = (n_req * toks_per) as f32;
+        println!(
+            "null-engine serving: max_batch={max_batch:>2} {} reqs x {} toks \
+             -> {:.0} tokens/s ({:.1} us/token coordination overhead)",
+            n_req, toks_per, tokens / dt, 1e6 * dt / tokens
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! End-to-end serving bench: the full coordinator + rust INT4 engine on
+//! the trained model (artifacts) or a random model (fallback), reporting
+//! the paper-relevant serving metrics: token throughput + latency
+//! percentiles per (method, scheme).
+//!
+//! Run: `cargo bench --bench e2e_serving`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rrs::coordinator::{Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::model::sampler::Sampling;
+use rrs::model::{tokenizer, EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+
+fn load_weights() -> (Weights, ModelConfig, Vec<u32>) {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if let Ok(artifacts) = rrs::runtime::Artifacts::load(root) {
+        let mcfg = artifacts.model;
+        if let Ok(w) = Weights::load(artifacts.weights_path(), &mcfg) {
+            let val = artifacts.val_text().unwrap_or_default();
+            let toks = tokenizer::encode(&val);
+            let calib: Vec<u32> =
+                (0..8).flat_map(|i| toks[i * 64..i * 64 + 64].to_vec()).collect();
+            return (w, mcfg, calib);
+        }
+    }
+    eprintln!("artifacts missing; benching a random model");
+    let mcfg = ModelConfig::default();
+    let w = Weights::random(&mcfg, 9);
+    let calib: Vec<u32> = (0..512u32).map(|i| (i * 53 + 7) % 256).collect();
+    (w, mcfg, calib)
+}
+
+fn bench_config(
+    w: &Weights,
+    mcfg: &ModelConfig,
+    calib: &[u32],
+    method: Method,
+    scheme: Scheme,
+    n_req: usize,
+    max_new: usize,
+) {
+    let ecfg = EngineConfig {
+        method,
+        scheme,
+        group: 128,
+        kv_group: 128,
+        alpha: 0.5,
+        gptq: method != Method::Rtn && method != Method::Fp,
+    };
+    let model = QuantModel::prepare(w, mcfg, &ecfg, Some(calib), None).unwrap();
+    let label = ecfg.label();
+    let coord = Arc::new(Coordinator::start(
+        RustServeEngine::new(model),
+        SchedulerConfig { max_batch: 8, queue_capacity: 256, ..Default::default() },
+    ));
+    let prompts = ["arlo is", "count: 1 2 3", "the fox named", "senna likes"];
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for j in 0..n_req {
+        let c = coord.clone();
+        let prompt = tokenizer::encode(prompts[j % prompts.len()]);
+        handles.push(std::thread::spawn(move || {
+            c.generate(prompt, max_new, Sampling::Greedy, None).unwrap()
+        }));
+    }
+    let mut total_tokens = 0usize;
+    for h in handles {
+        total_tokens += h.join().unwrap().tokens.len();
+    }
+    let dt = t0.elapsed().as_secs_f32();
+    let lat = coord.metrics.total_summary();
+    println!(
+        "{label:<22} {n_req:>3} reqs  {:>7.1} tok/s  p50 {:>7.1}ms  p90 {:>7.1}ms",
+        total_tokens as f32 / dt,
+        lat.p50,
+        lat.p90
+    );
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (w, mcfg, calib) = load_weights();
+    let (n_req, max_new) = if full { (64, 24) } else { (16, 12) };
+    println!("e2e serving bench ({} reqs x {} new tokens)", n_req, max_new);
+    for (method, scheme) in [
+        (Method::Fp, Scheme::FP),
+        (Method::Rtn, Scheme::A4W4KV4),
+        (Method::QuaRot, Scheme::A4W4KV4),
+        (Method::Rrs, Scheme::A4W4KV4),
+        (Method::Rrs, Scheme::A4W4KV16),
+    ] {
+        bench_config(&w, &mcfg, &calib, method, scheme, n_req, max_new);
+    }
+}

@@ -1,0 +1,37 @@
+//! Figure 6 bench: kernel latency of FP32 / per-channel A4W4 /
+//! sub-channel A4W4 / RS-fused A4W4 across batch sizes.
+//!
+//! The paper's NVBench RTX-4070-Ti comparison maps to our CPU INT4
+//! kernels; dims scaled from LLaMA-7B to single-core wallclock.  The
+//! claim under test is *relative*: RS-fusion ~ per-channel A4W4 cost,
+//! sub-channel visibly slower (scale matrices in the epilogue).
+//!
+//! Run: `cargo bench --bench fig6_kernel [-- --full]`
+
+use rrs::harness::fig6::measure;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let (k, m) = if full { (2048, 2048) } else { (1024, 1024) };
+    let batches: &[usize] =
+        if full { &[1, 16, 64, 128, 256, 512] } else { &[1, 16, 64, 128] };
+    println!("fig6 kernel bench, K=M={k} (quick={})", !full);
+    println!(
+        "{:>6} {:>12} {:>16} {:>16} {:>14} {:>10} {:>10}",
+        "batch", "fp32(us)", "per-chan(us)", "sub-chan(us)", "rs-fused(us)",
+        "rs-ovhd", "sub-ovhd"
+    );
+    for &b in batches {
+        let r = measure(b, k, m, !full);
+        println!(
+            "{:>6} {:>12.1} {:>16.1} {:>16.1} {:>14.1} {:>9.1}% {:>9.1}%",
+            r.batch,
+            r.fp32_us,
+            r.per_channel_us,
+            r.sub_channel_us,
+            r.rs_fused_us,
+            100.0 * (r.rs_fused_us / r.per_channel_us - 1.0),
+            100.0 * (r.sub_channel_us / r.per_channel_us - 1.0),
+        );
+    }
+}

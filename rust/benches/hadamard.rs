@@ -1,0 +1,35 @@
+//! Rotation-cost bench: FWHT (O(K log K)) vs dense orthogonal matmul
+//! (O(K^2)) per token, across K — quantifies the online-rotation overhead
+//! QuaRot/RRS pay and why Hadamard (not a learned dense rotation) is the
+//! deployable choice (paper 4.2 note on SpinQuant's cost).
+//!
+//! Run: `cargo bench --bench hadamard`
+
+use rrs::linalg::fwht::hadamard_dense;
+use rrs::linalg::gemm::{gemm_f32, Mat};
+use rrs::quant::rotation::Rotation;
+use rrs::util::bench::{black_box, Bencher};
+use rrs::util::rng::Pcg;
+
+fn main() {
+    let b = Bencher::default();
+    let rows = 64;
+    for k in [128usize, 256, 512, 1024] {
+        let mut rng = Pcg::new(k as u64);
+        let x = Mat::from_vec(rows, k, rng.normal_vec(rows * k));
+        let rot = Rotation::Hadamard;
+        let r_fwht = b.run(&format!("fwht {rows}x{k}"), || {
+            black_box(rot.apply(&x));
+        });
+        let h = Mat::from_vec(k, k, hadamard_dense(k));
+        let r_dense = b.run(&format!("dense {rows}x{k}"), || {
+            black_box(gemm_f32(&x, &h));
+        });
+        println!("{}", r_fwht.report_line());
+        println!(
+            "{}  (dense/fwht = {:.1}x)",
+            r_dense.report_line(),
+            r_dense.ns_per_iter() / r_fwht.ns_per_iter()
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Micro-bench of the quantization primitives on the serving hot path:
+//! per-token RTN, runtime-smooth prepare (scales+perm+quant), nibble
+//! packing, KV quant/dequant and the integer dot kernel.
+//!
+//! Run: `cargo bench --bench quant_ops`
+
+use rrs::linalg::gemm::Mat;
+use rrs::linalg::igemm::idot;
+use rrs::quant::{kv::QuantVec, pack4, rtn, runtime_smooth};
+use rrs::util::bench::{black_box, Bencher};
+use rrs::util::rng::Pcg;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Pcg::new(1);
+    let x = Mat::from_vec(64, 1024, rng.normal_vec(64 * 1024));
+
+    let r = b.run("quant_per_token 64x1024", || {
+        black_box(rtn::quant_per_token(&x));
+    });
+    println!("{}", r.report_line());
+
+    for group in [1usize, 128] {
+        let r = b.run(&format!("rs_prepare 64x1024 g={group}"), || {
+            black_box(runtime_smooth::prepare(&x, group));
+        });
+        println!("{}", r.report_line());
+    }
+
+    let codes: Vec<i8> = (0..4096).map(|i| ((i % 15) as i8) - 7).collect();
+    let r = b.run("pack_i4 4096", || {
+        black_box(pack4::pack_i4(&codes));
+    });
+    println!("{}", r.report_line());
+    let packed = pack4::pack_i4(&codes);
+    let r = b.run("unpack_i4 4096", || {
+        black_box(pack4::unpack_i4(&packed, 4096));
+    });
+    println!("{}", r.report_line());
+
+    let row = rng.normal_vec(128);
+    let r = b.run("kv quantize 128 (g=32)", || {
+        black_box(QuantVec::quantize(&row, 32));
+    });
+    println!("{}", r.report_line());
+    let q = QuantVec::quantize(&row, 32);
+    let mut out = vec![0.0f32; 128];
+    let r = b.run("kv dequantize 128", || {
+        q.dequantize_into(black_box(&mut out));
+    });
+    println!("{}", r.report_line());
+
+    let a: Vec<i8> = (0..4096).map(|i| ((i % 13) as i8) - 6).collect();
+    let c: Vec<i8> = (0..4096).map(|i| ((i % 11) as i8) - 5).collect();
+    let r = b.run("idot 4096", || {
+        black_box(idot(&a, &c));
+    });
+    println!(
+        "{}  ({:.2} GMAC/s)",
+        r.report_line(),
+        4096.0 / r.ns_per_iter()
+    );
+}

@@ -1,0 +1,74 @@
+//! Engine abstraction the scheduler drives: the pure-rust INT4 engine is
+//! the default backend; the PJRT executor (runtime::PjrtEngine) can serve
+//! the same trait for the AOT-graph path.
+
+use crate::linalg::gemm::Mat;
+use crate::model::engine::{KvCache, QuantModel};
+
+/// Opaque per-sequence state owned by the backend.
+pub trait ServeEngine: Send + Sync {
+    type Seq: Send;
+
+    fn max_seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+
+    /// Create an empty sequence state.
+    fn new_seq(&self) -> Self::Seq;
+
+    /// Prefill `tokens` into the sequence; returns logits of the LAST
+    /// position [vocab].
+    fn prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Vec<f32>;
+
+    /// Advance every sequence by one token; returns logits [B, vocab].
+    fn decode(&self, batch: &mut [(&mut Self::Seq, u32)]) -> Mat;
+
+    /// Current length of a sequence.
+    fn seq_len(&self, seq: &Self::Seq) -> usize;
+
+    /// KV memory footprint of a sequence (for metrics).
+    fn seq_bytes(&self, seq: &Self::Seq) -> usize;
+}
+
+/// The pure-rust quantized engine backend.
+pub struct RustServeEngine {
+    pub model: QuantModel,
+}
+
+impl RustServeEngine {
+    pub fn new(model: QuantModel) -> RustServeEngine {
+        RustServeEngine { model }
+    }
+}
+
+impl ServeEngine for RustServeEngine {
+    type Seq = KvCache;
+
+    fn max_seq(&self) -> usize {
+        self.model.mcfg.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.mcfg.vocab
+    }
+
+    fn new_seq(&self) -> KvCache {
+        KvCache::new(&self.model.mcfg, &self.model.ecfg)
+    }
+
+    fn prefill(&self, seq: &mut KvCache, tokens: &[u32]) -> Vec<f32> {
+        let logits = self.model.forward_full(tokens, Some(seq));
+        logits.row(logits.rows - 1).to_vec()
+    }
+
+    fn decode(&self, batch: &mut [(&mut KvCache, u32)]) -> Mat {
+        self.model.decode_batch(batch)
+    }
+
+    fn seq_len(&self, seq: &KvCache) -> usize {
+        seq.len()
+    }
+
+    fn seq_bytes(&self, seq: &KvCache) -> usize {
+        seq.bytes()
+    }
+}

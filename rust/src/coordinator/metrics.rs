@@ -1,0 +1,106 @@
+//! Serving metrics: counters + latency reservoirs, snapshotted as JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Coordinator-wide metrics (thread-safe).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    lat_total_ms: Mutex<Vec<f32>>,
+    lat_queue_ms: Mutex<Vec<f32>>,
+    lat_per_token_ms: Mutex<Vec<f32>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_completion(&self, total_ms: f32, queue_ms: f32, n_tokens: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(n_tokens as u64, Ordering::Relaxed);
+        self.lat_total_ms.lock().unwrap().push(total_ms);
+        self.lat_queue_ms.lock().unwrap().push(queue_ms);
+        if n_tokens > 0 {
+            self.lat_per_token_ms
+                .lock()
+                .unwrap()
+                .push(total_ms / n_tokens as f32);
+        }
+    }
+
+    pub fn total_summary(&self) -> Summary {
+        Summary::of(&self.lat_total_ms.lock().unwrap())
+    }
+
+    pub fn queue_summary(&self) -> Summary {
+        Summary::of(&self.lat_queue_ms.lock().unwrap())
+    }
+
+    pub fn per_token_summary(&self) -> Summary {
+        Summary::of(&self.lat_per_token_ms.lock().unwrap())
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let s = self.total_summary();
+        let q = self.queue_summary();
+        let pt = self.per_token_summary();
+        obj(vec![
+            ("submitted", (self.submitted.load(Ordering::Relaxed) as usize).into()),
+            ("rejected", (self.rejected.load(Ordering::Relaxed) as usize).into()),
+            ("completed", (self.completed.load(Ordering::Relaxed) as usize).into()),
+            (
+                "tokens_generated",
+                (self.tokens_generated.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "decode_steps",
+                (self.decode_steps.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "latency_ms",
+                obj(vec![
+                    ("p50", (s.p50 as f64).into()),
+                    ("p90", (s.p90 as f64).into()),
+                    ("p99", (s.p99 as f64).into()),
+                    ("mean", (s.mean as f64).into()),
+                ]),
+            ),
+            (
+                "queue_ms",
+                obj(vec![("p50", (q.p50 as f64).into()), ("p90", (q.p90 as f64).into())]),
+            ),
+            (
+                "per_token_ms",
+                obj(vec![("p50", (pt.p50 as f64).into()), ("p90", (pt.p90 as f64).into())]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.observe_completion(100.0, 5.0, 10);
+        m.observe_completion(200.0, 10.0, 20);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        let j = m.snapshot_json();
+        assert_eq!(j.get("submitted").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(30));
+        assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+    }
+}

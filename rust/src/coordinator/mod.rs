@@ -1,0 +1,24 @@
+//! L3 serving coordinator — the system layer that makes RRS deployable:
+//! request queue with admission control, dynamic batcher, continuous
+//! prefill/decode scheduler over INT4 KV caches, worker thread, TCP
+//! front-end and metrics.
+//!
+//! Built on std threads + channels (tokio is not vendored in this
+//! environment); the design mirrors a vLLM-style router: frontends submit
+//! [`request::Request`]s into a bounded [`queue::RequestQueue`]; the
+//! worker runs [`scheduler::Scheduler`], which admits waiting requests
+//! into the active set (prefill) and steps all active sequences one token
+//! per iteration (continuous batching), retiring finished sequences.
+
+pub mod engine_iface;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use engine_iface::{RustServeEngine, ServeEngine};
+pub use metrics::Metrics;
+pub use queue::RequestQueue;
+pub use request::{Request, RequestId, Response, SubmitError};
+pub use scheduler::{Coordinator, SchedulerConfig};

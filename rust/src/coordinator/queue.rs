@@ -1,0 +1,159 @@
+//! Bounded request queue with admission control (the backpressure point).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::request::{Request, SubmitError};
+
+/// MPMC bounded FIFO; producers fail fast when full (shed load rather
+/// than queue unboundedly — the serving-side backpressure policy).
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+struct Inner {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Non-blocking submit; `Err(QueueFull)` = backpressure.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(SubmitError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(SubmitError::QueueFull);
+        }
+        g.items.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pop up to `max` requests; blocks up to `wait` for the first one.
+    /// Returns an empty vec on timeout or closure-with-empty-queue.
+    pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        if g.items.is_empty() && !g.closed {
+            let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+            g = g2;
+        }
+        let take = g.items.len().min(max);
+        g.items.drain(..take).collect()
+    }
+
+    /// Pop everything available without blocking.
+    pub fn drain_now(&self, max: usize) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        let take = g.items.len().min(max);
+        g.items.drain(..take).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sampler::Sampling;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                prompt: vec![1, 2],
+                max_new_tokens: 4,
+                sampling: Sampling::Greedy,
+                stop_token: None,
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i);
+            q.submit(r).unwrap();
+            rxs.push(rx);
+        }
+        let batch = q.pop_batch(10, Duration::from_millis(1));
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = RequestQueue::new(2);
+        let (r0, _k0) = req(0);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.submit(r0).unwrap();
+        q.submit(r1).unwrap();
+        assert_eq!(q.submit(r2).unwrap_err(), SubmitError::QueueFull);
+    }
+
+    #[test]
+    fn closed_rejects() {
+        let q = RequestQueue::new(2);
+        q.close();
+        let (r, _keep) = req(0);
+        assert_eq!(q.submit(r).unwrap_err(), SubmitError::Closed);
+    }
+
+    #[test]
+    fn pop_batch_caps_at_max() {
+        let q = RequestQueue::new(8);
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        assert_eq!(q.pop_batch(2, Duration::from_millis(1)).len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn timeout_returns_empty() {
+        let q = RequestQueue::new(2);
+        let t0 = Instant::now();
+        let got = q.pop_batch(4, Duration::from_millis(30));
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

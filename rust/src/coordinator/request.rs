@@ -1,0 +1,69 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::model::sampler::Sampling;
+
+pub type RequestId = u64;
+
+/// A generation request.
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// Stop generation at this token (e.g. b'.' for the demo corpus).
+    pub stop_token: Option<u32>,
+    pub submitted_at: Instant,
+    /// Channel the scheduler answers on.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Completion + per-request timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    pub queue_ms: f32,
+    pub prefill_ms: f32,
+    pub decode_ms: f32,
+    pub total_ms: f32,
+    /// Sequence position where generation stopped.
+    pub finish_reason: FinishReason,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    /// KV capacity exhausted.
+    Truncated,
+    /// Coordinator shutting down.
+    Aborted,
+}
+
+/// Submission failures (backpressure surface).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity: shed load (HTTP 429 analog).
+    QueueFull,
+    /// Coordinator stopped.
+    Closed,
+    /// Prompt longer than the engine's max sequence.
+    PromptTooLong { prompt: usize, max: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "queue full"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+            SubmitError::PromptTooLong { prompt, max } => {
+                write!(f, "prompt length {prompt} exceeds max {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}

@@ -1,0 +1,287 @@
+//! Continuous-batching scheduler + the public [`Coordinator`] handle.
+//!
+//! One worker thread owns the engine.  Each loop iteration:
+//!   1. **admit** — while the active set has room, pop waiting requests,
+//!      prefill their prompts into fresh KV sequences;
+//!   2. **decode** — one batched step over all active sequences;
+//!   3. **retire** — sequences hitting max_new_tokens / stop token / KV
+//!      capacity get their responses sent.
+//!
+//! Prefill happens inside the loop (chunked admission), so short decode
+//! steps are never starved by long prompts beyond one admission slot —
+//! the paper's serving context (prefill = compute-bound A4W4 GEMMs,
+//! decode = memory-bound) maps onto exactly this split.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::model::sampler::{sample, Sampling};
+use crate::util::rng::Pcg;
+
+use super::engine_iface::ServeEngine;
+use super::metrics::Metrics;
+use super::queue::RequestQueue;
+use super::request::{FinishReason, Request, RequestId, Response, SubmitError};
+
+/// Scheduler policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max concurrently-active sequences (decode batch bound).
+    pub max_batch: usize,
+    /// Max waiting requests before submissions are rejected.
+    pub queue_capacity: usize,
+    /// How long the worker sleeps waiting for work when idle.
+    pub idle_wait: Duration,
+    /// Max new requests admitted (prefilled) per loop iteration.
+    pub admit_per_step: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 8,
+            queue_capacity: 64,
+            idle_wait: Duration::from_millis(2),
+            admit_per_step: 2,
+        }
+    }
+}
+
+struct Active<S> {
+    id: RequestId,
+    seq: S,
+    generated: Vec<u32>,
+    next_token: u32,
+    max_new_tokens: usize,
+    sampling: Sampling,
+    stop_token: Option<u32>,
+    submitted_at: Instant,
+    queue_ms: f32,
+    prefill_ms: f32,
+    reply: mpsc::Sender<Response>,
+}
+
+/// Public handle: submit requests, read metrics, shut down.
+pub struct Coordinator {
+    queue: Arc<RequestQueue>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    worker: Option<JoinHandle<()>>,
+    max_seq: usize,
+}
+
+impl Coordinator {
+    /// Start the worker thread over an engine backend.
+    pub fn start<E: ServeEngine + 'static>(
+        engine: E,
+        cfg: SchedulerConfig,
+    ) -> Coordinator {
+        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let max_seq = engine.max_seq();
+        let q2 = queue.clone();
+        let m2 = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("rrs-scheduler".into())
+            .spawn(move || run_loop(engine, cfg, q2, m2))
+            .expect("spawn scheduler");
+        Coordinator {
+            queue,
+            metrics,
+            next_id: AtomicU64::new(1),
+            worker: Some(worker),
+            max_seq,
+        }
+    }
+
+    /// Submit a generation request; returns (id, receiver) or backpressure.
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampling: Sampling,
+        stop_token: Option<u32>,
+    ) -> Result<(RequestId, mpsc::Receiver<Response>), SubmitError> {
+        if prompt.is_empty() || prompt.len() + max_new_tokens > self.max_seq {
+            return Err(SubmitError::PromptTooLong {
+                prompt: prompt.len() + max_new_tokens,
+                max: self.max_seq,
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling,
+            stop_token,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.queue.submit(req) {
+            Ok(()) => Ok((id, rx)),
+            Err(e) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit and block until the response arrives.
+    pub fn generate(
+        &self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampling: Sampling,
+        stop_token: Option<u32>,
+    ) -> Result<Response, SubmitError> {
+        let (_, rx) = self.submit(prompt, max_new_tokens, sampling, stop_token)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Stop accepting work and join the worker (in-flight requests finish).
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_loop<E: ServeEngine>(
+    engine: E,
+    cfg: SchedulerConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+) {
+    let mut active: Vec<Active<E::Seq>> = Vec::new();
+    let mut rng = Pcg::new(0x5eed);
+    loop {
+        // 1. admit
+        let room = cfg.max_batch.saturating_sub(active.len());
+        if room > 0 {
+            let take = room.min(cfg.admit_per_step);
+            let newreqs = if active.is_empty() {
+                queue.pop_batch(take, cfg.idle_wait)
+            } else {
+                queue.drain_now(take)
+            };
+            for req in newreqs {
+                let queue_ms = req.submitted_at.elapsed().as_secs_f32() * 1e3;
+                let t0 = Instant::now();
+                let mut seq = engine.new_seq();
+                let logits = engine.prefill(&mut seq, &req.prompt);
+                metrics
+                    .prefill_tokens
+                    .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
+                let prefill_ms = t0.elapsed().as_secs_f32() * 1e3;
+                let first = sample(&logits, req.sampling, &mut rng);
+                active.push(Active {
+                    id: req.id,
+                    seq,
+                    generated: vec![first],
+                    next_token: first,
+                    max_new_tokens: req.max_new_tokens,
+                    sampling: req.sampling,
+                    stop_token: req.stop_token,
+                    submitted_at: req.submitted_at,
+                    queue_ms,
+                    prefill_ms,
+                    reply: req.reply,
+                });
+            }
+        }
+
+        if active.is_empty() {
+            if queue.is_closed() && queue.is_empty() {
+                return;
+            }
+            continue;
+        }
+
+        // 2. retire finished BEFORE stepping (first token may already stop)
+        retire(&engine, &mut active, &metrics);
+        if active.is_empty() {
+            continue;
+        }
+
+        // 3. one batched decode step
+        let mut pairs: Vec<(&mut E::Seq, u32)> = active
+            .iter_mut()
+            .map(|a| {
+                let t = a.next_token;
+                (&mut a.seq, t)
+            })
+            .collect();
+        let logits = engine.decode(&mut pairs);
+        drop(pairs);
+        metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        for (i, a) in active.iter_mut().enumerate() {
+            let tok = sample(logits.row(i), a.sampling, &mut rng);
+            a.generated.push(tok);
+            a.next_token = tok;
+        }
+        retire(&engine, &mut active, &metrics);
+    }
+}
+
+fn finishes<E: ServeEngine>(engine: &E, a: &Active<E::Seq>) -> Option<FinishReason> {
+    // the generated token list includes the token produced at prefill
+    let stop_hit = a
+        .stop_token
+        .map(|s| a.generated.last() == Some(&s))
+        .unwrap_or(false);
+    if stop_hit {
+        Some(FinishReason::StopToken)
+    } else if a.generated.len() >= a.max_new_tokens {
+        Some(FinishReason::MaxTokens)
+    } else if engine.seq_len(&a.seq) + 1 >= engine.max_seq() {
+        Some(FinishReason::Truncated)
+    } else {
+        None
+    }
+}
+
+fn retire<E: ServeEngine>(
+    engine: &E,
+    active: &mut Vec<Active<E::Seq>>,
+    metrics: &Metrics,
+) {
+    let mut i = 0;
+    while i < active.len() {
+        if let Some(reason) = finishes(engine, &active[i]) {
+            let a = active.swap_remove(i);
+            let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
+            let decode_ms = total_ms - a.queue_ms - a.prefill_ms;
+            metrics.observe_completion(total_ms, a.queue_ms, a.generated.len());
+            let _ = a.reply.send(Response {
+                id: a.id,
+                tokens: a.generated,
+                queue_ms: a.queue_ms,
+                prefill_ms: a.prefill_ms,
+                decode_ms: decode_ms.max(0.0),
+                total_ms,
+                finish_reason: reason,
+            });
+        } else {
+            i += 1;
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! TCP front-end: newline-delimited JSON over a socket.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "arlo is", "max_tokens": 24, "temperature": 0.0}
+//!   <- {"id": 1, "text": " red.", "tokens": 5, "total_ms": 12.3, ...}
+//!   -> {"cmd": "metrics"}            <- metrics snapshot
+//!   -> {"cmd": "shutdown"}           <- {"ok": true} and server exits
+//!
+//! Each connection gets a handler thread; generation responses block the
+//! connection (clients pipeline by opening several connections — the
+//! scheduler interleaves them via continuous batching).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::sampler::Sampling;
+use crate::model::tokenizer;
+use crate::util::json::{obj, Json};
+
+use super::request::FinishReason;
+use super::scheduler::Coordinator;
+
+/// Serve until a `shutdown` command arrives.  Returns the bound port.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<u16> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    let stop = Arc::new(AtomicBool::new(false));
+    eprintln!("rrs server listening on port {port}");
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let coord = coordinator.clone();
+        let stop2 = stop.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, coord, stop2);
+        });
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(port)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(&line, &coord, &stop);
+        writer.write_all(reply.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// One protocol line -> one JSON reply (exposed for tests).
+pub fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return obj(vec![("error", format!("bad json: {e}").as_str().into())]),
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "metrics" => coord.metrics.snapshot_json(),
+            "ping" => obj(vec![("ok", true.into())]),
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                obj(vec![("ok", true.into())])
+            }
+            other => obj(vec![("error", format!("unknown cmd {other}").as_str().into())]),
+        };
+    }
+    let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
+        return obj(vec![("error", "missing 'prompt'".into())]);
+    };
+    let max_tokens = req
+        .get("max_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(32);
+    let temperature = req
+        .get("temperature")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as f32;
+    let sampling = if temperature <= 0.0 {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature(temperature)
+    };
+    let stop_token = req
+        .get("stop")
+        .and_then(Json::as_str)
+        .and_then(|s| s.bytes().next())
+        .map(|b| b as u32);
+    match coord.generate(tokenizer::encode(prompt), max_tokens, sampling, stop_token) {
+        Ok(resp) => obj(vec![
+            ("id", (resp.id as usize).into()),
+            ("text", tokenizer::decode(&resp.tokens).as_str().into()),
+            ("tokens", resp.tokens.len().into()),
+            ("queue_ms", (resp.queue_ms as f64).into()),
+            ("prefill_ms", (resp.prefill_ms as f64).into()),
+            ("decode_ms", (resp.decode_ms as f64).into()),
+            ("total_ms", (resp.total_ms as f64).into()),
+            (
+                "finish",
+                match resp.finish_reason {
+                    FinishReason::MaxTokens => "max_tokens",
+                    FinishReason::StopToken => "stop",
+                    FinishReason::Truncated => "truncated",
+                    FinishReason::Aborted => "aborted",
+                }
+                .into(),
+            ),
+        ]),
+        Err(e) => obj(vec![("error", e.to_string().as_str().into())]),
+    }
+}

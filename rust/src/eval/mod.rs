@@ -1,0 +1,11 @@
+//! Evaluation: perplexity (WikiText-2 stand-in), zero-shot QA scoring
+//! (Common Sense QA stand-in), and the activation smoothness statistics
+//! behind Figures 2b / 7 / 8 / 9.
+
+pub mod perplexity;
+pub mod qa;
+pub mod smoothness;
+
+pub use perplexity::perplexity;
+pub use qa::{load_tasks, score_tasks, QaItem};
+pub use smoothness::{collect_mu, outlier_histogram, SmoothMode};

@@ -1,0 +1,91 @@
+//! Teacher-forced perplexity over held-out text (the WikiText-2 stand-in).
+
+use crate::model::engine::QuantModel;
+use crate::model::tokenizer;
+
+/// Mean NLL (nats/token) over fixed windows of `seq` tokens; perplexity =
+/// exp(NLL).  Window starts stride disjointly, matching python
+/// `train.eval_nll`'s protocol (teacher forcing, next-byte targets).
+pub fn mean_nll(model: &QuantModel, text: &str, seq: usize, max_windows: usize) -> f32 {
+    let toks = tokenizer::encode(text);
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut start = 0usize;
+    let mut windows = 0usize;
+    while start + seq + 1 < toks.len() && windows < max_windows {
+        let window = &toks[start..start + seq + 1];
+        let logits = model.forward_full(&window[..seq], None);
+        for i in 0..seq {
+            let row = logits.row(i);
+            let target = window[i + 1] as usize;
+            // stable log-softmax
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 = row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+            total += (lse - row[target]) as f64;
+            count += 1;
+        }
+        start += seq;
+        windows += 1;
+    }
+    if count == 0 {
+        return f32::NAN;
+    }
+    (total / count as f64) as f32
+}
+
+/// Perplexity = exp(mean NLL).  Values above `cap` are clamped (the paper
+/// prints divergent results as "5e3"-style magnitudes; we keep the raw
+/// number but callers may format with [`format_ppl`]).
+pub fn perplexity(model: &QuantModel, text: &str, seq: usize, max_windows: usize) -> f32 {
+    mean_nll(model, text, seq, max_windows).exp()
+}
+
+/// Paper-style formatting: small values to 2 decimals, divergent ones in
+/// scientific magnitude form ("5e3"), NaN as "Nan".
+pub fn format_ppl(ppl: f32) -> String {
+    if ppl.is_nan() {
+        "Nan".to_string()
+    } else if ppl < 100.0 {
+        format!("{ppl:.2}")
+    } else if ppl < 1000.0 {
+        format!("{ppl:.1}")
+    } else {
+        let exp = ppl.log10().floor() as i32;
+        let mant = ppl / 10f32.powi(exp);
+        format!("{}e{}", mant.round() as i32, exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+    use crate::quant::{Method, Scheme};
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        // an untrained model's byte-level perplexity is ~vocab
+        let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+        let w = Weights::random(&cfg, 3);
+        let ecfg = EngineConfig {
+            method: Method::Fp,
+            scheme: Scheme::FP,
+            gptq: false,
+            ..Default::default()
+        };
+        let m = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+        let text = "abcdefgh. the quick brown fox jumps over the lazy dog. "
+            .repeat(4);
+        let ppl = perplexity(&m, &text, 32, 2);
+        assert!(ppl > 50.0 && ppl < 2000.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_ppl(6.6632), "6.66");
+        assert_eq!(format_ppl(57.333), "57.33");
+        assert_eq!(format_ppl(f32::NAN), "Nan");
+        assert_eq!(format_ppl(5_200.0), "5e3");
+        assert_eq!(format_ppl(214.88), "214.9");
+    }
+}

@@ -1,0 +1,185 @@
+//! Activation smoothness statistics: the measurement machinery behind
+//! Fig. 2b (P(less smooth after rotation)), Fig. 7 (spike-outlier
+//! histogram at the down-projector), Fig. 8 (victim-effect Monte Carlo)
+//! and Fig. 9 (mu per projector under X / R / RS / RRS).
+
+use crate::linalg::gemm::Mat;
+use crate::quant::rotation::Rotation;
+use crate::quant::runtime_smooth;
+use crate::util::stats;
+
+/// Which smoothing view of the activation to measure (Fig. 9 legend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SmoothMode {
+    /// Raw activation ("X").
+    X,
+    /// Rotated ("R").
+    R,
+    /// Runtime Smooth ("RS"): X / channel-max.
+    Rs,
+    /// Rotated Runtime Smooth ("RRS").
+    Rrs,
+}
+
+impl SmoothMode {
+    pub const ALL: [SmoothMode; 4] =
+        [SmoothMode::X, SmoothMode::R, SmoothMode::Rs, SmoothMode::Rrs];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SmoothMode::X => "X",
+            SmoothMode::R => "R",
+            SmoothMode::Rs => "RS",
+            SmoothMode::Rrs => "RRS",
+        }
+    }
+}
+
+/// Transform an activation per the mode (rotation requires pow-2 K).
+pub fn apply_mode(x: &Mat, mode: SmoothMode) -> Mat {
+    match mode {
+        SmoothMode::X => x.clone(),
+        SmoothMode::R => Rotation::Hadamard.apply(x),
+        SmoothMode::Rs => smooth_by_channel_max(x),
+        SmoothMode::Rrs => smooth_by_channel_max(&Rotation::Hadamard.apply(x)),
+    }
+}
+
+fn smooth_by_channel_max(x: &Mat) -> Mat {
+    let s = runtime_smooth::channel_scales(x);
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        for (v, &sj) in out.row_mut(i).iter_mut().zip(&s) {
+            *v /= sj;
+        }
+    }
+    out
+}
+
+/// Per-token mu = absmax/RMS after the mode transform (Fig. 2b / 9).
+pub fn collect_mu(x: &Mat, mode: SmoothMode) -> Vec<f32> {
+    let t = apply_mode(x, mode);
+    (0..t.rows).map(|i| stats::smoothness_mu(t.row(i))).collect()
+}
+
+/// Fraction of tokens that got LESS smooth after rotation (Fig. 2b):
+/// mu(rotated) > mu(raw).
+pub fn prob_less_smooth_after_rotation(x: &Mat) -> f32 {
+    let before = collect_mu(x, SmoothMode::X);
+    let after = collect_mu(x, SmoothMode::R);
+    let worse = before.iter().zip(&after).filter(|(b, a)| a > b).count();
+    worse as f32 / before.len().max(1) as f32
+}
+
+/// Spike-outlier histogram (Fig. 7): per token, magnitudes x/median(|t|),
+/// counted into the paper's intervals.  Returns (edges, counts) where
+/// counts[i] = #elements with ratio in [edges[i-1], edges[i]).
+pub fn outlier_histogram(x: &Mat, edges: &[f32]) -> Vec<usize> {
+    let mut ratios = Vec::new();
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mut mags: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = mags[mags.len() / 2].max(1e-8);
+        for &v in row {
+            ratios.push(v.abs() / med);
+        }
+    }
+    stats::log_histogram(&ratios, edges)
+}
+
+/// Victim-effect statistic (Fig. 8 / appendix A.1, eq. 8-10): build an
+/// activation of `n_spike` spike tokens (magnitude `spike`) over Gaussian
+/// noise, compute smoothing scales under RS or RRS, and return
+/// u = mu(1/scale) — the smoothness of a normal token after smoothing.
+pub fn victim_u(
+    k: usize,
+    n_tokens: usize,
+    n_spikes: usize,
+    spike: f32,
+    rotated: bool,
+    rng: &mut crate::util::rng::Pcg,
+) -> f32 {
+    let mut x = Mat::from_vec(n_tokens, k, rng.normal_vec(n_tokens * k));
+    let chans = rng.choose_distinct(k, n_spikes.min(k));
+    for (t, &c) in chans.iter().enumerate() {
+        x.data[(t % n_tokens) * k + c] = spike;
+    }
+    let xt = if rotated { Rotation::Hadamard.apply(&x) } else { x };
+    let s = runtime_smooth::channel_scales(&xt);
+    let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+    stats::smoothness_mu(&inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn act_with_channel_outliers(seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        let mut x = Mat::from_vec(64, 128, rng.normal_vec(64 * 128));
+        for i in 0..64 {
+            x.data[i * 128 + 9] = 50.0 * (1.0 + 0.1 * rng.normal());
+        }
+        x
+    }
+
+    #[test]
+    fn rotation_smooths_structured_activations() {
+        let x = act_with_channel_outliers(1);
+        let mu_x = stats::mean(&collect_mu(&x, SmoothMode::X));
+        let mu_r = stats::mean(&collect_mu(&x, SmoothMode::R));
+        assert!(mu_r < mu_x, "{mu_r} vs {mu_x}");
+    }
+
+    #[test]
+    fn all_smoothers_improve_on_raw() {
+        // With a dominant consistent channel, rotation yields near-constant
+        // rows (very low mu) while RS yields Gaussian-ish rows; both beat
+        // the raw activation, and RRS at least matches RS.
+        let x = act_with_channel_outliers(2);
+        let mu_x = stats::mean(&collect_mu(&x, SmoothMode::X));
+        let mu_r = stats::mean(&collect_mu(&x, SmoothMode::R));
+        let mu_rs = stats::mean(&collect_mu(&x, SmoothMode::Rs));
+        let mu_rrs = stats::mean(&collect_mu(&x, SmoothMode::Rrs));
+        assert!(mu_r < mu_x, "{mu_r} vs {mu_x}");
+        assert!(mu_rs < mu_x, "{mu_rs} vs {mu_x}");
+        assert!(mu_rrs <= mu_rs * 1.05, "{mu_rrs} vs {mu_rs}");
+    }
+
+    #[test]
+    fn llm_like_rarely_less_smooth_but_random_often() {
+        // Fig. 2b: structured activations rotate smoother; pure Gaussian
+        // ("random matrix") gets less smooth about half the time.
+        let x = act_with_channel_outliers(3);
+        let p_llm = prob_less_smooth_after_rotation(&x);
+        let mut rng = Pcg::new(4);
+        let g = Mat::from_vec(64, 128, rng.normal_vec(64 * 128));
+        let p_rand = prob_less_smooth_after_rotation(&g);
+        assert!(p_llm < 0.2, "p_llm {p_llm}");
+        assert!(p_rand > 0.3, "p_rand {p_rand}");
+    }
+
+    #[test]
+    fn histogram_finds_spikes() {
+        let mut rng = Pcg::new(5);
+        let mut x = Mat::from_vec(16, 128, rng.normal_vec(16 * 128));
+        x.data[7 * 128 + 3] = 5000.0;
+        let counts = outlier_histogram(&x, &[10.0, 100.0, 1000.0]);
+        assert_eq!(counts.len(), 4);
+        assert!(counts[3] >= 1); // the >=1000x bucket caught the spike
+    }
+
+    #[test]
+    fn victims_grow_with_spikes_without_rotation() {
+        let mut rng = Pcg::new(6);
+        let u_rs_1 = victim_u(128, 64, 1, 1000.0, false, &mut rng);
+        let mut rng = Pcg::new(6);
+        let u_rs_16 = victim_u(128, 64, 16, 1000.0, false, &mut rng);
+        let mut rng = Pcg::new(6);
+        let u_rrs_16 = victim_u(128, 64, 16, 1000.0, true, &mut rng);
+        assert!(u_rs_16 > u_rs_1, "{u_rs_16} vs {u_rs_1}");
+        assert!(u_rrs_16 < u_rs_16, "{u_rrs_16} vs {u_rs_16}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Figures 2b, 3, 7, 8, 9 — the analysis plots, emitted as data tables
+//! (series the paper plots; CSV for external plotting).
+
+use anyhow::Result;
+
+use crate::eval::perplexity::format_ppl;
+use crate::eval::smoothness::{
+    collect_mu, outlier_histogram, prob_less_smooth_after_rotation, victim_u,
+    SmoothMode,
+};
+use crate::linalg::gemm::Mat;
+use crate::model::engine::capture_activations;
+use crate::model::weights::OutlierProfile;
+use crate::model::{tokenizer, EngineConfig};
+use crate::quant::{Method, Scheme};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+use super::{Ctx, MdTable};
+
+/// Captured per-projector activations for a profile.
+fn capture_for(ctx: &Ctx, profile: &str) -> Result<crate::model::engine::CapturedActs> {
+    let p = OutlierProfile::builtin(profile).unwrap();
+    let w = p.inject(&ctx.weights, 17);
+    let toks = tokenizer::encode(&ctx.val_text);
+    let n = 192.min(toks.len());
+    Ok(capture_activations(&w, &ctx.mcfg, &toks[..n]))
+}
+
+/// Fig. 2b: probability a token is LESS smooth after rotation — model
+/// activations vs a random Gaussian matrix.
+pub fn fig2b(ctx: &Ctx) -> Result<()> {
+    let mut table = MdTable::new(&["source", "P(less smooth after rotation)"]);
+    for profile in ["base", "llama2-like", "llama3-like", "qwen-like"] {
+        let acts = capture_for(ctx, profile)?;
+        // pool qkv activations over layers (the paper plots per model)
+        let mut probs = Vec::new();
+        for layer_act in acts.qkv.iter().chain(acts.down.iter()) {
+            probs.push(prob_less_smooth_after_rotation(layer_act));
+        }
+        table.row(vec![
+            format!("model:{profile}"),
+            format!("{:.4}", stats::mean(&probs)),
+        ]);
+    }
+    // random-matrix baseline
+    let mut rng = Pcg::new(42);
+    let mut probs = Vec::new();
+    for _ in 0..8 {
+        let g = Mat::from_vec(96, ctx.mcfg.dim, rng.normal_vec(96 * ctx.mcfg.dim));
+        probs.push(prob_less_smooth_after_rotation(&g));
+    }
+    table.row(vec!["random-matrix".into(), format!("{:.4}", stats::mean(&probs))]);
+
+    println!("\n## Figure 2b — P(less smooth after rotation)\n");
+    table.print();
+    ctx.write_report("fig2b.md", &table.to_markdown())?;
+    ctx.write_report("fig2b.csv", &table.to_csv())?;
+    Ok(())
+}
+
+/// Fig. 3: Runtime-Smooth ablation — SmoothQuant (offline calib, merged)
+/// vs runtime-scale-merged vs Runtime Smooth (no migration), under A4W4
+/// and A4W16 (ppl bars).
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let profile = OutlierProfile::builtin("llama3-like").unwrap();
+    let mut table = MdTable::new(&["variant", "A4W4", "A4W16"]);
+    let variants: [(&str, Method); 3] = [
+        ("SmoothQuant (offline scale, migrated)", Method::SmoothQuant),
+        ("runtime scale, migrated", Method::RsMigrated),
+        ("Runtime Smooth (no migration)", Method::Rs),
+    ];
+    for (label, method) in variants {
+        let mut row = vec![label.to_string()];
+        for scheme in [Scheme::A4W4KV16, Scheme::A4W16KV16] {
+            let ecfg = EngineConfig {
+                method,
+                scheme,
+                group: 1,
+                kv_group: 128,
+                alpha: 0.5,
+                gptq: method == Method::SmoothQuant,
+            };
+            let ppl = ctx.ppl(&profile, &ecfg)?;
+            eprintln!("fig3: {label} {} -> {}", scheme.label(), format_ppl(ppl));
+            row.push(format_ppl(ppl));
+        }
+        table.row(row);
+    }
+    println!("\n## Figure 3 — Runtime Smooth ablation (ppl)\n");
+    table.print();
+    ctx.write_report("fig3.md", &table.to_markdown())?;
+    ctx.write_report("fig3.csv", &table.to_csv())?;
+    Ok(())
+}
+
+/// Fig. 7: spike-outlier magnitude histogram at the Down-projector input
+/// (ratios to the token median, per magnitude interval).
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let edges = [10.0, 50.0, 100.0, 500.0, 1000.0];
+    let mut header = vec!["profile".to_string(), "projector".to_string()];
+    header.push("<10x".into());
+    for w in edges.windows(2) {
+        header.push(format!("{}x-{}x", w[0] as i64, w[1] as i64));
+    }
+    header.push(format!(">={}x", *edges.last().unwrap() as i64));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = MdTable::new(&hdr);
+
+    for profile in ["base", "llama3-like", "llama3-70b-like"] {
+        let acts = capture_for(ctx, profile)?;
+        for (kind, list) in [("down", &acts.down), ("qkv", &acts.qkv)] {
+            let mut counts = vec![0usize; edges.len() + 1];
+            for a in list {
+                for (c, n) in counts.iter_mut().zip(outlier_histogram(a, &edges)) {
+                    *c += n;
+                }
+            }
+            let mut row = vec![profile.to_string(), kind.to_string()];
+            // bucket 0 = <10x is "normal"; report counts beyond it raw
+            row.extend(counts.iter().map(|c| c.to_string()));
+            table.row(row);
+        }
+    }
+    println!("\n## Figure 7 — spike-outlier magnitude counts (x median)\n");
+    table.print();
+    ctx.write_report("fig7.md", &table.to_markdown())?;
+    ctx.write_report("fig7.csv", &table.to_csv())?;
+    Ok(())
+}
+
+/// Fig. 8: Monte-Carlo victim effect — u of a normal token after division
+/// by the smoothing scales, vs the number of spike tokens, RS vs RRS.
+pub fn fig8(ctx: &Ctx) -> Result<()> {
+    let spikes = [1usize, 2, 4, 8, 16, 32];
+    let trials = if ctx.fast { 8 } else { 64 };
+    let mut table = MdTable::new(&["#spike tokens", "u (RS)", "u (RRS)"]);
+    for &l in &spikes {
+        let mut u_rs = Vec::new();
+        let mut u_rrs = Vec::new();
+        for t in 0..trials {
+            let mut rng = Pcg::new(1000 + t as u64);
+            u_rs.push(victim_u(ctx.mcfg.dim, 64, l, 1000.0, false, &mut rng));
+            let mut rng = Pcg::new(1000 + t as u64);
+            u_rrs.push(victim_u(ctx.mcfg.dim, 64, l, 1000.0, true, &mut rng));
+        }
+        table.row(vec![
+            l.to_string(),
+            format!("{:.3}", stats::mean(&u_rs)),
+            format!("{:.3}", stats::mean(&u_rrs)),
+        ]);
+    }
+    println!("\n## Figure 8 — victim effect u vs #spike tokens\n");
+    table.print();
+    ctx.write_report("fig8.md", &table.to_markdown())?;
+    ctx.write_report("fig8.csv", &table.to_csv())?;
+    Ok(())
+}
+
+/// Fig. 9: smoothness mu per projector under X / R / RS / RRS.
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    let mut table =
+        MdTable::new(&["profile", "projector", "X", "R", "RS", "RRS"]);
+    for profile in ["llama3-like", "llama3-70b-like"] {
+        let acts = capture_for(ctx, profile)?;
+        for (kind, list) in [
+            ("QKV_Proj", &acts.qkv),
+            ("O_Proj", &acts.o),
+            ("GateUp_Proj", &acts.gate_up),
+            ("Down_Proj", &acts.down),
+        ] {
+            let mut row = vec![profile.to_string(), kind.to_string()];
+            for mode in SmoothMode::ALL {
+                let mut mus = Vec::new();
+                for a in list {
+                    mus.extend(collect_mu(a, mode));
+                }
+                row.push(format!("{:.2}", stats::mean(&mus)));
+            }
+            table.row(row);
+        }
+    }
+    println!("\n## Figure 9 — mean token mu per projector and smoother\n");
+    table.print();
+    ctx.write_report("fig9.md", &table.to_markdown())?;
+    ctx.write_report("fig9.csv", &table.to_csv())?;
+    Ok(())
+}

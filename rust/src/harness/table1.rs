@@ -1,0 +1,108 @@
+//! Table 1: WikiText-2-stand-in perplexity for every method x scheme x
+//! model profile.  The paper's claim shapes this must reproduce:
+//!   * RTN / GPTQ-alone diverge (1e2..1e5-style ppl),
+//!   * SmoothQuant fails at INT4 (big but finite),
+//!   * RS recovers channel-wise-outlier profiles but breaks on heavy
+//!     spikes (the llama3-70b-like column),
+//!   * QuaRot is strong but degrades on the heavy-spike profile,
+//!   * RRS is best or tied everywhere (the 57.33 -> 6.66 headline).
+
+use anyhow::Result;
+
+use crate::eval::perplexity::format_ppl;
+use crate::model::weights::OutlierProfile;
+use crate::model::EngineConfig;
+use crate::quant::{Method, Scheme};
+
+use super::{Ctx, MdTable};
+
+pub const METHODS: [Method; 6] = [
+    Method::Rtn,
+    Method::SmoothQuant,
+    Method::GptqOnly,
+    Method::Rs,
+    Method::QuaRot,
+    Method::Rrs,
+];
+
+pub fn schemes() -> Vec<(&'static str, Scheme)> {
+    vec![
+        ("16-4-16 (A4W16KV16)", Scheme::A4W16KV16),
+        ("4-4-16 (A4W4KV16)", Scheme::A4W4KV16),
+        ("4-4-4 (A4W4KV4)", Scheme::A4W4KV4),
+    ]
+}
+
+/// The Table-1 engine settings, shared by Table 2.
+pub fn ecfg_like_table1(method: Method, scheme: Scheme) -> EngineConfig {
+    ecfg_for(method, scheme)
+}
+
+fn ecfg_for(method: Method, scheme: Scheme) -> EngineConfig {
+    EngineConfig {
+        method,
+        scheme,
+        // Table 1 settings: RS evaluated at group 1 (upper bound, as in
+        // the paper).  RRS uses the fused-kernel group scaled to this
+        // model: the paper pairs group 128 with K = 4096..11008 (32-86
+        // groups per GEMM); at dim 128 the equivalent granularity is
+        // group 16 (8-16 groups). group == K would degenerate RS to a
+        // single per-tensor scale.
+        group: if method == Method::Rs { 1 } else { 16 },
+        kv_group: 128,
+        alpha: 0.5,
+        // paper: GPTQ weights everywhere except the RTN row
+        gptq: method != Method::Rtn,
+    }
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let profiles: Vec<OutlierProfile> = OutlierProfile::NAMES
+        .iter()
+        .map(|n| OutlierProfile::builtin(n).unwrap())
+        .collect();
+
+    let mut header = vec!["#Bits".to_string(), "Method".to_string()];
+    header.extend(profiles.iter().map(|p| p.name.clone()));
+    let hdr_ref: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = MdTable::new(&hdr_ref);
+
+    // FP16 reference row
+    let mut fp_row = vec!["16-16-16".to_string(), "FP16".to_string()];
+    for p in &profiles {
+        let ecfg = EngineConfig {
+            method: Method::Fp,
+            scheme: Scheme::FP,
+            gptq: false,
+            ..Default::default()
+        };
+        let ppl = ctx.ppl(p, &ecfg)?;
+        eprintln!("table1: FP16 {} -> {}", p.name, format_ppl(ppl));
+        fp_row.push(format_ppl(ppl));
+    }
+    table.row(fp_row);
+
+    for (scheme_label, scheme) in schemes() {
+        for method in METHODS {
+            let mut row = vec![scheme_label.to_string(), method.name().to_string()];
+            for p in &profiles {
+                let ppl = ctx.ppl(p, &ecfg_for(method, scheme))?;
+                eprintln!(
+                    "table1: {} {} {} -> {}",
+                    scheme.label(),
+                    method.name(),
+                    p.name,
+                    format_ppl(ppl)
+                );
+                row.push(format_ppl(ppl));
+            }
+            table.row(row);
+        }
+    }
+
+    println!("\n## Table 1 — perplexity (lower is better)\n");
+    table.print();
+    ctx.write_report("table1.md", &table.to_markdown())?;
+    ctx.write_report("table1.csv", &table.to_csv())?;
+    Ok(())
+}

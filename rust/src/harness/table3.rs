@@ -1,0 +1,50 @@
+//! Table 3: training-based rotation (SpinQuant, Cayley-SGD learned at
+//! build time) vs fixed-Hadamard QuaRot vs RRS.  The paper's finding we
+//! reproduce: the *trained* rotation does not necessarily beat the fixed
+//! Hadamard, and RRS leads.
+
+use anyhow::Result;
+
+use crate::eval::perplexity::format_ppl;
+use crate::model::weights::OutlierProfile;
+use crate::model::EngineConfig;
+use crate::quant::{Method, Scheme};
+
+use super::{Ctx, MdTable};
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    if ctx.spin.is_none() {
+        eprintln!("table3: spinquant_r.rrsw missing; skipping");
+        return Ok(());
+    }
+    let profiles = ["base", "llama2-like", "llama3-like", "qwen-like"];
+    let mut header = vec!["Method".to_string()];
+    header.extend(profiles.iter().map(|s| s.to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = MdTable::new(&hdr);
+
+    for method in [Method::SpinQuant, Method::QuaRot, Method::Rrs] {
+        let mut row = vec![method.name().to_string()];
+        for pname in profiles {
+            let profile = OutlierProfile::builtin(pname).unwrap();
+            let ecfg = EngineConfig {
+                method,
+                scheme: Scheme::A4W4KV4,
+                group: 16,
+                kv_group: 128,
+                alpha: 0.5,
+                gptq: true,
+            };
+            let ppl = ctx.ppl(&profile, &ecfg)?;
+            eprintln!("table3: {} {} -> {}", method.name(), pname, format_ppl(ppl));
+            row.push(format_ppl(ppl));
+        }
+        table.row(row);
+    }
+
+    println!("\n## Table 3 — trained vs fixed rotation, A4W4KV4 perplexity\n");
+    table.print();
+    ctx.write_report("table3.md", &table.to_markdown())?;
+    ctx.write_report("table3.csv", &table.to_csv())?;
+    Ok(())
+}

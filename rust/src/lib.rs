@@ -1,0 +1,29 @@
+//! # RRS — Rotated Runtime Smooth for accurate INT4 inference
+//!
+//! Production-shaped reproduction of *"Rotated Runtime Smooth:
+//! Training-Free Activation Smoother for accurate INT4 inference"*
+//! (ICLR 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — serving coordinator: request router, dynamic
+//!   batcher, prefill/decode scheduler, INT4 KV-cache manager, metrics —
+//!   plus a pure-rust INT4 inference engine whose quantized GEMMs implement
+//!   every smoothing method in the paper (RTN / SmoothQuant / RS / QuaRot /
+//!   RRS / GPTQ), and a PJRT runtime that loads the AOT-lowered JAX graphs.
+//! * **L2 (python/compile/model.py)** — the JAX transformer, lowered once
+//!   to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — the fused Runtime-Smooth INT4 GEMM
+//!   as a Pallas kernel (interpret mode), numerically cross-checked against
+//!   this crate through golden vectors.
+//!
+//! The environment vendors only the `xla` crate and its dependencies, so
+//! the usual ecosystem crates (tokio/serde/clap/criterion/rand/proptest)
+//! are re-implemented as small substrates under [`util`].
+
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,121 @@
+//! Cholesky factorization + SPD inverse — the numerics GPTQ needs for its
+//! inverse-Hessian error feedback.
+
+use anyhow::{bail, Result};
+
+/// Lower Cholesky factor L of a symmetric positive-definite matrix
+/// (row-major [n,n]): `A = L L^T`.
+pub fn cholesky_lower(a: &[f32], n: usize) -> Result<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a64[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s={s})");
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l.into_iter().map(|x| x as f32).collect())
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A^{-1} = L^{-T} L^{-1}`.
+pub fn invert_spd(a: &[f32], n: usize) -> Result<Vec<f32>> {
+    let l = cholesky_lower(a, n)?;
+    let l64: Vec<f64> = l.iter().map(|&x| x as f64).collect();
+    // forward-solve L X = I  -> X = L^{-1} (lower triangular)
+    let mut linv = vec![0.0f64; n * n];
+    for col in 0..n {
+        linv[col * n + col] = 1.0 / l64[col * n + col];
+        for i in col + 1..n {
+            let mut s = 0.0;
+            for k in col..i {
+                s -= l64[i * n + k] * linv[k * n + col];
+            }
+            linv[i * n + col] = s / l64[i * n + i];
+        }
+    }
+    // A^{-1} = L^{-T} L^{-1}
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in i.max(j)..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            out[i * n + j] = s;
+        }
+    }
+    Ok(out.into_iter().map(|x| x as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Random SPD matrix A = B B^T + eps I.
+    fn random_spd(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let b: Vec<f32> = rng.normal_vec(n * n);
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { 0.5 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn llt_reconstructs() {
+        let n = 16;
+        let a = random_spd(n, 1);
+        let l = cholesky_lower(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-2, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let n = 12;
+        let a = random_spd(n, 2);
+        let ainv = invert_spd(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += a[i * n + k] * ainv[k * n + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-2, "({i},{j}) -> {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky_lower(&a, 2).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Fast Walsh-Hadamard transform — the rotation primitive of QuaRot/RRS.
+//!
+//! `fwht_inplace` applies the *normalized* Sylvester-Hadamard matrix
+//! (`x @ H_K / sqrt(K)`-equivalent) in O(K log K).  Since Sylvester H is
+//! symmetric and orthogonal, the transform is an involution — applied
+//! twice it returns the input, which the tests exploit.
+
+/// In-place normalized FWHT along a power-of-two-length slice.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let k = x.len();
+    assert!(k.is_power_of_two(), "fwht length {k} not a power of two");
+    let mut h = 1;
+    while h < k {
+        let step = h * 2;
+        let mut base = 0;
+        while base < k {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+            base += step;
+        }
+        h = step;
+    }
+    let norm = 1.0 / (k as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Apply the normalized FWHT to every `k`-length row of a flat buffer.
+pub fn fwht_rows(data: &mut [f32], k: usize) {
+    assert_eq!(data.len() % k, 0);
+    for row in data.chunks_mut(k) {
+        fwht_inplace(row);
+    }
+}
+
+/// Dense normalized Hadamard matrix (for tests / cross-checks).
+pub fn hadamard_dense(k: usize) -> Vec<f32> {
+    assert!(k.is_power_of_two());
+    let mut h = vec![0.0f32; k * k];
+    h[0] = 1.0;
+    let mut n = 1;
+    while n < k {
+        for i in 0..n {
+            for j in 0..n {
+                let v = h[i * k + j];
+                h[i * k + (j + n)] = v;
+                h[(i + n) * k + j] = v;
+                h[(i + n) * k + (j + n)] = -v;
+            }
+        }
+        n *= 2;
+    }
+    let norm = 1.0 / (k as f32).sqrt();
+    for v in h.iter_mut() {
+        *v *= norm;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn involution() {
+        let mut rng = Pcg::new(1);
+        let orig = rng.normal_vec(256);
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_dense() {
+        let k = 64;
+        let mut rng = Pcg::new(2);
+        let x = rng.normal_vec(k);
+        let h = hadamard_dense(k);
+        let mut want = vec![0.0f32; k];
+        for j in 0..k {
+            for (i, &xi) in x.iter().enumerate() {
+                want[j] += xi * h[i * k + j];
+            }
+        }
+        let mut got = x.clone();
+        fwht_inplace(&mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Pcg::new(3);
+        let x = rng.normal_vec(128);
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht_inplace(&mut y);
+        let n1: f32 = y.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4);
+    }
+
+    #[test]
+    fn spreads_spike() {
+        // paper eq. 4: a single spike becomes constant magnitude |O|/sqrt(K)
+        let k = 128;
+        let mut x = vec![0.0f32; k];
+        x[17] = 100.0;
+        fwht_inplace(&mut x);
+        let expect = 100.0 / (k as f32).sqrt();
+        for v in &x {
+            assert!((v.abs() - expect).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2() {
+        let mut x = vec![0.0f32; 12];
+        fwht_inplace(&mut x);
+    }
+}

@@ -1,0 +1,198 @@
+//! Row-major f32 matrix + blocked GEMM.
+//!
+//! `gemm_f32_bt(a, b)` computes `A @ B^T` — the natural layout for linear
+//! layers whose weights are stored `[out, in]` (every GEMM in the engine).
+
+use crate::util::threadpool;
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Gather columns: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// `C = A @ B^T`; A is [n,k], B is [m,k], C is [n,m].  Rows of C are
+/// computed in parallel; the inner kernel is a k-contiguous dot product
+/// (autovectorizes well since both operands stride 1).
+pub fn gemm_f32_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "gemm_bt: inner dims");
+    let (n, k, m) = (a.rows, a.cols, b.rows);
+    let mut out = Mat::zeros(n, m);
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(&mut out.data, m, threads, |i, crow| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            *c = dot(arow, brow);
+        }
+    });
+    out
+}
+
+/// `C = A @ B`; A is [n,k], B is [k,m].
+pub fn gemm_f32(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm: inner dims");
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(n, m);
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(&mut out.data, m, threads, |i, crow| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * m..(kk + 1) * m];
+            for (c, &bv) in crow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    });
+    out
+}
+
+/// Contiguous dot product, unrolled x4 for the autovectorizer.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn naive_bt(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.rows);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                let mut s = 0.0;
+                for kk in 0..a.cols {
+                    s += a.at(i, kk) * b.at(j, kk);
+                }
+                out.data[i * b.rows + j] = s;
+            }
+        }
+        out
+    }
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        Mat::from_vec(r, c, rng.normal_vec(r * c))
+    }
+
+    #[test]
+    fn bt_matches_naive() {
+        for (n, k, m, seed) in [(3, 5, 4, 1), (8, 16, 8, 2), (1, 33, 7, 3)] {
+            let a = randmat(n, k, seed);
+            let b = randmat(m, k, seed + 10);
+            let got = gemm_f32_bt(&a, &b);
+            let want = naive_bt(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_bt_via_transpose() {
+        let a = randmat(4, 6, 5);
+        let b = randmat(6, 3, 6);
+        let got = gemm_f32(&a, &b);
+        let want = gemm_f32_bt(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn permute_cols_gathers() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let p = a.permute_cols(&[2, 0, 1]);
+        assert_eq!(p.data, vec![3., 1., 2., 6., 4., 5.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = randmat(5, 7, 9);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn dot_matches_scalar() {
+        let mut rng = Pcg::new(1);
+        let a = rng.normal_vec(37);
+        let b = rng.normal_vec(37);
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,59 @@
+//! Dense linear algebra substrate: row-major f32 matrices, blocked GEMMs
+//! (f32 and int8->int32), the fast Walsh-Hadamard transform used by the
+//! rotation methods, and the Cholesky solver GPTQ needs.
+
+pub mod chol;
+pub mod fwht;
+pub mod gemm;
+pub mod igemm;
+
+pub use chol::{cholesky_lower, invert_spd};
+pub use fwht::{fwht_inplace, fwht_rows};
+pub use gemm::{gemm_f32, gemm_f32_bt, Mat};
+pub use igemm::igemm_i8_bt;
+
+/// Softmax over a mutable row, numerically stable.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// argmax index of a row (first on ties).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut r = vec![1.0, 2.0, 3.0, -1e30];
+        softmax_inplace(&mut r);
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(r[3] < 1e-12);
+        assert!(r[2] > r[1] && r[1] > r[0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[0.0, 5.0, 5.0, 1.0]), 1);
+    }
+}

@@ -1,0 +1,231 @@
+//! `rrs` — CLI for the Rotated Runtime Smooth serving stack.
+//!
+//! Commands:
+//!   rrs info                         artifact + platform summary
+//!   rrs generate --prompt "arlo is"  one-shot generation (rust engine)
+//!   rrs serve [--port 0]             TCP serving coordinator
+//!   rrs eval-ppl [--method rrs] ...  perplexity of one config cell
+//!   rrs harness <exp|all>            regenerate paper tables/figures
+//!   rrs pjrt-demo                    run the AOT demo graph via PJRT
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --method,
+//! --scheme {a4w4kv4,a4w4kv16,a4w16kv16,fp}, --group N, --profile NAME,
+//! --fast.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::eval::perplexity::format_ppl;
+use rrs::harness::{self, Ctx};
+use rrs::model::sampler::Sampling;
+use rrs::model::weights::OutlierProfile;
+use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::runtime::PjrtEngine;
+use rrs::util::cli::Args;
+
+fn parse_scheme(s: &str) -> Result<Scheme> {
+    Ok(match s.to_lowercase().as_str() {
+        "a4w4kv4" | "4-4-4" => Scheme::A4W4KV4,
+        "a4w4kv16" | "4-4-16" => Scheme::A4W4KV16,
+        "a4w16kv16" | "16-4-16" => Scheme::A4W16KV16,
+        "fp" | "fp16" | "16-16-16" => Scheme::FP,
+        other => bail!("unknown scheme '{other}'"),
+    })
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let method = Method::parse(&args.get_or("method", "rrs"))
+        .context("unknown --method")?;
+    let scheme = parse_scheme(&args.get_or(
+        "scheme",
+        if method == Method::Fp { "fp" } else { "a4w4kv4" },
+    ))?;
+    Ok(EngineConfig {
+        method,
+        scheme,
+        group: args.get_usize("group", 128),
+        kv_group: args.get_usize("kv-group", 128),
+        alpha: args.get_f32("alpha", 0.5),
+        gptq: method != Method::Rtn
+            && method != Method::Fp
+            && !args.has_flag("no-gptq"),
+    })
+}
+
+/// Build a rust-engine model from artifacts per CLI flags.
+fn build_model(args: &Args) -> Result<QuantModel> {
+    let root = args.get_or("artifacts", "artifacts");
+    let artifacts = rrs::runtime::Artifacts::load(&root)?;
+    let mcfg = artifacts.model;
+    let profile = OutlierProfile::builtin(&args.get_or("profile", "base"))
+        .context("unknown --profile")?;
+    // prefer the finetuned per-profile checkpoint (see aot.py)
+    let ppath = artifacts.root.join(format!("weights_{}.rrsw", profile.name));
+    let weights = if profile.name != "base" && ppath.exists() {
+        Weights::load(&ppath, &mcfg)?
+    } else {
+        let base = Weights::load(artifacts.weights_path(), &mcfg)?;
+        profile.inject(&base, 17)
+    };
+    let ecfg = engine_config(args)?;
+    let val = artifacts.val_text()?;
+    let toks = tokenizer::encode(&val);
+    let calib: Vec<u32> =
+        (0..8).flat_map(|i| toks[i * 64..i * 64 + 64].to_vec()).collect();
+    let spin = rrs::util::io::read_rrsw(artifacts.spinquant_path())
+        .ok()
+        .and_then(|m| {
+            let rd = m.get("r_dim")?;
+            let rf = m.get("r_ffn")?;
+            Some((
+                rrs::linalg::gemm::Mat::from_vec(
+                    rd.shape[0], rd.shape[1], rd.as_f32().ok()?.to_vec()),
+                rrs::linalg::gemm::Mat::from_vec(
+                    rf.shape[0], rf.shape[1], rf.as_f32().ok()?.to_vec()),
+            ))
+        });
+    QuantModel::prepare(&weights, &mcfg, &ecfg, Some(&calib), spin)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = args.get_or("artifacts", "artifacts");
+    let artifacts = rrs::runtime::Artifacts::load(&root)?;
+    println!("model: dim={} layers={} heads={} kv_heads={} ffn={} vocab={}",
+             artifacts.model.dim, artifacts.model.n_layers,
+             artifacts.model.n_heads, artifacts.model.n_kv_heads,
+             artifacts.model.ffn, artifacts.model.vocab);
+    println!("graphs:");
+    for g in &artifacts.graphs {
+        println!("  {} <- {}", g.name, g.file.display());
+    }
+    let engine = PjrtEngine::new(&root)?;
+    println!("pjrt platform: {}", engine.platform());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.get_or("prompt", "arlo is");
+    let max_tokens = args.get_usize("max-tokens", 32);
+    let temperature = args.get_f32("temperature", 0.0);
+    let model = build_model(args)?;
+    let ecfg = model.ecfg;
+    let engine = RustServeEngine::new(model);
+    let coord = Coordinator::start(engine, SchedulerConfig::default());
+    let sampling = if temperature <= 0.0 {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature(temperature)
+    };
+    let resp = coord
+        .generate(tokenizer::encode(&prompt), max_tokens, sampling, None)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("[{}] {}{}", ecfg.label(), prompt, tokenizer::decode(&resp.tokens));
+    println!(
+        "tokens={} queue={:.1}ms prefill={:.1}ms decode={:.1}ms total={:.1}ms",
+        resp.tokens.len(), resp.queue_ms, resp.prefill_ms, resp.decode_ms,
+        resp.total_ms
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = build_model(args)?;
+    println!("serving {}", model.ecfg.label());
+    let engine = RustServeEngine::new(model);
+    let cfg = SchedulerConfig {
+        max_batch: args.get_usize("max-batch", 8),
+        queue_capacity: args.get_usize("queue", 64),
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start(engine, cfg));
+    let port = args.get_usize("port", 0);
+    server::serve(coord, &format!("127.0.0.1:{port}"))?;
+    Ok(())
+}
+
+fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let model = build_model(args)?;
+    let root = args.get_or("artifacts", "artifacts");
+    let artifacts = rrs::runtime::Artifacts::load(&root)?;
+    let val = artifacts.val_text()?;
+    let windows = args.get_usize("windows", 8);
+    let ppl = rrs::eval::perplexity(&model, &val, 96, windows);
+    println!(
+        "{} profile={} ppl={}",
+        model.ecfg.label(),
+        args.get_or("profile", "base"),
+        format_ppl(ppl)
+    );
+    Ok(())
+}
+
+fn cmd_harness(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let ctx = Ctx::load(
+        &args.get_or("artifacts", "artifacts"),
+        &args.get_or("out", "reports"),
+        args.has_flag("fast"),
+    )?;
+    match which {
+        "all" => harness::run_all(&ctx)?,
+        "table1" => harness::table1::run(&ctx)?,
+        "table2" => harness::table2::run(&ctx)?,
+        "table3" => harness::table3::run(&ctx)?,
+        "table4" => harness::table4::run(&ctx)?,
+        "fig2b" => harness::figures::fig2b(&ctx)?,
+        "fig3" => harness::figures::fig3(&ctx)?,
+        "fig6" => harness::fig6::run(&ctx)?,
+        "fig7" => harness::figures::fig7(&ctx)?,
+        "fig8" => harness::figures::fig8(&ctx)?,
+        "fig9" => harness::figures::fig9(&ctx)?,
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_pjrt_demo(args: &Args) -> Result<()> {
+    let root = args.get_or("artifacts", "artifacts");
+    let engine = PjrtEngine::new(&root)?;
+    println!("platform: {}", engine.platform());
+    let goldens = rrs::util::io::read_rrsw(engine.artifacts.goldens_path())?;
+    let x = goldens["demo_x"].as_f32()?.to_vec();
+    let runner = engine.runner("demo_rrs_gemm")?;
+    let out = runner.run(&[rrs::runtime::executor::HostTensor::f32(
+        vec![16, 128],
+        x,
+    )])?;
+    let y = out[0].as_f32()?;
+    let want = goldens["demo_y"].as_f32()?;
+    let worst = y
+        .iter()
+        .zip(want)
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+    println!("demo_rrs_gemm: {} outputs, max |err| vs golden = {worst:.2e}", y.len());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "eval-ppl" => cmd_eval_ppl(&args),
+        "harness" => cmd_harness(&args),
+        "pjrt-demo" => cmd_pjrt_demo(&args),
+        _ => {
+            println!(
+                "rrs — Rotated Runtime Smooth INT4 serving stack\n\n\
+                 usage: rrs <info|generate|serve|eval-ppl|harness|pjrt-demo> [flags]\n\
+                 harness experiments: all table1 table2 table3 table4 fig2b fig3 fig6 fig7 fig8 fig9\n\
+                 common flags: --artifacts DIR --method M --scheme S --group N --profile P --fast"
+            );
+            Ok(())
+        }
+    }
+}

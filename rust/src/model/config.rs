@@ -1,0 +1,127 @@
+//! Model + engine configuration (parsed from artifacts/manifest.json).
+
+use anyhow::{Context, Result};
+
+use crate::quant::{Method, Scheme};
+use crate::util::json::Json;
+
+/// Transformer architecture hyper-parameters (mirror of the python
+/// `ModelConfig`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            vocab: 256,
+            dim: 128,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            ffn: 256,
+            max_seq: 256,
+            rope_theta: 10_000.0,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Parse the `model` object of artifacts/manifest.json.
+    pub fn from_manifest(manifest: &Json) -> Result<ModelConfig> {
+        let m = manifest.get("model").context("manifest missing 'model'")?;
+        let grab = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest model.{k}"))
+        };
+        Ok(ModelConfig {
+            vocab: grab("vocab")?,
+            dim: grab("dim")?,
+            n_layers: grab("n_layers")?,
+            n_heads: grab("n_heads")?,
+            n_kv_heads: grab("n_kv_heads")?,
+            ffn: grab("ffn")?,
+            max_seq: grab("max_seq")?,
+            rope_theta: m
+                .get("rope_theta")
+                .and_then(Json::as_f64)
+                .unwrap_or(10_000.0) as f32,
+        })
+    }
+}
+
+/// Quantization configuration of an engine instance — one cell of the
+/// paper's (method x scheme) matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub method: Method,
+    pub scheme: Scheme,
+    /// Runtime-Smooth group size (Table 4 ablation knob).
+    pub group: usize,
+    /// KV-cache quant group (paper: 128, clamped to head_dim).
+    pub kv_group: usize,
+    /// SmoothQuant alpha.
+    pub alpha: f32,
+    /// Use GPTQ (vs RTN) for INT4 weights.
+    pub gptq: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            method: Method::Rrs,
+            scheme: Scheme::A4W4KV4,
+            group: 128,
+            kv_group: 128,
+            alpha: 0.5,
+            gptq: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.method.name(), self.scheme.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_manifest_parses() {
+        let j = Json::parse(
+            r#"{"model":{"vocab":256,"dim":128,"n_layers":4,"n_heads":4,
+                 "n_kv_heads":2,"ffn":256,"max_seq":256,"rope_theta":10000.0}}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(c, ModelConfig::default());
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.kv_dim(), 64);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let j = Json::parse(r#"{"model":{"vocab":256}}"#).unwrap();
+        assert!(ModelConfig::from_manifest(&j).is_err());
+    }
+}

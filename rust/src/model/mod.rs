@@ -1,0 +1,22 @@
+//! Pure-rust LLaMA-architecture inference engine with quantized linears.
+//!
+//! Mirrors python/compile/model.py exactly (RMSNorm -> GQA attention with
+//! rotate-half RoPE -> SwiGLU MLP, weights `[out, in]`), with every linear
+//! layer routed through [`crate::quant::qlinear::QLinear`] so all of the
+//! paper's methods (RTN / SmoothQuant / GPTQ / RS / QuaRot / RRS /
+//! SpinQuant) run natively on the serving path.  The KV cache is
+//! optionally INT4 (sub-channel, nibble-packed) via [`crate::quant::kv`].
+//!
+//! Numerics are validated against the PJRT-executed JAX graphs through
+//! the golden vectors (rust/tests/golden.rs).
+
+pub mod config;
+pub mod engine;
+pub mod ops;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::{EngineConfig, ModelConfig};
+pub use engine::{KvCache, QuantModel};
+pub use weights::Weights;

@@ -1,0 +1,159 @@
+//! Transformer primitive ops shared by the engine: RMSNorm, rotate-half
+//! RoPE, SiLU, causal attention.  All match python/compile/model.py.
+
+use crate::linalg::softmax_inplace;
+
+/// RMSNorm: `x * rsqrt(mean(x^2) + eps) * g`, row-wise.
+pub fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32], eps: f32) {
+    debug_assert_eq!(x.len(), g.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, &v), &gv) in out.iter_mut().zip(x).zip(g) {
+        *o = v * r * gv;
+    }
+}
+
+/// Precomputed RoPE tables for positions `[0, max_seq)`.
+#[derive(Clone, Debug)]
+pub struct RopeTable {
+    pub cos: Vec<f32>, // [max_seq, head_dim/2]
+    pub sin: Vec<f32>,
+    pub half: usize,
+}
+
+impl RopeTable {
+    pub fn new(max_seq: usize, head_dim: usize, theta: f32) -> RopeTable {
+        let half = head_dim / 2;
+        let mut cos = vec![0.0f32; max_seq * half];
+        let mut sin = vec![0.0f32; max_seq * half];
+        for p in 0..max_seq {
+            for i in 0..half {
+                let inv = 1.0 / theta.powf((2 * i) as f32 / head_dim as f32);
+                let ang = p as f32 * inv;
+                cos[p * half + i] = ang.cos();
+                sin[p * half + i] = ang.sin();
+            }
+        }
+        RopeTable { cos, sin, half }
+    }
+
+    /// Apply rotate-half RoPE to one head vector at position `pos`:
+    /// `[x1, x2] -> [x1 c - x2 s, x1 s + x2 c]` (matches python
+    /// `apply_rope`).
+    pub fn apply(&self, head: &mut [f32], pos: usize) {
+        let h = self.half;
+        debug_assert_eq!(head.len(), 2 * h);
+        let cos = &self.cos[pos * h..(pos + 1) * h];
+        let sin = &self.sin[pos * h..(pos + 1) * h];
+        for i in 0..h {
+            let x1 = head[i];
+            let x2 = head[i + h];
+            head[i] = x1 * cos[i] - x2 * sin[i];
+            head[i + h] = x1 * sin[i] + x2 * cos[i];
+        }
+    }
+}
+
+/// SiLU activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Single-query attention against cached K/V rows (decode step).
+/// `q` is [n_heads * hd]; `keys`/`vals` are per-position [kv_dim] slices
+/// (len = seq_len); GQA maps head h -> kv head h / (n_heads/n_kv).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_single(
+    q: &[f32],
+    keys: &[Vec<f32>],
+    vals: &[Vec<f32>],
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let t = keys.len();
+    let rep = n_heads / n_kv_heads;
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    scratch.resize(t, 0.0);
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * head_dim..(h + 1) * head_dim];
+        for (p, krow) in keys.iter().enumerate() {
+            let kh = &krow[kvh * head_dim..(kvh + 1) * head_dim];
+            scratch[p] = crate::linalg::gemm::dot(qh, kh) * scale;
+        }
+        softmax_inplace(&mut scratch[..t]);
+        let oh = &mut out[h * head_dim..(h + 1) * head_dim];
+        oh.fill(0.0);
+        for (p, vrow) in vals.iter().enumerate() {
+            let w = scratch[p];
+            if w < 1e-12 {
+                continue;
+            }
+            let vh = &vrow[kvh * head_dim..(kvh + 1) * head_dim];
+            for (o, &v) in oh.iter_mut().zip(vh) {
+                *o += w * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_gain_normalizes() {
+        let x = vec![3.0f32; 16];
+        let g = vec![1.0f32; 16];
+        let mut out = vec![0.0; 16];
+        rmsnorm(&x, &g, &mut out, 1e-5);
+        for &v in &out {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let table = RopeTable::new(32, 8, 10_000.0);
+        let mut v: Vec<f32> = (0..8).map(|i| (i as f32 + 1.0) * 0.3).collect();
+        let n0: f32 = v.iter().map(|x| x * x).sum();
+        table.apply(&mut v, 17);
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4);
+    }
+
+    #[test]
+    fn rope_pos0_identity() {
+        let table = RopeTable::new(4, 8, 10_000.0);
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let orig = v.clone();
+        table.apply(&mut v, 0);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attention_single_key_is_value() {
+        // with one cached position, attention output == its value
+        let q = vec![0.5f32; 8]; // 2 heads x hd 4
+        let keys = vec![vec![0.1f32; 4]]; // 1 kv head
+        let vals = vec![vec![7.0f32, 8.0, 9.0, 10.0]];
+        let mut out = vec![0.0f32; 8];
+        let mut scratch = Vec::new();
+        attend_single(&q, &keys, &vals, 2, 1, 4, &mut out, &mut scratch);
+        assert_eq!(&out[..4], &[7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(&out[4..], &[7.0, 8.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0) - 0.0).abs() < 1e-6);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,84 @@
+//! Token sampling: greedy, temperature, and top-k over a logits row.
+
+use crate::linalg::{argmax, softmax_inplace};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    Greedy,
+    Temperature(f32),
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Sample a token id from a logits row.
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Pcg) -> u32 {
+    match mode {
+        Sampling::Greedy => argmax(logits) as u32,
+        Sampling::Temperature(t) => {
+            let mut p: Vec<f32> = logits.iter().map(|&l| l / t.max(1e-4)).collect();
+            softmax_inplace(&mut p);
+            pick(&p, rng)
+        }
+        Sampling::TopK { k, temperature } => {
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k.max(1));
+            let mut p: Vec<f32> =
+                idx.iter().map(|&i| logits[i] / temperature.max(1e-4)).collect();
+            softmax_inplace(&mut p);
+            idx[pick(&p, rng) as usize] as u32
+        }
+    }
+}
+
+fn pick(probs: &[f32], rng: &mut Pcg) -> u32 {
+    let r = rng.uniform();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc {
+            return i as u32;
+        }
+    }
+    (probs.len() - 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Pcg::new(1);
+        let logits = vec![0.0, 5.0, 1.0];
+        assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates() {
+        let mut rng = Pcg::new(2);
+        let logits = vec![0.0, 10.0, 1.0];
+        for _ in 0..50 {
+            assert_eq!(
+                sample(&logits, Sampling::Temperature(0.1), &mut rng),
+                1
+            );
+        }
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut rng = Pcg::new(3);
+        let logits = vec![1.0, 0.9, -50.0, -50.0];
+        for _ in 0..50 {
+            let t = sample(
+                &logits,
+                Sampling::TopK { k: 2, temperature: 1.0 },
+                &mut rng,
+            );
+            assert!(t < 2);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Byte-level tokenizer (vocab = 256): the corpus is ASCII so ids are
+//! bytes; decoding is lossy only on invalid UTF-8 (never for our corpus).
+
+/// Encode a string to token ids.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| b as u32).collect()
+}
+
+/// Decode token ids to a string (invalid sequences -> U+FFFD).
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xff) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "arlo is red. count: 1 2 3.";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn ids_are_bytes() {
+        assert_eq!(encode("ab"), vec![97, 98]);
+    }
+}

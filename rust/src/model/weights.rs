@@ -1,0 +1,300 @@
+//! Trained weights: loading from `artifacts/weights.rrsw` and the
+//! outlier-profile injection used by the Table-1/2 model-family sweep.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::linalg::gemm::Mat;
+use crate::util::io::{read_rrsw, Tensor};
+use crate::util::rng::Pcg;
+
+use super::config::ModelConfig;
+
+/// Per-layer fp32 weights (names mirror the python param dict).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub w_gate: Mat,
+    pub w_up: Mat,
+    pub w_down: Mat,
+}
+
+/// Full fp32 model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub embed: Mat,
+    pub head: Mat,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+fn mat_of(t: &Tensor) -> Result<Mat> {
+    let (r, c) = t.dims2()?;
+    Ok(Mat::from_vec(r, c, t.as_f32()?.to_vec()))
+}
+
+fn vec_of(t: &Tensor) -> Result<Vec<f32>> {
+    Ok(t.as_f32()?.to_vec())
+}
+
+impl Weights {
+    /// Load from a `.rrsw` written by python's `io_rrsw.write_rrsw`.
+    pub fn load(path: impl AsRef<Path>, cfg: &ModelConfig) -> Result<Weights> {
+        let raw = read_rrsw(path)?;
+        Weights::from_tensors(&raw, cfg)
+    }
+
+    pub fn from_tensors(
+        raw: &BTreeMap<String, Tensor>,
+        cfg: &ModelConfig,
+    ) -> Result<Weights> {
+        let get = |name: &str| -> Result<&Tensor> {
+            raw.get(name).with_context(|| format!("weights missing '{name}'"))
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            layers.push(LayerWeights {
+                attn_norm: vec_of(get(&format!("{p}attn_norm"))?)?,
+                mlp_norm: vec_of(get(&format!("{p}mlp_norm"))?)?,
+                wq: mat_of(get(&format!("{p}wq"))?)?,
+                wk: mat_of(get(&format!("{p}wk"))?)?,
+                wv: mat_of(get(&format!("{p}wv"))?)?,
+                wo: mat_of(get(&format!("{p}wo"))?)?,
+                w_gate: mat_of(get(&format!("{p}w_gate"))?)?,
+                w_up: mat_of(get(&format!("{p}w_up"))?)?,
+                w_down: mat_of(get(&format!("{p}w_down"))?)?,
+            });
+        }
+        Ok(Weights {
+            embed: mat_of(get("embed")?)?,
+            head: mat_of(get("head")?)?,
+            final_norm: vec_of(get("final_norm")?)?,
+            layers,
+        })
+    }
+
+    /// Random weights for tests/benches (He-style, matches python scale).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Pcg::new(seed);
+        let mut mat = |rows: usize, cols: usize| {
+            let std = 1.0 / (cols as f32).sqrt();
+            let data: Vec<f32> =
+                (0..rows * cols).map(|_| rng.normal() * std).collect();
+            Mat::from_vec(rows, cols, data)
+        };
+        let kd = cfg.kv_dim();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; cfg.dim],
+                mlp_norm: vec![1.0; cfg.dim],
+                wq: mat(cfg.dim, cfg.dim),
+                wk: mat(kd, cfg.dim),
+                wv: mat(kd, cfg.dim),
+                wo: mat(cfg.dim, cfg.dim),
+                w_gate: mat(cfg.ffn, cfg.dim),
+                w_up: mat(cfg.ffn, cfg.dim),
+                w_down: mat(cfg.dim, cfg.ffn),
+            })
+            .collect();
+        Weights {
+            embed: mat(cfg.vocab, cfg.dim),
+            head: mat(cfg.vocab, cfg.dim),
+            final_norm: vec![1.0; cfg.dim],
+            layers,
+        }
+    }
+}
+
+/// Outlier-injection profile (mirror of python compile/outliers.py; the
+/// Table-1 "model family" columns).  Channel outliers come from amplified
+/// norm gains; spike outliers from amplified SwiGLU gate rows.
+#[derive(Clone, Debug)]
+pub struct OutlierProfile {
+    pub name: String,
+    pub n_channel: usize,
+    pub channel_gain: f32,
+    pub n_spike_rows: usize,
+    pub spike_gain: f32,
+}
+
+impl OutlierProfile {
+    pub fn base() -> OutlierProfile {
+        OutlierProfile {
+            name: "base".into(),
+            n_channel: 0,
+            channel_gain: 1.0,
+            n_spike_rows: 0,
+            spike_gain: 1.0,
+        }
+    }
+
+    /// The paper-column stand-ins (kept in sync with profiles.json).
+    pub fn builtin(name: &str) -> Option<OutlierProfile> {
+        let p = |nc, cg, ns, sg| OutlierProfile {
+            name: name.into(),
+            n_channel: nc,
+            channel_gain: cg,
+            n_spike_rows: ns,
+            spike_gain: sg,
+        };
+        Some(match name {
+            "base" => OutlierProfile::base(),
+            "llama2-like" => p(4, 30.0, 1, 8.0),
+            "llama3-like" => p(6, 80.0, 2, 25.0),
+            "llama3-70b-like" => p(6, 80.0, 4, 120.0),
+            "qwen-like" => p(12, 40.0, 1, 12.0),
+            _ => return None,
+        })
+    }
+
+    pub const NAMES: [&'static str; 5] = [
+        "base",
+        "llama2-like",
+        "llama3-like",
+        "llama3-70b-like",
+        "qwen-like",
+    ];
+
+    /// Inject into a copy of the weights (deterministic in `seed`).
+    ///
+    /// **Function-preserving**: the fp32 model computes the *same*
+    /// function after injection — outliers appear only in the activations
+    /// that quantizers see:
+    ///
+    /// * channel outliers: norm gain channel x`g`, and the consuming
+    ///   linears' input columns /`g` (exact compensation through the
+    ///   linear);
+    /// * spike outliers: `w_up` row x`s` and the `w_down` input column
+    ///   /`s` — exactly linear through SwiGLU (`silu(gate) * (up*s)`),
+    ///   so the down-projector input spikes on tokens where that gate
+    ///   fires, the paper's Fig. 7 mechanism.
+    ///
+    /// This matches how real LLMs carry outliers: the fp model is fine,
+    /// INT4 is not.
+    pub fn inject(&self, w: &Weights, seed: u64) -> Weights {
+        let mut out = w.clone();
+        if self.n_channel == 0 && self.n_spike_rows == 0 {
+            return out;
+        }
+        let mut rng = Pcg::new(seed);
+        let dim = w.final_norm.len();
+        let channels = rng.choose_distinct(dim, self.n_channel.min(dim));
+        for layer in out.layers.iter_mut() {
+            for &c in &channels {
+                layer.attn_norm[c] *= self.channel_gain;
+                layer.mlp_norm[c] *= self.channel_gain;
+                // consumers of attn_norm output
+                for wm in [&mut layer.wq, &mut layer.wk, &mut layer.wv] {
+                    scale_col(wm, c, 1.0 / self.channel_gain);
+                }
+                // consumers of mlp_norm output
+                for wm in [&mut layer.w_gate, &mut layer.w_up] {
+                    scale_col(wm, c, 1.0 / self.channel_gain);
+                }
+            }
+            if self.n_spike_rows > 0 {
+                let rows = rng.choose_distinct(layer.w_up.rows, self.n_spike_rows);
+                for &r in &rows {
+                    for v in layer.w_up.row_mut(r) {
+                        *v *= self.spike_gain;
+                    }
+                    scale_col(&mut layer.w_down, r, 1.0 / self.spike_gain);
+                }
+            }
+        }
+        out
+    }
+}
+
+fn scale_col(m: &mut Mat, col: usize, factor: f32) {
+    for r in 0..m.rows {
+        m.data[r * m.cols + col] *= factor;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_shapes() {
+        let cfg = ModelConfig::default();
+        let w = Weights::random(&cfg, 1);
+        assert_eq!(w.embed.rows, cfg.vocab);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        assert_eq!(w.layers[0].wk.rows, cfg.kv_dim());
+        assert_eq!(w.layers[0].w_down.cols, cfg.ffn);
+    }
+
+    #[test]
+    fn base_profile_is_identity() {
+        let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+        let w = Weights::random(&cfg, 2);
+        let inj = OutlierProfile::base().inject(&w, 17);
+        assert_eq!(w.layers[0].attn_norm, inj.layers[0].attn_norm);
+        assert_eq!(w.layers[0].w_gate, inj.layers[0].w_gate);
+    }
+
+    #[test]
+    fn injection_scales_channels() {
+        let cfg = ModelConfig { n_layers: 2, ..Default::default() };
+        let w = Weights::random(&cfg, 3);
+        let p = OutlierProfile::builtin("llama3-like").unwrap();
+        let inj = p.inject(&w, 17);
+        let boosted: usize = inj.layers[0]
+            .attn_norm
+            .iter()
+            .zip(&w.layers[0].attn_norm)
+            .filter(|(a, b)| (*a / *b - p.channel_gain).abs() < 1e-3)
+            .count();
+        assert_eq!(boosted, p.n_channel);
+        // same channels in every layer (residual-stream consistency)
+        let ch0: Vec<usize> = (0..cfg.dim)
+            .filter(|&c| inj.layers[0].attn_norm[c] != w.layers[0].attn_norm[c])
+            .collect();
+        let ch1: Vec<usize> = (0..cfg.dim)
+            .filter(|&c| inj.layers[1].attn_norm[c] != w.layers[1].attn_norm[c])
+            .collect();
+        assert_eq!(ch0, ch1);
+    }
+
+    #[test]
+    fn injection_preserves_fp_function() {
+        use crate::model::config::EngineConfig;
+        use crate::model::engine::QuantModel;
+        use crate::quant::{Method, Scheme};
+        let cfg = ModelConfig { n_layers: 2, ..Default::default() };
+        let w = Weights::random(&cfg, 11);
+        let p = OutlierProfile::builtin("llama3-70b-like").unwrap();
+        let wi = p.inject(&w, 17);
+        let ecfg = EngineConfig {
+            method: Method::Fp,
+            scheme: Scheme::FP,
+            gptq: false,
+            ..Default::default()
+        };
+        let m0 = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+        let m1 = QuantModel::prepare(&wi, &cfg, &ecfg, None, None).unwrap();
+        let toks: Vec<u32> = (0..24).map(|i| (i * 31 + 5) % 256).collect();
+        let a = m0.forward_full(&toks, None);
+        let b = m1.forward_full(&toks, None);
+        let worst = a.max_abs_diff(&b);
+        assert!(worst < 1e-2, "fp function changed by injection: {worst}");
+    }
+
+    #[test]
+    fn all_builtin_profiles_resolve() {
+        for n in OutlierProfile::NAMES {
+            assert!(OutlierProfile::builtin(n).is_some(), "{n}");
+        }
+        assert!(OutlierProfile::builtin("nope").is_none());
+    }
+}

@@ -1,0 +1,117 @@
+//! INT4 KV-cache quantization (paper 4.1: sub-channel symmetric, group
+//! size 128, RTN).  Values are stored nibble-packed with per-group f32
+//! scales — the format the coordinator's KV manager holds per sequence
+//! slot, giving a true 4-bit-per-value cache (+ scale overhead).
+
+use super::{pack4, rtn};
+
+/// One quantized vector (e.g. a K or V head row at one position).
+#[derive(Clone, Debug)]
+pub struct QuantVec {
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+    pub group: usize,
+}
+
+impl QuantVec {
+    /// Quantize `x` with sub-channel groups of `group` (clamped to len).
+    pub fn quantize(x: &[f32], group: usize) -> QuantVec {
+        let g = group.min(x.len()).max(1);
+        let mut codes = Vec::with_capacity(x.len());
+        let mut scales = Vec::with_capacity(x.len().div_ceil(g));
+        for seg in x.chunks(g) {
+            let s = rtn::scale_for(seg.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+            scales.push(s);
+            for &v in seg {
+                codes.push(rtn::quantize_one(v, s));
+            }
+        }
+        QuantVec {
+            packed: pack4::pack_i4(&codes),
+            scales,
+            len: x.len(),
+            group: g,
+        }
+    }
+
+    /// Dequantize into `out` (len must match).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        let codes = pack4::unpack_i4(&self.packed, self.len);
+        for (i, (&c, o)) in codes.iter().zip(out.iter_mut()).enumerate() {
+            *o = c as f32 * self.scales[i / self.group];
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Bytes used (payload + scales), for memory accounting/metrics.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+}
+
+/// Fake-quantize in place (quantize + dequantize), the model-graph analog.
+pub fn fake_quant_inplace(x: &mut [f32], group: usize) {
+    let q = QuantVec::quantize(x, group);
+    q.dequantize_into(x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn roundtrip_bound() {
+        check("kv-roundtrip", Config::default(), |rng, _| {
+            let n = 8 * (1 + rng.below(16));
+            let x = rng.normal_vec(n);
+            let q = QuantVec::quantize(&x, 32);
+            let y = q.dequantize();
+            for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                // error bounded by half the group step
+                let s = q.scales[i / q.group];
+                if (a - b).abs() > s / 2.0 + 1e-6 {
+                    return Err(format!("at {i}: {a} vs {b} (s={s})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_is_4bit_plus_scales() {
+        let x = vec![1.0f32; 128];
+        let q = QuantVec::quantize(&x, 128);
+        assert_eq!(q.packed.len(), 64); // 128 codes -> 64 bytes
+        assert_eq!(q.scales.len(), 1);
+        assert_eq!(q.bytes(), 68); // vs 512 bytes fp32 => 7.5x smaller
+    }
+
+    #[test]
+    fn group_clamps_to_len() {
+        let x = vec![0.5f32; 8];
+        let q = QuantVec::quantize(&x, 128);
+        assert_eq!(q.group, 8);
+        assert_eq!(q.scales.len(), 1);
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut rng = crate::util::rng::Pcg::new(1);
+        let mut x = rng.normal_vec(64);
+        fake_quant_inplace(&mut x, 16);
+        let once = x.clone();
+        fake_quant_inplace(&mut x, 16);
+        // quantizing already-quantized values is exact
+        for (a, b) in once.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

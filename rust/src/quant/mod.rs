@@ -1,0 +1,119 @@
+//! INT4 quantization library — every smoothing/quantization method the
+//! paper evaluates, implemented natively so the serving hot path never
+//! touches python:
+//!
+//! * [`rtn`] — symmetric round-to-nearest INT4 (per-tensor / per-token /
+//!   per-output-channel / sub-channel), the base primitive (paper 2.1).
+//! * [`pack4`] — nibble packing for INT4 storage (KV cache, weights).
+//! * [`smoothquant`] — offline calibrated channel smoothing (paper 2.2).
+//! * [`runtime_smooth`] — the paper's Runtime Smooth: runtime channel
+//!   maxima, reorder permutation, group scales (section 3.1-3.2).
+//! * [`rotation`] — Hadamard rotation utilities (QuaRot baseline + the
+//!   rotated half of RRS, section 2.3/3.3).
+//! * [`gptq`] — GPTQ weight quantization (offline, per-channel symmetric).
+//! * [`kv`] — sub-channel INT4 KV-cache quantization.
+//! * [`qlinear`] — fused quantized-linear ops assembled from the above:
+//!   per-channel A4W4, sub-channel A4W4, RS-fused A4W4 (the Figure-6
+//!   kernel trio), plus QuaRot and RRS paths; one enum dispatch per call.
+
+pub mod gptq;
+pub mod kv;
+pub mod pack4;
+pub mod qlinear;
+pub mod rotation;
+pub mod rtn;
+pub mod runtime_smooth;
+pub mod smoothquant;
+
+/// INT4 symmetric max code: 2^{4-1} - 1 (the paper leaves -8 unused).
+pub const QMAX: f32 = 7.0;
+
+/// Methods evaluated in the paper's tables (plus fp reference).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Fp,
+    Rtn,
+    SmoothQuant,
+    /// GPTQ weights + plain RTN activations (the paper's "GPTQ" row).
+    GptqOnly,
+    Rs,
+    QuaRot,
+    Rrs,
+    /// QuaRot with a learned (SpinQuant) rotation instead of Hadamard.
+    SpinQuant,
+    /// Fig. 3 ablation: runtime smoothing scale but *migrated into the
+    /// weight per call* (re-quantizing W·diag(s) at runtime) — shows why
+    /// Runtime Smooth must NOT share outliers with the weight.
+    RsMigrated,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "fp" | "fp16" => Method::Fp,
+            "rtn" => Method::Rtn,
+            "sq" | "smoothquant" => Method::SmoothQuant,
+            "gptq" => Method::GptqOnly,
+            "rs" => Method::Rs,
+            "quarot" => Method::QuaRot,
+            "rrs" => Method::Rrs,
+            "spinquant" => Method::SpinQuant,
+            "rs-migrated" => Method::RsMigrated,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp => "FP16",
+            Method::Rtn => "RTN",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::GptqOnly => "GPTQ",
+            Method::Rs => "RS",
+            Method::QuaRot => "QuaRot",
+            Method::Rrs => "RRS",
+            Method::SpinQuant => "SpinQuant",
+            Method::RsMigrated => "RS-migrated",
+        }
+    }
+
+    /// Does this method rotate activations/weights?
+    pub fn rotated(&self) -> bool {
+        matches!(self, Method::QuaRot | Method::Rrs | Method::SpinQuant)
+    }
+
+    /// Does this method apply Runtime Smooth?
+    pub fn runtime_smoothed(&self) -> bool {
+        matches!(self, Method::Rs | Method::Rrs)
+    }
+
+    pub const ALL: [Method; 8] = [
+        Method::Fp,
+        Method::Rtn,
+        Method::SmoothQuant,
+        Method::GptqOnly,
+        Method::Rs,
+        Method::QuaRot,
+        Method::Rrs,
+        Method::SpinQuant,
+    ];
+}
+
+/// One cell of the paper's scheme matrix (e.g. `A4W4KV4`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scheme {
+    pub a_bits: u8,
+    pub w_bits: u8,
+    pub kv_bits: u8,
+}
+
+impl Scheme {
+    pub const A4W4KV4: Scheme = Scheme { a_bits: 4, w_bits: 4, kv_bits: 4 };
+    pub const A4W4KV16: Scheme = Scheme { a_bits: 4, w_bits: 4, kv_bits: 16 };
+    pub const A4W16KV16: Scheme = Scheme { a_bits: 4, w_bits: 16, kv_bits: 16 };
+    pub const FP: Scheme = Scheme { a_bits: 16, w_bits: 16, kv_bits: 16 };
+
+    pub fn label(&self) -> String {
+        format!("A{}W{}KV{}", self.a_bits, self.w_bits, self.kv_bits)
+    }
+}

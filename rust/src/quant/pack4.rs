@@ -1,0 +1,86 @@
+//! INT4 nibble packing: two codes per byte.  Used by the KV-cache manager
+//! so a 4-bit cache really occupies 4 bits (+ scales), and by weight
+//! storage.  Codes are in [-8, 7] two's-complement nibbles (we only emit
+//! [-7, 7], matching the paper's symmetric range).
+
+/// Pack i8 codes (each in [-8, 7]) into nibbles; pairs `(2i, 2i+1)` share
+/// byte `i` (low nibble first).  Odd lengths pad the final high nibble
+/// with 0.
+pub fn pack_i4(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    let mut it = codes.chunks_exact(2);
+    for pair in &mut it {
+        out.push(((pair[0] as u8) & 0x0f) | (((pair[1] as u8) & 0x0f) << 4));
+    }
+    if let [last] = it.remainder() {
+        out.push((*last as u8) & 0x0f);
+    }
+    out
+}
+
+/// Unpack nibbles back to i8 codes ([-8, 7] sign extension).
+pub fn unpack_i4(packed: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    for (i, &b) in packed.iter().enumerate() {
+        let lo = sign_extend(b & 0x0f);
+        out.push(lo);
+        if 2 * i + 1 < n {
+            out.push(sign_extend(b >> 4));
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[inline]
+fn sign_extend(nibble: u8) -> i8 {
+    ((nibble << 4) as i8) >> 4
+}
+
+/// Bytes needed to pack `n` INT4 codes.
+pub fn packed_len(n: usize) -> usize {
+    n.div_ceil(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn roundtrip_all_codes() {
+        let codes: Vec<i8> = (-8..=7).collect();
+        let packed = pack_i4(&codes);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_i4(&packed, codes.len()), codes);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        check("pack4-roundtrip", Config::default(), |rng, _| {
+            let n = 1 + rng.below(100);
+            let codes: Vec<i8> =
+                (0..n).map(|_| rng.below(15) as i8 - 7).collect();
+            let packed = pack_i4(&codes);
+            if packed.len() != packed_len(n) {
+                return Err("bad packed length".into());
+            }
+            if unpack_i4(&packed, n) != codes {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn odd_length() {
+        let codes = vec![3i8, -2, 7];
+        assert_eq!(unpack_i4(&pack_i4(&codes), 3), codes);
+    }
+
+    #[test]
+    fn density_is_half() {
+        assert_eq!(packed_len(128), 64);
+        assert_eq!(packed_len(1), 1);
+    }
+}

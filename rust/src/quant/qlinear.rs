@@ -1,0 +1,527 @@
+//! Quantized linear layers: offline weight preparation + the runtime GEMM
+//! paths for every method in the paper.  This module is the rust analogue
+//! of the fused CUDA kernel pipeline (Fig. 4) and the basis of the
+//! Figure-6 efficiency comparison:
+//!
+//! * `forward_per_channel_a4w4`  — plain per-token x per-channel INT4 GEMM
+//!   (the QuaRot/SpinQuant kernel setting).
+//! * `forward_sub_channel_a4w4`  — group-wise scales on both operands
+//!   (the paper's costly baseline: scale *matrices* move through the
+//!   epilogue).
+//! * `forward_rs_fused`          — Runtime-Smooth fused GEMM: one scalar
+//!   group scale per K-block in the epilogue (negligible overhead claim).
+//!
+//! [`QLinear`] bundles a prepared weight with a method and dispatches.
+
+use anyhow::Result;
+
+use crate::linalg::gemm::{gemm_f32_bt, Mat};
+use crate::linalg::igemm::{idot, MatI8};
+use crate::util::threadpool;
+
+use super::runtime_smooth::{self, SmoothedAct};
+use super::rotation::Rotation;
+use super::rtn;
+use super::{gptq, smoothquant, Method, Scheme};
+
+/// Offline-prepared weight.
+#[derive(Clone, Debug)]
+pub enum PreparedWeight {
+    /// Full-precision (possibly rotated / smooth-merged) weight.
+    Fp(Mat),
+    /// Per-output-channel INT4 (RTN or GPTQ).
+    Int4 { q: MatI8, scales: Vec<f32> },
+}
+
+impl PreparedWeight {
+    pub fn out_features(&self) -> usize {
+        match self {
+            PreparedWeight::Fp(w) => w.rows,
+            PreparedWeight::Int4 { q, .. } => q.rows,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        match self {
+            PreparedWeight::Fp(w) => w.cols,
+            PreparedWeight::Int4 { q, .. } => q.cols,
+        }
+    }
+}
+
+/// Options for offline preparation.
+pub struct PrepareOpts<'a> {
+    pub method: Method,
+    pub scheme: Scheme,
+    /// Runtime-Smooth group size (1 = exact per-channel scale).
+    pub group: usize,
+    /// SmoothQuant alpha.
+    pub alpha: f32,
+    /// SmoothQuant calibration (required for Method::SmoothQuant).
+    pub calib: Option<&'a smoothquant::Calibration>,
+    /// GPTQ calibration activations in the *method's* space (already
+    /// rotated for quarot/rrs/spinquant); None -> RTN weights.
+    pub gptq_calib: Option<&'a Mat>,
+    /// Rotation for quarot/rrs/spinquant (defaults to Hadamard).
+    pub rotation: Option<Rotation>,
+}
+
+impl<'a> Default for PrepareOpts<'a> {
+    fn default() -> Self {
+        PrepareOpts {
+            method: Method::Rrs,
+            scheme: Scheme::A4W4KV16,
+            group: 128,
+            alpha: 0.5,
+            calib: None,
+            gptq_calib: None,
+            rotation: None,
+        }
+    }
+}
+
+/// A linear layer prepared for quantized inference.
+pub struct QLinear {
+    pub method: Method,
+    pub scheme: Scheme,
+    pub group: usize,
+    pub weight: PreparedWeight,
+    /// SmoothQuant activation divisors.
+    pub smooth: Option<Vec<f32>>,
+    /// Activation-side rotation (weight was rotated offline).
+    pub rotation: Option<Rotation>,
+    /// Sticky reorder cache: channel maxima ordering is stable across
+    /// decode steps, so the permuted weight is reused until the runtime
+    /// permutation actually changes (big win: the gather is comparable
+    /// to the GEMM itself at decode batch sizes).
+    perm_cache: std::sync::Mutex<Option<(Vec<usize>, std::sync::Arc<MatI8>)>>,
+}
+
+impl QLinear {
+    /// Offline preparation: rotate / merge / quantize the weight per the
+    /// method, matching python `prepare_weights` + GPTQ.
+    pub fn prepare(w: &Mat, opts: &PrepareOpts) -> Result<QLinear> {
+        let method = opts.method;
+        let mut smooth = None;
+        let rotation = if method.rotated() {
+            Some(opts.rotation.clone().unwrap_or(Rotation::Hadamard))
+        } else {
+            None
+        };
+        let w_eff = match method {
+            Method::SmoothQuant => {
+                let calib = opts
+                    .calib
+                    .ok_or_else(|| anyhow::anyhow!("SmoothQuant needs calibration"))?;
+                let s = smoothquant::smoothing_scales(calib, w, opts.alpha);
+                let merged = smoothquant::merge_into_weight(w, &s);
+                smooth = Some(s);
+                merged
+            }
+            m if m.rotated() => rotation.as_ref().unwrap().apply(w),
+            _ => w.clone(),
+        };
+        if method == Method::RsMigrated {
+            // keep the fp weight: it is re-merged + re-quantized per call
+            return Ok(QLinear {
+                method,
+                scheme: opts.scheme,
+                group: opts.group.max(1),
+                weight: PreparedWeight::Fp(w_eff),
+                smooth: None,
+                rotation: None,
+                perm_cache: std::sync::Mutex::new(None),
+            });
+        }
+        let weight = if opts.scheme.w_bits == 4 && method != Method::Fp {
+            let (q, scales) = match opts.gptq_calib {
+                Some(x) => gptq::gptq_quantize(&w_eff, x, 0.01, 64)?,
+                None => rtn::quant_per_channel_w(&w_eff),
+            };
+            PreparedWeight::Int4 { q, scales }
+        } else {
+            PreparedWeight::Fp(w_eff)
+        };
+        Ok(QLinear {
+            method,
+            scheme: opts.scheme,
+            group: opts.group.max(1),
+            weight,
+            smooth,
+            rotation,
+            perm_cache: std::sync::Mutex::new(None),
+        })
+    }
+
+    /// Runtime forward: `y = method(x) @ W^T` with the method's
+    /// quantization pipeline applied.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self.method {
+            Method::Fp => match &self.weight {
+                PreparedWeight::Fp(w) => gemm_f32_bt(x, w),
+                PreparedWeight::Int4 { q, scales } => {
+                    forward_per_channel_a4w4(x, q, scales)
+                }
+            },
+            Method::Rtn | Method::GptqOnly => self.act_quant_gemm(x),
+            Method::SmoothQuant => {
+                let s = self.smooth.as_ref().expect("sq scales");
+                let xs = smoothquant::smooth_activation(x, s);
+                self.act_quant_gemm(&xs)
+            }
+            Method::QuaRot | Method::SpinQuant => {
+                let xr = self.rotation.as_ref().unwrap().apply(x);
+                self.act_quant_gemm(&xr)
+            }
+            Method::Rs => self.rs_forward(x),
+            Method::Rrs => {
+                let xr = self.rotation.as_ref().unwrap().apply(x);
+                self.rs_forward_rotated(&xr)
+            }
+            Method::RsMigrated => self.rs_migrated_forward(x),
+        }
+    }
+
+    /// Fig. 3 ablation: runtime channel scales *merged into the weight*
+    /// each call — the migration scheme that breaks at INT4 (the shared
+    /// outliers make W·diag(s) hard to quantize).
+    fn rs_migrated_forward(&self, x: &Mat) -> Mat {
+        let PreparedWeight::Fp(w) = &self.weight else {
+            panic!("RsMigrated keeps fp weights");
+        };
+        let s = runtime_smooth::channel_scales(x);
+        let xs = smoothquant::smooth_activation(x, &s);
+        let wm = smoothquant::merge_into_weight(w, &s);
+        if self.scheme.w_bits == 4 {
+            let (wq, sw) = rtn::quant_per_channel_w(&wm);
+            forward_per_channel_a4w4(&xs, &wq, &sw)
+        } else {
+            let xdq = rtn::fake_quant_per_token(&xs);
+            gemm_f32_bt(&xdq, &wm)
+        }
+    }
+
+    fn rs_forward(&self, x: &Mat) -> Mat {
+        self.rs_forward_rotated(x)
+    }
+
+    fn rs_forward_rotated(&self, x: &Mat) -> Mat {
+        let group = effective_group(self.group, x.cols);
+        match &self.weight {
+            PreparedWeight::Int4 { q, scales } => {
+                let sa = runtime_smooth::prepare(x, group);
+                let wqp = {
+                    let mut cache = self.perm_cache.lock().unwrap();
+                    match cache.as_ref() {
+                        Some((perm, wqp)) if *perm == sa.perm => wqp.clone(),
+                        _ => {
+                            let wqp =
+                                std::sync::Arc::new(q.permute_cols(&sa.perm));
+                            *cache = Some((sa.perm.clone(), wqp.clone()));
+                            wqp
+                        }
+                    }
+                };
+                forward_rs_fused_prepermuted(&sa, &wqp, scales)
+            }
+            PreparedWeight::Fp(w) => {
+                // A4W16: activation-only quantization
+                let xdq = runtime_smooth::fake_quant_a4w16(x, group);
+                gemm_f32_bt(&xdq, w)
+            }
+        }
+    }
+
+    fn act_quant_gemm(&self, x: &Mat) -> Mat {
+        match &self.weight {
+            PreparedWeight::Int4 { q, scales } => {
+                forward_per_channel_a4w4(x, q, scales)
+            }
+            PreparedWeight::Fp(w) => {
+                let xdq = rtn::fake_quant_per_token(x);
+                gemm_f32_bt(&xdq, w)
+            }
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        self.weight.out_features()
+    }
+}
+
+/// Clamp the RS group to the largest divisor of K that is <= `group`.
+pub fn effective_group(group: usize, k: usize) -> usize {
+    let mut g = group.min(k).max(1);
+    while k % g != 0 {
+        g -= 1;
+    }
+    g
+}
+
+/// Per-channel A4W4: per-token INT4 activation x per-channel INT4 weight.
+pub fn forward_per_channel_a4w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
+    let (xq, sx) = rtn::quant_per_token(x);
+    let (n, k, m) = (xq.rows, xq.cols, wq.rows);
+    let mut out = Mat::zeros(n, m);
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(&mut out.data, m, threads, |i, orow| {
+        let arow = &xq.data[i * k..(i + 1) * k];
+        let sxi = sx[i];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let acc = idot(arow, &wq.data[j * k..(j + 1) * k]);
+            *o = acc as f32 * sxi * sw[j];
+        }
+    });
+    out
+}
+
+/// Sub-channel A4W4: per-group scales for both operands — the expensive
+/// baseline of Figure 6 (scale *matrices* in the epilogue).
+pub fn forward_sub_channel_a4w4(x: &Mat, w: &Mat, group: usize) -> Mat {
+    let g = effective_group(group, x.cols);
+    let (xq, sx) = rtn::quant_sub_channel(x, g);
+    let (wq, sw) = rtn::quant_sub_channel(w, g);
+    forward_sub_channel_prequant(&xq, &sx, &wq, &sw, g)
+}
+
+/// Sub-channel GEMM over pre-quantized operands (bench hot path).
+pub fn forward_sub_channel_prequant(
+    xq: &MatI8,
+    sx: &[f32],
+    wq: &MatI8,
+    sw: &[f32],
+    group: usize,
+) -> Mat {
+    let (n, k, m) = (xq.rows, xq.cols, wq.rows);
+    let ng = k / group;
+    let mut out = Mat::zeros(n, m);
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(&mut out.data, m, threads, |i, orow| {
+        let arow = &xq.data[i * k..(i + 1) * k];
+        let sxi = &sx[i * ng..(i + 1) * ng];
+        // combined per-(i,j) group scales: this extra NG-vector build per
+        // output element is exactly the "scale matrices move through the
+        // epilogue" cost the paper charges sub-channel quantization with
+        let mut combined = vec![0.0f32; ng];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &wq.data[j * k..(j + 1) * k];
+            let swj = &sw[j * ng..(j + 1) * ng];
+            for (c, (&a, &b)) in combined.iter_mut().zip(sxi.iter().zip(swj)) {
+                *c = a * b;
+            }
+            *o = crate::linalg::igemm::idot_grouped(arow, brow, group, &combined);
+        }
+    });
+    out
+}
+
+/// Runtime-Smooth fused GEMM (Fig. 4 step 3): per-K-block integer partial
+/// times ONE scalar group scale, epilogue applies token x channel scales.
+/// `wq` is the offline-quantized weight in ORIGINAL channel order; the
+/// smoothed activation's permutation is applied to the weight columns here
+/// (the CUDA kernel gathers; we gather once per call).
+pub fn forward_rs_fused(sa: &SmoothedAct, wq: &MatI8, sw: &[f32]) -> Mat {
+    let wqp = wq.permute_cols(&sa.perm);
+    forward_rs_fused_prepermuted(sa, &wqp, sw)
+}
+
+/// Fused RS GEMM when the weight is already in the reordered layout
+/// (bench hot path / sticky-permutation optimization).
+pub fn forward_rs_fused_prepermuted(
+    sa: &SmoothedAct,
+    wqp: &MatI8,
+    sw: &[f32],
+) -> Mat {
+    let (n, k, m) = (sa.q.rows, sa.q.cols, wqp.rows);
+    let group = sa.group;
+    let mut out = Mat::zeros(n, m);
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(&mut out.data, m, threads, |i, orow| {
+        let arow = &sa.q.data[i * k..(i + 1) * k];
+        let sxi = sa.token_scales[i];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &wqp.data[j * k..(j + 1) * k];
+            let acc = crate::linalg::igemm::idot_grouped(
+                arow, brow, group, &sa.group_scales,
+            );
+            *o = acc * sxi * sw[j];
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check, Config};
+    use crate::util::rng::Pcg;
+
+    fn randmat(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        Mat::from_vec(n, k, rng.normal_vec(n * k))
+    }
+
+    /// Activations with consistent channel-wise outliers + one spike.
+    fn llm_like_act(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        let mut x = Mat::from_vec(n, k, rng.normal_vec(n * k));
+        for i in 0..n {
+            x.data[i * k + 3] = 60.0 * (1.0 + 0.05 * rng.normal());
+            x.data[i * k + k / 2] = -35.0 * (1.0 + 0.05 * rng.normal());
+        }
+        x.data[k + 7] = 400.0; // spike in token 1
+        x
+    }
+
+    #[test]
+    fn rs_fused_matches_unfused_math() {
+        // the fused kernel computes sum_g sg (Xq_g . Wq_g) * sx * sw, which
+        // must equal explicitly dequantizing and multiplying
+        check("rs-fused-exact", Config { cases: 16, ..Default::default() },
+            |rng, case| {
+                let n = 2 + rng.below(6);
+                let k = 64;
+                let group = [1, 8, 16, 64][case % 4];
+                let x = randmat(n, k, case as u64);
+                let w = randmat(12, k, case as u64 + 99);
+                let (wq, sw) = rtn::quant_per_channel_w(&w);
+                let sa = runtime_smooth::prepare(&x, group);
+                let got = forward_rs_fused(&sa, &wq, &sw);
+                // reference: dequantize the smoothed activation fully
+                let mut xdq = Mat::zeros(n, k);
+                for i in 0..n {
+                    for j in 0..k {
+                        xdq.data[i * k + sa.perm[j]] = sa.q.data[i * k + j] as f32
+                            * sa.token_scales[i]
+                            * sa.group_scales[j / group];
+                    }
+                }
+                let mut wdq = Mat::zeros(12, k);
+                for r in 0..12 {
+                    for c in 0..k {
+                        wdq.data[r * k + c] = wq.data[r * k + c] as f32 * sw[r];
+                    }
+                }
+                let want = gemm_f32_bt(&xdq, &wdq);
+                assert_close(&got.data, &want.data, 1e-3, 1e-4)
+            });
+    }
+
+    #[test]
+    fn all_methods_finite_and_correlated() {
+        let x = llm_like_act(16, 128, 1);
+        let w = randmat(32, 128, 2);
+        let y_fp = gemm_f32_bt(&x, &w);
+        let calib = smoothquant::Calibration::from_batches([&x].into_iter(), 128);
+        for method in Method::ALL {
+            let opts = PrepareOpts {
+                method,
+                scheme: if method == Method::Fp {
+                    Scheme::FP
+                } else {
+                    Scheme::A4W4KV16
+                },
+                group: 32,
+                calib: Some(&calib),
+                ..Default::default()
+            };
+            let lin = QLinear::prepare(&w, &opts).unwrap();
+            let y = lin.forward(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{method:?}");
+            let corr = correlation(&y.data, &y_fp.data);
+            assert!(corr > 0.85, "{method:?} corr={corr}");
+        }
+    }
+
+    #[test]
+    fn rrs_beats_rtn_on_llm_like() {
+        let x = llm_like_act(16, 128, 3);
+        let w = randmat(32, 128, 4);
+        let y_fp = gemm_f32_bt(&x, &w);
+        let err = |m: Method, scheme: Scheme| {
+            let opts = PrepareOpts { method: m, scheme, group: 32, ..Default::default() };
+            let lin = QLinear::prepare(&w, &opts).unwrap();
+            let y = lin.forward(&x);
+            y.data
+                .iter()
+                .zip(&y_fp.data)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / y.data.len() as f32
+        };
+        // A4W4: shared weight-quant error narrows the gap but RRS still wins
+        let e_rtn = err(Method::Rtn, Scheme::A4W4KV16);
+        let e_rrs = err(Method::Rrs, Scheme::A4W4KV16);
+        assert!(e_rrs < 0.9 * e_rtn, "A4W4: rrs {e_rrs} vs rtn {e_rtn}");
+        // A4W16 isolates the activation side: the gap is decisive (Fig. 3)
+        let e_rtn16 = err(Method::Rtn, Scheme::A4W16KV16);
+        let e_rrs16 = err(Method::Rrs, Scheme::A4W16KV16);
+        assert!(e_rrs16 < 0.7 * e_rtn16, "A4W16: rrs {e_rrs16} vs rtn {e_rtn16}");
+    }
+
+    #[test]
+    fn a4w16_paths() {
+        let x = llm_like_act(8, 64, 5);
+        let w = randmat(16, 64, 6);
+        for method in [Method::Rtn, Method::Rs, Method::Rrs, Method::QuaRot] {
+            let opts = PrepareOpts {
+                method,
+                scheme: Scheme::A4W16KV16,
+                group: 16,
+                ..Default::default()
+            };
+            let lin = QLinear::prepare(&w, &opts).unwrap();
+            assert!(matches!(lin.weight, PreparedWeight::Fp(_)));
+            let y = lin.forward(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn sub_channel_matches_explicit_dequant() {
+        let x = randmat(4, 64, 7);
+        let w = randmat(8, 64, 8);
+        let g = 16;
+        let got = forward_sub_channel_a4w4(&x, &w, g);
+        let (xq, sx) = rtn::quant_sub_channel(&x, g);
+        let (wq, sw) = rtn::quant_sub_channel(&w, g);
+        let ng = 64 / g;
+        let mut want = Mat::zeros(4, 8);
+        for i in 0..4 {
+            for j in 0..8 {
+                let mut acc = 0.0;
+                for kk in 0..64 {
+                    acc += xq.data[i * 64 + kk] as f32
+                        * sx[i * ng + kk / g]
+                        * wq.data[j * 64 + kk] as f32
+                        * sw[j * ng + kk / g];
+                }
+                want.data[i * 8 + j] = acc;
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-2);
+    }
+
+    #[test]
+    fn effective_group_divides() {
+        assert_eq!(effective_group(128, 64), 64);
+        assert_eq!(effective_group(48, 64), 32);
+        assert_eq!(effective_group(1, 64), 1);
+        assert_eq!(effective_group(128, 96), 96);
+    }
+
+    fn correlation(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len() as f32;
+        let ma = a.iter().sum::<f32>() / n;
+        let mb = b.iter().sum::<f32>() / n;
+        let mut num = 0.0;
+        let mut da = 0.0;
+        let mut db = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            num += (x - ma) * (y - mb);
+            da += (x - ma) * (x - ma);
+            db += (y - mb) * (y - mb);
+        }
+        num / (da.sqrt() * db.sqrt() + 1e-12)
+    }
+}

@@ -1,0 +1,117 @@
+//! Rotation utilities (paper 2.3): Hadamard rotation for QuaRot/RRS and
+//! dense learned rotations for the SpinQuant baseline.
+//!
+//! `X @ H` with H the normalized Sylvester-Hadamard is applied via FWHT in
+//! O(K log K); learned rotations are dense [K,K] matmuls.  Pairing
+//! `(X R)(R^T W^T)^T` keeps the layer output exact (Fig. 2a).
+
+use crate::linalg::fwht::fwht_inplace;
+use crate::linalg::gemm::{gemm_f32, Mat};
+
+/// Rotation operator applied to activation/weight rows along K.
+#[derive(Clone, Debug)]
+pub enum Rotation {
+    /// Normalized Sylvester-Hadamard (K must be a power of two).
+    Hadamard,
+    /// Dense learned rotation (SpinQuant): row-major [K,K].
+    Dense(Mat),
+}
+
+impl Rotation {
+    /// `X <- X @ R`, rotating every row in place (Hadamard) or via a
+    /// dense GEMM (learned).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        match self {
+            Rotation::Hadamard => {
+                let mut out = x.clone();
+                for i in 0..out.rows {
+                    fwht_inplace(out.row_mut(i));
+                }
+                out
+            }
+            Rotation::Dense(r) => {
+                assert_eq!(x.cols, r.rows);
+                gemm_f32(x, r)
+            }
+        }
+    }
+
+    /// Orthogonality residual `max |R R^T - I|` (0 for Hadamard).
+    pub fn orthogonality_error(&self, k: usize) -> f32 {
+        match self {
+            Rotation::Hadamard => 0.0,
+            Rotation::Dense(r) => {
+                assert_eq!(r.rows, k);
+                let mut worst = 0.0f32;
+                for i in 0..k {
+                    for j in 0..k {
+                        let mut s = 0.0;
+                        for t in 0..k {
+                            s += r.at(i, t) * r.at(j, t);
+                        }
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        worst = worst.max((s - want).abs());
+                    }
+                }
+                worst
+            }
+        }
+    }
+}
+
+/// Rotate a weight matrix's input dimension: `W' = W @ R` row-wise over K
+/// (same operation as activations since both store K contiguously).
+pub fn rotate_weight(w: &Mat, rot: &Rotation) -> Mat {
+    rot.apply(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm_f32_bt;
+    use crate::util::rng::Pcg;
+
+    fn randmat(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        Mat::from_vec(n, k, rng.normal_vec(n * k))
+    }
+
+    #[test]
+    fn pairing_preserves_output() {
+        // (X H)(W H)^T == X W^T (Fig. 2a)
+        let x = randmat(6, 64, 1);
+        let w = randmat(10, 64, 2);
+        let rot = Rotation::Hadamard;
+        let y0 = gemm_f32_bt(&x, &w);
+        let y1 = gemm_f32_bt(&rot.apply(&x), &rot.apply(&w));
+        assert!(y0.max_abs_diff(&y1) < 1e-3);
+    }
+
+    #[test]
+    fn dense_pairing_preserves_output() {
+        // build an orthogonal matrix via Hadamard-as-dense
+        let k = 32;
+        let h = crate::linalg::fwht::hadamard_dense(k);
+        let rot = Rotation::Dense(Mat::from_vec(k, k, h));
+        assert!(rot.orthogonality_error(k) < 1e-4);
+        let x = randmat(4, k, 3);
+        let w = randmat(5, k, 4);
+        let y0 = gemm_f32_bt(&x, &w);
+        let y1 = gemm_f32_bt(&rot.apply(&x), &rot.apply(&w));
+        assert!(y0.max_abs_diff(&y1) < 1e-3);
+    }
+
+    #[test]
+    fn hadamard_apply_matches_dense_apply() {
+        let k = 64;
+        let x = randmat(3, k, 5);
+        let hd = Rotation::Dense(Mat::from_vec(
+            k,
+            k,
+            crate::linalg::fwht::hadamard_dense(k),
+        ));
+        let a = Rotation::Hadamard.apply(&x);
+        let b = hd.apply(&x);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+}

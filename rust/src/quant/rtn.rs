@@ -1,0 +1,201 @@
+//! Symmetric round-to-nearest INT4 quantization (paper section 2.1).
+//!
+//! `q = clip(round(x / s), -7, 7)`, `s = absmax / 7`, matching
+//! python/compile/kernels/ref.py bit-for-bit.  numpy/XLA round
+//! half-to-even, while `f32::round` rounds half-away-from-zero, so we
+//! implement banker's rounding explicitly — this keeps the rust engine
+//! and the Pallas kernel code-exact on the golden vectors.
+
+use crate::linalg::gemm::Mat;
+use crate::linalg::igemm::MatI8;
+
+use super::QMAX;
+
+/// Round half-to-even (numpy/IEEE default), as f32.
+///
+/// Branch-free magic-number form: adding 1.5*2^23 forces the mantissa to
+/// drop all fractional bits under the default (round-half-even) FP
+/// rounding mode; subtracting recovers the integral value.  Valid for
+/// |x| < 2^22, far beyond the [-7, 7] quantization range — and it
+/// autovectorizes, which the branchy form does not.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    (x + MAGIC) - MAGIC
+}
+
+/// Quantization scale for a group with absolute maximum `absmax`.
+#[inline]
+pub fn scale_for(absmax: f32) -> f32 {
+    absmax.max(1e-8) / QMAX
+}
+
+/// Quantize one value against a scale.
+#[inline]
+pub fn quantize_one(x: f32, scale: f32) -> i8 {
+    round_half_even(x / scale).clamp(-QMAX, QMAX) as i8
+}
+
+/// Quantize a row against one scale (hot path; true division keeps
+/// bit-parity with the python oracle, and still autovectorizes).
+#[inline]
+pub fn quantize_row(src: &[f32], scale: f32, dst: &mut [i8]) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = round_half_even(x / scale).clamp(-QMAX, QMAX) as i8;
+    }
+}
+
+/// Per-token (row) symmetric INT4: returns (codes, per-row scales).
+pub fn quant_per_token(x: &Mat) -> (MatI8, Vec<f32>) {
+    let mut q = MatI8::zeros(x.rows, x.cols);
+    let mut scales = vec![0.0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let s = scale_for(row.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+        scales[i] = s;
+        let qrow = &mut q.data[i * x.cols..(i + 1) * x.cols];
+        quantize_row(row, s, qrow);
+    }
+    (q, scales)
+}
+
+/// Per-output-channel weight quantization = per-row on a [M,K] weight.
+pub fn quant_per_channel_w(w: &Mat) -> (MatI8, Vec<f32>) {
+    quant_per_token(w)
+}
+
+/// Sub-channel quantization: groups of `group` along K, scales [rows, K/group].
+pub fn quant_sub_channel(x: &Mat, group: usize) -> (MatI8, Vec<f32>) {
+    assert_eq!(x.cols % group, 0, "K={} % group={}", x.cols, group);
+    let g = x.cols / group;
+    let mut q = MatI8::zeros(x.rows, x.cols);
+    let mut scales = vec![0.0f32; x.rows * g];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for gi in 0..g {
+            let seg = &row[gi * group..(gi + 1) * group];
+            let s = scale_for(seg.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+            scales[i * g + gi] = s;
+            let qseg =
+                &mut q.data[i * x.cols + gi * group..i * x.cols + (gi + 1) * group];
+            for (qv, &v) in qseg.iter_mut().zip(seg) {
+                *qv = quantize_one(v, s);
+            }
+        }
+    }
+    (q, scales)
+}
+
+/// Dequantize per-token codes back to f32.
+pub fn dequant_per_token(q: &MatI8, scales: &[f32]) -> Mat {
+    let mut out = Mat::zeros(q.rows, q.cols);
+    for i in 0..q.rows {
+        let s = scales[i];
+        let src = q.row(i);
+        let dst = out.row_mut(i);
+        for (d, &c) in dst.iter_mut().zip(src) {
+            *d = c as f32 * s;
+        }
+    }
+    out
+}
+
+/// Fake-quantize (quantize+dequantize) per-token — used for A4W16 paths.
+pub fn fake_quant_per_token(x: &Mat) -> Mat {
+    let (q, s) = quant_per_token(x);
+    dequant_per_token(&q, &s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn codes_bounded_and_absmax_hits_7() {
+        check("rtn-bounds", Config::default(), |rng, _| {
+            let n = 2 + rng.below(6);
+            let k = 8 * (1 + rng.below(8));
+            let data = rng.normal_vec(n * k);
+            let x = Mat::from_vec(n, k, data);
+            let (q, s) = quant_per_token(&x);
+            for i in 0..n {
+                let row = q.row(i);
+                if row.iter().any(|&c| c.abs() > 7) {
+                    return Err("code out of range".into());
+                }
+                if row.iter().map(|&c| c.abs()).max().unwrap() != 7 {
+                    return Err("absmax code must be 7".into());
+                }
+                if s[i] <= 0.0 {
+                    return Err("scale must be positive".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        check("rtn-roundtrip", Config::default(), |rng, _| {
+            let x = Mat::from_vec(4, 32, rng.normal_vec(128));
+            let (q, s) = quant_per_token(&x);
+            let xr = dequant_per_token(&q, &s);
+            for i in 0..4 {
+                for j in 0..32 {
+                    let err = (x.at(i, j) - xr.at(i, j)).abs();
+                    if err > s[i] / 2.0 + 1e-6 {
+                        return Err(format!("err {err} > half-step {}", s[i] / 2.0));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sub_channel_refines() {
+        // with a channel outlier, sub-channel quantization has lower
+        // roundtrip error than per-token
+        check("subchannel-refines", Config { cases: 16, ..Default::default() },
+            |rng, _| {
+                let mut data = rng.normal_vec(4 * 64);
+                for r in 0..4 {
+                    data[r * 64 + 3] *= 100.0;
+                }
+                let x = Mat::from_vec(4, 64, data);
+                let (qt, st) = quant_per_token(&x);
+                let (qs, ss) = quant_sub_channel(&x, 16);
+                let ert = err(&x, &dequant_per_token(&qt, &st));
+                let mut xs = Mat::zeros(4, 64);
+                for i in 0..4 {
+                    for j in 0..64 {
+                        xs.data[i * 64 + j] =
+                            qs.data[i * 64 + j] as f32 * ss[i * 4 + j / 16];
+                    }
+                }
+                let ers = err(&x, &xs);
+                if ers <= ert {
+                    Ok(())
+                } else {
+                    Err(format!("sub {ers} > per-token {ert}"))
+                }
+            });
+
+        fn err(a: &Mat, b: &Mat) -> f32 {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .sum::<f32>()
+        }
+    }
+
+    #[test]
+    fn zero_row_safe() {
+        let x = Mat::zeros(2, 8);
+        let (q, s) = quant_per_token(&x);
+        assert!(q.data.iter().all(|&c| c == 0));
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+}

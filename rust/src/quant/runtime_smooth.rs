@@ -1,0 +1,204 @@
+//! Runtime Smooth (paper section 3.1-3.2): the training-free activation
+//! smoother.  Channel-wise maxima are computed **at runtime** from the
+//! activation batch that is actually being multiplied, never merged into
+//! the weights:
+//!
+//! 1. `channel_scales`  — `s_j = max_i |X_ij|`                 (eq. 1)
+//! 2. `reorder_perm`    — channels sorted by descending scale  (Fig. 4 (1))
+//! 3. `group_scales`    — per-group maxima after reordering    (Fig. 4 (2))
+//! 4. smooth + per-token quantize; the fused GEMM re-applies the group
+//!    scale on the de-quantized partials                       (eq. 3)
+//!
+//! With `group == 1` this is the exact per-channel runtime scale (Table 1
+//! "RS"); `group == 128` matches the GEMM block size so the scale hoists
+//! out of the inner loop (Table 4 / Figure 6 fused kernel).
+
+use crate::linalg::gemm::Mat;
+use crate::linalg::igemm::MatI8;
+
+use super::rtn;
+
+/// Runtime channel-wise absolute maxima (eq. 1), floored at 1e-8.
+pub fn channel_scales(x: &Mat) -> Vec<f32> {
+    let mut s = vec![0.0f32; x.cols];
+    for i in 0..x.rows {
+        for (sj, &v) in s.iter_mut().zip(x.row(i)) {
+            *sj = sj.max(v.abs());
+        }
+    }
+    for sj in s.iter_mut() {
+        *sj = sj.max(1e-8);
+    }
+    s
+}
+
+/// Descending-magnitude permutation of channels (stable on ties).
+pub fn reorder_perm(scales: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scales.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scales[b]
+            .partial_cmp(&scales[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Group-wise maxima over reordered scales; `perm.len() % group == 0`.
+pub fn group_scales(scales: &[f32], perm: &[usize], group: usize) -> Vec<f32> {
+    assert_eq!(perm.len() % group, 0);
+    perm.chunks(group)
+        .map(|idxs| idxs.iter().fold(0.0f32, |a, &j| a.max(scales[j])))
+        .collect()
+}
+
+/// Smoothed + per-token-quantized activation, ready for the fused GEMM.
+pub struct SmoothedAct {
+    /// INT4 codes of X[:, perm] / repeat(group_scales) (reordered layout).
+    pub q: MatI8,
+    /// Per-token quantization scales.
+    pub token_scales: Vec<f32>,
+    /// Channel permutation applied (weights must be gathered identically).
+    pub perm: Vec<usize>,
+    /// Per-group smoothing scales (reordered layout).
+    pub group_scales: Vec<f32>,
+    pub group: usize,
+}
+
+/// Full runtime stage of the fused pipeline (Fig. 4 steps 1-2 + quant).
+pub fn prepare(x: &Mat, group: usize) -> SmoothedAct {
+    let s = channel_scales(x);
+    let perm = reorder_perm(&s);
+    let sg = group_scales(&s, &perm, group);
+    let mut q = MatI8::zeros(x.rows, x.cols);
+    let mut token_scales = vec![0.0f32; x.rows];
+    let mut smooth_row = vec![0.0f32; x.cols];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        // gather + smooth in one pass
+        for (j, &p) in perm.iter().enumerate() {
+            smooth_row[j] = row[p] / sg[j / group];
+        }
+        let sx =
+            rtn::scale_for(smooth_row.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+        token_scales[i] = sx;
+        let qrow = &mut q.data[i * x.cols..(i + 1) * x.cols];
+        rtn::quantize_row(&smooth_row, sx, qrow);
+    }
+    SmoothedAct { q, token_scales, perm, group_scales: sg, group }
+}
+
+/// A4W16 fake-quant path: smooth, quantize, de-quantize, un-permute.
+/// Returns the effective activation the fp GEMM should consume.
+pub fn fake_quant_a4w16(x: &Mat, group: usize) -> Mat {
+    let sa = prepare(x, group);
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let sx = sa.token_scales[i];
+        let qrow = sa.q.row(i);
+        let dst = out.row_mut(i);
+        for (j, &p) in sa.perm.iter().enumerate() {
+            dst[p] = qrow[j] as f32 * sx * sa.group_scales[j / group];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check, Config};
+    use crate::util::rng::Pcg;
+
+    fn randmat(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        Mat::from_vec(n, k, rng.normal_vec(n * k))
+    }
+
+    #[test]
+    fn channel_scales_are_maxima() {
+        let x = Mat::from_vec(2, 3, vec![1.0, -5.0, 2.0, -3.0, 4.0, 0.5]);
+        assert_eq!(channel_scales(&x), vec![3.0, 5.0, 2.0]);
+    }
+
+    #[test]
+    fn perm_is_descending_permutation() {
+        check("rs-perm", Config::default(), |rng, _| {
+            let s: Vec<f32> = (0..64).map(|_| rng.uniform()).collect();
+            let p = reorder_perm(&s);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            if sorted != (0..64).collect::<Vec<_>>() {
+                return Err("not a permutation".into());
+            }
+            for w in p.windows(2) {
+                if s[w[0]] < s[w[1]] {
+                    return Err("not descending".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_scale_dominates_members() {
+        let x = randmat(8, 64, 3);
+        let s = channel_scales(&x);
+        let p = reorder_perm(&s);
+        let sg = group_scales(&s, &p, 16);
+        for (g, idxs) in p.chunks(16).enumerate() {
+            for &j in idxs {
+                assert!(sg[g] >= s[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn smoothed_codes_bounded() {
+        let mut x = randmat(8, 64, 4);
+        for i in 0..8 {
+            x.data[i * 64 + 7] *= 200.0; // channel outlier
+        }
+        let sa = prepare(&x, 16);
+        assert!(sa.q.data.iter().all(|&c| c.abs() <= 7));
+        assert!(sa.group_scales.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn fake_quant_close_at_group1() {
+        // group=1: per-channel smoothing makes the roundtrip error tiny
+        // even with consistent channel outliers
+        let mut rng = Pcg::new(5);
+        let mut x = Mat::from_vec(16, 64, rng.normal_vec(16 * 64));
+        for i in 0..16 {
+            x.data[i * 64 + 3] = 100.0 * (1.0 + 0.02 * rng.normal());
+        }
+        let y = fake_quant_a4w16(&x, 1);
+        // outlier channel recovered within ~ (1/7)/2 relative
+        for i in 0..16 {
+            let rel = (y.at(i, 3) - x.at(i, 3)).abs() / x.at(i, 3).abs();
+            assert!(rel < 0.08, "row {i} rel {rel}");
+        }
+        assert_close(&y.data, &x.data, 0.5, 0.12).unwrap();
+    }
+
+    #[test]
+    fn grouping_monotone_in_quality() {
+        // finer groups never increase the roundtrip error much; coarse
+        // groups with a spike outlier hurt (Table 4 mechanism)
+        let mut rng = Pcg::new(6);
+        let mut x = Mat::from_vec(16, 128, rng.normal_vec(16 * 128));
+        x.data[5 * 128 + 77] = 500.0; // spike
+        let err = |g: usize| {
+            let y = fake_quant_a4w16(&x, g);
+            x.data
+                .iter()
+                .zip(&y.data)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+        };
+        let e1 = err(1);
+        let e128 = err(128);
+        assert!(e1 <= e128 * 1.05, "e1={e1} e128={e128}");
+    }
+}

@@ -1,0 +1,125 @@
+//! SmoothQuant baseline (paper 2.2): offline calibrated channel smoothing
+//! with outlier *migration* into the weights —
+//! `s_j = max|X_j|^alpha / max|W_j|^(1-alpha)`, `X' = X / s`, `W' = W * s`.
+//!
+//! The paper's analysis (and our Table 1) shows why this fails at INT4:
+//! the calibration can mismatch runtime activations, and the migrated
+//! outliers make W harder to quantize.
+
+use crate::linalg::gemm::Mat;
+
+/// Calibration record: per-input-channel absolute maxima of activations.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub act_absmax: Vec<f32>,
+}
+
+impl Calibration {
+    /// Accumulate channel maxima over calibration batches.
+    pub fn from_batches<'a>(batches: impl Iterator<Item = &'a Mat>, k: usize) -> Self {
+        let mut am = vec![0.0f32; k];
+        for x in batches {
+            assert_eq!(x.cols, k);
+            for i in 0..x.rows {
+                for (a, &v) in am.iter_mut().zip(x.row(i)) {
+                    *a = a.max(v.abs());
+                }
+            }
+        }
+        Calibration { act_absmax: am }
+    }
+}
+
+/// Smoothing scales (paper 2.2), floored for numeric safety.
+pub fn smoothing_scales(calib: &Calibration, w: &Mat, alpha: f32) -> Vec<f32> {
+    let mut wmax = vec![0.0f32; w.cols];
+    for i in 0..w.rows {
+        for (m, &v) in wmax.iter_mut().zip(w.row(i)) {
+            *m = m.max(v.abs());
+        }
+    }
+    calib
+        .act_absmax
+        .iter()
+        .zip(&wmax)
+        .map(|(&a, &m)| {
+            (a.max(1e-8).powf(alpha) / m.max(1e-8).powf(1.0 - alpha)).max(1e-8)
+        })
+        .collect()
+}
+
+/// Apply `X / s` (runtime side of SmoothQuant).
+pub fn smooth_activation(x: &Mat, s: &[f32]) -> Mat {
+    let mut out = x.clone();
+    for i in 0..out.rows {
+        for (v, &sj) in out.row_mut(i).iter_mut().zip(s) {
+            *v /= sj;
+        }
+    }
+    out
+}
+
+/// Apply `W * s` (offline merge into the weight).
+pub fn merge_into_weight(w: &Mat, s: &[f32]) -> Mat {
+    let mut out = w.clone();
+    for i in 0..out.rows {
+        for (v, &sj) in out.row_mut(i).iter_mut().zip(s) {
+            *v *= sj;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm_f32_bt;
+    use crate::util::rng::Pcg;
+
+    fn randmat(n: usize, k: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        Mat::from_vec(n, k, rng.normal_vec(n * k))
+    }
+
+    #[test]
+    fn smoothing_preserves_output_in_fp() {
+        let x = randmat(4, 32, 1);
+        let w = randmat(8, 32, 2);
+        let calib = Calibration::from_batches([&x].into_iter(), 32);
+        let s = smoothing_scales(&calib, &w, 0.5);
+        let y0 = gemm_f32_bt(&x, &w);
+        let y1 = gemm_f32_bt(&smooth_activation(&x, &s), &merge_into_weight(&w, &s));
+        assert!(y0.max_abs_diff(&y1) < 1e-3);
+    }
+
+    #[test]
+    fn alpha_interpolates() {
+        let x = randmat(4, 16, 3);
+        let w = randmat(8, 16, 4);
+        let calib = Calibration::from_batches([&x].into_iter(), 16);
+        let s0 = smoothing_scales(&calib, &w, 0.0);
+        let s1 = smoothing_scales(&calib, &w, 1.0);
+        // alpha=1 -> scales equal activation maxima
+        for (a, &sj) in calib.act_absmax.iter().zip(&s1) {
+            assert!((a.max(1e-8) - sj).abs() < 1e-4);
+        }
+        // alpha=0 -> scales are 1/weight maxima
+        let mut wmax = vec![0.0f32; 16];
+        for i in 0..8 {
+            for (m, &v) in wmax.iter_mut().zip(w.row(i)) {
+                *m = m.max(v.abs());
+            }
+        }
+        for (m, &sj) in wmax.iter().zip(&s0) {
+            assert!((1.0 / m - sj).abs() / sj < 1e-3);
+        }
+    }
+
+    #[test]
+    fn calibration_accumulates_over_batches() {
+        let a = Mat::from_vec(1, 2, vec![1.0, -3.0]);
+        let b = Mat::from_vec(1, 2, vec![-2.0, 0.5]);
+        let c = Calibration::from_batches([&a, &b].into_iter(), 2);
+        assert_eq!(c.act_absmax, vec![2.0, 3.0]);
+    }
+}

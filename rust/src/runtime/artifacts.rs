@@ -1,0 +1,152 @@
+//! Artifact manifest: what `make artifacts` produced and how to feed it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+
+/// Tensor spec of one graph input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed artifacts/manifest.json + paths.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub model: ModelConfig,
+    pub graphs: Vec<GraphInfo>,
+    pub decode_batch: usize,
+    pub decode_max_t: usize,
+    pub prefill_batch: usize,
+    pub prefill_seq: usize,
+}
+
+fn parse_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().context("spec list")?;
+    arr.iter()
+        .map(|spec| {
+            let name = spec.idx(0).and_then(Json::as_str).context("spec name")?;
+            let dtype = spec.idx(1).and_then(Json::as_str).context("spec dtype")?;
+            let shape = spec
+                .idx(2)
+                .and_then(Json::as_arr)
+                .context("spec shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name: name.into(), dtype: dtype.into(), shape })
+        })
+        .collect()
+}
+
+impl Artifacts {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Artifacts> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json", root.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let model = ModelConfig::from_manifest(&j)?;
+        let graphs_obj = j.get("graphs").context("manifest missing graphs")?;
+        let mut graphs = Vec::new();
+        for (name, g) in graphs_obj.as_obj().context("graphs object")? {
+            graphs.push(GraphInfo {
+                name: name.clone(),
+                file: root.join(
+                    g.get("file").and_then(Json::as_str).context("graph file")?,
+                ),
+                inputs: parse_specs(g.get("inputs").context("inputs")?)?,
+                outputs: parse_specs(g.get("outputs").context("outputs")?)?,
+            });
+        }
+        let dec = j.get("decode").context("decode info")?;
+        let pre = j.get("prefill").context("prefill info")?;
+        Ok(Artifacts {
+            root,
+            model,
+            graphs,
+            decode_batch: dec.get("batch").and_then(Json::as_usize).unwrap_or(4),
+            decode_max_t: dec.get("max_t").and_then(Json::as_usize).unwrap_or(160),
+            prefill_batch: pre.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            prefill_seq: pre.get("seq").and_then(Json::as_usize).unwrap_or(96),
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphInfo> {
+        self.graphs
+            .iter()
+            .find(|g| g.name == name)
+            .with_context(|| format!("artifact graph '{name}' not in manifest"))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.root.join("weights.rrsw")
+    }
+
+    pub fn goldens_path(&self) -> PathBuf {
+        self.root.join("goldens.rrsw")
+    }
+
+    pub fn spinquant_path(&self) -> PathBuf {
+        self.root.join("spinquant_r.rrsw")
+    }
+
+    pub fn val_text(&self) -> Result<String> {
+        Ok(std::fs::read_to_string(self.root.join("val.txt"))?)
+    }
+
+    pub fn qa_tasks_json(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.root.join("qa_tasks.json"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("qa_tasks.json: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("rrs_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":{"vocab":256,"dim":128,"n_layers":4,"n_heads":4,
+                "n_kv_heads":2,"ffn":256,"max_seq":256,"rope_theta":10000.0},
+               "prefill":{"batch":1,"seq":96},
+               "decode":{"batch":4,"max_t":160},
+               "graphs":{"prefill_fp":{"file":"prefill_fp.hlo.txt",
+                 "inputs":[["tokens","i32",[1,96]]],
+                 "outputs":[["logits","f32",[1,96,256]]]}}}"#,
+        )
+        .unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.model.dim, 128);
+        let g = a.graph("prefill_fp").unwrap();
+        assert_eq!(g.inputs[0].shape, vec![1, 96]);
+        assert_eq!(g.outputs[0].numel(), 96 * 256);
+        assert!(a.graph("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,267 @@
+//! Graph execution on the PJRT CPU client + the PJRT-backed engine
+//! (prefill for evaluation, stateful decode for serving).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Artifacts, GraphInfo};
+
+/// Typed host tensor crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// One compiled HLO graph, ready to execute.
+pub struct GraphRunner {
+    pub info: GraphInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GraphRunner {
+    /// Load HLO text, compile on the client.
+    pub fn load(client: &xla::PjRtClient, info: &GraphInfo) -> Result<GraphRunner> {
+        let path = info
+            .file
+            .to_str()
+            .context("artifact path not utf-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", info.name))?;
+        Ok(GraphRunner { info: info.clone(), exe })
+    }
+
+    /// Execute with host tensors; returns the tuple elements as host
+    /// tensors (graphs are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "graph {} expects {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, t) in self.info.inputs.iter().zip(inputs) {
+            if spec.shape != t.shape() {
+                bail!(
+                    "graph {} input '{}' shape {:?} != {:?}",
+                    self.info.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// PJRT-backed model engine over the AOT artifacts: the L2/L1 numerics
+/// oracle and the FP serving reference.  One compiled executable per
+/// (graph, variant); graphs are lazily loaded and cached.
+pub struct PjrtEngine {
+    pub artifacts: Artifacts,
+    client: xla::PjRtClient,
+    runners: std::sync::Mutex<HashMap<String, std::sync::Arc<GraphRunner>>>,
+}
+
+/// Decode-side session state held by rust (caches live in host memory and
+/// are round-tripped through the graph each step — the graph updates them
+/// in place via dynamic_update_slice).
+pub struct PjrtKvState {
+    pub kcache: Vec<f32>,
+    pub vcache: Vec<f32>,
+    pub shape: Vec<usize>,
+    pub pos: usize,
+}
+
+impl PjrtEngine {
+    pub fn new(root: impl AsRef<std::path::Path>) -> Result<PjrtEngine> {
+        let artifacts = Artifacts::load(root)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine {
+            artifacts,
+            client,
+            runners: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (or load+compile) a graph by name.
+    pub fn runner(&self, name: &str) -> Result<std::sync::Arc<GraphRunner>> {
+        {
+            let map = self.runners.lock().unwrap();
+            if let Some(r) = map.get(name) {
+                return Ok(r.clone());
+            }
+        }
+        let info = self.artifacts.graph(name)?.clone();
+        let runner = std::sync::Arc::new(GraphRunner::load(&self.client, &info)?);
+        self.runners
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), runner.clone());
+        Ok(runner)
+    }
+
+    /// Run a prefill graph (`prefill_{variant}`): tokens [B,T] -> logits
+    /// flattened [B*T*vocab].
+    pub fn prefill(&self, variant: &str, tokens: &[i32]) -> Result<HostTensor> {
+        let name = format!("prefill_{variant}");
+        let runner = self.runner(&name)?;
+        let spec = &runner.info.inputs[0];
+        if tokens.len() != spec.numel() {
+            bail!(
+                "prefill_{variant} wants {} tokens, got {}",
+                spec.numel(),
+                tokens.len()
+            );
+        }
+        let input = HostTensor::i32(spec.shape.clone(), tokens.to_vec());
+        let mut out = runner.run(&[input])?;
+        Ok(out.remove(0))
+    }
+
+    /// Fresh decode KV state sized for `decode_{variant}` graphs.
+    pub fn new_kv_state(&self) -> PjrtKvState {
+        let cfg = &self.artifacts.model;
+        let shape = vec![
+            cfg.n_layers,
+            self.artifacts.decode_batch,
+            self.artifacts.decode_max_t,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        ];
+        let n: usize = shape.iter().product();
+        PjrtKvState { kcache: vec![0.0; n], vcache: vec![0.0; n], shape, pos: 0 }
+    }
+
+    /// One decode step for a batch of B tokens (B = manifest decode batch).
+    /// Returns logits [B, vocab] flattened; the KV state advances by one.
+    pub fn decode_step(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        state: &mut PjrtKvState,
+    ) -> Result<Vec<f32>> {
+        let b = self.artifacts.decode_batch;
+        if tokens.len() != b {
+            bail!("decode batch is {b}, got {} tokens", tokens.len());
+        }
+        if state.pos >= self.artifacts.decode_max_t {
+            bail!("KV state full ({} positions)", state.pos);
+        }
+        let runner = self.runner(&format!("decode_{variant}"))?;
+        let inputs = vec![
+            HostTensor::i32(vec![b, 1], tokens.to_vec()),
+            HostTensor::f32(state.shape.clone(), std::mem::take(&mut state.kcache)),
+            HostTensor::f32(state.shape.clone(), std::mem::take(&mut state.vcache)),
+            HostTensor::i32(vec![1], vec![state.pos as i32]),
+        ];
+        let out = runner.run(&inputs)?;
+        let mut it = out.into_iter();
+        let logits = it.next().context("decode output 0")?;
+        let kc = it.next().context("decode output 1")?;
+        let vc = it.next().context("decode output 2")?;
+        state.kcache = match kc {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("kcache not f32"),
+        };
+        state.vcache = match vc {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("vcache not f32"),
+        };
+        state.pos += 1;
+        Ok(logits.as_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+}

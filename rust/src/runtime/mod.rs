@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts and execute them
+//! on the CPU PJRT client (`xla` crate).  This is the bridge between the
+//! build-time python (L1 Pallas kernels + L2 JAX model) and the rust
+//! request path — python never runs at serving time.
+//!
+//! Interchange is HLO **text**: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::Artifacts;
+pub use executor::{GraphRunner, PjrtEngine};

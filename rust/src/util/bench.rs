@@ -1,0 +1,124 @@
+//! Micro-benchmark substrate (replaces `criterion`): warmup, timed
+//! iterations, robust summary.  Used by `cargo bench` targets (harness =
+//! false) and the Figure-6 kernel-efficiency harness.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark measurement: per-iteration wall time in nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub ns: Summary,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f32 {
+        self.ns.p50
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/iter (p10 {:>10.0}, p90 {:>10.0}, n={})",
+            self.name, self.ns.p50, self.ns.p10, self.ns.p90, self.iters
+        )
+    }
+}
+
+/// Benchmark driver: targets `min_duration` of measurement after warmup,
+/// batching the closure so per-sample timing overhead is amortized.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub min_duration: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            min_duration: Duration::from_millis(400),
+            max_samples: 50,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            min_duration: Duration::from_millis(120),
+            max_samples: 20,
+        }
+    }
+
+    /// Run `f` repeatedly; returns the per-iteration timing summary.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup + estimate batch size
+        let w0 = Instant::now();
+        let mut batch = 0usize;
+        while w0.elapsed() < self.warmup || batch == 0 {
+            f();
+            batch += 1;
+        }
+        let per_call = self.warmup.as_nanos() as f32 / batch as f32;
+        // target ~ min_duration/max_samples per sample
+        let target_ns =
+            (self.min_duration.as_nanos() as f32 / self.max_samples as f32).max(1.0);
+        let batch = ((target_ns / per_call.max(1.0)).ceil() as usize).max(1);
+
+        let mut samples = Vec::with_capacity(self.max_samples);
+        let t0 = Instant::now();
+        while t0.elapsed() < self.min_duration && samples.len() < self.max_samples {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_nanos() as f32 / batch as f32);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len() * batch,
+            ns: Summary::of(&samples),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.ns.p50 >= 0.0);
+    }
+
+    #[test]
+    fn slower_is_slower() {
+        // black_box the loop bound so the optimizer cannot const-fold
+        let b = Bencher::quick();
+        let fast = b.run("fast", || {
+            let n = black_box(10u64);
+            black_box((0..n).map(black_box).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            let n = black_box(10_000u64);
+            black_box((0..n).map(black_box).sum::<u64>());
+        });
+        assert!(slow.ns.p50 > fast.ns.p50);
+    }
+}

@@ -1,0 +1,237 @@
+//! `.rrsw` tensor container (mirror of python/compile/io_rrsw.py).
+//!
+//! The interchange format between the python compile path and the rust
+//! runtime: trained weights, golden test vectors, learned rotations.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 6] = b"RRSW1\n";
+
+/// Raw tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I8(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            Data::F32(_) => 0,
+            Data::I8(_) => 1,
+            Data::I32(_) => 2,
+            Data::U8(_) => 3,
+        }
+    }
+}
+
+/// Named n-dimensional tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i8(shape: Vec<usize>, data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: Data::I8(data) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got code {}", other.code()),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Data::I8(v) => Ok(v),
+            other => bail!("expected i8 tensor, got code {}", other.code()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got code {}", other.code()),
+        }
+    }
+
+    /// Shape as (rows, cols) for 2-D tensors.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("expected 2-D tensor, shape {:?}", self.shape);
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+}
+
+/// Read a `.rrsw` file into name -> tensor.
+pub fn read_rrsw(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (code, ndim) = (hdr[0], hdr[1] as usize);
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let count: usize = shape.iter().product::<usize>().max(1);
+        let data = match code {
+            0 => {
+                let mut buf = vec![0u8; count * 4];
+                r.read_exact(&mut buf)?;
+                Data::F32(
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; count];
+                r.read_exact(&mut buf)?;
+                Data::I8(buf.into_iter().map(|b| b as i8).collect())
+            }
+            2 => {
+                let mut buf = vec![0u8; count * 4];
+                r.read_exact(&mut buf)?;
+                Data::I32(
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            3 => {
+                let mut buf = vec![0u8; count];
+                r.read_exact(&mut buf)?;
+                Data::U8(buf)
+            }
+            c => bail!("unknown dtype code {c}"),
+        };
+        out.insert(name, Tensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write name -> tensor as `.rrsw` (sorted by name, like the python side).
+pub fn write_rrsw(
+    path: impl AsRef<Path>,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u16).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&[t.data.code(), t.shape.len() as u8])?;
+        for d in &t.shape {
+            w.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::I8(v) => {
+                let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                w.write_all(&bytes)?;
+            }
+            Data::I32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Data::U8(v) => w.write_all(v)?,
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        m.insert("b".into(), Tensor::i8(vec![4], vec![-7, 0, 3, 7]));
+        m.insert(
+            "c".into(),
+            Tensor { shape: vec![2], data: Data::I32(vec![-1, 2]) },
+        );
+        let dir = std::env::temp_dir().join("rrsw_test_roundtrip.rrsw");
+        write_rrsw(&dir, &m).unwrap();
+        let back = read_rrsw(&dir).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("rrsw_test_badmagic.rrsw");
+        std::fs::write(&dir, b"NOTRRSWxxxx").unwrap();
+        assert!(read_rrsw(&dir).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Environment substrates: the crates we would normally pull from
+//! crates.io (rand, serde_json, criterion, proptest, clap, npy) rebuilt
+//! small, because this build environment vendors only the `xla` crate.
+
+pub mod bench;
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

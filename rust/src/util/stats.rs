@@ -1,0 +1,159 @@
+//! Summary statistics + histogram helpers (metrics, figures, benches).
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Root mean square.
+pub fn rms(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x * x).sum::<f32>() / xs.len() as f32).sqrt()
+}
+
+/// Maximum absolute value.
+pub fn absmax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+}
+
+/// `mu = absmax / RMS` — the paper's token smoothness statistic (Fig. 2b).
+pub fn smoothness_mu(token: &[f32]) -> f32 {
+    let r = rms(token);
+    if r < 1e-12 {
+        return 0.0;
+    }
+    absmax(token) / r
+}
+
+/// `absmax / l2` — the appendix A.2 variant (Fig. 9).
+pub fn smoothness_l2(token: &[f32]) -> f32 {
+    let l2 = xs_l2(token);
+    if l2 < 1e-12 {
+        return 0.0;
+    }
+    absmax(token) / l2
+}
+
+fn xs_l2(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+/// Interpolated percentile (`p` in [0,100]) of an unsorted slice.
+pub fn percentile(xs: &[f32], p: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p / 100.0) * (v.len() - 1) as f32;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f32;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Latency/throughput summary for metrics and bench output.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f32,
+    pub p10: f32,
+    pub p50: f32,
+    pub p90: f32,
+    pub p99: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+impl Summary {
+    pub fn of(xs: &[f32]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            p10: percentile(xs, 10.0),
+            p50: percentile(xs, 50.0),
+            p90: percentile(xs, 90.0),
+            p99: percentile(xs, 99.0),
+            min: xs.iter().cloned().fold(f32::INFINITY, f32::min),
+            max: xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+        }
+    }
+}
+
+/// Fixed-bin log-scale histogram (Fig. 7 magnitude intervals).
+pub fn log_histogram(xs: &[f32], edges: &[f32]) -> Vec<usize> {
+    let mut counts = vec![0usize; edges.len() + 1];
+    for &x in xs {
+        let mut b = edges.len();
+        for (i, &e) in edges.iter().enumerate() {
+            if x < e {
+                b = i;
+                break;
+            }
+        }
+        counts[b] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rms() {
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert!((rms(&[3.0, 4.0]) - (12.5f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mu_of_constant_token_is_one() {
+        let t = vec![2.0f32; 64];
+        assert!((smoothness_mu(&t) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mu_of_spike_is_large() {
+        let mut t = vec![0.01f32; 64];
+        t[5] = 100.0;
+        assert!(smoothness_mu(&t) > 7.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-3);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let xs = vec![0.5, 5.0, 50.0, 500.0];
+        let counts = log_histogram(&xs, &[1.0, 10.0, 100.0]);
+        assert_eq!(counts, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 1000);
+        assert!(s.p50 > 490.0 && s.p50 < 510.0);
+        assert!(s.p99 > 985.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 999.0);
+    }
+}

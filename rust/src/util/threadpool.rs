@@ -1,0 +1,121 @@
+//! Scoped thread pool for data-parallel loops (replaces `rayon`'s
+//! `par_chunks_mut` for the GEMM hot path and eval sweeps).
+//!
+//! `parallel_for` splits `[0, n)` into contiguous ranges and runs the body
+//! on `std::thread::scope` workers.  On a single-core host (this CI image)
+//! it degrades to the serial loop with no thread spawn.
+
+/// Number of worker threads to use (respects `RRS_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("RRS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `body(range)` over a partition of `[0, n)` across `threads` workers.
+/// `body` must be `Sync` (called concurrently on disjoint ranges).
+pub fn parallel_for<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        body(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(lo..hi));
+        }
+    });
+}
+
+/// Map `f` over disjoint mutable row-chunks of `out` in parallel; each chunk
+/// is `row_len` elements and corresponds to row index `i`.
+pub fn parallel_rows<T: Send, F>(out: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(out.len() % row_len.max(1), 0);
+    let n = if row_len == 0 { 0 } else { out.len() / row_len };
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for (i, row) in out.chunks_mut(row_len).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        for _ in 0..threads {
+            let take = chunk.min(rest.len() / row_len - 0);
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let f = &f;
+            let base = start;
+            s.spawn(move || {
+                for (j, row) in head.chunks_mut(row_len).enumerate() {
+                    f(base + j, row);
+                }
+            });
+            start += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, 4, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn serial_fallback() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(10, 1, |r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn rows_all_written() {
+        let mut out = vec![0.0f32; 12 * 8];
+        parallel_rows(&mut out, 8, 3, |i, row| {
+            for x in row.iter_mut() {
+                *x = i as f32;
+            }
+        });
+        for (i, row) in out.chunks(8).enumerate() {
+            assert!(row.iter().all(|&x| x == i as f32));
+        }
+    }
+
+    #[test]
+    fn zero_n_ok() {
+        parallel_for(0, 4, |r| assert!(r.is_empty()));
+    }
+}

@@ -1,0 +1,199 @@
+//! Coordinator integration: continuous batching over the rust engine,
+//! backpressure, metrics, TCP server protocol.  Uses a small random model
+//! (no artifacts needed) so it runs in any checkout.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::model::sampler::Sampling;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+
+fn tiny_engine(method: Method, scheme: Scheme) -> RustServeEngine {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 53 + 7) % 256).collect();
+    let ecfg = EngineConfig {
+        method,
+        scheme,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap();
+    RustServeEngine::new(model)
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let coord = Coordinator::start(
+        tiny_engine(Method::Rrs, Scheme::A4W4KV4),
+        SchedulerConfig::default(),
+    );
+    let resp = coord
+        .generate(vec![10, 20, 30], 8, Sampling::Greedy, None)
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 8);
+    assert!(resp.total_ms >= 0.0);
+    assert!(resp.prefill_ms > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_requests_all_complete() {
+    let coord = Arc::new(Coordinator::start(
+        tiny_engine(Method::Rtn, Scheme::A4W4KV4),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ));
+    let mut handles = Vec::new();
+    for i in 0..12u32 {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            c.generate(vec![1 + i, 2, 3], 6, Sampling::Greedy, None).unwrap()
+        }));
+    }
+    let mut ids = Vec::new();
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.tokens.len(), 6);
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 12, "every request got a distinct response");
+    assert_eq!(
+        coord
+            .metrics
+            .completed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        12
+    );
+    // continuous batching actually batched: fewer decode steps than
+    // sequential execution would need (12 reqs x 5 steps each)
+    let steps = coord
+        .metrics
+        .decode_steps
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(steps < 12 * 5, "decode steps {steps} suggest no batching");
+}
+
+#[test]
+fn stop_token_terminates_early() {
+    let coord = Coordinator::start(
+        tiny_engine(Method::Fp, Scheme::FP),
+        SchedulerConfig::default(),
+    );
+    // stop on whatever token greedy emits first: run once to find it
+    let probe = coord
+        .generate(vec![5, 6], 4, Sampling::Greedy, None)
+        .unwrap();
+    let first = probe.tokens[0];
+    let resp = coord
+        .generate(vec![5, 6], 16, Sampling::Greedy, Some(first))
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 1);
+    assert_eq!(
+        resp.finish_reason,
+        rrs::coordinator::request::FinishReason::StopToken
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn prompt_too_long_rejected() {
+    let coord = Coordinator::start(
+        tiny_engine(Method::Fp, Scheme::FP),
+        SchedulerConfig::default(),
+    );
+    let long: Vec<u32> = vec![1; 200];
+    let err = coord.generate(long, 8, Sampling::Greedy, None).unwrap_err();
+    assert!(matches!(
+        err,
+        rrs::coordinator::request::SubmitError::PromptTooLong { .. }
+    ));
+    coord.shutdown();
+}
+
+#[test]
+fn greedy_generation_is_deterministic_across_batching() {
+    // the same prompt must generate the same tokens whether it runs alone
+    // or next to other requests (row-local quant variant)
+    let coord = Arc::new(Coordinator::start(
+        tiny_engine(Method::Rtn, Scheme::A4W4KV16),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ));
+    let solo = coord
+        .generate(vec![7, 8, 9], 6, Sampling::Greedy, None)
+        .unwrap();
+    let mut handles = Vec::new();
+    for i in 0..4u32 {
+        let c = coord.clone();
+        let prompt = if i == 0 { vec![7, 8, 9] } else { vec![40 + i, 50, 60] };
+        handles.push(std::thread::spawn(move || {
+            (i, c.generate(prompt, 6, Sampling::Greedy, None).unwrap())
+        }));
+    }
+    for h in handles {
+        let (i, resp) = h.join().unwrap();
+        if i == 0 {
+            assert_eq!(resp.tokens, solo.tokens, "batching changed output");
+        }
+    }
+}
+
+#[test]
+fn server_protocol_lines() {
+    let coord = Coordinator::start(
+        tiny_engine(Method::Rrs, Scheme::A4W4KV4),
+        SchedulerConfig::default(),
+    );
+    let stop = AtomicBool::new(false);
+    // generation
+    let resp = server::handle_line(
+        r#"{"prompt": "arlo", "max_tokens": 4}"#,
+        &coord,
+        &stop,
+    );
+    assert!(resp.get("text").is_some(), "{}", resp.dump());
+    assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(4));
+    // metrics
+    let m = server::handle_line(r#"{"cmd": "metrics"}"#, &coord, &stop);
+    assert_eq!(m.get("completed").unwrap().as_usize(), Some(1));
+    // bad input
+    let e = server::handle_line("not json", &coord, &stop);
+    assert!(e.get("error").is_some());
+    let e2 = server::handle_line(r#"{"max_tokens": 4}"#, &coord, &stop);
+    assert!(e2.get("error").is_some());
+    // shutdown flips the flag
+    let s = server::handle_line(r#"{"cmd": "shutdown"}"#, &coord, &stop);
+    assert_eq!(s.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(stop.load(std::sync::atomic::Ordering::Relaxed));
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_saturated() {
+    // 1-deep queue + tiny batch: flood and expect some rejections
+    let coord = Arc::new(Coordinator::start(
+        tiny_engine(Method::Rrs, Scheme::A4W4KV4),
+        SchedulerConfig {
+            max_batch: 1,
+            queue_capacity: 1,
+            ..Default::default()
+        },
+    ));
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for i in 0..16u32 {
+        match coord.submit(vec![i + 1, 2, 3], 12, Sampling::Greedy, None) {
+            Ok((_, rx)) => receivers.push(rx),
+            Err(rrs::coordinator::request::SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected: {e}"),
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    for rx in receivers {
+        rx.recv().unwrap(); // accepted ones still complete
+    }
+}

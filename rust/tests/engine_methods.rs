@@ -1,0 +1,202 @@
+//! Method-level end-to-end invariants on a random model + property tests
+//! over the scheduler-facing engine behaviours.  No artifacts required.
+
+use rrs::model::{EngineConfig, KvCache, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::util::proptest::{check, Config};
+
+fn cfg() -> ModelConfig {
+    ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() }
+}
+
+fn calib() -> Vec<u32> {
+    (0..128u32).map(|i| (i * 53 + 7) % 256).collect()
+}
+
+#[test]
+fn spinquant_method_runs_with_dense_rotations() {
+    use rrs::linalg::fwht::hadamard_dense;
+    use rrs::linalg::gemm::Mat;
+    let c = cfg();
+    let w = Weights::random(&c, 1);
+    // any orthogonal matrices work; reuse dense Hadamards as stand-ins
+    let rd = Mat::from_vec(c.dim, c.dim, hadamard_dense(c.dim));
+    let rf = Mat::from_vec(c.ffn, c.ffn, hadamard_dense(c.ffn));
+    let ecfg = EngineConfig {
+        method: Method::SpinQuant,
+        scheme: Scheme::A4W4KV4,
+        group: 32,
+        gptq: true,
+        ..Default::default()
+    };
+    let calib = calib();
+    let m = QuantModel::prepare(&w, &c, &ecfg, Some(&calib), Some((rd, rf))).unwrap();
+    let lg = m.forward_full(&[1, 2, 3, 4], None);
+    assert!(lg.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn spinquant_requires_rotations() {
+    let c = cfg();
+    let w = Weights::random(&c, 2);
+    let ecfg = EngineConfig {
+        method: Method::SpinQuant,
+        scheme: Scheme::A4W4KV4,
+        gptq: false,
+        ..Default::default()
+    };
+    assert!(QuantModel::prepare(&w, &c, &ecfg, Some(&calib()), None).is_err());
+}
+
+#[test]
+fn gptq_weights_no_worse_than_rtn_weights_e2e() {
+    // property: GPTQ vs RTN weights under the same rtn activations —
+    // logit error vs fp should not be (much) worse with GPTQ
+    let c = cfg();
+    let w = Weights::random(&c, 3);
+    let toks: Vec<u32> = (0..32u32).map(|i| (i * 37 + 3) % 256).collect();
+    let fp = {
+        let ecfg = EngineConfig {
+            method: Method::Fp,
+            scheme: Scheme::FP,
+            gptq: false,
+            ..Default::default()
+        };
+        QuantModel::prepare(&w, &c, &ecfg, None, None)
+            .unwrap()
+            .forward_full(&toks, None)
+    };
+    let err_of = |gptq: bool| {
+        let ecfg = EngineConfig {
+            method: if gptq { Method::GptqOnly } else { Method::Rtn },
+            scheme: Scheme::A4W4KV16,
+            gptq,
+            ..Default::default()
+        };
+        let calib = calib();
+        let m = QuantModel::prepare(&w, &c, &ecfg, Some(&calib), None).unwrap();
+        let lg = m.forward_full(&toks, None);
+        lg.data
+            .iter()
+            .zip(&fp.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / lg.data.len() as f32
+    };
+    let e_rtn = err_of(false);
+    let e_gptq = err_of(true);
+    assert!(e_gptq < e_rtn * 1.5, "gptq {e_gptq} vs rtn {e_rtn}");
+}
+
+#[test]
+fn decode_batch_order_invariance() {
+    // property: each sequence's decode result does not depend on its
+    // position within the batch (row-local variant)
+    let c = cfg();
+    let w = Weights::random(&c, 4);
+    let ecfg = EngineConfig {
+        method: Method::Rtn,
+        scheme: Scheme::A4W4KV16,
+        gptq: false,
+        ..Default::default()
+    };
+    let m = QuantModel::prepare(&w, &c, &ecfg, None, None).unwrap();
+    check("decode-order-invariance", Config { cases: 8, ..Default::default() },
+        |rng, _| {
+            let t1 = rng.below(256) as u32;
+            let t2 = rng.below(256) as u32;
+            // order (a, b)
+            let mut ca = KvCache::new(&c, &ecfg);
+            let mut cb = KvCache::new(&c, &ecfg);
+            let mut batch = [(&mut ca, t1), (&mut cb, t2)];
+            let l_ab = m.decode_batch(&mut batch);
+            // order (b, a)
+            let mut ca2 = KvCache::new(&c, &ecfg);
+            let mut cb2 = KvCache::new(&c, &ecfg);
+            let mut batch2 = [(&mut cb2, t2), (&mut ca2, t1)];
+            let l_ba = m.decode_batch(&mut batch2);
+            for (x, y) in l_ab.row(0).iter().zip(l_ba.row(1)) {
+                if (x - y).abs() > 1e-4 {
+                    return Err(format!("row for t1 differs: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn kv4_quality_close_to_kv16() {
+    let c = cfg();
+    let w = Weights::random(&c, 5);
+    let toks: Vec<u32> = (0..48u32).map(|i| (i * 29 + 1) % 256).collect();
+    let run = |kv: Scheme| {
+        let ecfg = EngineConfig {
+            method: Method::Rrs,
+            scheme: kv,
+            group: 32,
+            gptq: false,
+            ..Default::default()
+        };
+        let m = QuantModel::prepare(&w, &c, &ecfg, None, None).unwrap();
+        m.forward_full(&toks, None)
+    };
+    let a = run(Scheme::A4W4KV16);
+    let b = run(Scheme::A4W4KV4);
+    let corr = {
+        let n = a.data.len() as f32;
+        let ma = a.data.iter().sum::<f32>() / n;
+        let mb = b.data.iter().sum::<f32>() / n;
+        let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+        for (&x, &y) in a.data.iter().zip(&b.data) {
+            num += (x - ma) * (y - mb);
+            da += (x - ma) * (x - ma);
+            db += (y - mb) * (y - mb);
+        }
+        num / (da.sqrt() * db.sqrt() + 1e-12)
+    };
+    assert!(corr > 0.85, "kv4-vs-kv16 corr {corr}");
+}
+
+#[test]
+fn group_size_changes_rs_but_not_much_rrs_on_spiky() {
+    // Table-4 mechanism at engine level: with spiky activations, RS
+    // quality depends on group size more than RRS does
+    let c = cfg();
+    let w = Weights::random(&c, 6);
+    let prof = rrs::model::weights::OutlierProfile::builtin("llama3-70b-like").unwrap();
+    let wi = prof.inject(&w, 17);
+    let toks: Vec<u32> = (0..64u32).map(|i| (i * 41 + 9) % 256).collect();
+    let fp = {
+        let ecfg = EngineConfig {
+            method: Method::Fp,
+            scheme: Scheme::FP,
+            gptq: false,
+            ..Default::default()
+        };
+        QuantModel::prepare(&wi, &c, &ecfg, None, None)
+            .unwrap()
+            .forward_full(&toks, None)
+    };
+    let err_of = |method: Method, group: usize| {
+        let ecfg = EngineConfig {
+            method,
+            scheme: Scheme::A4W16KV16,
+            group,
+            gptq: false,
+            ..Default::default()
+        };
+        let m = QuantModel::prepare(&wi, &c, &ecfg, None, None).unwrap();
+        let lg = m.forward_full(&toks, None);
+        lg.data
+            .iter()
+            .zip(&fp.data)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f32>()
+    };
+    let rs_spread = err_of(Method::Rs, 128) / err_of(Method::Rs, 1).max(1e-6);
+    let rrs_spread = err_of(Method::Rrs, 128) / err_of(Method::Rrs, 1).max(1e-6);
+    assert!(
+        rrs_spread < rs_spread * 1.2,
+        "rrs group-sensitivity {rrs_spread} vs rs {rs_spread}"
+    );
+}

@@ -1,0 +1,250 @@
+//! Golden-vector tests: the rust quant library vs the python jnp oracle
+//! (python/compile/kernels/ref.py), through artifacts/goldens.rrsw.
+//!
+//! These pin the cross-language numerics: per-token INT4, Hadamard
+//! rotation, Runtime-Smooth GEMM (group 1 and 32), QuaRot, RRS,
+//! SmoothQuant, sub-channel GEMM, KV fake-quant, the smoothness statistic
+//! and GPTQ.  Requires `make artifacts`.
+
+use std::collections::BTreeMap;
+
+use rrs::linalg::gemm::Mat;
+use rrs::linalg::igemm::MatI8;
+use rrs::quant::{gptq, kv, qlinear, rotation::Rotation, rtn, runtime_smooth, smoothquant};
+use rrs::util::io::{read_rrsw, Tensor};
+use rrs::util::stats;
+
+fn goldens() -> Option<BTreeMap<String, Tensor>> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/goldens.rrsw");
+    read_rrsw(path).ok()
+}
+
+fn mat(t: &Tensor) -> Mat {
+    let (r, c) = t.dims2().unwrap();
+    Mat::from_vec(r, c, t.as_f32().unwrap().to_vec())
+}
+
+fn mati8(t: &Tensor) -> MatI8 {
+    let (r, c) = t.dims2().unwrap();
+    MatI8::from_vec(r, c, t.as_i8().unwrap().to_vec())
+}
+
+fn assert_close(got: &[f32], want: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let err = (g - w).abs();
+        if err > tol {
+            panic!("{what}: idx {i}: got {g}, want {w} (err {err} > tol {tol})");
+        }
+        worst = worst.max(err);
+    }
+    eprintln!("{what}: max err {worst}");
+}
+
+macro_rules! need_goldens {
+    () => {
+        match goldens() {
+            Some(g) => g,
+            None => {
+                eprintln!("skipping: artifacts/goldens.rrsw missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn quant_per_token_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let (q, s) = rtn::quant_per_token(&x);
+    let want_q = g["quant_q"].as_i8().unwrap();
+    let n_diff = q.data.iter().zip(want_q).filter(|(a, b)| a != b).count();
+    // rounding-mode ties may flip a handful of codes
+    assert!(
+        n_diff * 1000 <= q.data.len(),
+        "{} of {} codes differ",
+        n_diff,
+        q.data.len()
+    );
+    assert_close(&s, g["quant_s"].as_f32().unwrap(), 1e-7, 1e-5, "quant scales");
+}
+
+#[test]
+fn hadamard_rotation_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let got = Rotation::Hadamard.apply(&x);
+    assert_close(
+        &got.data,
+        g["rotate"].as_f32().unwrap(),
+        1e-3,
+        1e-4,
+        "rotate",
+    );
+}
+
+#[test]
+fn gemm_fp_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let w = mat(&g["w"]);
+    let got = rrs::linalg::gemm::gemm_f32_bt(&x, &w);
+    assert_close(&got.data, g["gemm_fp"].as_f32().unwrap(), 1e-2, 1e-4, "gemm_fp");
+}
+
+#[test]
+fn gemm_rtn_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let (wq, sw) = (mati8(&g["wq"]), g["sw"].as_f32().unwrap().to_vec());
+    let got = qlinear::forward_per_channel_a4w4(&x, &wq, &sw);
+    assert_close(
+        &got.data,
+        g["gemm_rtn"].as_f32().unwrap(),
+        0.5,
+        5e-3,
+        "gemm_rtn",
+    );
+}
+
+#[test]
+fn gemm_rs_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let (wq, sw) = (mati8(&g["wq"]), g["sw"].as_f32().unwrap().to_vec());
+    for (group, key) in [(1usize, "gemm_rs_g1"), (32, "gemm_rs_g32")] {
+        let sa = runtime_smooth::prepare(&x, group);
+        let got = qlinear::forward_rs_fused(&sa, &wq, &sw);
+        assert_close(
+            &got.data,
+            g[key].as_f32().unwrap(),
+            0.5,
+            5e-3,
+            key,
+        );
+    }
+}
+
+#[test]
+fn gemm_quarot_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let xr = Rotation::Hadamard.apply(&x);
+    let (wq, sw) = (mati8(&g["wq_rot"]), g["sw_rot"].as_f32().unwrap().to_vec());
+    let got = qlinear::forward_per_channel_a4w4(&xr, &wq, &sw);
+    assert_close(
+        &got.data,
+        g["gemm_quarot"].as_f32().unwrap(),
+        0.5,
+        5e-3,
+        "gemm_quarot",
+    );
+}
+
+#[test]
+fn gemm_rrs_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let xr = Rotation::Hadamard.apply(&x);
+    let (wq, sw) = (mati8(&g["wq_rot"]), g["sw_rot"].as_f32().unwrap().to_vec());
+    let sa = runtime_smooth::prepare(&xr, 32);
+    let got = qlinear::forward_rs_fused(&sa, &wq, &sw);
+    assert_close(
+        &got.data,
+        g["gemm_rrs_g32"].as_f32().unwrap(),
+        0.5,
+        5e-3,
+        "gemm_rrs_g32",
+    );
+}
+
+#[test]
+fn gemm_sub_channel_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let w = mat(&g["w"]);
+    let got = qlinear::forward_sub_channel_a4w4(&x, &w, 32);
+    assert_close(
+        &got.data,
+        g["gemm_sub"].as_f32().unwrap(),
+        0.5,
+        5e-3,
+        "gemm_sub",
+    );
+}
+
+#[test]
+fn smoothquant_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let w = mat(&g["w"]);
+    let calib = smoothquant::Calibration::from_batches([&x].into_iter(), x.cols);
+    let s = smoothquant::smoothing_scales(&calib, &w, 0.5);
+    assert_close(&s, g["sq_scales"].as_f32().unwrap(), 1e-5, 1e-4, "sq scales");
+    let xs = smoothquant::smooth_activation(&x, &s);
+    let wm = smoothquant::merge_into_weight(&w, &s);
+    let (wq, sw) = rtn::quant_per_channel_w(&wm);
+    let got = qlinear::forward_per_channel_a4w4(&xs, &wq, &sw);
+    assert_close(&got.data, g["gemm_sq"].as_f32().unwrap(), 0.5, 5e-3, "gemm_sq");
+}
+
+#[test]
+fn kv_fake_quant_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let mut got = x.clone();
+    for i in 0..got.rows {
+        kv::fake_quant_inplace(got.row_mut(i), 32);
+    }
+    assert_close(
+        &got.data,
+        g["kv_fq_g32"].as_f32().unwrap(),
+        1e-4,
+        1e-3,
+        "kv_fq_g32",
+    );
+}
+
+#[test]
+fn smoothness_mu_matches() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let got: Vec<f32> = (0..x.rows).map(|i| stats::smoothness_mu(x.row(i))).collect();
+    assert_close(
+        &got,
+        g["smooth_mu"].as_f32().unwrap(),
+        1e-3,
+        1e-3,
+        "smooth_mu",
+    );
+}
+
+#[test]
+fn gptq_matches_python() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let w = mat(&g["w"]);
+    // python: gptq_quantize(gw, gx) with damp=0.01, block=64
+    let (q, s) = gptq::gptq_quantize(&w, &x, 0.01, 64).unwrap();
+    assert_close(&s, g["gptq_sw"].as_f32().unwrap(), 1e-6, 1e-4, "gptq scales");
+    let want_q = g["gptq_wq"].as_i8().unwrap();
+    let n_diff = q.data.iter().zip(want_q).filter(|(a, b)| a != b).count();
+    // f32-vs-f64 Hessian accumulation can flip borderline codes; demand
+    // near-identity and equal *quality*
+    assert!(
+        n_diff * 50 <= q.data.len(),
+        "{} of {} GPTQ codes differ",
+        n_diff,
+        q.data.len()
+    );
+    let e_rust = gptq::layer_error(&w, &q, &s, &x);
+    let want_codes = MatI8::from_vec(w.rows, w.cols, want_q.to_vec());
+    let e_py = gptq::layer_error(&w, &want_codes, g["gptq_sw"].as_f32().unwrap(), &x);
+    assert!(
+        e_rust <= e_py * 1.2 + 1e-6,
+        "rust gptq error {e_rust} vs python {e_py}"
+    );
+}
