@@ -1,7 +1,9 @@
 //! End-to-end serving driver (the repo's headline validation run):
 //! start the coordinator on the trained model under A4W4KV4 RRS, fire a
 //! batch of concurrent generation requests through the real TCP front-end
-//! and report per-request latency + aggregate throughput.
+//! and report per-request latency + aggregate throughput; then rerun a
+//! shared-prefix workload over the paged KV pool and report the
+//! prefix-cache hit rate + peak pool occupancy.
 //!
 //!     make artifacts && cargo run --release --example serve_batch
 //!
@@ -13,6 +15,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::kvpool::PagedEngine;
+use rrs::model::sampler::Sampling;
 use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
 use rrs::quant::{Method, Scheme};
 use rrs::runtime::Artifacts;
@@ -102,5 +106,65 @@ fn main() -> anyhow::Result<()> {
     let stream = TcpStream::connect(("127.0.0.1", port))?;
     let mut w = stream.try_clone()?;
     w.write_all(b"{\"cmd\": \"shutdown\"}\n")?;
+
+    // ── Phase 2: shared-prefix workload over the paged KV pool ──────────
+    // N requests over M distinct "system prompts": each request repeats
+    // one of M long prefixes + a short unique user suffix, so the pool
+    // should prefill each prefix once and serve the rest from the
+    // prefix cache.
+    let model2 = QuantModel::prepare(
+        &weights, &artifacts.model, &ecfg, Some(&calib), None)?;
+    let paged = Coordinator::start(
+        PagedEngine::new(model2, 256, 16),
+        SchedulerConfig { max_batch: 8, queue_capacity: 128, ..Default::default() },
+    );
+    let paged = Arc::new(paged);
+    let systems = [
+        "rules for the lake house: be kind to arlo and senna. ",
+        "counting drills today: 1 2 3 4 5 6 7 8. ",
+        "brin the fox guards the door while mira sleeps. ",
+        "doubles practice: 1 2, 2 4, 3 6, 4 8. ",
+    ];
+    let users = ["arlo is", "senna likes", "count: 2 3", "mira is a",
+                 "at the lake", "double: 5"];
+    let n_requests = 24;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let c = paged.clone();
+        let prompt = format!(
+            "{}{}", systems[i % systems.len()], users[i % users.len()]
+        );
+        handles.push(std::thread::spawn(move || {
+            c.generate(tokenizer::encode(&prompt), 16, Sampling::Greedy, None)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut tokens = 0usize;
+    for h in handles {
+        if let Ok(resp) = h.join().unwrap() {
+            ok += 1;
+            tokens += resp.tokens.len();
+        }
+    }
+    let wall2 = t0.elapsed().as_secs_f32();
+    let m2 = paged.metrics.snapshot_json();
+    let pool = m2.get("kv_pool").expect("paged backend exports kv_pool");
+    println!("\n== shared-prefix (paged kvpool) summary ==");
+    println!("requests:              {ok}/{n_requests} over {} system prompts",
+             systems.len());
+    println!("throughput:            {:.1} tokens/s", tokens as f32 / wall2);
+    println!(
+        "prefix-cache hit rate: {:.1}%  ({} tokens reused)",
+        100.0 * paged.metrics.prefix_hit_rate(),
+        pool.get("prefix_hit_tokens").and_then(Json::as_usize).unwrap_or(0)
+    );
+    println!(
+        "peak pool occupancy:   {}/{} blocks  ({} preemptions, {} evictions)",
+        pool.get("blocks_peak").and_then(Json::as_usize).unwrap_or(0),
+        pool.get("blocks_total").and_then(Json::as_usize).unwrap_or(0),
+        m2.get("preemptions").and_then(Json::as_usize).unwrap_or(0),
+        pool.get("evictions").and_then(Json::as_usize).unwrap_or(0),
+    );
     Ok(())
 }

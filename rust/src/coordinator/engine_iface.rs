@@ -1,7 +1,9 @@
 //! Engine abstraction the scheduler drives: the pure-rust INT4 engine is
-//! the default backend; the PJRT executor (runtime::PjrtEngine) can serve
-//! the same trait for the AOT-graph path.
+//! the default backend; the paged-pool backend (kvpool::PagedEngine) adds
+//! block-governed memory with prefix sharing; the PJRT executor
+//! (runtime::PjrtEngine) can serve the same trait for the AOT-graph path.
 
+use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
 use crate::model::engine::{KvCache, QuantModel};
 
@@ -27,9 +29,36 @@ pub trait ServeEngine: Send + Sync {
 
     /// KV memory footprint of a sequence (for metrics).
     fn seq_bytes(&self, seq: &Self::Seq) -> usize;
+
+    /// Pool-capacity gate: can a prompt of this shape be admitted right
+    /// now?  Flat backends always admit (memory is unbounded per seq);
+    /// paged backends check block availability.
+    fn can_admit(&self, _prompt: &[u32]) -> bool {
+        true
+    }
+
+    /// Longest prompt prefix already resident in the backend's prefix
+    /// cache, in tokens (0 for backends without one).
+    fn prefix_match_len(&self, _prompt: &[u32]) -> usize {
+        0
+    }
+
+    /// Ensure `seq` can grow by one token before the next decode step;
+    /// `false` = the scheduler must preempt (or retire) first.
+    fn reserve_decode(&self, _seq: &mut Self::Seq) -> bool {
+        true
+    }
+
+    /// Release a sequence's cache resources (retire / preemption).
+    fn release_seq(&self, _seq: &mut Self::Seq) {}
+
+    /// KV-pool occupancy counters, when the backend is paged.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
 }
 
-/// The pure-rust quantized engine backend.
+/// The pure-rust quantized engine backend (flat per-sequence caches).
 pub struct RustServeEngine {
     pub model: QuantModel,
 }
@@ -70,5 +99,57 @@ impl ServeEngine for RustServeEngine {
 
     fn seq_bytes(&self, seq: &KvCache) -> usize {
         seq.bytes()
+    }
+}
+
+impl ServeEngine for PagedEngine {
+    type Seq = PagedSeq;
+
+    fn max_seq(&self) -> usize {
+        self.model.mcfg.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.mcfg.vocab
+    }
+
+    fn new_seq(&self) -> PagedSeq {
+        PagedEngine::new_seq(self)
+    }
+
+    fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
+        PagedEngine::prefill(self, seq, tokens)
+    }
+
+    fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
+        PagedEngine::decode(self, batch)
+    }
+
+    fn seq_len(&self, seq: &PagedSeq) -> usize {
+        seq.len
+    }
+
+    fn seq_bytes(&self, seq: &PagedSeq) -> usize {
+        PagedEngine::seq_bytes(self, seq)
+    }
+
+    fn can_admit(&self, prompt: &[u32]) -> bool {
+        PagedEngine::can_admit(self, prompt)
+    }
+
+    fn prefix_match_len(&self, prompt: &[u32]) -> usize {
+        PagedEngine::prefix_match_len(self, prompt)
+    }
+
+    fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
+        PagedEngine::reserve_decode(self, seq)
+    }
+
+    fn release_seq(&self, seq: &mut PagedSeq) {
+        PagedEngine::release(self, seq)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.stats())
     }
 }

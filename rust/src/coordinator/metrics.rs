@@ -3,6 +3,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::kvpool::PoolStats;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 
@@ -12,9 +13,22 @@ pub struct Metrics {
     pub submitted: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
+    pub aborted: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
+    /// Sequences preempted back to the queue on pool exhaustion.
+    pub preemptions: AtomicU64,
+    // KV-pool gauges, refreshed by the scheduler loop on paged backends.
+    pub pool_blocks_total: AtomicU64,
+    pub pool_blocks_used: AtomicU64,
+    pub pool_blocks_cached: AtomicU64,
+    /// High-water mark of pool_blocks_used.
+    pub pool_blocks_peak: AtomicU64,
+    pub pool_evictions: AtomicU64,
+    pub prefix_queries: AtomicU64,
+    pub prefix_query_tokens: AtomicU64,
+    pub prefix_hit_tokens: AtomicU64,
     lat_total_ms: Mutex<Vec<f32>>,
     lat_queue_ms: Mutex<Vec<f32>>,
     lat_per_token_ms: Mutex<Vec<f32>>,
@@ -50,6 +64,29 @@ impl Metrics {
         Summary::of(&self.lat_per_token_ms.lock().unwrap())
     }
 
+    /// Refresh the KV-pool gauges from a pool snapshot (scheduler loop).
+    pub fn update_pool(&self, s: &PoolStats) {
+        self.pool_blocks_total.store(s.blocks_total as u64, Ordering::Relaxed);
+        self.pool_blocks_used.store(s.blocks_active as u64, Ordering::Relaxed);
+        self.pool_blocks_cached.store(s.blocks_cached as u64, Ordering::Relaxed);
+        self.pool_blocks_peak.fetch_max(s.blocks_active as u64, Ordering::Relaxed);
+        self.pool_evictions.store(s.evictions, Ordering::Relaxed);
+        self.prefix_queries.store(s.prefix_queries, Ordering::Relaxed);
+        self.prefix_query_tokens.store(s.prefix_query_tokens, Ordering::Relaxed);
+        self.prefix_hit_tokens.store(s.prefix_hit_tokens, Ordering::Relaxed);
+    }
+
+    /// Fraction of probed prompt tokens served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hit = self.prefix_hit_tokens.load(Ordering::Relaxed) as f64;
+        let probed = self.prefix_query_tokens.load(Ordering::Relaxed) as f64;
+        if probed > 0.0 {
+            hit / probed
+        } else {
+            0.0
+        }
+    }
+
     pub fn snapshot_json(&self) -> Json {
         let s = self.total_summary();
         let q = self.queue_summary();
@@ -65,6 +102,50 @@ impl Metrics {
             (
                 "decode_steps",
                 (self.decode_steps.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "preemptions",
+                (self.preemptions.load(Ordering::Relaxed) as usize).into(),
+            ),
+            ("aborted", (self.aborted.load(Ordering::Relaxed) as usize).into()),
+            (
+                "kv_pool",
+                obj(vec![
+                    (
+                        "blocks_total",
+                        (self.pool_blocks_total.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "blocks_used",
+                        (self.pool_blocks_used.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "blocks_cached",
+                        (self.pool_blocks_cached.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "blocks_peak",
+                        (self.pool_blocks_peak.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "evictions",
+                        (self.pool_evictions.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "prefix_queries",
+                        (self.prefix_queries.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "prefix_hit_tokens",
+                        (self.prefix_hit_tokens.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    ("prefix_hit_rate", self.prefix_hit_rate().into()),
+                ]),
             ),
             (
                 "latency_ms",
@@ -102,5 +183,30 @@ mod tests {
         assert_eq!(j.get("submitted").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(30));
         assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+    }
+
+    #[test]
+    fn pool_gauges_snapshot() {
+        let m = Metrics::new();
+        let s = PoolStats {
+            blocks_total: 64,
+            blocks_free: 40,
+            blocks_cached: 8,
+            blocks_active: 16,
+            prefix_query_tokens: 100,
+            prefix_hit_tokens: 25,
+            prefix_queries: 5,
+            ..Default::default()
+        };
+        m.update_pool(&s);
+        // peak is a high-water mark: a lower reading must not clear it
+        m.update_pool(&PoolStats { blocks_active: 4, ..s });
+        let j = m.snapshot_json();
+        let pool = j.get("kv_pool").unwrap();
+        assert_eq!(pool.get("blocks_total").unwrap().as_usize(), Some(64));
+        assert_eq!(pool.get("blocks_used").unwrap().as_usize(), Some(4));
+        assert_eq!(pool.get("blocks_peak").unwrap().as_usize(), Some(16));
+        let rate = pool.get("prefix_hit_rate").unwrap().as_f64().unwrap();
+        assert!((rate - 0.25).abs() < 1e-9);
     }
 }

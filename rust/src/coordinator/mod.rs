@@ -9,6 +9,12 @@
 //! worker runs [`scheduler::Scheduler`], which admits waiting requests
 //! into the active set (prefill) and steps all active sequences one token
 //! per iteration (continuous batching), retiring finished sequences.
+//!
+//! Two engine backends serve the scheduler: the flat per-sequence cache
+//! ([`RustServeEngine`]) and the paged INT4 KV pool
+//! ([`crate::kvpool::PagedEngine`]) — the latter gates admission on block
+//! availability, shares prompt-prefix blocks across requests, and is
+//! preempted back to the queue when the pool runs dry.
 
 pub mod engine_iface;
 pub mod metrics;
@@ -17,6 +23,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
+pub use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 pub use engine_iface::{RustServeEngine, ServeEngine};
 pub use metrics::Metrics;
 pub use queue::RequestQueue;

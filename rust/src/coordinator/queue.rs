@@ -54,6 +54,36 @@ impl RequestQueue {
         g.items.drain(..take).collect()
     }
 
+    /// Pop up to `max` requests from the front while `admit` approves
+    /// them; blocks up to `wait` for the first item.  Stops at the first
+    /// non-admissible request *leaving it queued*, so capacity gating
+    /// (paged KV pools) preserves FIFO order instead of starving large
+    /// prompts.
+    pub fn pop_batch_if<F: FnMut(&Request) -> bool>(
+        &self,
+        max: usize,
+        wait: Duration,
+        mut admit: F,
+    ) -> Vec<Request> {
+        let mut g = self.inner.lock().unwrap();
+        if g.items.is_empty() && !g.closed && !wait.is_zero() {
+            let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+            g = g2;
+        }
+        let mut out = Vec::new();
+        while out.len() < max {
+            let ok = match g.items.front() {
+                Some(r) => admit(r),
+                None => false,
+            };
+            if !ok {
+                break;
+            }
+            out.push(g.items.pop_front().unwrap());
+        }
+        out
+    }
+
     /// Pop everything available without blocking.
     pub fn drain_now(&self, max: usize) -> Vec<Request> {
         let mut g = self.inner.lock().unwrap();
@@ -146,6 +176,24 @@ mod tests {
         }
         assert_eq!(q.pop_batch(2, Duration::from_millis(1)).len(), 2);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn pop_batch_if_stops_at_first_rejection_preserving_fifo() {
+        let q = RequestQueue::new(8);
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(i);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        // admit ids < 2 only: pops 0 and 1, leaves 2 and 3 queued
+        let got = q.pop_batch_if(10, Duration::from_millis(1), |r| r.id < 2);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(q.len(), 2);
+        // head is still 2 (FIFO preserved)
+        let rest = q.pop_batch(10, Duration::from_millis(1));
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! Continuous-batching scheduler + the public [`Coordinator`] handle.
 //!
 //! One worker thread owns the engine.  Each loop iteration:
-//!   1. **admit** — while the active set has room, pop waiting requests,
-//!      prefill their prompts into fresh KV sequences;
-//!   2. **decode** — one batched step over all active sequences;
-//!   3. **retire** — sequences hitting max_new_tokens / stop token / KV
-//!      capacity get their responses sent.
+//!   1. **admit** — while the active set has room *and the backend's KV
+//!      capacity gate passes*, pop waiting requests (preempted ones
+//!      first), prefill their prompts into fresh sequences;
+//!   2. **reserve** — every active sequence must be able to grow by one
+//!      token; when the paged pool is exhausted, the most recently
+//!      admitted sequence is preempted back to the queue
+//!      (recompute-style: its blocks are released and its progress is
+//!      re-prefilled on re-admission);
+//!   3. **decode** — one batched step over all active sequences;
+//!   4. **retire** — sequences hitting max_new_tokens / stop token / KV
+//!      capacity get their responses sent and their cache released.
 //!
 //! Prefill happens inside the loop (chunked admission), so short decode
 //! steps are never starved by long prompts beyond one admission slot —
 //! the paper's serving context (prefill = compute-bound A4W4 GEMMs,
 //! decode = memory-bound) maps onto exactly this split.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -52,6 +59,8 @@ impl Default for SchedulerConfig {
 struct Active<S> {
     id: RequestId,
     seq: S,
+    /// Original prompt (kept for recompute-style preemption).
+    prompt: Vec<u32>,
     generated: Vec<u32>,
     next_token: u32,
     max_new_tokens: usize,
@@ -61,6 +70,53 @@ struct Active<S> {
     queue_ms: f32,
     prefill_ms: f32,
     reply: mpsc::Sender<Response>,
+}
+
+/// A request waiting for (re-)admission: fresh from the public queue, or
+/// preempted with the tokens it had already generated.
+struct Pending {
+    req: Request,
+    generated: Vec<u32>,
+    /// Prompt to prefill on (re-)admission: original + generated so far.
+    /// Cached because the capacity gate consults it every scheduler loop.
+    full_prompt: Vec<u32>,
+    /// Queue latency measured at first admission (preserved on resume).
+    queue_ms: Option<f32>,
+    /// Prefill time spent before preemption (re-prefill adds to it).
+    prior_prefill_ms: f32,
+}
+
+impl Pending {
+    fn fresh(req: Request) -> Pending {
+        let full_prompt = req.prompt.clone();
+        Pending {
+            req,
+            generated: Vec::new(),
+            full_prompt,
+            queue_ms: None,
+            prior_prefill_ms: 0.0,
+        }
+    }
+
+    fn resumed<S>(a: Active<S>) -> Pending {
+        let mut full_prompt = a.prompt.clone();
+        full_prompt.extend_from_slice(&a.generated);
+        Pending {
+            req: Request {
+                id: a.id,
+                prompt: a.prompt,
+                max_new_tokens: a.max_new_tokens,
+                sampling: a.sampling,
+                stop_token: a.stop_token,
+                submitted_at: a.submitted_at,
+                reply: a.reply,
+            },
+            generated: a.generated,
+            full_prompt,
+            queue_ms: Some(a.queue_ms),
+            prior_prefill_ms: a.prefill_ms,
+        }
+    }
 }
 
 /// Public handle: submit requests, read metrics, shut down.
@@ -172,45 +228,99 @@ fn run_loop<E: ServeEngine>(
     metrics: Arc<Metrics>,
 ) {
     let mut active: Vec<Active<E::Seq>> = Vec::new();
+    let mut preempted: VecDeque<Pending> = VecDeque::new();
     let mut rng = Pcg::new(0x5eed);
     loop {
-        // 1. admit
-        let room = cfg.max_batch.saturating_sub(active.len());
-        if room > 0 {
-            let take = room.min(cfg.admit_per_step);
-            let newreqs = if active.is_empty() {
-                queue.pop_batch(take, cfg.idle_wait)
-            } else {
-                queue.drain_now(take)
+        // 1. admit — preempted requests first (they hold progress), then
+        // the public queue; both gated on the backend's capacity check
+        let mut room = cfg.max_batch.saturating_sub(active.len());
+        let mut incoming: Vec<Pending> = Vec::new();
+        while room > 0 {
+            let admissible = match preempted.front() {
+                Some(p) => engine.can_admit(&p.full_prompt),
+                None => false,
             };
-            for req in newreqs {
-                let queue_ms = req.submitted_at.elapsed().as_secs_f32() * 1e3;
-                let t0 = Instant::now();
-                let mut seq = engine.new_seq();
-                let logits = engine.prefill(&mut seq, &req.prompt);
-                metrics
-                    .prefill_tokens
-                    .fetch_add(req.prompt.len() as u64, Ordering::Relaxed);
-                let prefill_ms = t0.elapsed().as_secs_f32() * 1e3;
-                let first = sample(&logits, req.sampling, &mut rng);
-                active.push(Active {
-                    id: req.id,
-                    seq,
-                    generated: vec![first],
-                    next_token: first,
-                    max_new_tokens: req.max_new_tokens,
-                    sampling: req.sampling,
-                    stop_token: req.stop_token,
-                    submitted_at: req.submitted_at,
-                    queue_ms,
-                    prefill_ms,
-                    reply: req.reply,
-                });
+            if !admissible {
+                break;
+            }
+            incoming.push(preempted.pop_front().unwrap());
+            room -= 1;
+        }
+        if room > 0 && preempted.is_empty() {
+            let take = room.min(cfg.admit_per_step);
+            let wait = if active.is_empty() && incoming.is_empty() {
+                cfg.idle_wait
+            } else {
+                Duration::ZERO
+            };
+            incoming.extend(
+                queue
+                    .pop_batch_if(take, wait, |r| engine.can_admit(&r.prompt))
+                    .into_iter()
+                    .map(Pending::fresh),
+            );
+        }
+        // fully stalled: with nothing active the pool is at its emptiest,
+        // so a capacity refusal here means the request can never fit —
+        // abort it rather than wedging the queue behind it
+        if active.is_empty() && incoming.is_empty() {
+            if let Some(p) = preempted.front() {
+                if !engine.can_admit(&p.full_prompt) {
+                    abort(preempted.pop_front().unwrap(), &metrics);
+                }
+            } else {
+                for req in queue.pop_batch(1, cfg.idle_wait) {
+                    if engine.can_admit(&req.prompt) {
+                        incoming.push(Pending::fresh(req));
+                    } else {
+                        abort(Pending::fresh(req), &metrics);
+                    }
+                }
             }
         }
 
+        // prefill admitted requests
+        for p in incoming {
+            // joint-capacity re-check: the admissions ahead of this one in
+            // the same round consumed blocks the gate did not see, so an
+            // individually-admissible request may no longer fit — defer it
+            // (with priority) instead of letting prefill hit the pool's
+            // exhaustion assert
+            if !engine.can_admit(&p.full_prompt) {
+                preempted.push_back(p);
+                continue;
+            }
+            let Pending { req, mut generated, full_prompt, queue_ms, prior_prefill_ms } =
+                p;
+            let queue_ms = queue_ms
+                .unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f32() * 1e3);
+            let t0 = Instant::now();
+            let mut seq = engine.new_seq();
+            let logits = engine.prefill(&mut seq, &full_prompt);
+            metrics
+                .prefill_tokens
+                .fetch_add(full_prompt.len() as u64, Ordering::Relaxed);
+            let prefill_ms = prior_prefill_ms + t0.elapsed().as_secs_f32() * 1e3;
+            let next = sample(&logits, req.sampling, &mut rng);
+            generated.push(next);
+            active.push(Active {
+                id: req.id,
+                seq,
+                prompt: req.prompt,
+                generated,
+                next_token: next,
+                max_new_tokens: req.max_new_tokens,
+                sampling: req.sampling,
+                stop_token: req.stop_token,
+                submitted_at: req.submitted_at,
+                queue_ms,
+                prefill_ms,
+                reply: req.reply,
+            });
+        }
+
         if active.is_empty() {
-            if queue.is_closed() && queue.is_empty() {
+            if preempted.is_empty() && queue.is_closed() && queue.is_empty() {
                 return;
             }
             continue;
@@ -218,6 +328,23 @@ fn run_loop<E: ServeEngine>(
 
         // 2. retire finished BEFORE stepping (first token may already stop)
         retire(&engine, &mut active, &metrics);
+        if active.is_empty() {
+            continue;
+        }
+
+        // 2b. reserve — every sequence must be able to take one more
+        // token; preempt the most recently admitted until the step fits
+        let mut i = 0;
+        while i < active.len() {
+            if engine.reserve_decode(&mut active[i].seq) {
+                i += 1;
+                continue;
+            }
+            let mut victim = active.pop().unwrap(); // youngest (may be i itself)
+            engine.release_seq(&mut victim.seq);
+            metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            preempted.push_front(Pending::resumed(victim));
+        }
         if active.is_empty() {
             continue;
         }
@@ -238,8 +365,25 @@ fn run_loop<E: ServeEngine>(
             a.generated.push(tok);
             a.next_token = tok;
         }
+        if let Some(ps) = engine.pool_stats() {
+            metrics.update_pool(&ps);
+        }
         retire(&engine, &mut active, &metrics);
     }
+}
+
+fn abort(p: Pending, metrics: &Metrics) {
+    metrics.aborted.fetch_add(1, Ordering::Relaxed);
+    let total_ms = p.req.submitted_at.elapsed().as_secs_f32() * 1e3;
+    let _ = p.req.reply.send(Response {
+        id: p.req.id,
+        tokens: p.generated,
+        queue_ms: p.queue_ms.unwrap_or(total_ms),
+        prefill_ms: p.prior_prefill_ms,
+        decode_ms: 0.0,
+        total_ms,
+        finish_reason: FinishReason::Aborted,
+    });
 }
 
 fn finishes<E: ServeEngine>(engine: &E, a: &Active<E::Seq>) -> Option<FinishReason> {
@@ -267,7 +411,10 @@ fn retire<E: ServeEngine>(
     let mut i = 0;
     while i < active.len() {
         if let Some(reason) = finishes(engine, &active[i]) {
-            let a = active.swap_remove(i);
+            // plain remove keeps `active` in admission order, which the
+            // preemption pass relies on to pick the youngest victim
+            let mut a = active.remove(i);
+            engine.release_seq(&mut a.seq);
             let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
             let decode_ms = total_ms - a.queue_ms - a.prefill_ms;
             metrics.observe_completion(total_ms, a.queue_ms, a.generated.len());

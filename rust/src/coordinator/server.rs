@@ -78,7 +78,9 @@ pub fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     };
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
-            "metrics" => coord.metrics.snapshot_json(),
+            // "stats" is an alias: the snapshot includes the KV-pool
+            // gauges (blocks used/cached/peak, prefix hit rate, ...)
+            "metrics" | "stats" => coord.metrics.snapshot_json(),
             "ping" => obj(vec![("ok", true.into())]),
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);

@@ -1,0 +1,86 @@
+//! Fixed-size KV blocks: the allocation unit of the paged pool.
+//!
+//! One block holds `block_size` consecutive token positions for *every*
+//! layer's K and V rows, in the same storage format as the flat cache
+//! ([`KvStore`]: nibble-packed INT4 with per-group scales, or fp32) —
+//! so the paged path dequantizes to exactly the same values as the flat
+//! path and stays bit-identical.
+
+use crate::model::engine::KvStore;
+
+/// Index into the pool's slot array.
+pub type BlockId = u32;
+
+/// One fixed-size KV block across all layers.
+pub struct KvBlock {
+    /// (K rows, V rows) per layer; each store holds up to `block_size`
+    /// rows, appended in position order.
+    pub layers: Vec<(KvStore, KvStore)>,
+    /// Running byte counter (payload + scales), updated on push/reset.
+    pub bytes: usize,
+}
+
+impl KvBlock {
+    pub fn new(n_layers: usize, kv_bits: u8, group: usize) -> KvBlock {
+        KvBlock {
+            layers: (0..n_layers)
+                .map(|_| (KvStore::new(kv_bits, group), KvStore::new(kv_bits, group)))
+                .collect(),
+            bytes: 0,
+        }
+    }
+
+    /// Positions fully or partially filled: layer 0 is pushed first, so
+    /// its K-row count is the block's fill level.
+    pub fn fill(&self) -> usize {
+        self.layers[0].0.len()
+    }
+
+    /// Append one K/V row pair for `layer`.
+    pub fn push(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let (ks, vs) = &mut self.layers[layer];
+        self.bytes += ks.push(k) + vs.push(v);
+    }
+
+    /// Drop all rows, re-initializing the stores (block returns to the
+    /// free list).
+    pub fn reset(&mut self, kv_bits: u8, group: usize) {
+        for l in self.layers.iter_mut() {
+            l.0 = KvStore::new(kv_bits, group);
+            l.1 = KvStore::new(kv_bits, group);
+        }
+        self.bytes = 0;
+    }
+
+    /// Deep copy of the row data (copy-on-write support).
+    pub fn clone_data(&self) -> KvBlock {
+        KvBlock {
+            layers: self.layers.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            bytes: self.bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_tracks_layer0_and_bytes_accumulate() {
+        let mut b = KvBlock::new(2, 4, 8);
+        assert_eq!(b.fill(), 0);
+        let row = vec![1.0f32; 16];
+        b.push(0, &row, &row);
+        b.push(0, &row, &row);
+        b.push(1, &row, &row);
+        assert_eq!(b.fill(), 2);
+        assert!(b.bytes > 0);
+        let before = b.bytes;
+        let copy = b.clone_data();
+        assert_eq!(copy.bytes, before);
+        b.reset(4, 8);
+        assert_eq!(b.fill(), 0);
+        assert_eq!(b.bytes, 0);
+        assert_eq!(copy.fill(), 2);
+    }
+}

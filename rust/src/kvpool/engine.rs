@@ -1,0 +1,200 @@
+//! The paged serving engine: [`QuantModel`] forward paths running over a
+//! shared [`KvPool`], with prompt-prefix reuse at prefill time.
+//!
+//! Sequences hold a block table instead of owning rows; a batch of
+//! sequences plus the pool adapts to the engine's [`KvSeqBatch`]
+//! interface, so prefill/decode run through the *same* generic forwards
+//! as the flat [`crate::model::engine::KvCache`] path — the paged path
+//! is bit-identical by construction (asserted in
+//! rust/tests/kvpool_paged.rs).
+
+use std::sync::Mutex;
+
+use crate::linalg::gemm::Mat;
+use crate::model::engine::{KvSeqBatch, QuantModel};
+
+use super::block::BlockId;
+use super::pool::{KvPool, KvPoolConfig, PoolStats, HASH_SEED};
+
+/// Per-sequence state on the paged backend: a block table plus the token
+/// history needed to seal full blocks into the prefix cache.
+pub struct PagedSeq {
+    /// Pool blocks covering positions `[0, len)`, in order.
+    pub table: Vec<BlockId>,
+    /// Cached positions.
+    pub len: usize,
+    /// Tokens whose K/V rows are cached (`tokens.len() == len`).
+    pub tokens: Vec<u32>,
+    /// Blocks already sealed into the prefix map.
+    sealed_blocks: usize,
+    /// Chain hash up to `sealed_blocks`.
+    chain: u64,
+}
+
+impl PagedSeq {
+    pub fn new() -> PagedSeq {
+        PagedSeq {
+            table: Vec::new(),
+            len: 0,
+            tokens: Vec::new(),
+            sealed_blocks: 0,
+            chain: HASH_SEED,
+        }
+    }
+}
+
+impl Default for PagedSeq {
+    fn default() -> Self {
+        PagedSeq::new()
+    }
+}
+
+/// [`KvSeqBatch`] adapter: a batch of paged sequences sharing one pool.
+struct PagedKvBatch<'a, 'b> {
+    pool: &'a mut KvPool,
+    seqs: &'a mut [&'b mut PagedSeq],
+}
+
+impl KvSeqBatch for PagedKvBatch<'_, '_> {
+    fn batch_len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn pos(&self, i: usize) -> usize {
+        self.seqs[i].len
+    }
+
+    fn push_row(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.append_row(&mut self.seqs[i].table, layer, pos, k, v);
+    }
+
+    fn view_rows<'s>(
+        &'s self,
+        i: usize,
+        layer: usize,
+        k_scratch: &'s mut Vec<Vec<f32>>,
+        v_scratch: &'s mut Vec<Vec<f32>>,
+    ) -> (&'s [Vec<f32>], &'s [Vec<f32>]) {
+        self.pool.gather_rows(&self.seqs[i].table, layer, k_scratch, v_scratch)
+    }
+
+    fn advance(&mut self, i: usize, n: usize) {
+        self.seqs[i].len += n;
+    }
+}
+
+/// Paged-attention engine over a [`QuantModel`]: the serving backend
+/// whose KV memory is a fixed slab of shared, refcounted INT4 blocks.
+pub struct PagedEngine {
+    pub model: QuantModel,
+    pool: Mutex<KvPool>,
+}
+
+impl PagedEngine {
+    /// `n_blocks` fixed-size blocks of `block_size` token positions each.
+    pub fn new(model: QuantModel, n_blocks: usize, block_size: usize) -> PagedEngine {
+        let cfg = KvPoolConfig {
+            n_blocks,
+            block_size,
+            n_layers: model.mcfg.n_layers,
+            kv_bits: model.ecfg.scheme.kv_bits,
+            kv_group: model.kv_group(),
+        };
+        PagedEngine { model, pool: Mutex::new(KvPool::new(cfg)) }
+    }
+
+    pub fn new_seq(&self) -> PagedSeq {
+        PagedSeq::new()
+    }
+
+    /// Prefill a fresh sequence: pin whatever prompt prefix the pool has
+    /// cached, forward only the suffix, then seal the new full blocks.
+    /// Returns the logits of the last position.
+    pub fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
+        let mut pool = self.pool.lock().unwrap();
+        debug_assert!(seq.len == 0 && seq.table.is_empty(), "prefill on a live seq");
+        let matched = pool.match_prefix(tokens, &mut seq.table);
+        seq.len = matched;
+        seq.tokens.extend_from_slice(tokens);
+        assert!(
+            pool.reserve(&mut seq.table, tokens.len()),
+            "kvpool exhausted during prefill (admission must gate on capacity)"
+        );
+        let suffix = &tokens[matched..];
+        let logits = {
+            let mut seqs = [&mut *seq];
+            let mut batch = PagedKvBatch { pool: &mut *pool, seqs: &mut seqs };
+            self.model.forward_seq(suffix, &mut batch, 0)
+        };
+        let (sealed, chain) =
+            pool.seal_full_blocks(&seq.table, &seq.tokens, seq.sealed_blocks, seq.chain);
+        seq.sealed_blocks = sealed;
+        seq.chain = chain;
+        logits.row(logits.rows - 1).to_vec()
+    }
+
+    /// One batched decode step; mirrors
+    /// [`QuantModel::decode_batch`] over block tables.
+    pub fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
+        let mut pool = self.pool.lock().unwrap();
+        let tokens: Vec<u32> = batch.iter().map(|(_, t)| *t).collect();
+        for (seq, tok) in batch.iter_mut() {
+            seq.tokens.push(*tok);
+            assert!(
+                pool.reserve(&mut seq.table, seq.len + 1),
+                "kvpool exhausted during decode (reserve_decode must gate)"
+            );
+        }
+        let logits = {
+            let mut seqs: Vec<&mut PagedSeq> =
+                batch.iter_mut().map(|(s, _)| &mut **s).collect();
+            let mut pb = PagedKvBatch { pool: &mut *pool, seqs: &mut seqs };
+            self.model.decode_step(&mut pb, &tokens)
+        };
+        for (seq, _) in batch.iter_mut() {
+            let (sealed, chain) = pool.seal_full_blocks(
+                &seq.table,
+                &seq.tokens,
+                seq.sealed_blocks,
+                seq.chain,
+            );
+            seq.sealed_blocks = sealed;
+            seq.chain = chain;
+        }
+        logits
+    }
+
+    /// Release the sequence's blocks back to the pool (retire or
+    /// preemption); sealed blocks stay cached for prefix reuse.
+    pub fn release(&self, seq: &mut PagedSeq) {
+        let mut pool = self.pool.lock().unwrap();
+        pool.release_seq(&mut seq.table);
+        *seq = PagedSeq::new();
+    }
+
+    /// Can a prompt of this shape be admitted right now?  Conservative:
+    /// ignores that matched prefix blocks arrive pre-filled, so it never
+    /// over-admits.
+    pub fn can_admit(&self, prompt: &[u32]) -> bool {
+        let pool = self.pool.lock().unwrap();
+        pool.blocks_for(prompt.len() + 1) <= pool.available()
+    }
+
+    /// Ensure `seq` can grow by one token; `false` = preempt first.
+    pub fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
+        self.pool.lock().unwrap().reserve(&mut seq.table, seq.len + 1)
+    }
+
+    /// Longest prompt prefix currently resident in the prefix cache.
+    pub fn prefix_match_len(&self, prompt: &[u32]) -> usize {
+        self.pool.lock().unwrap().probe_prefix(prompt)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.pool.lock().unwrap().stats()
+    }
+
+    pub fn seq_bytes(&self, seq: &PagedSeq) -> usize {
+        self.pool.lock().unwrap().table_bytes(&seq.table)
+    }
+}

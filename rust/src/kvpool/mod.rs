@@ -1,0 +1,27 @@
+//! Paged INT4 KV-cache pool (vLLM-style) for the serving coordinator.
+//!
+//! The paper's sub-channel INT4 KV quantization (§4.1) makes every cached
+//! position a fixed-size nibble-packed record, which is exactly what a
+//! paged allocator wants.  This module provides:
+//!
+//! * [`block::KvBlock`] — a fixed-size slab unit: `block_size` token
+//!   positions × every layer's K/V rows, in the same [`KvStore`] format
+//!   as the flat cache (so paged attention is bit-identical);
+//! * [`pool::KvPool`] — free-list allocation over a bounded slab,
+//!   refcounted block sharing, a chain-hashed prefix cache with verified
+//!   hits and copy-on-write, and LRU eviction of released sealed blocks;
+//! * [`engine::PagedEngine`] — the serving backend: prefill with prompt
+//!   prefix reuse + batched decode over block tables, implementing the
+//!   coordinator's `ServeEngine` trait (see
+//!   `crate::coordinator::engine_iface`), which gates admission on block
+//!   availability and preempts to the queue when the pool runs dry.
+//!
+//! [`KvStore`]: crate::model::engine::KvStore
+
+pub mod block;
+pub mod engine;
+pub mod pool;
+
+pub use block::{BlockId, KvBlock};
+pub use engine::{PagedEngine, PagedSeq};
+pub use pool::{KvPool, KvPoolConfig, PoolStats};

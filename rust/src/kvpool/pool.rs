@@ -1,0 +1,519 @@
+//! The paged KV-block pool: free-list allocation, refcounted sharing,
+//! content-hash prefix cache, and LRU eviction of released blocks.
+//!
+//! Blocks are sealed into the prefix map only when full, so shared
+//! blocks are immutable by construction; copy-on-write in
+//! [`KvPool::append_row`] guards the invariant anyway.
+
+use std::collections::HashMap;
+
+use super::block::{BlockId, KvBlock};
+
+/// FNV-1a offset basis: the start of every sequence's chain hash.
+pub(crate) const HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Extend a chain hash over one block's worth of token ids (FNV-1a).
+/// Chaining makes a block's hash depend on its whole prompt prefix, so
+/// equal blocks at different prefixes never collide by construction.
+pub(crate) fn chain_hash(mut h: u64, tokens: &[u32]) -> u64 {
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Pool geometry + storage format.
+#[derive(Clone, Copy, Debug)]
+pub struct KvPoolConfig {
+    /// Total blocks in the slab.
+    pub n_blocks: usize,
+    /// Token positions per block.
+    pub block_size: usize,
+    pub n_layers: usize,
+    pub kv_bits: u8,
+    pub kv_group: usize,
+}
+
+/// Aggregate pool counters surfaced through [`crate::coordinator`]'s
+/// metrics and the TCP stats endpoint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub blocks_total: usize,
+    /// On the free list (never used or fully reclaimed).
+    pub blocks_free: usize,
+    /// Refcount 0 but retained in the prefix cache (evictable).
+    pub blocks_cached: usize,
+    /// Pinned by at least one live sequence.
+    pub blocks_active: usize,
+    pub bytes_used: usize,
+    /// match_prefix calls / tokens probed / tokens + blocks served from
+    /// the prefix cache (cumulative).
+    pub prefix_queries: u64,
+    pub prefix_query_tokens: u64,
+    pub prefix_hit_tokens: u64,
+    pub prefix_hit_blocks: u64,
+    pub evictions: u64,
+    pub cow_copies: u64,
+}
+
+struct Slot {
+    block: KvBlock,
+    refcount: u32,
+    /// Chain hash once sealed + registered in the prefix map.
+    hash: Option<u64>,
+    /// Token ids this sealed block covers (verifies map hits).
+    tokens: Vec<u32>,
+    /// LRU stamp, updated when the refcount drops to 0.
+    last_use: u64,
+}
+
+/// The paged KV pool.
+pub struct KvPool {
+    cfg: KvPoolConfig,
+    slots: Vec<Slot>,
+    free: Vec<BlockId>,
+    /// chain hash of a sealed full block -> its slot.
+    prefix_map: HashMap<u64, BlockId>,
+    tick: u64,
+    prefix_queries: u64,
+    prefix_query_tokens: u64,
+    prefix_hit_tokens: u64,
+    prefix_hit_blocks: u64,
+    evictions: u64,
+    cow_copies: u64,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvPoolConfig) -> KvPool {
+        assert!(cfg.n_blocks > 0 && cfg.block_size > 0 && cfg.n_layers > 0);
+        let slots = (0..cfg.n_blocks)
+            .map(|_| Slot {
+                block: KvBlock::new(cfg.n_layers, cfg.kv_bits, cfg.kv_group),
+                refcount: 0,
+                hash: None,
+                tokens: Vec::new(),
+                last_use: 0,
+            })
+            .collect();
+        // pop order: block 0 first
+        let free = (0..cfg.n_blocks as BlockId).rev().collect();
+        KvPool {
+            cfg,
+            slots,
+            free,
+            prefix_map: HashMap::new(),
+            tick: 0,
+            prefix_queries: 0,
+            prefix_query_tokens: 0,
+            prefix_hit_tokens: 0,
+            prefix_hit_blocks: 0,
+            evictions: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.cfg.n_blocks
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.block_size)
+    }
+
+    /// Blocks obtainable right now: the free list plus evictable cached
+    /// blocks (refcount 0, retained only for prefix reuse).
+    pub fn available(&self) -> usize {
+        self.free.len() + self.cached_count()
+    }
+
+    fn cached_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.refcount == 0 && s.hash.is_some())
+            .count()
+    }
+
+    /// Grab a block: free list first, then evict the least-recently-used
+    /// cached block.  Returned slot has refcount 1 and an empty block.
+    fn alloc(&mut self) -> Option<BlockId> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => self.evict_lru()?,
+        };
+        let slot = &mut self.slots[id as usize];
+        debug_assert!(slot.refcount == 0 && slot.hash.is_none());
+        slot.refcount = 1;
+        Some(id)
+    }
+
+    fn evict_lru(&mut self) -> Option<BlockId> {
+        let id = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.refcount == 0 && s.hash.is_some())
+            .min_by_key(|(_, s)| s.last_use)
+            .map(|(i, _)| i as BlockId)?;
+        let slot = &mut self.slots[id as usize];
+        let h = slot.hash.take().expect("cached block has a hash");
+        self.prefix_map.remove(&h);
+        slot.tokens.clear();
+        slot.block.reset(self.cfg.kv_bits, self.cfg.kv_group);
+        self.evictions += 1;
+        Some(id)
+    }
+
+    /// Ensure `table` covers `upto_tokens` positions, allocating tail
+    /// blocks as needed.  `false` = pool exhausted (the scheduler must
+    /// preempt); partially-reserved blocks stay in the table and are
+    /// reclaimed by [`release_seq`](KvPool::release_seq).
+    pub fn reserve(&mut self, table: &mut Vec<BlockId>, upto_tokens: usize) -> bool {
+        let need = self.blocks_for(upto_tokens);
+        while table.len() < need {
+            match self.alloc() {
+                Some(id) => table.push(id),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// The one prefix-cache walk both entry points share: chain-hash the
+    /// prompt's full blocks through the map, verifying each hit's tokens
+    /// (hash-collision guard) and always leaving at least one prompt
+    /// token for the forward pass.  Returns (matched tokens, hit blocks).
+    fn walk_prefix(&self, tokens: &[u32]) -> (usize, Vec<BlockId>) {
+        let bs = self.cfg.block_size;
+        let mut h = HASH_SEED;
+        let mut matched = 0usize;
+        let mut hits = Vec::new();
+        while matched + bs < tokens.len() {
+            let seg = &tokens[matched..matched + bs];
+            h = chain_hash(h, seg);
+            let Some(id) = self.prefix_map.get(&h).copied() else { break };
+            if self.slots[id as usize].tokens.as_slice() != seg {
+                break; // hash collision: do not serve foreign rows
+            }
+            hits.push(id);
+            matched += bs;
+        }
+        (matched, hits)
+    }
+
+    /// Walk the prompt's full blocks through the prefix map, pinning every
+    /// hit into `table`.  Returns the number of matched tokens; at least
+    /// one prompt token is always left for the forward pass.
+    pub fn match_prefix(&mut self, tokens: &[u32], table: &mut Vec<BlockId>) -> usize {
+        self.prefix_queries += 1;
+        self.prefix_query_tokens += tokens.len() as u64;
+        let (matched, hits) = self.walk_prefix(tokens);
+        for &id in &hits {
+            self.slots[id as usize].refcount += 1;
+            table.push(id);
+        }
+        self.prefix_hit_blocks += hits.len() as u64;
+        self.prefix_hit_tokens += matched as u64;
+        matched
+    }
+
+    /// Read-only prefix probe (admission gating): matched token count,
+    /// with no refcounting and no counter updates.
+    pub fn probe_prefix(&self, tokens: &[u32]) -> usize {
+        self.walk_prefix(tokens).0
+    }
+
+    /// Append one K/V row pair at absolute position `pos` of the sequence
+    /// owning `table`.  Allocates the tail block on a boundary (callers
+    /// gate capacity via [`reserve`](KvPool::reserve) / admission) and
+    /// copies-on-write if the target block is shared.
+    pub fn append_row(
+        &mut self,
+        table: &mut Vec<BlockId>,
+        layer: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let bs = self.cfg.block_size;
+        let bi = pos / bs;
+        debug_assert!(bi <= table.len(), "non-sequential KV append");
+        if bi == table.len() {
+            let id = self
+                .alloc()
+                .expect("kvpool exhausted: admission/reserve must gate capacity");
+            table.push(id);
+        }
+        let id = table[bi];
+        if self.slots[id as usize].refcount > 1 {
+            // shared block: copy before mutating
+            let copy = self
+                .alloc()
+                .expect("kvpool exhausted during copy-on-write");
+            let data = self.slots[id as usize].block.clone_data();
+            let dst = &mut self.slots[copy as usize];
+            dst.block = data;
+            self.release_block(id);
+            table[bi] = copy;
+            self.cow_copies += 1;
+        }
+        self.slots[table[bi] as usize].block.push(layer, k, v);
+    }
+
+    /// Dequantize every cached row of `table` for `layer` into the
+    /// scratch buffers, returning (keys, values) views in position order.
+    pub fn gather_rows<'a>(
+        &self,
+        table: &[BlockId],
+        layer: usize,
+        k_scratch: &'a mut Vec<Vec<f32>>,
+        v_scratch: &'a mut Vec<Vec<f32>>,
+    ) -> (&'a [Vec<f32>], &'a [Vec<f32>]) {
+        let mut n = 0usize;
+        for &id in table {
+            let (ks, vs) = &self.slots[id as usize].block.layers[layer];
+            let rows = ks.len();
+            while k_scratch.len() < n + rows {
+                k_scratch.push(Vec::new());
+            }
+            while v_scratch.len() < n + rows {
+                v_scratch.push(Vec::new());
+            }
+            for r in 0..rows {
+                ks.row_into(r, &mut k_scratch[n + r]);
+                vs.row_into(r, &mut v_scratch[n + r]);
+            }
+            n += rows;
+        }
+        (&k_scratch[..n], &v_scratch[..n])
+    }
+
+    /// Seal every full block of `tokens` into the prefix map, resuming
+    /// from `(sealed, chain)`; returns the updated pair.  Already-sealed
+    /// (matched) blocks just advance the chain.
+    pub fn seal_full_blocks(
+        &mut self,
+        table: &[BlockId],
+        tokens: &[u32],
+        mut sealed: usize,
+        mut chain: u64,
+    ) -> (usize, u64) {
+        let bs = self.cfg.block_size;
+        while (sealed + 1) * bs <= tokens.len() {
+            let seg = &tokens[sealed * bs..(sealed + 1) * bs];
+            chain = chain_hash(chain, seg);
+            let id = table[sealed];
+            if self.slots[id as usize].block.fill() < bs {
+                break; // not yet full for every position
+            }
+            self.register_sealed(id, chain, seg);
+            sealed += 1;
+        }
+        (sealed, chain)
+    }
+
+    fn register_sealed(&mut self, id: BlockId, hash: u64, tokens: &[u32]) {
+        if self.prefix_map.contains_key(&hash) {
+            return; // an equivalent block is already registered
+        }
+        let slot = &mut self.slots[id as usize];
+        slot.hash = Some(hash);
+        slot.tokens = tokens.to_vec();
+        self.prefix_map.insert(hash, id);
+    }
+
+    /// Release every block of a retiring / preempted sequence.  Sealed
+    /// blocks stay cached for prefix reuse (LRU-stamped leaf-first, so
+    /// eviction trims chains from the tail); unsealed blocks are reset
+    /// and freed.
+    pub fn release_seq(&mut self, table: &mut Vec<BlockId>) {
+        for id in table.drain(..).rev() {
+            self.release_block(id);
+        }
+    }
+
+    fn release_block(&mut self, id: BlockId) {
+        let slot = &mut self.slots[id as usize];
+        debug_assert!(slot.refcount > 0, "double release of KV block {id}");
+        slot.refcount -= 1;
+        if slot.refcount > 0 {
+            return;
+        }
+        if slot.hash.is_some() {
+            self.tick += 1;
+            self.slots[id as usize].last_use = self.tick;
+        } else {
+            slot.block.reset(self.cfg.kv_bits, self.cfg.kv_group);
+            self.free.push(id);
+        }
+    }
+
+    /// Bytes held by the blocks of one sequence (scaled down for shared
+    /// blocks would be fancier; this reports the plain sum).
+    pub fn table_bytes(&self, table: &[BlockId]) -> usize {
+        table.iter().map(|&id| self.slots[id as usize].block.bytes).sum()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let cached = self.cached_count();
+        PoolStats {
+            blocks_total: self.cfg.n_blocks,
+            blocks_free: self.free.len(),
+            blocks_cached: cached,
+            blocks_active: self.cfg.n_blocks - self.free.len() - cached,
+            bytes_used: self.slots.iter().map(|s| s.block.bytes).sum(),
+            prefix_queries: self.prefix_queries,
+            prefix_query_tokens: self.prefix_query_tokens,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            prefix_hit_blocks: self.prefix_hit_blocks,
+            evictions: self.evictions,
+            cow_copies: self.cow_copies,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n_blocks: usize, block_size: usize) -> KvPoolConfig {
+        KvPoolConfig { n_blocks, block_size, n_layers: 2, kv_bits: 4, kv_group: 8 }
+    }
+
+    fn fill_seq(pool: &mut KvPool, table: &mut Vec<BlockId>, tokens: &[u32]) {
+        // push one 16-wide K/V row per token per layer, like a forward
+        for layer in 0..2 {
+            for (pos, &t) in tokens.iter().enumerate() {
+                let row: Vec<f32> = (0..16).map(|j| (t as f32) + j as f32 * 0.1).collect();
+                pool.append_row(table, layer, pos, &row, &row);
+            }
+        }
+    }
+
+    #[test]
+    fn alloc_exhaustion_and_release() {
+        let mut pool = KvPool::new(cfg(3, 4));
+        let mut t1 = Vec::new();
+        assert!(pool.reserve(&mut t1, 12)); // 3 blocks
+        assert_eq!(t1.len(), 3);
+        let mut t2 = Vec::new();
+        assert!(!pool.reserve(&mut t2, 4)); // exhausted
+        assert_eq!(pool.available(), 0);
+        pool.release_seq(&mut t1);
+        assert!(t1.is_empty());
+        assert_eq!(pool.available(), 3); // unsealed blocks go straight to free
+        assert!(pool.reserve(&mut t2, 4));
+        pool.release_seq(&mut t2);
+    }
+
+    #[test]
+    fn prefix_match_pins_and_verifies_tokens() {
+        let mut pool = KvPool::new(cfg(8, 4));
+        let tokens: Vec<u32> = (0..9).collect(); // 2 full blocks + 1 tail
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        let (sealed, chain) = pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+        assert_eq!(sealed, 2);
+        assert_ne!(chain, HASH_SEED);
+
+        // a second sequence with the same prompt reuses both full blocks
+        let mut t2 = Vec::new();
+        let matched = pool.match_prefix(&tokens, &mut t2);
+        assert_eq!(matched, 8);
+        assert_eq!(t2.len(), 2);
+        assert_eq!(t2[0], t1[0]);
+        let s = pool.stats();
+        assert_eq!(s.prefix_hit_blocks, 2);
+        assert_eq!(s.prefix_hit_tokens, 8);
+
+        // a different prompt matches nothing
+        let other: Vec<u32> = (100..109).collect();
+        let mut t3 = Vec::new();
+        assert_eq!(pool.match_prefix(&other, &mut t3), 0);
+        assert!(t3.is_empty());
+
+        // an exactly-block-aligned prompt leaves the last block unmatched
+        // so prefill always has at least one token to forward
+        let aligned: Vec<u32> = (0..8).collect();
+        let mut t4 = Vec::new();
+        assert_eq!(pool.match_prefix(&aligned, &mut t4), 4);
+        pool.release_seq(&mut t2);
+        pool.release_seq(&mut t4);
+        pool.release_seq(&mut t1);
+    }
+
+    #[test]
+    fn sealed_blocks_cache_then_evict_lru_leaf_first() {
+        let mut pool = KvPool::new(cfg(3, 4));
+        let tokens: Vec<u32> = (0..9).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+        pool.release_seq(&mut t1);
+        let s = pool.stats();
+        assert_eq!(s.blocks_cached, 2); // two sealed blocks retained
+        assert_eq!(s.blocks_free, 1); // the unsealed tail was freed
+        assert_eq!(pool.available(), 3);
+
+        // exhaust: allocations evict the cached chain leaf-first, so the
+        // root block survives longest and still serves a 4-token match
+        let mut t2 = Vec::new();
+        assert!(pool.reserve(&mut t2, 8)); // free 1 + evict 1
+        assert_eq!(pool.stats().evictions, 1);
+        let mut t3 = Vec::new();
+        assert_eq!(pool.match_prefix(&tokens, &mut t3), 4, "root block survives");
+        pool.release_seq(&mut t3);
+        pool.release_seq(&mut t2);
+    }
+
+    #[test]
+    fn copy_on_write_unshares_a_block() {
+        // a partially-filled block shared by two tables: appending through
+        // one table must copy, leaving the other table's rows untouched
+        let mut pool = KvPool::new(cfg(4, 4));
+        let row = vec![0.5f32; 16];
+        let mut ta = Vec::new();
+        for layer in 0..2 {
+            for pos in 0..3 {
+                pool.append_row(&mut ta, layer, pos, &row, &row);
+            }
+        }
+        let mut tb = vec![ta[0]];
+        pool.slots[ta[0] as usize].refcount += 1;
+        pool.append_row(&mut tb, 0, 3, &row, &row);
+        assert_ne!(tb[0], ta[0], "append into a shared block must copy");
+        assert_eq!(pool.stats().cow_copies, 1);
+        assert_eq!(pool.slots[ta[0] as usize].refcount, 1);
+        assert_eq!(pool.slots[ta[0] as usize].block.fill(), 3);
+        assert_eq!(pool.slots[tb[0] as usize].block.fill(), 4);
+        pool.release_seq(&mut tb);
+        pool.release_seq(&mut ta);
+    }
+
+    #[test]
+    fn gather_rows_roundtrips_block_table() {
+        let mut pool = KvPool::new(cfg(4, 4));
+        let tokens: Vec<u32> = (0..6).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let (keys, vals) = pool.gather_rows(&t1, 1, &mut ks, &mut vs);
+        assert_eq!(keys.len(), 6);
+        assert_eq!(vals.len(), 6);
+        for (pos, row) in keys.iter().enumerate() {
+            assert_eq!(row.len(), 16);
+            // INT4 roundtrip keeps values close to the source row
+            let want = pos as f32; // first element of the source row
+            assert!((row[0] - want).abs() < 0.5, "pos {pos}: {} vs {want}", row[0]);
+        }
+        pool.release_seq(&mut t1);
+    }
+}

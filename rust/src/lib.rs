@@ -5,8 +5,10 @@
 //! (ICLR 2025) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — serving coordinator: request router, dynamic
-//!   batcher, prefill/decode scheduler, INT4 KV-cache manager, metrics —
-//!   plus a pure-rust INT4 inference engine whose quantized GEMMs implement
+//!   batcher, prefill/decode scheduler, metrics, and a paged INT4
+//!   KV-cache pool ([`kvpool`]: block-table attention, content-hash
+//!   prefix sharing, LRU eviction, scheduler preemption) — plus a
+//!   pure-rust INT4 inference engine whose quantized GEMMs implement
 //!   every smoothing method in the paper (RTN / SmoothQuant / RS / QuaRot /
 //!   RRS / GPTQ), and a PJRT runtime that loads the AOT-lowered JAX graphs.
 //! * **L2 (python/compile/model.py)** — the JAX transformer, lowered once
@@ -22,6 +24,7 @@
 pub mod coordinator;
 pub mod eval;
 pub mod harness;
+pub mod kvpool;
 pub mod linalg;
 pub mod model;
 pub mod quant;

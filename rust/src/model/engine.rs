@@ -183,13 +183,16 @@ pub struct QLayer {
 }
 
 /// KV-cache storage: fp32 rows or nibble-packed INT4 (paper 4.1).
+/// Used both by the flat per-sequence [`KvCache`] and, per block, by the
+/// paged [`crate::kvpool`] allocator.
+#[derive(Clone)]
 pub enum KvStore {
     F32(Vec<Vec<f32>>),
     Int4 { rows: Vec<QuantVec>, group: usize },
 }
 
 impl KvStore {
-    fn new(kv_bits: u8, group: usize) -> KvStore {
+    pub fn new(kv_bits: u8, group: usize) -> KvStore {
         if kv_bits == 4 {
             KvStore::Int4 { rows: Vec::new(), group }
         } else {
@@ -197,24 +200,36 @@ impl KvStore {
         }
     }
 
-    fn push(&mut self, row: &[f32]) {
+    /// Append a row; returns the bytes it occupies (for the running
+    /// memory counters — summing rows on every metrics poll is O(T)).
+    pub fn push(&mut self, row: &[f32]) -> usize {
         match self {
-            KvStore::F32(rows) => rows.push(row.to_vec()),
+            KvStore::F32(rows) => {
+                rows.push(row.to_vec());
+                row.len() * 4
+            }
             KvStore::Int4 { rows, group } => {
-                rows.push(QuantVec::quantize(row, *group))
+                let q = QuantVec::quantize(row, *group);
+                let b = q.bytes();
+                rows.push(q);
+                b
             }
         }
     }
 
-    fn len(&self) -> usize {
+    pub fn len(&self) -> usize {
         match self {
             KvStore::F32(rows) => rows.len(),
             KvStore::Int4 { rows, .. } => rows.len(),
         }
     }
 
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
     /// Materialize all rows as fp32 (INT4 dequantizes on read).
-    fn dequantize_all(&self) -> Vec<Vec<f32>> {
+    pub fn dequantize_all(&self) -> Vec<Vec<f32>> {
         match self {
             KvStore::F32(rows) => rows.clone(),
             KvStore::Int4 { rows, .. } => {
@@ -223,9 +238,23 @@ impl KvStore {
         }
     }
 
+    /// Dequantize (or copy) row `i` into `out`.
+    pub fn row_into(&self, i: usize, out: &mut Vec<f32>) {
+        match self {
+            KvStore::F32(rows) => {
+                out.resize(rows[i].len(), 0.0);
+                out.copy_from_slice(&rows[i]);
+            }
+            KvStore::Int4 { rows, .. } => {
+                out.resize(rows[i].len, 0.0);
+                rows[i].dequantize_into(out);
+            }
+        }
+    }
+
     /// Borrow fp32 rows directly, or dequantize INT4 into reusable
     /// scratch (the decode hot path: no per-step allocation).
-    fn view<'a>(&'a self, scratch: &'a mut Vec<Vec<f32>>) -> &'a [Vec<f32>] {
+    pub fn view<'a>(&'a self, scratch: &'a mut Vec<Vec<f32>>) -> &'a [Vec<f32>] {
         match self {
             KvStore::F32(rows) => rows,
             KvStore::Int4 { rows, .. } => {
@@ -249,10 +278,13 @@ impl KvStore {
     }
 }
 
-/// Per-sequence KV cache across layers.
+/// Per-sequence KV cache across layers (the flat, non-paged backend).
 pub struct KvCache {
     pub layers: Vec<(KvStore, KvStore)>,
     pub pos: usize,
+    /// Running byte counter, updated on append (metrics polls are O(1)
+    /// instead of re-summing every row).
+    bytes: usize,
 }
 
 impl KvCache {
@@ -268,7 +300,14 @@ impl KvCache {
                 })
                 .collect(),
             pos: 0,
+            bytes: 0,
         }
+    }
+
+    /// Append one K/V row pair for `layer`, maintaining the byte counter.
+    pub fn push_row(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        let (ks, vs) = &mut self.layers[layer];
+        self.bytes += ks.push(k) + vs.push(v);
     }
 
     pub fn len(&self) -> usize {
@@ -280,8 +319,103 @@ impl KvCache {
     }
 
     pub fn bytes(&self) -> usize {
-        self.layers.iter().map(|(k, v)| k.bytes() + v.bytes()).sum()
+        self.bytes
     }
+}
+
+/// Batched K/V access the transformer forwards read and write through:
+/// implemented by the flat [`KvCache`] and by the paged block-table pool
+/// ([`crate::kvpool`]).  Rows are pushed position-addressed so paged
+/// backends can map them onto fixed-size blocks; `pos` is the cached
+/// length before the current forward and only changes via [`advance`].
+///
+/// [`advance`]: KvSeqBatch::advance
+pub trait KvSeqBatch {
+    /// Number of sequences in the batch.
+    fn batch_len(&self) -> usize;
+
+    /// Current cached length of sequence `i`.
+    fn pos(&self, i: usize) -> usize;
+
+    /// Append one K/V row pair for `layer` of sequence `i` at absolute
+    /// position `pos` (positions arrive in ascending order per layer).
+    fn push_row(&mut self, i: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Materialize every cached row of sequence `i` for `layer` as fp32
+    /// (INT4 dequantizes into the reusable scratch buffers).
+    fn view_rows<'a>(
+        &'a self,
+        i: usize,
+        layer: usize,
+        k_scratch: &'a mut Vec<Vec<f32>>,
+        v_scratch: &'a mut Vec<Vec<f32>>,
+    ) -> (&'a [Vec<f32>], &'a [Vec<f32>]);
+
+    /// Advance sequence `i` by `n` positions (rows were pushed for every
+    /// layer).
+    fn advance(&mut self, i: usize, n: usize);
+}
+
+/// Flat per-sequence caches adapted to the batched KV interface.
+struct FlatKvBatch<'a, 'b> {
+    items: &'a mut [(&'b mut KvCache, u32)],
+}
+
+impl KvSeqBatch for FlatKvBatch<'_, '_> {
+    fn batch_len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn pos(&self, i: usize) -> usize {
+        self.items[i].0.pos
+    }
+
+    fn push_row(&mut self, i: usize, layer: usize, _pos: usize, k: &[f32], v: &[f32]) {
+        self.items[i].0.push_row(layer, k, v);
+    }
+
+    fn view_rows<'a>(
+        &'a self,
+        i: usize,
+        layer: usize,
+        k_scratch: &'a mut Vec<Vec<f32>>,
+        v_scratch: &'a mut Vec<Vec<f32>>,
+    ) -> (&'a [Vec<f32>], &'a [Vec<f32>]) {
+        let (ks, vs) = &self.items[i].0.layers[layer];
+        (ks.view(k_scratch), vs.view(v_scratch))
+    }
+
+    fn advance(&mut self, i: usize, n: usize) {
+        self.items[i].0.pos += n;
+    }
+}
+
+/// No-cache sink for evaluation forwards: attention stays in-register
+/// (`pos` is always 0) and pushed rows are discarded.
+struct DiscardKv;
+
+impl KvSeqBatch for DiscardKv {
+    fn batch_len(&self) -> usize {
+        1
+    }
+
+    fn pos(&self, _i: usize) -> usize {
+        0
+    }
+
+    fn push_row(&mut self, _i: usize, _layer: usize, _pos: usize, _k: &[f32], _v: &[f32]) {}
+
+    fn view_rows<'a>(
+        &'a self,
+        _i: usize,
+        _layer: usize,
+        _k_scratch: &'a mut Vec<Vec<f32>>,
+        _v_scratch: &'a mut Vec<Vec<f32>>,
+    ) -> (&'a [Vec<f32>], &'a [Vec<f32>]) {
+        unreachable!("DiscardKv holds no rows (pos is always 0)")
+    }
+
+    fn advance(&mut self, _i: usize, _n: usize) {}
 }
 
 /// The prepared quantized model.
@@ -417,21 +551,56 @@ impl QuantModel {
         })
     }
 
-    fn kv_group(&self) -> usize {
+    pub fn kv_group(&self) -> usize {
         self.ecfg.kv_group.min(self.mcfg.head_dim().max(1))
     }
 
     /// Full-sequence forward (prefill / evaluation path).  Returns logits
     /// [T, vocab]; if `cache` is given, K/V rows are appended per layer
-    /// (the cache must be empty) so decode can continue from `T`.
-    pub fn forward_full(&self, tokens: &[u32], mut cache: Option<&mut KvCache>) -> Mat {
+    /// so decode can continue from `T` (a non-empty cache is treated as
+    /// an already-cached prefix, as after a kvpool prefix hit).
+    pub fn forward_full(&self, tokens: &[u32], cache: Option<&mut KvCache>) -> Mat {
+        match cache {
+            Some(c) => {
+                let mut items = [(c, 0u32)];
+                let mut flat = FlatKvBatch { items: &mut items };
+                self.forward_seq(tokens, &mut flat, 0)
+            }
+            None => self.forward_seq(tokens, &mut DiscardKv, 0),
+        }
+    }
+
+    /// Batched single-token decode: each (cache, token) advances by one
+    /// position.  Returns logits [B, vocab].
+    pub fn decode_batch(&self, batch: &mut [(&mut KvCache, u32)]) -> Mat {
+        let tokens: Vec<u32> = batch.iter().map(|(_, t)| *t).collect();
+        let mut flat = FlatKvBatch { items: batch };
+        self.decode_step(&mut flat, &tokens)
+    }
+
+    /// Forward `tokens` for sequence `slot` of `kv`, starting at its
+    /// current position (0 = fresh prefill, where attention runs entirely
+    /// in-register exactly like the flat path; >0 continues a cached
+    /// prefix, attending over dequantized cached rows + the new rows).
+    /// Returns logits [T, vocab] for the new positions and advances the
+    /// sequence by T.
+    pub fn forward_seq<B: KvSeqBatch>(
+        &self,
+        tokens: &[u32],
+        kv: &mut B,
+        slot: usize,
+    ) -> Mat {
         let t = tokens.len();
         let cfg = &self.mcfg;
+        let p0 = kv.pos(slot);
         let mut x = Mat::zeros(t, cfg.dim);
         for (i, &tok) in tokens.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
         }
         let mut h = Mat::zeros(t, cfg.dim);
+        let mut att_scratch: Vec<f32> = Vec::new();
+        let mut k_scratch: Vec<Vec<f32>> = Vec::new();
+        let mut v_scratch: Vec<Vec<f32>> = Vec::new();
         for (li, layer) in self.layers.iter().enumerate() {
             for i in 0..t {
                 rmsnorm(x.row(i), &layer.attn_norm, h.row_mut(i), 1e-5);
@@ -439,8 +608,8 @@ impl QuantModel {
             let mut q = layer.wq.forward(&h);
             let mut k = layer.wk.forward(&h);
             let mut v = layer.wv.forward(&h);
-            apply_rope_rows(&mut q, &self.rope, cfg.n_heads, cfg.head_dim(), 0);
-            apply_rope_rows(&mut k, &self.rope, cfg.n_kv_heads, cfg.head_dim(), 0);
+            apply_rope_rows(&mut q, &self.rope, cfg.n_heads, cfg.head_dim(), p0);
+            apply_rope_rows(&mut k, &self.rope, cfg.n_kv_heads, cfg.head_dim(), p0);
             if self.ecfg.scheme.kv_bits == 4 {
                 let g = self.kv_group();
                 for i in 0..t {
@@ -448,13 +617,31 @@ impl QuantModel {
                     crate::quant::kv::fake_quant_inplace(v.row_mut(i), g);
                 }
             }
-            if let Some(c) = cache.as_deref_mut() {
-                for i in 0..t {
-                    c.layers[li].0.push(k.row(i));
-                    c.layers[li].1.push(v.row(i));
-                }
+            for i in 0..t {
+                kv.push_row(slot, li, p0 + i, k.row(i), v.row(i));
             }
-            let att = causal_attention(&q, &k, &v, cfg);
+            let att = if p0 == 0 {
+                causal_attention(&q, &k, &v, cfg)
+            } else {
+                // suffix attention: cached prefix rows + the rows just
+                // pushed (view covers both)
+                let mut att = Mat::zeros(t, cfg.n_heads * cfg.head_dim());
+                let (keys, vals) =
+                    kv.view_rows(slot, li, &mut k_scratch, &mut v_scratch);
+                for i in 0..t {
+                    attend_single(
+                        q.row(i),
+                        &keys[..p0 + i + 1],
+                        &vals[..p0 + i + 1],
+                        cfg.n_heads,
+                        cfg.n_kv_heads,
+                        cfg.head_dim(),
+                        att.row_mut(i),
+                        &mut att_scratch,
+                    );
+                }
+                att
+            };
             let o = layer.wo.forward(&att);
             for i in 0..t {
                 for (xv, ov) in x.row_mut(i).iter_mut().zip(o.row(i)) {
@@ -481,20 +668,19 @@ impl QuantModel {
             let row = x.row(i).to_vec();
             rmsnorm(&row, &self.final_norm, x.row_mut(i), 1e-5);
         }
-        if let Some(c) = cache {
-            c.pos += t;
-        }
+        kv.advance(slot, t);
         gemm_f32_bt(&x, &self.head)
     }
 
-    /// Batched single-token decode: each (cache, token) advances by one
-    /// position.  Returns logits [B, vocab].
-    pub fn decode_batch(&self, batch: &mut [(&mut KvCache, u32)]) -> Mat {
-        let b = batch.len();
+    /// One batched decode step over any KV backend: sequence `i` consumes
+    /// `tokens[i]` at its current position.  Returns logits [B, vocab].
+    pub fn decode_step<B: KvSeqBatch>(&self, kv: &mut B, tokens: &[u32]) -> Mat {
+        let b = tokens.len();
+        debug_assert_eq!(b, kv.batch_len());
         let cfg = &self.mcfg;
         let mut x = Mat::zeros(b, cfg.dim);
-        for (i, (_, tok)) in batch.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.embed.row(*tok as usize));
+        for (i, &tok) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
         }
         let mut h = Mat::zeros(b, cfg.dim);
         let mut scratch = Vec::new();
@@ -507,8 +693,8 @@ impl QuantModel {
             let mut q = layer.wq.forward(&h);
             let mut k = layer.wk.forward(&h);
             let mut v = layer.wv.forward(&h);
-            for (i, (cache, _)) in batch.iter().enumerate() {
-                let pos = cache.pos;
+            for i in 0..b {
+                let pos = kv.pos(i);
                 let qrow = q.row_mut(i);
                 for hd in 0..cfg.n_heads {
                     self.rope.apply(
@@ -534,13 +720,13 @@ impl QuantModel {
                 }
             }
             let mut att_out = Mat::zeros(b, cfg.dim);
-            for (i, (cache, _)) in batch.iter_mut().enumerate() {
-                cache.layers[li].0.push(k.row(i));
-                cache.layers[li].1.push(v.row(i));
+            for i in 0..b {
+                let pos = kv.pos(i);
+                kv.push_row(i, li, pos, k.row(i), v.row(i));
                 // view this sequence's keys/values (INT4 dequantizes into
                 // reusable scratch; fp32 borrows with no copy)
-                let keys = cache.layers[li].0.view(&mut k_scratch);
-                let vals = cache.layers[li].1.view(&mut v_scratch);
+                let (keys, vals) =
+                    kv.view_rows(i, li, &mut k_scratch, &mut v_scratch);
                 attend_single(
                     q.row(i),
                     keys,
@@ -574,8 +760,8 @@ impl QuantModel {
                 }
             }
         }
-        for (cache, _) in batch.iter_mut() {
-            cache.pos += 1;
+        for i in 0..b {
+            kv.advance(i, 1);
         }
         for i in 0..b {
             let row = x.row(i).to_vec();

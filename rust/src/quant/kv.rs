@@ -103,6 +103,77 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_group_larger_than_len() {
+        // group clamps to len: one scale, error still half-step bounded
+        check("kv-group-gt-len", Config::default(), |rng, _| {
+            let n = 1 + rng.below(31);
+            let group = n + 1 + rng.below(256);
+            let x = rng.normal_vec(n);
+            let q = QuantVec::quantize(&x, group);
+            if q.group != n.max(1) || q.scales.len() != 1 {
+                return Err(format!("group {} scales {}", q.group, q.scales.len()));
+            }
+            let y = q.dequantize();
+            let s = q.scales[0];
+            for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                if (a - b).abs() > s / 2.0 + 1e-6 {
+                    return Err(format!("at {i}: {a} vs {b} (s={s})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_len_not_divisible_by_group() {
+        // ragged tail group: scale indexing i/group still lands on the
+        // right (smaller) last group
+        check("kv-ragged-tail", Config::default(), |rng, _| {
+            let group = 2 + rng.below(15);
+            let n = group * (1 + rng.below(4)) + 1 + rng.below(group - 1);
+            let x = rng.normal_vec(n);
+            let q = QuantVec::quantize(&x, group);
+            if q.scales.len() != n.div_ceil(group) {
+                return Err(format!(
+                    "n={n} group={group}: {} scales",
+                    q.scales.len()
+                ));
+            }
+            let y = q.dequantize();
+            for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                let s = q.scales[i / q.group];
+                if (a - b).abs() > s / 2.0 + 1e-6 {
+                    return Err(format!("at {i}: {a} vs {b} (s={s})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_zero_segments_roundtrip_exactly() {
+        // zero groups hit the scale floor (1e-8) and must decode to 0.0,
+        // without poisoning neighbouring non-zero groups
+        let mut x = vec![0.0f32; 48];
+        for v in x.iter_mut().skip(32) {
+            *v = 1.5;
+        }
+        let q = QuantVec::quantize(&x, 16);
+        assert_eq!(q.scales.len(), 3);
+        let y = q.dequantize();
+        for (i, &v) in y.iter().enumerate().take(32) {
+            assert_eq!(v, 0.0, "zero segment decoded to {v} at {i}");
+        }
+        for (i, &v) in y.iter().enumerate().skip(32) {
+            assert!((v - 1.5).abs() < 0.2, "at {i}: {v}");
+        }
+        // fully-zero vector, group > len
+        let z = QuantVec::quantize(&[0.0; 7], 64);
+        assert!(z.dequantize().iter().all(|&v| v == 0.0));
+        assert!(z.scales[0] > 0.0);
+    }
+
+    #[test]
     fn fake_quant_idempotent() {
         let mut rng = crate::util::rng::Pcg::new(1);
         let mut x = rng.normal_vec(64);

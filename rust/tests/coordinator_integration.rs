@@ -1,16 +1,18 @@
 //! Coordinator integration: continuous batching over the rust engine,
-//! backpressure, metrics, TCP server protocol.  Uses a small random model
-//! (no artifacts needed) so it runs in any checkout.
+//! backpressure, metrics, TCP server protocol, and the paged KV-pool
+//! backend (prefix sharing + scheduler preemption).  Uses a small random
+//! model (no artifacts needed) so it runs in any checkout.
 
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::kvpool::PagedEngine;
 use rrs::model::sampler::Sampling;
 use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
 use rrs::quant::{Method, Scheme};
 
-fn tiny_engine(method: Method, scheme: Scheme) -> RustServeEngine {
+fn tiny_model(method: Method, scheme: Scheme) -> QuantModel {
     let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
     let w = Weights::random(&cfg, 42);
     let calib: Vec<u32> = (0..128u32).map(|i| (i * 53 + 7) % 256).collect();
@@ -21,8 +23,11 @@ fn tiny_engine(method: Method, scheme: Scheme) -> RustServeEngine {
         gptq: false,
         ..Default::default()
     };
-    let model = QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap();
-    RustServeEngine::new(model)
+    QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap()
+}
+
+fn tiny_engine(method: Method, scheme: Scheme) -> RustServeEngine {
+    RustServeEngine::new(tiny_model(method, scheme))
 }
 
 #[test]
@@ -170,6 +175,97 @@ fn server_protocol_lines() {
     assert_eq!(s.get("ok").and_then(|v| v.as_bool()), Some(true));
     assert!(stop.load(std::sync::atomic::Ordering::Relaxed));
     coord.shutdown();
+}
+
+#[test]
+fn paged_pool_oversubscribed_completes_with_prefix_sharing() {
+    // Pool of 8 blocks x 8 positions = 64 cached positions total, but 12
+    // concurrent requests of 24-token prompts + 8 new tokens would need
+    // 12 * 4 = 48 blocks held flat.  With two distinct prompts the shared
+    // prefixes collapse to a handful of blocks; admission gating +
+    // preemption must complete every request without deadlock.
+    let model = tiny_model(Method::Rtn, Scheme::A4W4KV4);
+    let paged = PagedEngine::new(model, 8, 8);
+    let coord = Arc::new(Coordinator::start(
+        paged,
+        SchedulerConfig { max_batch: 4, queue_capacity: 64, ..Default::default() },
+    ));
+    let prompt_a: Vec<u32> = (0..24u32).map(|i| (i * 7 + 3) % 256).collect();
+    let prompt_b: Vec<u32> = (0..24u32).map(|i| (i * 11 + 90) % 256).collect();
+    let mut handles = Vec::new();
+    for i in 0..12u32 {
+        let c = coord.clone();
+        let prompt = if i % 2 == 0 { prompt_a.clone() } else { prompt_b.clone() };
+        handles.push(std::thread::spawn(move || {
+            c.generate(prompt, 8, Sampling::Greedy, None).unwrap()
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(
+            resp.finish_reason,
+            rrs::coordinator::request::FinishReason::MaxTokens
+        );
+        assert_eq!(resp.tokens.len(), 8);
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 12);
+    // the acceptance gate: prefix sharing actually happened
+    assert!(
+        coord.metrics.prefix_hit_tokens.load(Ordering::Relaxed) > 0,
+        "prefix cache never hit"
+    );
+    assert!(coord.metrics.prefix_hit_rate() > 0.0);
+}
+
+#[test]
+fn paged_pool_exhaustion_preempts_and_recovers() {
+    // 7 blocks x 8 positions: two 16-token prompts fit at admission, but
+    // both growing to 40 tokens (5 blocks each) cannot coexist — the
+    // scheduler must preempt one to the queue and finish it afterwards.
+    let model = tiny_model(Method::Rtn, Scheme::A4W4KV4);
+    let paged = PagedEngine::new(model, 7, 8);
+    let coord = Arc::new(Coordinator::start(
+        paged,
+        SchedulerConfig { max_batch: 2, queue_capacity: 16, ..Default::default() },
+    ));
+    let mut handles = Vec::new();
+    for i in 0..2u32 {
+        let c = coord.clone();
+        // distinct prompts: no prefix sharing can rescue capacity
+        let prompt: Vec<u32> = (0..16u32).map(|j| (j * 17 + i * 101 + 1) % 256).collect();
+        handles.push(std::thread::spawn(move || {
+            c.generate(prompt, 24, Sampling::Greedy, None).unwrap()
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.tokens.len(), 24);
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 2);
+    assert!(
+        coord.metrics.preemptions.load(Ordering::Relaxed) >= 1,
+        "pool exhaustion must preempt"
+    );
+}
+
+#[test]
+fn paged_greedy_matches_flat_engine_output() {
+    // same model weights, same prompt: the paged coordinator must emit
+    // exactly the tokens the flat coordinator emits
+    let flat = Coordinator::start(
+        tiny_engine(Method::Rtn, Scheme::A4W4KV4),
+        SchedulerConfig::default(),
+    );
+    let paged = Coordinator::start(
+        PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
+        SchedulerConfig::default(),
+    );
+    let prompt: Vec<u32> = vec![9, 77, 140, 3, 52];
+    let a = flat.generate(prompt.clone(), 10, Sampling::Greedy, None).unwrap();
+    let b = paged.generate(prompt, 10, Sampling::Greedy, None).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    flat.shutdown();
+    paged.shutdown();
 }
 
 #[test]
