@@ -1,7 +1,10 @@
-//! Engine abstraction the scheduler drives: the pure-rust INT4 engine is
-//! the default backend; the paged-pool backend (kvpool::PagedEngine) adds
-//! block-governed memory with prefix sharing; the PJRT executor
-//! (runtime::PjrtEngine) can serve the same trait for the AOT-graph path.
+//! Engine abstraction the scheduler drives.  Three backends implement
+//! it: the pure-rust INT4 engine ([`RustServeEngine`], flat per-sequence
+//! caches), the paged-pool backend ([`PagedEngine`], block-governed
+//! memory with prefix sharing), and the AOT-graph backend
+//! ([`crate::runtime::PagedPjrtEngine`]), which runs compiled PJRT
+//! decode graphs over the *same* paged pool — so admission, prefix
+//! sharing and preemption behave identically on every serving path.
 
 use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
@@ -18,8 +21,20 @@ pub trait ServeEngine: Send + Sync {
     fn new_seq(&self) -> Self::Seq;
 
     /// Prefill `tokens` into the sequence; returns logits of the LAST
-    /// position [vocab].
+    /// position, `[vocab]`-shaped.
     fn prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Vec<f32>;
+
+    /// Fallible prefill for capacity-gated backends.  `None` means the
+    /// backend could not reserve KV memory for this prompt *right now* —
+    /// a request that passed [`can_admit`](ServeEngine::can_admit) can
+    /// still lose its blocks to an earlier admission in the same
+    /// scheduler round, and paged backends re-check jointly at
+    /// reservation time.  On `None` the sequence is left released and
+    /// the scheduler re-queues the request.  Backends without a capacity
+    /// gate never fail.
+    fn try_prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Option<Vec<f32>> {
+        Some(self.prefill(seq, tokens))
+    }
 
     /// Advance every sequence by one token; returns logits [B, vocab].
     fn decode(&self, batch: &mut [(&mut Self::Seq, u32)]) -> Mat;
@@ -119,6 +134,10 @@ impl ServeEngine for PagedEngine {
 
     fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
         PagedEngine::prefill(self, seq, tokens)
+    }
+
+    fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
+        PagedEngine::try_prefill(self, seq, tokens)
     }
 
     fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {

@@ -8,6 +8,18 @@ use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 
 /// Coordinator-wide metrics (thread-safe).
+///
+/// # Examples
+///
+/// ```
+/// use rrs::coordinator::Metrics;
+///
+/// let m = Metrics::new();
+/// m.observe_completion(12.0, 2.0, 6); // total_ms, queue_ms, tokens
+/// let snap = m.snapshot_json();
+/// assert_eq!(snap.get("completed").unwrap().as_usize(), Some(1));
+/// assert_eq!(snap.get("tokens_generated").unwrap().as_usize(), Some(6));
+/// ```
 #[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,

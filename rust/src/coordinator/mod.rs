@@ -6,14 +6,18 @@
 //! Built on std threads + channels (tokio is not vendored in this
 //! environment); the design mirrors a vLLM-style router: frontends submit
 //! [`request::Request`]s into a bounded [`queue::RequestQueue`]; the
-//! worker runs [`scheduler::Scheduler`], which admits waiting requests
-//! into the active set (prefill) and steps all active sequences one token
-//! per iteration (continuous batching), retiring finished sequences.
+//! worker thread started by [`scheduler::Coordinator`] admits waiting
+//! requests into the active set (prefill) and steps all active sequences
+//! one token per iteration (continuous batching), retiring finished
+//! sequences.
 //!
-//! Two engine backends serve the scheduler: the flat per-sequence cache
-//! ([`RustServeEngine`]) and the paged INT4 KV pool
-//! ([`crate::kvpool::PagedEngine`]) — the latter gates admission on block
-//! availability, shares prompt-prefix blocks across requests, and is
+//! Three engine backends serve the scheduler: the flat per-sequence
+//! cache ([`RustServeEngine`]), the paged INT4 KV pool
+//! ([`crate::kvpool::PagedEngine`]), and the AOT PJRT-graph backend
+//! ([`crate::runtime::PagedPjrtEngine`]) running over the *same* pool.
+//! Paged backends gate admission prefix-aware (a prompt is charged only
+//! for its unshared suffix blocks), share prompt-prefix blocks across
+//! requests — including partial-block tails via copy-on-write — and are
 //! preempted back to the queue when the pool runs dry.
 
 pub mod engine_iface;

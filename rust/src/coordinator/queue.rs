@@ -8,6 +8,30 @@ use super::request::{Request, SubmitError};
 
 /// MPMC bounded FIFO; producers fail fast when full (shed load rather
 /// than queue unboundedly — the serving-side backpressure policy).
+///
+/// # Examples
+///
+/// ```
+/// use rrs::coordinator::{Request, RequestQueue};
+/// use rrs::model::sampler::Sampling;
+/// use std::time::{Duration, Instant};
+///
+/// let q = RequestQueue::new(2);
+/// let (tx, _rx) = std::sync::mpsc::channel();
+/// q.submit(Request {
+///     id: 1,
+///     prompt: vec![1, 2],
+///     max_new_tokens: 4,
+///     sampling: Sampling::Greedy,
+///     stop_token: None,
+///     submitted_at: Instant::now(),
+///     reply: tx,
+/// })
+/// .unwrap();
+/// let batch = q.pop_batch(8, Duration::ZERO);
+/// assert_eq!(batch.len(), 1);
+/// assert_eq!(batch[0].id, 1);
+/// ```
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cv: Condvar,

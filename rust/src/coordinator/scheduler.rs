@@ -3,7 +3,11 @@
 //! One worker thread owns the engine.  Each loop iteration:
 //!   1. **admit** — while the active set has room *and the backend's KV
 //!      capacity gate passes*, pop waiting requests (preempted ones
-//!      first), prefill their prompts into fresh sequences;
+//!      first), prefill their prompts into fresh sequences.  Paged
+//!      backends gate prefix-aware: a prompt is charged only for its
+//!      unshared suffix blocks, and the reservation inside
+//!      `try_prefill` re-checks jointly so same-round admissions cannot
+//!      oversubscribe the pool;
 //!   2. **reserve** — every active sequence must be able to grow by one
 //!      token; when the paged pool is exhausted, the most recently
 //!      admitted sequence is preempted back to the queue
@@ -281,22 +285,29 @@ fn run_loop<E: ServeEngine>(
 
         // prefill admitted requests
         for p in incoming {
-            // joint-capacity re-check: the admissions ahead of this one in
-            // the same round consumed blocks the gate did not see, so an
-            // individually-admissible request may no longer fit — defer it
-            // (with priority) instead of letting prefill hit the pool's
-            // exhaustion assert
-            if !engine.can_admit(&p.full_prompt) {
-                preempted.push_back(p);
-                continue;
-            }
             let Pending { req, mut generated, full_prompt, queue_ms, prior_prefill_ms } =
                 p;
-            let queue_ms = queue_ms
+            let measured_queue_ms = queue_ms
                 .unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f32() * 1e3);
             let t0 = Instant::now();
             let mut seq = engine.new_seq();
-            let logits = engine.prefill(&mut seq, &full_prompt);
+            // joint-capacity re-check at reservation time: the admissions
+            // ahead of this one in the same round consumed blocks the
+            // can_admit gate did not see, so an individually-admissible
+            // request may no longer fit — try_prefill reserves (or
+            // refuses) atomically under the pool lock, and a refused
+            // request is deferred instead of hitting an exhaustion panic
+            let Some(logits) = engine.try_prefill(&mut seq, &full_prompt) else {
+                preempted.push_back(Pending {
+                    req,
+                    generated,
+                    full_prompt,
+                    queue_ms,
+                    prior_prefill_ms,
+                });
+                continue;
+            };
+            let queue_ms = measured_queue_ms;
             metrics
                 .prefill_tokens
                 .fetch_add(full_prompt.len() as u64, Ordering::Relaxed);

@@ -73,7 +73,7 @@ pub fn prob_less_smooth_after_rotation(x: &Mat) -> f32 {
 
 /// Spike-outlier histogram (Fig. 7): per token, magnitudes x/median(|t|),
 /// counted into the paper's intervals.  Returns (edges, counts) where
-/// counts[i] = #elements with ratio in [edges[i-1], edges[i]).
+/// `counts[i]` = #elements with ratio in `[edges[i-1], edges[i])`.
 pub fn outlier_histogram(x: &Mat, edges: &[f32]) -> Vec<usize> {
     let mut ratios = Vec::new();
     for i in 0..x.rows {

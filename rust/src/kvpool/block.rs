@@ -59,6 +59,23 @@ impl KvBlock {
             bytes: self.bytes,
         }
     }
+
+    /// Deep copy of the first `rows` positions of every layer — the
+    /// partial-block tail-sharing flavour of copy-on-write (rows are
+    /// independently quantized, so a row-boundary cut is exact).
+    pub fn clone_prefix(&self, rows: usize) -> KvBlock {
+        let mut bytes = 0usize;
+        let layers = self
+            .layers
+            .iter()
+            .map(|(k, v)| {
+                let (kt, vt) = (k.truncated(rows), v.truncated(rows));
+                bytes += kt.bytes() + vt.bytes();
+                (kt, vt)
+            })
+            .collect();
+        KvBlock { layers, bytes }
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +99,24 @@ mod tests {
         assert_eq!(b.fill(), 0);
         assert_eq!(b.bytes, 0);
         assert_eq!(copy.fill(), 2);
+    }
+
+    #[test]
+    fn clone_prefix_cuts_at_row_boundary() {
+        let mut b = KvBlock::new(2, 4, 8);
+        for pos in 0..4 {
+            let row = vec![pos as f32; 16];
+            b.push(0, &row, &row);
+            b.push(1, &row, &row);
+        }
+        let head = b.clone_prefix(3);
+        assert_eq!(head.fill(), 3);
+        assert!(head.bytes > 0 && head.bytes < b.bytes);
+        // the copied rows decode to the source's leading rows
+        let mut out = Vec::new();
+        head.layers[1].0.row_into(2, &mut out);
+        assert!((out[0] - 2.0).abs() < 0.5);
+        // clamped when asked for more rows than stored
+        assert_eq!(b.clone_prefix(9).fill(), 4);
     }
 }

@@ -17,7 +17,9 @@ use super::block::BlockId;
 use super::pool::{KvPool, KvPoolConfig, PoolStats, HASH_SEED};
 
 /// Per-sequence state on the paged backend: a block table plus the token
-/// history needed to seal full blocks into the prefix cache.
+/// history needed to seal full blocks into the prefix cache.  Shared by
+/// every pool-governed engine — the interpreted [`PagedEngine`] here and
+/// the AOT [`crate::runtime::PagedPjrtEngine`].
 pub struct PagedSeq {
     /// Pool blocks covering positions `[0, len)`, in order.
     pub table: Vec<BlockId>,
@@ -26,9 +28,9 @@ pub struct PagedSeq {
     /// Tokens whose K/V rows are cached (`tokens.len() == len`).
     pub tokens: Vec<u32>,
     /// Blocks already sealed into the prefix map.
-    sealed_blocks: usize,
+    pub(crate) sealed_blocks: usize,
     /// Chain hash up to `sealed_blocks`.
-    chain: u64,
+    pub(crate) chain: u64,
 }
 
 impl PagedSeq {
@@ -47,6 +49,39 @@ impl Default for PagedSeq {
     fn default() -> Self {
         PagedSeq::new()
     }
+}
+
+/// The prefill skeleton every pool-governed backend shares (interpreted
+/// [`PagedEngine`] and the AOT `runtime::PagedPjrtEngine`): pin the
+/// cached prompt prefix, then reserve the unshared suffix *plus one
+/// decode-headroom block* — the exact charge
+/// [`KvPool::can_fit_prompt`](crate::kvpool::KvPool::can_fit_prompt)
+/// accounts for.  Returns the matched token count, or `None` with the
+/// sequence fully released when the reservation fails.
+pub(crate) fn begin_paged_prefill(
+    pool: &mut KvPool,
+    seq: &mut PagedSeq,
+    tokens: &[u32],
+) -> Option<usize> {
+    debug_assert!(seq.len == 0 && seq.table.is_empty(), "prefill on a live seq");
+    let matched = pool.match_prefix(tokens, &mut seq.table);
+    seq.len = matched;
+    seq.tokens.extend_from_slice(tokens);
+    if !pool.reserve(&mut seq.table, tokens.len() + 1) {
+        pool.release_seq(&mut seq.table);
+        *seq = PagedSeq::new();
+        return None;
+    }
+    Some(matched)
+}
+
+/// Seal the sequence's newly-filled full blocks into the prefix cache
+/// (the closing half of the shared prefill/decode skeleton).
+pub(crate) fn seal_paged_seq(pool: &mut KvPool, seq: &mut PagedSeq) {
+    let (sealed, chain) =
+        pool.seal_full_blocks(&seq.table, &seq.tokens, seq.sealed_blocks, seq.chain);
+    seq.sealed_blocks = sealed;
+    seq.chain = chain;
 }
 
 /// [`KvSeqBatch`] adapter: a batch of paged sequences sharing one pool.
@@ -109,28 +144,33 @@ impl PagedEngine {
 
     /// Prefill a fresh sequence: pin whatever prompt prefix the pool has
     /// cached, forward only the suffix, then seal the new full blocks.
-    /// Returns the logits of the last position.
+    /// Returns the logits of the last position.  Panics when the pool
+    /// cannot hold the prompt — admission must gate capacity; use
+    /// [`try_prefill`](PagedEngine::try_prefill) for the fallible form.
     pub fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
+        self.try_prefill(seq, tokens)
+            .expect("kvpool exhausted during prefill (admission must gate on capacity)")
+    }
+
+    /// Fallible prefill: under one pool lock, pin the cached prompt
+    /// prefix (full blocks zero-copy, a mid-block tail by copy), reserve
+    /// the unshared suffix plus one decode-headroom block, and forward
+    /// the suffix.  Returns `None` — with the sequence fully released —
+    /// when the reservation fails, which is the race-safe re-check
+    /// behind [`can_admit`](PagedEngine::can_admit): a request admitted
+    /// by the gate can still lose its blocks to an earlier admission in
+    /// the same scheduler round.
+    pub fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
         let mut pool = self.pool.lock().unwrap();
-        debug_assert!(seq.len == 0 && seq.table.is_empty(), "prefill on a live seq");
-        let matched = pool.match_prefix(tokens, &mut seq.table);
-        seq.len = matched;
-        seq.tokens.extend_from_slice(tokens);
-        assert!(
-            pool.reserve(&mut seq.table, tokens.len()),
-            "kvpool exhausted during prefill (admission must gate on capacity)"
-        );
+        let matched = begin_paged_prefill(&mut pool, seq, tokens)?;
         let suffix = &tokens[matched..];
         let logits = {
             let mut seqs = [&mut *seq];
             let mut batch = PagedKvBatch { pool: &mut *pool, seqs: &mut seqs };
             self.model.forward_seq(suffix, &mut batch, 0)
         };
-        let (sealed, chain) =
-            pool.seal_full_blocks(&seq.table, &seq.tokens, seq.sealed_blocks, seq.chain);
-        seq.sealed_blocks = sealed;
-        seq.chain = chain;
-        logits.row(logits.rows - 1).to_vec()
+        seal_paged_seq(&mut pool, seq);
+        Some(logits.row(logits.rows - 1).to_vec())
     }
 
     /// One batched decode step; mirrors
@@ -152,14 +192,7 @@ impl PagedEngine {
             self.model.decode_step(&mut pb, &tokens)
         };
         for (seq, _) in batch.iter_mut() {
-            let (sealed, chain) = pool.seal_full_blocks(
-                &seq.table,
-                &seq.tokens,
-                seq.sealed_blocks,
-                seq.chain,
-            );
-            seq.sealed_blocks = sealed;
-            seq.chain = chain;
+            seal_paged_seq(&mut pool, seq);
         }
         logits
     }
@@ -172,12 +205,14 @@ impl PagedEngine {
         *seq = PagedSeq::new();
     }
 
-    /// Can a prompt of this shape be admitted right now?  Conservative:
-    /// ignores that matched prefix blocks arrive pre-filled, so it never
-    /// over-admits.
+    /// Can a prompt of this shape be admitted right now?  Prefix-aware:
+    /// the prompt is charged only for its *unshared* suffix blocks (plus
+    /// one decode-headroom block) — cached prefix blocks arrive
+    /// pre-filled, so a 90%-shared prompt fits into a pool with room for
+    /// just its tail.  [`try_prefill`](PagedEngine::try_prefill) re-checks
+    /// at reservation time, keeping same-round admission races safe.
     pub fn can_admit(&self, prompt: &[u32]) -> bool {
-        let pool = self.pool.lock().unwrap();
-        pool.blocks_for(prompt.len() + 1) <= pool.available()
+        self.pool.lock().unwrap().can_fit_prompt(prompt)
     }
 
     /// Ensure `seq` can grow by one token; `false` = preempt first.

@@ -9,12 +9,20 @@
 //!   as the flat cache (so paged attention is bit-identical);
 //! * [`pool::KvPool`] — free-list allocation over a bounded slab,
 //!   refcounted block sharing, a chain-hashed prefix cache with verified
-//!   hits and copy-on-write, and LRU eviction of released sealed blocks;
+//!   hits, copy-on-write (including partial-block tail adoption for
+//!   prefixes that end mid-block), LRU eviction of released sealed
+//!   blocks, and exact prefix-aware admission accounting
+//!   ([`pool::KvPool::can_fit_prompt`]);
 //! * [`engine::PagedEngine`] — the serving backend: prefill with prompt
 //!   prefix reuse + batched decode over block tables, implementing the
 //!   coordinator's `ServeEngine` trait (see
-//!   `crate::coordinator::engine_iface`), which gates admission on block
-//!   availability and preempts to the queue when the pool runs dry.
+//!   `crate::coordinator::engine_iface`), which charges admission only
+//!   for a prompt's unshared suffix and preempts to the queue when the
+//!   pool runs dry.
+//!
+//! The AOT PJRT path ([`crate::runtime::PagedPjrtEngine`]) runs over the
+//! same pool, so every backend shares one allocator, prefix cache, and
+//! admission gate.
 //!
 //! [`KvStore`]: crate::model::engine::KvStore
 

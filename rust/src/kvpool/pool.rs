@@ -4,6 +4,21 @@
 //! Blocks are sealed into the prefix map only when full, so shared
 //! blocks are immutable by construction; copy-on-write in
 //! [`KvPool::append_row`] guards the invariant anyway.
+//!
+//! Two prefix-reuse mechanisms feed [`KvPool::match_prefix`]:
+//!
+//! * **full-block hits** — the chain-hash walk pins sealed blocks
+//!   directly into the new sequence's table (zero-copy sharing);
+//! * **partial-block tail hits** — when the shared prefix ends
+//!   mid-block, the sealed sibling that extends the chain is found via
+//!   the parent-hash index and its leading rows are copied into a fresh
+//!   unsealed block (the copy-on-write path), so those tokens still
+//!   skip the forward pass.
+//!
+//! [`KvPool::can_fit_prompt`] is the admission-side mirror: it charges a
+//! prompt only for the blocks `match_prefix` + [`KvPool::reserve`] would
+//! actually allocate, which is what lets the scheduler admit many more
+//! concurrent sequences under shared-prefix traffic.
 
 use std::collections::HashMap;
 
@@ -55,6 +70,9 @@ pub struct PoolStats {
     pub prefix_query_tokens: u64,
     pub prefix_hit_tokens: u64,
     pub prefix_hit_blocks: u64,
+    /// Prefix hits that ended mid-block and were served by copying the
+    /// shared rows into a fresh block (partial-block tail sharing).
+    pub prefix_partial_hits: u64,
     pub evictions: u64,
     pub cow_copies: u64,
 }
@@ -64,24 +82,67 @@ struct Slot {
     refcount: u32,
     /// Chain hash once sealed + registered in the prefix map.
     hash: Option<u64>,
+    /// Chain hash of the prefix *before* this block (children-index key;
+    /// meaningful only while `hash` is set).
+    parent: u64,
     /// Token ids this sealed block covers (verifies map hits).
     tokens: Vec<u32>,
     /// LRU stamp, updated when the refcount drops to 0.
     last_use: u64,
 }
 
+/// Result of one prefix-cache walk over a prompt.
+struct PrefixWalk {
+    /// Tokens covered by full-block hits.
+    matched: usize,
+    /// The sealed blocks serving those tokens, in chain order.
+    hits: Vec<BlockId>,
+    /// Mid-block tail candidate: a sealed sibling of the first
+    /// non-matching block and how many of its leading rows the prompt
+    /// shares (always leaves at least one prompt token to forward).
+    partial: Option<(BlockId, usize)>,
+}
+
 /// The paged KV pool.
+///
+/// # Examples
+///
+/// Reserve a block table for a sequence, then release it; unsealed
+/// blocks return straight to the free list:
+///
+/// ```
+/// use rrs::kvpool::{KvPool, KvPoolConfig};
+///
+/// let mut pool = KvPool::new(KvPoolConfig {
+///     n_blocks: 4,
+///     block_size: 8,
+///     n_layers: 1,
+///     kv_bits: 4,
+///     kv_group: 8,
+/// });
+/// let mut table = Vec::new();
+/// assert!(pool.reserve(&mut table, 20)); // ceil(20/8) = 3 of 4 blocks
+/// assert_eq!(table.len(), 3);
+/// assert_eq!(pool.available(), 1);
+/// assert!(!pool.can_fit_prompt(&[1, 2, 3, 4, 5, 6, 7, 8, 9])); // needs 2
+/// pool.release_seq(&mut table);
+/// assert_eq!(pool.available(), 4);
+/// ```
 pub struct KvPool {
     cfg: KvPoolConfig,
     slots: Vec<Slot>,
     free: Vec<BlockId>,
     /// chain hash of a sealed full block -> its slot.
     prefix_map: HashMap<u64, BlockId>,
+    /// chain hash of a prefix -> sealed blocks extending it (partial
+    /// tail-sharing candidates).
+    children: HashMap<u64, Vec<BlockId>>,
     tick: u64,
     prefix_queries: u64,
     prefix_query_tokens: u64,
     prefix_hit_tokens: u64,
     prefix_hit_blocks: u64,
+    prefix_partial_hits: u64,
     evictions: u64,
     cow_copies: u64,
 }
@@ -94,6 +155,7 @@ impl KvPool {
                 block: KvBlock::new(cfg.n_layers, cfg.kv_bits, cfg.kv_group),
                 refcount: 0,
                 hash: None,
+                parent: HASH_SEED,
                 tokens: Vec::new(),
                 last_use: 0,
             })
@@ -105,11 +167,13 @@ impl KvPool {
             slots,
             free,
             prefix_map: HashMap::new(),
+            children: HashMap::new(),
             tick: 0,
             prefix_queries: 0,
             prefix_query_tokens: 0,
             prefix_hit_tokens: 0,
             prefix_hit_blocks: 0,
+            prefix_partial_hits: 0,
             evictions: 0,
             cow_copies: 0,
         }
@@ -164,7 +228,14 @@ impl KvPool {
             .map(|(i, _)| i as BlockId)?;
         let slot = &mut self.slots[id as usize];
         let h = slot.hash.take().expect("cached block has a hash");
+        let parent = slot.parent;
         self.prefix_map.remove(&h);
+        if let Some(kids) = self.children.get_mut(&parent) {
+            kids.retain(|&k| k != id);
+            if kids.is_empty() {
+                self.children.remove(&parent);
+            }
+        }
         slot.tokens.clear();
         slot.block.reset(self.cfg.kv_bits, self.cfg.kv_group);
         self.evictions += 1;
@@ -186,48 +257,120 @@ impl KvPool {
         true
     }
 
-    /// The one prefix-cache walk both entry points share: chain-hash the
+    /// The one prefix-cache walk every entry point shares: chain-hash the
     /// prompt's full blocks through the map, verifying each hit's tokens
-    /// (hash-collision guard) and always leaving at least one prompt
-    /// token for the forward pass.  Returns (matched tokens, hit blocks).
-    fn walk_prefix(&self, tokens: &[u32]) -> (usize, Vec<BlockId>) {
+    /// (hash-collision guard), then look for a partial-tail sibling of
+    /// the first non-matching block via the children index.  At least one
+    /// prompt token is always left for the forward pass.
+    fn walk_prefix(&self, tokens: &[u32]) -> PrefixWalk {
         let bs = self.cfg.block_size;
         let mut h = HASH_SEED;
         let mut matched = 0usize;
         let mut hits = Vec::new();
         while matched + bs < tokens.len() {
             let seg = &tokens[matched..matched + bs];
-            h = chain_hash(h, seg);
-            let Some(id) = self.prefix_map.get(&h).copied() else { break };
+            let hn = chain_hash(h, seg);
+            let Some(id) = self.prefix_map.get(&hn).copied() else { break };
             if self.slots[id as usize].tokens.as_slice() != seg {
                 break; // hash collision: do not serve foreign rows
             }
             hits.push(id);
             matched += bs;
+            h = hn;
         }
-        (matched, hits)
+        // partial tail: among the sealed blocks extending the matched
+        // chain, share the longest run of leading rows the prompt agrees
+        // with (capped so one token is always left to forward)
+        let mut partial = None;
+        if matched < tokens.len() {
+            let rest = &tokens[matched..tokens.len() - 1];
+            let mut best = 0usize;
+            if let Some(kids) = self.children.get(&h) {
+                for &id in kids {
+                    let ts = &self.slots[id as usize].tokens;
+                    let n = ts.iter().zip(rest).take_while(|(a, b)| a == b).count();
+                    if n > best {
+                        best = n;
+                        partial = Some((id, n));
+                    }
+                }
+            }
+        }
+        PrefixWalk { matched, hits, partial }
     }
 
-    /// Walk the prompt's full blocks through the prefix map, pinning every
-    /// hit into `table`.  Returns the number of matched tokens; at least
-    /// one prompt token is always left for the forward pass.
+    /// Walk the prompt through the prefix cache, pinning every full-block
+    /// hit into `table` and adopting a partial tail block (copy-on-write
+    /// of its shared leading rows) when the prefix ends mid-block.
+    /// Returns the number of matched tokens; at least one prompt token is
+    /// always left for the forward pass.
     pub fn match_prefix(&mut self, tokens: &[u32], table: &mut Vec<BlockId>) -> usize {
         self.prefix_queries += 1;
         self.prefix_query_tokens += tokens.len() as u64;
-        let (matched, hits) = self.walk_prefix(tokens);
-        for &id in &hits {
+        let walk = self.walk_prefix(tokens);
+        for &id in &walk.hits {
             self.slots[id as usize].refcount += 1;
             table.push(id);
         }
-        self.prefix_hit_blocks += hits.len() as u64;
+        let mut matched = walk.matched;
+        if let Some((src, rows)) = walk.partial {
+            if rows > 0 {
+                // best-effort: when no block can be spared the caller
+                // simply forwards those tokens instead
+                if let Some(copy) = self.adopt_partial(src, rows) {
+                    table.push(copy);
+                    matched += rows;
+                    self.prefix_partial_hits += 1;
+                    self.cow_copies += 1;
+                }
+            }
+        }
+        self.prefix_hit_blocks += walk.hits.len() as u64;
         self.prefix_hit_tokens += matched as u64;
         matched
     }
 
-    /// Read-only prefix probe (admission gating): matched token count,
-    /// with no refcounting and no counter updates.
+    /// Copy the first `rows` positions of sealed block `src` into a fresh
+    /// unsealed block (partial-block tail sharing: the adopting sequence
+    /// appends its own tail after them).  `None` = no block to spare.
+    fn adopt_partial(&mut self, src: BlockId, rows: usize) -> Option<BlockId> {
+        // pin src so alloc()'s LRU eviction cannot reclaim it mid-copy
+        self.slots[src as usize].refcount += 1;
+        let got = self.alloc();
+        let out = got.map(|id| {
+            let data = self.slots[src as usize].block.clone_prefix(rows);
+            self.slots[id as usize].block = data;
+            id
+        });
+        self.release_block(src);
+        out
+    }
+
+    /// Read-only prefix probe: matched token count (full-block plus
+    /// partial-tail), with no refcounting and no counter updates.
     pub fn probe_prefix(&self, tokens: &[u32]) -> usize {
-        self.walk_prefix(tokens).0
+        let walk = self.walk_prefix(tokens);
+        walk.matched + walk.partial.map_or(0, |(_, n)| n)
+    }
+
+    /// Exact admission accounting: can a prompt of this shape be matched
+    /// + reserved right now (including one decode-headroom block)?  The
+    /// prompt is charged only for its *unshared* suffix blocks — full
+    /// prefix hits arrive pre-filled and are excluded — while hit blocks
+    /// that are currently evictable are excluded from the supply side
+    /// (pinning them removes them from the eviction pool).  This mirrors
+    /// [`match_prefix`](KvPool::match_prefix) +
+    /// [`reserve`](KvPool::reserve) exactly, so a prompt admitted with no
+    /// concurrent pool mutation is guaranteed to reserve.
+    pub fn can_fit_prompt(&self, tokens: &[u32]) -> bool {
+        let walk = self.walk_prefix(tokens);
+        let evictable_hits = walk
+            .hits
+            .iter()
+            .filter(|&&id| self.slots[id as usize].refcount == 0)
+            .count();
+        let needed = self.blocks_for(tokens.len() + 1) - walk.hits.len();
+        needed <= self.free.len() + self.cached_count() - evictable_hits
     }
 
     /// Append one K/V row pair at absolute position `pos` of the sequence
@@ -308,25 +451,28 @@ impl KvPool {
         let bs = self.cfg.block_size;
         while (sealed + 1) * bs <= tokens.len() {
             let seg = &tokens[sealed * bs..(sealed + 1) * bs];
+            let parent = chain;
             chain = chain_hash(chain, seg);
             let id = table[sealed];
             if self.slots[id as usize].block.fill() < bs {
                 break; // not yet full for every position
             }
-            self.register_sealed(id, chain, seg);
+            self.register_sealed(id, parent, chain, seg);
             sealed += 1;
         }
         (sealed, chain)
     }
 
-    fn register_sealed(&mut self, id: BlockId, hash: u64, tokens: &[u32]) {
+    fn register_sealed(&mut self, id: BlockId, parent: u64, hash: u64, tokens: &[u32]) {
         if self.prefix_map.contains_key(&hash) {
             return; // an equivalent block is already registered
         }
         let slot = &mut self.slots[id as usize];
         slot.hash = Some(hash);
+        slot.parent = parent;
         slot.tokens = tokens.to_vec();
         self.prefix_map.insert(hash, id);
+        self.children.entry(parent).or_default().push(id);
     }
 
     /// Release every block of a retiring / preempted sequence.  Sealed
@@ -373,6 +519,7 @@ impl KvPool {
             prefix_query_tokens: self.prefix_query_tokens,
             prefix_hit_tokens: self.prefix_hit_tokens,
             prefix_hit_blocks: self.prefix_hit_blocks,
+            prefix_partial_hits: self.prefix_partial_hits,
             evictions: self.evictions,
             cow_copies: self.cow_copies,
         }
@@ -439,11 +586,16 @@ mod tests {
         assert_eq!(pool.match_prefix(&other, &mut t3), 0);
         assert!(t3.is_empty());
 
-        // an exactly-block-aligned prompt leaves the last block unmatched
-        // so prefill always has at least one token to forward
+        // an exactly-block-aligned prompt full-matches the first block and
+        // partial-matches 3 rows of the second (one token is always left
+        // for the forward pass, so the last position is never served)
         let aligned: Vec<u32> = (0..8).collect();
         let mut t4 = Vec::new();
-        assert_eq!(pool.match_prefix(&aligned, &mut t4), 4);
+        assert_eq!(pool.match_prefix(&aligned, &mut t4), 7);
+        assert_eq!(t4.len(), 2);
+        assert_ne!(t4[1], t1[1], "partial tail must be a private copy");
+        assert_eq!(pool.slots[t4[1] as usize].block.fill(), 3);
+        assert_eq!(pool.stats().prefix_partial_hits, 1);
         pool.release_seq(&mut t2);
         pool.release_seq(&mut t4);
         pool.release_seq(&mut t1);
@@ -495,6 +647,96 @@ mod tests {
         assert_eq!(pool.slots[tb[0] as usize].block.fill(), 4);
         pool.release_seq(&mut tb);
         pool.release_seq(&mut ta);
+    }
+
+    #[test]
+    fn partial_tail_adoption_copies_shared_rows_only() {
+        let mut pool = KvPool::new(cfg(8, 4));
+        let tokens: Vec<u32> = (0..9).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+
+        // shares 6 tokens: block 0 fully, 2 rows into block 1
+        let probe: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 99, 98];
+        assert_eq!(pool.probe_prefix(&probe), 6);
+        let mut t2 = Vec::new();
+        assert_eq!(pool.match_prefix(&probe, &mut t2), 6);
+        assert_eq!(t2.len(), 2);
+        assert_eq!(t2[0], t1[0], "full block shared zero-copy");
+        assert_ne!(t2[1], t1[1], "partial block adopted by copy");
+        assert_eq!(pool.slots[t2[1] as usize].block.fill(), 2);
+        assert_eq!(pool.slots[t2[1] as usize].refcount, 1);
+        let s = pool.stats();
+        assert_eq!(s.prefix_partial_hits, 1);
+        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.prefix_hit_tokens, 6);
+
+        // the adopted rows decode to block 1's leading rows, and the
+        // source block's own rows are untouched
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let (keys, _) = pool.gather_rows(&t2, 0, &mut ks, &mut vs);
+        assert_eq!(keys.len(), 6);
+        assert!((keys[4][0] - 4.0).abs() < 0.5);
+        assert_eq!(pool.slots[t1[1] as usize].block.fill(), 4);
+        pool.release_seq(&mut t2);
+        pool.release_seq(&mut t1);
+    }
+
+    #[test]
+    fn can_fit_prompt_charges_only_the_unshared_suffix() {
+        // 6 blocks of 4: seq A pins 5 (16-token prompt + headroom via
+        // reserve), leaving 1 free; a 90%-shared prompt needs only its
+        // suffix
+        let mut pool = KvPool::new(cfg(6, 4));
+        let tokens: Vec<u32> = (0..16).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+        assert!(pool.reserve(&mut t1, 17)); // headroom block: 5 pinned
+        assert_eq!(pool.available(), 1);
+
+        // shares 12 of 15 tokens (3 full blocks) -> charged
+        // blocks_for(16) - 3 = 1 block, which fits the single free block
+        let mut shared: Vec<u32> = (0..12).collect();
+        shared.extend([70, 71, 72]);
+        assert!(pool.can_fit_prompt(&shared));
+        let mut t2 = Vec::new();
+        let matched = pool.match_prefix(&shared, &mut t2);
+        assert_eq!(matched, 12);
+        assert!(pool.reserve(&mut t2, shared.len() + 1));
+
+        // a fully distinct prompt of the same length cannot fit
+        let distinct: Vec<u32> = (100..115).collect();
+        assert!(!pool.can_fit_prompt(&distinct));
+        pool.release_seq(&mut t2);
+        pool.release_seq(&mut t1);
+    }
+
+    #[test]
+    fn can_fit_prompt_excludes_evictable_hits_from_supply() {
+        // all 4 blocks cached after release: a prompt hitting 3 of them
+        // must not count those 3 as *both* reusable and evictable
+        let mut pool = KvPool::new(cfg(4, 4));
+        let tokens: Vec<u32> = (0..16).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+        pool.release_seq(&mut t1);
+        assert_eq!(pool.stats().blocks_cached, 4);
+
+        // 12 shared + 8 distinct = 20 tokens: 3 full hits, charged
+        // blocks_for(21) - 3 = 3 fresh blocks, but pinning the hits
+        // leaves only 1 evictable block
+        let mut prompt: Vec<u32> = (0..12).collect();
+        prompt.extend(200..208);
+        assert!(!pool.can_fit_prompt(&prompt));
+
+        // trimming the suffix to one block's worth fits
+        let mut short: Vec<u32> = (0..12).collect();
+        short.extend([200, 201, 202]);
+        assert!(pool.can_fit_prompt(&short));
     }
 
     #[test]

@@ -7,10 +7,15 @@
 //! * **L3 (this crate)** — serving coordinator: request router, dynamic
 //!   batcher, prefill/decode scheduler, metrics, and a paged INT4
 //!   KV-cache pool ([`kvpool`]: block-table attention, content-hash
-//!   prefix sharing, LRU eviction, scheduler preemption) — plus a
-//!   pure-rust INT4 inference engine whose quantized GEMMs implement
-//!   every smoothing method in the paper (RTN / SmoothQuant / RS / QuaRot /
-//!   RRS / GPTQ), and a PJRT runtime that loads the AOT-lowered JAX graphs.
+//!   prefix sharing with partial-block tails, prefix-aware admission,
+//!   LRU eviction, scheduler preemption) — plus a pure-rust INT4
+//!   inference engine whose quantized GEMMs implement every smoothing
+//!   method in the paper (RTN / SmoothQuant / RS / QuaRot / RRS / GPTQ),
+//!   and a PJRT runtime that loads the AOT-lowered JAX graphs and serves
+//!   them through the same pool ([`runtime::PagedPjrtEngine`]).
+//!
+//! See `README.md` for the repo map and `docs/ARCHITECTURE.md` for the
+//! full data-flow diagram.
 //! * **L2 (python/compile/model.py)** — the JAX transformer, lowered once
 //!   to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels/)** — the fused Runtime-Smooth INT4 GEMM

@@ -238,6 +238,20 @@ impl KvStore {
         }
     }
 
+    /// Copy of the first `n` rows (clamped to the stored count).  Rows
+    /// are independently quantized, so a row-boundary cut is exact —
+    /// this is what the paged pool's partial-block tail sharing relies
+    /// on.
+    pub fn truncated(&self, n: usize) -> KvStore {
+        match self {
+            KvStore::F32(rows) => KvStore::F32(rows[..n.min(rows.len())].to_vec()),
+            KvStore::Int4 { rows, group } => KvStore::Int4 {
+                rows: rows[..n.min(rows.len())].to_vec(),
+                group: *group,
+            },
+        }
+    }
+
     /// Dequantize (or copy) row `i` into `out`.
     pub fn row_into(&self, i: usize, out: &mut Vec<f32>) {
         match self {

@@ -61,8 +61,8 @@ pub fn silu(x: f32) -> f32 {
 }
 
 /// Single-query attention against cached K/V rows (decode step).
-/// `q` is [n_heads * hd]; `keys`/`vals` are per-position [kv_dim] slices
-/// (len = seq_len); GQA maps head h -> kv head h / (n_heads/n_kv).
+/// `q` is `[n_heads * hd]`; `keys`/`vals` are per-position `[kv_dim]`
+/// slices (len = seq_len); GQA maps head h -> kv head h / (n_heads/n_kv).
 #[allow(clippy::too_many_arguments)]
 pub fn attend_single(
     q: &[f32],

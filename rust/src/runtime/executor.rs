@@ -8,6 +8,16 @@ use anyhow::{bail, Context, Result};
 use super::artifacts::{Artifacts, GraphInfo};
 
 /// Typed host tensor crossing the PJRT boundary.
+///
+/// # Examples
+///
+/// ```
+/// use rrs::runtime::executor::HostTensor;
+///
+/// let t = HostTensor::f32(vec![2, 3], vec![0.5; 6]);
+/// assert_eq!(t.shape(), &[2, 3]);
+/// assert_eq!(t.as_f32().unwrap().len(), 6);
+/// ```
 #[derive(Clone, Debug)]
 pub enum HostTensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -195,57 +205,99 @@ impl PjrtEngine {
         Ok(out.remove(0))
     }
 
-    /// Fresh decode KV state sized for `decode_{variant}` graphs.
-    pub fn new_kv_state(&self) -> PjrtKvState {
+    /// Dense KV-cache tensor shape of the `decode_{variant}` graphs:
+    /// `[n_layers, decode_batch, decode_max_t, n_kv_heads, head_dim]`.
+    pub fn kv_cache_shape(&self) -> Vec<usize> {
         let cfg = &self.artifacts.model;
-        let shape = vec![
+        vec![
             cfg.n_layers,
             self.artifacts.decode_batch,
             self.artifacts.decode_max_t,
             cfg.n_kv_heads,
             cfg.head_dim(),
-        ];
+        ]
+    }
+
+    /// Fresh decode KV state sized for `decode_{variant}` graphs.
+    pub fn new_kv_state(&self) -> PjrtKvState {
+        let shape = self.kv_cache_shape();
         let n: usize = shape.iter().product();
         PjrtKvState { kcache: vec![0.0; n], vcache: vec![0.0; n], shape, pos: 0 }
     }
 
     /// One decode step for a batch of B tokens (B = manifest decode batch).
-    /// Returns logits [B, vocab] flattened; the KV state advances by one.
+    /// Returns logits `[B, vocab]` flattened; the KV state advances by one.
     pub fn decode_step(
         &self,
         variant: &str,
         tokens: &[i32],
         state: &mut PjrtKvState,
     ) -> Result<Vec<f32>> {
+        if state.pos >= self.artifacts.decode_max_t {
+            bail!("KV state full ({} positions)", state.pos);
+        }
+        let (logits, kc, vc) = self.decode_step_raw(
+            variant,
+            tokens,
+            std::mem::take(&mut state.kcache),
+            std::mem::take(&mut state.vcache),
+            state.pos,
+        )?;
+        state.kcache = kc;
+        state.vcache = vc;
+        state.pos += 1;
+        Ok(logits)
+    }
+
+    /// The stateless core of [`decode_step`](PjrtEngine::decode_step):
+    /// run `decode_{variant}` over caller-owned dense caches (shape
+    /// [`kv_cache_shape`](PjrtEngine::kv_cache_shape), flattened) at
+    /// position `pos`, returning `(logits, kcache, vcache)` with the new
+    /// row written at `pos`.  This is what the paged backend
+    /// ([`super::paged::PagedPjrtEngine`]) drives — it gathers the dense
+    /// caches from pool blocks per step instead of round-tripping one
+    /// monolithic state.
+    pub fn decode_step_raw(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        kcache: Vec<f32>,
+        vcache: Vec<f32>,
+        pos: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let b = self.artifacts.decode_batch;
         if tokens.len() != b {
             bail!("decode batch is {b}, got {} tokens", tokens.len());
         }
-        if state.pos >= self.artifacts.decode_max_t {
-            bail!("KV state full ({} positions)", state.pos);
+        if pos >= self.artifacts.decode_max_t {
+            bail!("decode position {pos} out of range");
         }
+        let shape = self.kv_cache_shape();
         let runner = self.runner(&format!("decode_{variant}"))?;
         let inputs = vec![
             HostTensor::i32(vec![b, 1], tokens.to_vec()),
-            HostTensor::f32(state.shape.clone(), std::mem::take(&mut state.kcache)),
-            HostTensor::f32(state.shape.clone(), std::mem::take(&mut state.vcache)),
-            HostTensor::i32(vec![1], vec![state.pos as i32]),
+            HostTensor::f32(shape.clone(), kcache),
+            HostTensor::f32(shape, vcache),
+            HostTensor::i32(vec![1], vec![pos as i32]),
         ];
         let out = runner.run(&inputs)?;
         let mut it = out.into_iter();
         let logits = it.next().context("decode output 0")?;
         let kc = it.next().context("decode output 1")?;
         let vc = it.next().context("decode output 2")?;
-        state.kcache = match kc {
+        let logits = match logits {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("logits not f32"),
+        };
+        let kc = match kc {
             HostTensor::F32 { data, .. } => data,
             _ => bail!("kcache not f32"),
         };
-        state.vcache = match vc {
+        let vc = match vc {
             HostTensor::F32 { data, .. } => data,
             _ => bail!("vcache not f32"),
         };
-        state.pos += 1;
-        Ok(logits.as_f32()?.to_vec())
+        Ok((logits, kc, vc))
     }
 }
 

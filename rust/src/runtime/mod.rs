@@ -6,9 +6,16 @@
 //! Interchange is HLO **text**: jax >= 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Serving runs through [`paged::PagedPjrtEngine`], which keeps the
+//! decode graphs' KV rows in the shared paged pool
+//! ([`crate::kvpool`]) — the AOT path and the interpreted path are
+//! governed by the same allocator, prefix cache, and admission gates.
 
 pub mod artifacts;
 pub mod executor;
+pub mod paged;
 
 pub use artifacts::Artifacts;
-pub use executor::{GraphRunner, PjrtEngine};
+pub use executor::{GraphRunner, PjrtEngine, PjrtKvState};
+pub use paged::PagedPjrtEngine;

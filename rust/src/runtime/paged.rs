@@ -1,0 +1,347 @@
+//! Paged serving backend for the PJRT runtime: AOT-compiled decode
+//! graphs whose KV memory lives in the same [`KvPool`] as the
+//! interpreted engine's.
+//!
+//! The decode graph is stateless over dense host tensors (caches of
+//! shape `[L, B, maxT, H, D]` round-tripped through every call, see
+//! [`PjrtEngine::decode_step_raw`]).  This module keeps the
+//! *authoritative* KV rows in pool blocks instead: before a step, each
+//! active lane's block table is gathered into the dense cache — blocks
+//! store f32 rows for the PJRT path, so the gather is bit-exact — and
+//! after the step the one new row per layer is scattered back into the
+//! pool.  Allocation, prefix sharing (full-block and partial-tail),
+//! copy-on-write, and prefix-aware admission are therefore *identical*
+//! to the interpreted [`crate::kvpool::PagedEngine`] path: one
+//! pool-governed scheduler serves every backend.
+//! `rust/tests/runtime_paged.rs` asserts the paged path is bit-identical
+//! to the flat [`PjrtKvState`] path.
+//!
+//! [`PjrtKvState`]: super::executor::PjrtKvState
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::coordinator::engine_iface::ServeEngine;
+use crate::kvpool::engine::{begin_paged_prefill, seal_paged_seq};
+use crate::kvpool::{BlockId, KvPool, KvPoolConfig, PagedSeq, PoolStats};
+use crate::linalg::gemm::Mat;
+
+use super::executor::PjrtEngine;
+
+/// Pool-governed serving engine over AOT-compiled `decode_{variant}`
+/// graphs.  Implements [`ServeEngine`], so the coordinator's scheduler
+/// drives it exactly like the interpreted paged backend: block-gated
+/// admission, prompt-prefix reuse, and preemption to the queue.
+pub struct PagedPjrtEngine {
+    rt: PjrtEngine,
+    variant: String,
+    pool: Mutex<KvPool>,
+    n_layers: usize,
+    /// K/V row width: `n_kv_heads * head_dim`.
+    kv_dim: usize,
+    /// Graph decode lanes (the manifest's fixed decode batch).
+    lanes: usize,
+    /// Positions per lane in the dense cache tensors.
+    max_t: usize,
+    vocab: usize,
+}
+
+// SAFETY: the xla handles (PJRT client + compiled executables) are only
+// reached through `&self` methods of `PjrtEngine`, whose runner cache is
+// internally locked, and the PJRT CPU client's execute path is
+// thread-safe; the pool sits behind its own mutex.  `Send + Sync` is
+// what lets the coordinator move the engine onto its single worker
+// thread (the `ServeEngine` bound).
+unsafe impl Send for PagedPjrtEngine {}
+unsafe impl Sync for PagedPjrtEngine {}
+
+impl PagedPjrtEngine {
+    /// Load the AOT artifacts under `root` and serve `decode_{variant}`
+    /// over a pool of `n_blocks` blocks of `block_size` positions each.
+    pub fn new(
+        root: impl AsRef<std::path::Path>,
+        variant: &str,
+        n_blocks: usize,
+        block_size: usize,
+    ) -> Result<PagedPjrtEngine> {
+        let rt = PjrtEngine::new(root)?;
+        let m = rt.artifacts.model;
+        let cfg = KvPoolConfig {
+            n_blocks,
+            block_size,
+            n_layers: m.n_layers,
+            // f32 rows: the graph round-trips f32 caches, so pool storage
+            // must be bit-exact (quantized variants apply the paper's KV
+            // fake-quant inside the graph itself)
+            kv_bits: 32,
+            kv_group: 1,
+        };
+        Ok(PagedPjrtEngine {
+            variant: variant.to_string(),
+            pool: Mutex::new(KvPool::new(cfg)),
+            n_layers: m.n_layers,
+            kv_dim: m.kv_dim(),
+            lanes: rt.artifacts.decode_batch,
+            max_t: rt.artifacts.decode_max_t,
+            vocab: m.vocab,
+            rt,
+        })
+    }
+
+    /// The graph variant served (`fp` / `rtn` / `rrs`).
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// Create an empty paged sequence (same state type as the
+    /// interpreted paged backend).
+    pub fn new_seq(&self) -> PagedSeq {
+        PagedSeq::new()
+    }
+
+    fn dense_len(&self) -> usize {
+        self.n_layers * self.lanes * self.max_t * self.kv_dim
+    }
+
+    /// Flat offset of the row (layer, lane, pos) in the dense caches.
+    fn row_off(&self, layer: usize, lane: usize, pos: usize) -> usize {
+        ((layer * self.lanes + lane) * self.max_t + pos) * self.kv_dim
+    }
+
+    /// Gather a sequence's pooled rows into lane `lane` of the dense
+    /// cache tensors (positions `[0, len)`; the rest stays zero, exactly
+    /// like a fresh flat state).
+    fn pack_lane(
+        &self,
+        pool: &KvPool,
+        table: &[BlockId],
+        len: usize,
+        lane: usize,
+        kc: &mut [f32],
+        vc: &mut [f32],
+    ) {
+        let mut ks: Vec<Vec<f32>> = Vec::new();
+        let mut vs: Vec<Vec<f32>> = Vec::new();
+        for layer in 0..self.n_layers {
+            let (keys, vals) = pool.gather_rows(table, layer, &mut ks, &mut vs);
+            for pos in 0..len {
+                let off = self.row_off(layer, lane, pos);
+                kc[off..off + self.kv_dim].copy_from_slice(&keys[pos]);
+                vc[off..off + self.kv_dim].copy_from_slice(&vals[pos]);
+            }
+        }
+    }
+
+    /// Scatter the step's new row (lane `lane`, position `pos`) for
+    /// every layer from the returned dense caches into the pool.
+    fn harvest_row(
+        &self,
+        pool: &mut KvPool,
+        table: &mut Vec<BlockId>,
+        kc: &[f32],
+        vc: &[f32],
+        lane: usize,
+        pos: usize,
+    ) {
+        for layer in 0..self.n_layers {
+            let off = self.row_off(layer, lane, pos);
+            pool.append_row(
+                table,
+                layer,
+                pos,
+                &kc[off..off + self.kv_dim],
+                &vc[off..off + self.kv_dim],
+            );
+        }
+    }
+
+    /// Fallible pool-governed prefill, the PJRT analog of
+    /// [`PagedEngine::try_prefill`](crate::kvpool::PagedEngine::try_prefill):
+    /// pin the cached prompt prefix, reserve the unshared suffix plus
+    /// one decode-headroom block (`None` — sequence released — on
+    /// exhaustion), then feed the suffix through the decode graph
+    /// token-by-token, harvesting each new row into the pool.  Returns
+    /// the last position's logits.
+    pub fn try_prefill(
+        &self,
+        seq: &mut PagedSeq,
+        tokens: &[u32],
+    ) -> Result<Option<Vec<f32>>> {
+        let mut pool = self.pool.lock().unwrap();
+        let Some(matched) = begin_paged_prefill(&mut pool, seq, tokens) else {
+            return Ok(None);
+        };
+        let mut kc = vec![0.0f32; self.dense_len()];
+        let mut vc = vec![0.0f32; self.dense_len()];
+        self.pack_lane(&pool, &seq.table, matched, 0, &mut kc, &mut vc);
+        let mut logits = Vec::new();
+        for (i, &tok) in tokens[matched..].iter().enumerate() {
+            let pos = matched + i;
+            let step_toks = vec![tok as i32; self.lanes];
+            let step = self.rt.decode_step_raw(&self.variant, &step_toks, kc, vc, pos);
+            let (lg, kc2, vc2) = match step {
+                Ok(out) => out,
+                Err(e) => {
+                    // graph failure: unpin everything so a Result-handling
+                    // caller does not leak refcounted blocks
+                    pool.release_seq(&mut seq.table);
+                    *seq = PagedSeq::new();
+                    return Err(e);
+                }
+            };
+            logits = lg;
+            kc = kc2;
+            vc = vc2;
+            self.harvest_row(&mut pool, &mut seq.table, &kc, &vc, 0, pos);
+            seq.len += 1;
+        }
+        seal_paged_seq(&mut pool, seq);
+        logits.truncate(self.vocab);
+        Ok(Some(logits))
+    }
+
+    /// One pool-governed decode step for a batch of sequences.  The
+    /// graph's `pos` input is a scalar shared across lanes, so sequences
+    /// at the same position share one graph call (up to the lane count);
+    /// the rest run in further calls.  Returns logits `[batch, vocab]`.
+    /// On a graph error the already-stepped sequences keep their (valid)
+    /// state; the caller still owns every sequence and releases as usual.
+    pub fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Result<Mat> {
+        let mut pool = self.pool.lock().unwrap();
+        let mut out = Mat::zeros(batch.len(), self.vocab);
+        for (seq, tok) in batch.iter_mut() {
+            seq.tokens.push(*tok);
+            assert!(
+                pool.reserve(&mut seq.table, seq.len + 1),
+                "kvpool exhausted during decode (reserve_decode must gate)"
+            );
+        }
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        order.sort_by_key(|&i| batch[i].0.len);
+        let mut g0 = 0usize;
+        while g0 < order.len() {
+            let pos = batch[order[g0]].0.len;
+            let mut g1 = g0 + 1;
+            while g1 < order.len()
+                && batch[order[g1]].0.len == pos
+                && g1 - g0 < self.lanes
+            {
+                g1 += 1;
+            }
+            let group = &order[g0..g1];
+            let mut kc = vec![0.0f32; self.dense_len()];
+            let mut vc = vec![0.0f32; self.dense_len()];
+            let mut toks = vec![batch[group[0]].1 as i32; self.lanes];
+            for (lane, &i) in group.iter().enumerate() {
+                self.pack_lane(&pool, &batch[i].0.table, pos, lane, &mut kc, &mut vc);
+                toks[lane] = batch[i].1 as i32;
+            }
+            let (lg, kc2, vc2) =
+                self.rt.decode_step_raw(&self.variant, &toks, kc, vc, pos)?;
+            for (lane, &i) in group.iter().enumerate() {
+                self.harvest_row(&mut pool, &mut batch[i].0.table, &kc2, &vc2, lane, pos);
+                let seq = &mut *batch[i].0;
+                seq.len += 1;
+                seal_paged_seq(&mut pool, seq);
+                out.row_mut(i)
+                    .copy_from_slice(&lg[lane * self.vocab..(lane + 1) * self.vocab]);
+            }
+            g0 = g1;
+        }
+        Ok(out)
+    }
+
+    /// Release the sequence's blocks back to the pool (retire or
+    /// preemption); sealed blocks stay cached for prefix reuse.
+    pub fn release(&self, seq: &mut PagedSeq) {
+        let mut pool = self.pool.lock().unwrap();
+        pool.release_seq(&mut seq.table);
+        *seq = PagedSeq::new();
+    }
+
+    /// Prefix-aware admission gate — same accounting as the interpreted
+    /// paged backend ([`KvPool::can_fit_prompt`]).
+    pub fn can_admit(&self, prompt: &[u32]) -> bool {
+        self.pool.lock().unwrap().can_fit_prompt(prompt)
+    }
+
+    /// Ensure `seq` can grow by one token; `false` = preempt first.
+    pub fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
+        self.pool.lock().unwrap().reserve(&mut seq.table, seq.len + 1)
+    }
+
+    /// Longest prompt prefix currently resident in the prefix cache.
+    pub fn prefix_match_len(&self, prompt: &[u32]) -> usize {
+        self.pool.lock().unwrap().probe_prefix(prompt)
+    }
+
+    /// Pool occupancy / prefix-cache counters.
+    pub fn stats(&self) -> PoolStats {
+        self.pool.lock().unwrap().stats()
+    }
+
+    /// KV bytes held by one sequence's blocks.
+    pub fn seq_bytes(&self, seq: &PagedSeq) -> usize {
+        self.pool.lock().unwrap().table_bytes(&seq.table)
+    }
+}
+
+impl ServeEngine for PagedPjrtEngine {
+    type Seq = PagedSeq;
+
+    fn max_seq(&self) -> usize {
+        self.max_t
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn new_seq(&self) -> PagedSeq {
+        PagedSeq::new()
+    }
+
+    fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
+        PagedPjrtEngine::try_prefill(self, seq, tokens)
+            .expect("pjrt decode graph failed")
+            .expect("kvpool exhausted during prefill (admission must gate capacity)")
+    }
+
+    fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
+        PagedPjrtEngine::try_prefill(self, seq, tokens)
+            .expect("pjrt decode graph failed")
+    }
+
+    fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
+        PagedPjrtEngine::decode(self, batch).expect("pjrt decode graph failed")
+    }
+
+    fn seq_len(&self, seq: &PagedSeq) -> usize {
+        seq.len
+    }
+
+    fn seq_bytes(&self, seq: &PagedSeq) -> usize {
+        PagedPjrtEngine::seq_bytes(self, seq)
+    }
+
+    fn can_admit(&self, prompt: &[u32]) -> bool {
+        PagedPjrtEngine::can_admit(self, prompt)
+    }
+
+    fn prefix_match_len(&self, prompt: &[u32]) -> usize {
+        PagedPjrtEngine::prefix_match_len(self, prompt)
+    }
+
+    fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
+        PagedPjrtEngine::reserve_decode(self, seq)
+    }
+
+    fn release_seq(&self, seq: &mut PagedSeq) {
+        PagedPjrtEngine::release(self, seq)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.stats())
+    }
+}

@@ -1,0 +1,170 @@
+//! Prefix-aware admission accounting: a request is charged only for its
+//! *unshared* suffix blocks (plus one decode-headroom block), hit blocks
+//! are excluded from the eviction supply they would pin, and the
+//! reservation-time re-check inside `try_prefill` keeps same-round
+//! admission races safe.  Uses small random models only (no artifacts).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use rrs::coordinator::{Coordinator, SchedulerConfig};
+use rrs::kvpool::PagedEngine;
+use rrs::model::sampler::Sampling;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+
+fn engine(n_blocks: usize, block_size: usize) -> PagedEngine {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 256, ..Default::default() };
+    let w = Weights::random(&cfg, 17);
+    let ecfg = EngineConfig {
+        method: Method::Rtn,
+        scheme: Scheme::A4W4KV4,
+        group: 32,
+        kv_group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+    PagedEngine::new(model, n_blocks, block_size)
+}
+
+fn shared_prefix(n: usize) -> Vec<u32> {
+    (0..n as u32).map(|i| (i * 13 + 5) % 256).collect()
+}
+
+/// The headline accounting win: a 90%-prefix-shared prompt is admitted
+/// into a pool that only has room for its unshared suffix, where the
+/// conservative (whole-prompt) gate would have refused.
+#[test]
+fn shared_prompt_admitted_into_suffix_sized_gap() {
+    let eng = engine(12, 4);
+    // seed: 36 shared + 3 unique tokens, kept ACTIVE so its 10 blocks
+    // (9 sealed + 1 tail) are pinned and exactly 2 blocks stay free
+    let mut prompt_a = shared_prefix(36);
+    prompt_a.extend([1, 2, 3]);
+    let mut seq_a = eng.new_seq();
+    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    let s = eng.stats();
+    assert_eq!(s.blocks_active, 10);
+    assert_eq!(s.blocks_free, 2);
+
+    // request B: same 36-token prefix (9 full blocks resident), 4 unique
+    // tokens.  Charged blocks_for(41) - 9 = 2, which fits the gap; the
+    // whole-prompt charge of 11 blocks would not.
+    let mut prompt_b = shared_prefix(36);
+    prompt_b.extend([200, 201, 202, 203]);
+    assert_eq!(eng.prefix_match_len(&prompt_b), 36);
+    assert!(
+        eng.can_admit(&prompt_b),
+        "prefix-aware gate must charge only the unshared suffix"
+    );
+    let mut seq_b = eng.new_seq();
+    let logits = eng.try_prefill(&mut seq_b, &prompt_b);
+    assert!(logits.is_some(), "admitted request must reserve successfully");
+    assert_eq!(eng.stats().blocks_free, 0);
+    eng.release(&mut seq_b);
+    eng.release(&mut seq_a);
+}
+
+/// ...and the same request is refused when even the suffix does not fit,
+/// with the failed reservation leaking nothing.
+#[test]
+fn shared_prompt_refused_when_suffix_does_not_fit() {
+    let eng = engine(11, 4);
+    let mut prompt_a = shared_prefix(36);
+    prompt_a.extend([1, 2, 3]);
+    let mut seq_a = eng.new_seq();
+    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    assert_eq!(eng.stats().blocks_free, 1);
+
+    let mut prompt_b = shared_prefix(36);
+    prompt_b.extend([200, 201, 202, 203]);
+    assert!(!eng.can_admit(&prompt_b), "2-block suffix cannot fit 1 block");
+    // the reservation-time re-check agrees and unwinds cleanly
+    let mut seq_b = eng.new_seq();
+    assert!(eng.try_prefill(&mut seq_b, &prompt_b).is_none());
+    let s = eng.stats();
+    assert_eq!(s.blocks_active, 10, "failed admission must release its pins");
+    assert_eq!(s.blocks_free, 1);
+    eng.release(&mut seq_a);
+}
+
+/// Evictable cached blocks that the prompt itself would pin must not be
+/// double-counted as both reusable prefix and eviction supply.
+#[test]
+fn evictable_hits_are_not_double_counted() {
+    let eng = engine(10, 4);
+    let mut prompt_a = shared_prefix(36);
+    prompt_a.extend([1, 2, 3]);
+    let mut seq_a = eng.new_seq();
+    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    eng.release(&mut seq_a);
+    // 9 sealed blocks cached (evictable), 1 free
+    let s = eng.stats();
+    assert_eq!(s.blocks_cached, 9);
+    assert_eq!(s.blocks_free, 1);
+
+    // charged 2 blocks; naive supply says free(1) + cached(9) = 10, but
+    // pinning the 9 hits leaves only 1 allocatable block
+    let mut prompt_b = shared_prefix(36);
+    prompt_b.extend([200, 201, 202, 203]);
+    assert!(!eng.can_admit(&prompt_b));
+    let mut seq_b = eng.new_seq();
+    assert!(eng.try_prefill(&mut seq_b, &prompt_b).is_none());
+    // with one more block of headroom the same prompt fits exactly
+    let eng2 = engine(11, 4);
+    let mut seq_c = eng2.new_seq();
+    let _ = eng2.prefill(&mut seq_c, &prompt_a);
+    eng2.release(&mut seq_c);
+    assert!(eng2.can_admit(&prompt_b));
+    let mut seq_d = eng2.new_seq();
+    assert!(eng2.try_prefill(&mut seq_d, &prompt_b).is_some());
+    eng2.release(&mut seq_d);
+}
+
+/// End-to-end through the coordinator: six concurrent requests sharing a
+/// 24-token prefix all fit a 20-block pool (8 + 5 x 2 blocks), which a
+/// flat per-request charge (6 x 8 = 48 blocks) could never admit
+/// concurrently.
+#[test]
+fn coordinator_admits_shared_prefix_fleet_concurrently() {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 256, ..Default::default() };
+    let w = Weights::random(&cfg, 17);
+    let ecfg = EngineConfig {
+        method: Method::Rtn,
+        scheme: Scheme::A4W4KV4,
+        group: 32,
+        kv_group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+    let coord = Arc::new(Coordinator::start(
+        PagedEngine::new(model, 20, 4),
+        SchedulerConfig { max_batch: 6, queue_capacity: 16, ..Default::default() },
+    ));
+    let mut handles = Vec::new();
+    for i in 0..6u32 {
+        let c = coord.clone();
+        let mut prompt = shared_prefix(24);
+        prompt.extend([100 + 4 * i, 101 + 4 * i, 102 + 4 * i, 103 + 4 * i]);
+        handles.push(std::thread::spawn(move || {
+            c.generate(prompt, 4, Sampling::Greedy, None).unwrap()
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        assert_eq!(
+            resp.finish_reason,
+            rrs::coordinator::request::FinishReason::MaxTokens
+        );
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 6);
+    assert_eq!(coord.metrics.aborted.load(Ordering::Relaxed), 0);
+    assert!(
+        coord.metrics.prefix_hit_rate() > 0.3,
+        "shared prefixes must be served from the cache (rate {})",
+        coord.metrics.prefix_hit_rate()
+    );
+}

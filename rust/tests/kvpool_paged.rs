@@ -115,6 +115,44 @@ fn prefix_hit_prefill_matches_cold_prefill() {
     assert!(max_err < 2e-2, "warm-vs-cold prefill logit err {max_err}");
 }
 
+/// Partial-block tail sharing: a prompt whose shared prefix ends
+/// mid-block still hits — the shared leading rows of the sealed sibling
+/// are copied into a fresh block, and only the true suffix is forwarded.
+#[test]
+fn partial_block_tail_prefix_hits_mid_block() {
+    let (model, ..) = tiny_model(5);
+    let paged = PagedEngine::new(model, 64, 4);
+    let base: Vec<u32> = (0..10u32).map(|i| (i * 7 + 2) % 256).collect();
+    let mut seq_a = paged.new_seq();
+    let _ = paged.prefill(&mut seq_a, &base);
+    paged.release(&mut seq_a);
+
+    // shares 6 tokens: block 0 fully + 2 rows into block 1
+    let mut prompt_b = base[..6].to_vec();
+    prompt_b.extend([201, 202, 203]);
+    assert_eq!(paged.prefix_match_len(&prompt_b), 6);
+
+    // cold reference on an independent engine (no prefix cache)
+    let (model_cold, ..) = tiny_model(5);
+    let cold = PagedEngine::new(model_cold, 64, 4);
+    let mut seq_cold = cold.new_seq();
+    let cold_logits = cold.prefill(&mut seq_cold, &prompt_b);
+
+    let before = paged.stats();
+    let mut seq_b = paged.new_seq();
+    let warm_logits = paged.prefill(&mut seq_b, &prompt_b);
+    let after = paged.stats();
+    assert_eq!(after.prefix_hit_tokens - before.prefix_hit_tokens, 6);
+    assert_eq!(after.prefix_partial_hits, 1);
+    assert!(after.cow_copies >= 1);
+    let mut max_err = 0.0f32;
+    for (&x, &y) in cold_logits.iter().zip(&warm_logits) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 2e-2, "partial-hit prefill logit err {max_err}");
+    paged.release(&mut seq_b);
+}
+
 #[test]
 fn paged_engine_reports_capacity_and_releases() {
     let (model, ..) = tiny_model(3);
@@ -127,12 +165,17 @@ fn paged_engine_reports_capacity_and_releases() {
     let s = paged.stats();
     assert_eq!(s.blocks_active, 3);
     assert!(paged.seq_bytes(&seq) > 0);
-    assert!(!paged.can_admit(&prompt), "3 of 4 blocks pinned");
+    // a distinct prompt needs 3 fresh blocks and only 1 is left
+    let distinct: Vec<u32> = (100..120).collect();
+    assert!(!paged.can_admit(&distinct), "3 of 4 blocks pinned");
+    // ...but an identical prompt shares the 2 sealed prefix blocks and
+    // is charged only its tail (prefix-aware admission)
+    assert!(paged.can_admit(&prompt), "shared prefix fits the gap");
     // the tail block still has room, so the next decode token reserves
     // without allocating
     assert!(paged.reserve_decode(&mut seq));
     paged.release(&mut seq);
-    assert!(paged.can_admit(&prompt), "release frees capacity");
+    assert!(paged.can_admit(&distinct), "release frees capacity");
     assert_eq!(paged.stats().blocks_active, 0);
 }
 
