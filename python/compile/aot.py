@@ -177,7 +177,10 @@ def main() -> None:
             "params": int(CFG.param_count(params)),
         },
         "prefill": {"batch": PREFILL_B, "seq": PREFILL_T},
-        "decode": {"batch": DECODE_B, "max_t": MAX_T},
+        # pos_per_lane: decode graphs take one position input per lane, so
+        # unequal-length sequences batch into a single graph call (the
+        # rust runtime sniffs the pos input width; this flag is for humans)
+        "decode": {"batch": DECODE_B, "max_t": MAX_T, "pos_per_lane": True},
         "graphs": {},
     }
 
@@ -216,7 +219,9 @@ def main() -> None:
         kv_spec = jax.ShapeDtypeStruct(
             (CFG.n_layers, DECODE_B, MAX_T, CFG.n_kv_heads, CFG.head_dim),
             jnp.float32)
-        pos_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+        # one position per lane: resident-lane decode batches sequences at
+        # unequal positions into a single call
+        pos_spec = jax.ShapeDtypeStruct((DECODE_B,), jnp.int32)
         path = os.path.join(out, f"decode_{vname}.hlo.txt")
         info = lower_and_write(
             decode_fn, (tok_spec, kv_spec, kv_spec, pos_spec), path)
@@ -226,7 +231,7 @@ def main() -> None:
                 ["token", "i32", [DECODE_B, 1]],
                 ["kcache", "f32", list(kv_spec.shape)],
                 ["vcache", "f32", list(kv_spec.shape)],
-                ["pos", "i32", [1]],
+                ["pos", "i32", [DECODE_B]],
             ],
             "outputs": [
                 ["logits", "f32", [DECODE_B, 1, CFG.vocab]],

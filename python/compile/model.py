@@ -121,12 +121,19 @@ def rope_cos_sin(cfg: ModelConfig, positions):
     return jnp.cos(ang), jnp.sin(ang)
 
 
-def apply_rope(x, cos, sin):
-    """x [B,T,H,hd]; rotate-half convention (matches rust engine)."""
+def apply_rope(x, cos, sin, axis=1):
+    """x [B,T,H,hd]; rotate-half convention (matches rust engine).
+
+    cos/sin are [x.shape[axis], hd/2]: axis=1 is the prefill form (one
+    angle per time step, shared across lanes); axis=0 is the per-lane
+    decode form (one angle per lane, T==1).
+    """
     h = x.shape[-1] // 2
     x1, x2 = x[..., :h], x[..., h:]
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    shape = [1, 1, 1, cos.shape[-1]]
+    shape[axis] = cos.shape[0]
+    c = cos.reshape(shape)
+    s = sin.reshape(shape)
     return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
 
 
@@ -291,15 +298,17 @@ def decode_step(params, prep, cfg: ModelConfig, qcfg: QuantConfig,
                 token, kcache, vcache, pos):
     """Single-token decode over padded KV caches (the PJRT decode artifact).
 
-    token  [B,1] i32;  kcache/vcache [L,B,maxT,Hkv,hd] f32;  pos [1] i32
-    (number of tokens already in the cache).  Returns
-    (logits [B,1,V], updated kcache, updated vcache).  Cache updates happen
-    inside the graph via dynamic_update_slice so rust only swaps buffers.
+    token  [B,1] i32;  kcache/vcache [L,B,maxT,Hkv,hd] f32;  pos [B] i32
+    per-lane positions (tokens already cached in that lane) — a legacy
+    length-1 ``pos`` broadcasts to every lane, the old scalar form.
+    Returns (logits [B,1,V], updated kcache, updated vcache).  Cache
+    updates happen inside the graph via per-lane dynamic_update_slice so
+    rust only swaps buffers; lanes at unequal positions share one call.
     """
     b = token.shape[0]
     x = params["embed"][token]  # [B,1,D]
-    p0 = pos[0]
-    cos, sin = rope_cos_sin(cfg, p0 + jnp.arange(1))
+    lane_pos = pos if pos.shape[0] == b else jnp.broadcast_to(pos, (b,))
+    cos, sin = rope_cos_sin(cfg, lane_pos)  # [B, hd/2]
     maxt = kcache.shape[2]
 
     def lin(name, h2d):
@@ -314,23 +323,24 @@ def decode_step(params, prep, cfg: ModelConfig, qcfg: QuantConfig,
         q = lin(p + "wq", h2).reshape(b, 1, cfg.n_heads, cfg.head_dim)
         k = lin(p + "wk", h2).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
         v = lin(p + "wv", h2).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-        q = apply_rope(q, cos, sin)
-        k = apply_rope(k, cos, sin)
+        q = apply_rope(q, cos, sin, axis=0)
+        k = apply_rope(k, cos, sin, axis=0)
         if qcfg.kv_bits == 4:
             k = ref.kv_fake_quant(k, qcfg.kv_group)
             v = ref.kv_fake_quant(v, qcfg.kv_group)
-        kcache = jax.lax.dynamic_update_slice(
-            kcache, k[None], (i, 0, p0, 0, 0))
-        vcache = jax.lax.dynamic_update_slice(
-            vcache, v[None], (i, 0, p0, 0, 0))
+        # one batched scatter per cache: lane j's row lands at its own
+        # position (constant op count in B, unlike per-lane update_slice)
+        lanes = jnp.arange(b)
+        kcache = kcache.at[i, lanes, lane_pos].set(k[:, 0])
+        vcache = vcache.at[i, lanes, lane_pos].set(v[:, 0])
         kf = kcache[i]  # [B,maxT,Hkv,hd]
         vf = vcache[i]
         rep = cfg.n_heads // cfg.n_kv_heads
         kf = jnp.repeat(kf, rep, axis=2)
         vf = jnp.repeat(vf, rep, axis=2)
         att = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(cfg.head_dim)
-        valid = (jnp.arange(maxt) <= p0)[None, None, None, :]
-        att = jnp.where(valid, att, -1e30)
+        valid = (jnp.arange(maxt)[None, :] <= lane_pos[:, None])
+        att = jnp.where(valid[:, None, None, :], att, -1e30)
         att = jax.nn.softmax(att, axis=-1)
         o = jnp.einsum("bhqk,bkhd->bqhd", att, vf)
         x = x + lin(p + "wo", o.reshape(b, cfg.dim)).reshape(b, 1, cfg.dim)

@@ -59,6 +59,55 @@ def test_decode_matches_prefill_rowlocal(params, tokens, variant, wb, kb):
                                rtol=1e-3, atol=1e-4)
 
 
+def test_decode_per_lane_positions(params, tokens):
+    """Lanes at unequal positions in ONE decode call must reproduce the
+    position-aligned runs exactly (the resident-lane serving contract:
+    idle lanes write a garbage row at their next append slot, which the
+    per-lane causal mask keeps invisible)."""
+    q = QuantConfig("fp")
+    b, t = tokens.shape
+    lag = 3  # lane 1 trails lane 0 by `lag` decode steps
+    kc0 = jnp.zeros((CFG.n_layers, b, 32, CFG.n_kv_heads, CFG.head_dim))
+    vc0 = jnp.zeros_like(kc0)
+
+    def aligned_run(row):
+        """Both lanes decode the same row with a uniform position."""
+        kc, vc = kc0, vc0
+        outs = []
+        toks = jnp.stack([row, row])
+        for i in range(t):
+            lgt, kc, vc = decode_step(params, None, CFG, q, toks[:, i:i+1],
+                                      kc, vc, jnp.full((b,), i, jnp.int32))
+            outs.append(np.asarray(lgt[0, 0]))
+        return outs
+
+    ref0 = aligned_run(tokens[0])
+    ref1 = aligned_run(tokens[1])
+
+    # staggered run: lane 1 idles (token 0 written at its next append
+    # position 0, masked out) while lane 0 consumes its first `lag`
+    # tokens, then both lanes decode their own streams at unequal pos
+    kc, vc = kc0, vc0
+    out0, out1 = [], []
+    for i in range(t + lag):
+        # idle convention (rust resident lanes): token 0 written at the
+        # lane's next append position, invisible behind the causal mask
+        p0, p1 = min(i, t), max(i - lag, 0)
+        tok0 = tokens[0, i] if i < t else jnp.int32(0)
+        tok1 = tokens[1, i - lag] if i >= lag else jnp.int32(0)
+        step_t = jnp.asarray([[tok0], [tok1]], jnp.int32)
+        step_p = jnp.asarray([p0, p1], jnp.int32)
+        lgt, kc, vc = decode_step(params, None, CFG, q, step_t, kc, vc, step_p)
+        if i < t:
+            out0.append(np.asarray(lgt[0, 0]))
+        if i >= lag:
+            out1.append(np.asarray(lgt[1, 0]))
+
+    for i in range(t):
+        np.testing.assert_array_equal(out0[i], ref0[i])
+        np.testing.assert_array_equal(out1[i], ref1[i])
+
+
 def test_quant_degrades_gracefully(params, tokens):
     """INT4 logits stay correlated with fp logits (not garbage)."""
     fp = np.asarray(forward(params, None, CFG, QuantConfig("fp"), tokens))

@@ -1,5 +1,5 @@
-//! Prefill throughput + admitted concurrency over the paged KV pool:
-//! 0% vs 90% shared-prefix workloads.
+//! Prefill throughput + admitted concurrency + decode throughput over
+//! the paged KV pool: 0% vs 90% shared-prefix workloads.
 //!
 //! Phase 1 (throughput): the shared workload prefills each distinct
 //! prefix once and serves the rest from the prefix cache, so tokens/s
@@ -10,14 +10,23 @@
 //! count is deterministic block accounting, so the numbers are
 //! machine-independent (recorded in README.md).
 //!
+//! Phase 3 (decode): batched steady-state decode tokens/s at 0% vs 90%
+//! shared prefix on the interpreted engine, plus — when AOT artifacts
+//! are present — the PJRT resident-lane fast path against its per-step
+//! re-gather baseline at batch >= 8.  Results land in
+//! `BENCH_decode.json` so the perf trajectory is recorded (CI uploads
+//! `BENCH_*.json` as artifacts).
+//!
 //! Run: `cargo bench --bench kvpool_prefill` (add `--full` for the
 //! larger workload)
 
 use std::time::Instant;
 
-use rrs::kvpool::PagedEngine;
+use rrs::kvpool::{PagedEngine, PagedSeq};
 use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
 use rrs::quant::{Method, Scheme};
+use rrs::runtime::PagedPjrtEngine;
+use rrs::util::json::{obj, Json};
 
 const BLOCK_SIZE: usize = 8;
 /// Pool size for the admitted-concurrency phase (small on purpose).
@@ -117,6 +126,139 @@ fn admitted_concurrency(label: &str, prompts: &[Vec<u32>]) -> usize {
     seqs.len()
 }
 
+/// Phase 3a: admit `n_seqs` sequences, then measure batched decode
+/// throughput (tokens/s) over `steps` steady-state steps.
+fn bench_decode(label: &str, n_seqs: usize, len: usize, shared: usize, steps: usize) -> f32 {
+    let eng = engine();
+    let ps = prompts(n_seqs, len, shared);
+    let mut seqs: Vec<PagedSeq> = ps
+        .iter()
+        .map(|p| {
+            let mut s = eng.new_seq();
+            let _ = eng.prefill(&mut s, p);
+            s
+        })
+        .collect();
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let mut batch: Vec<(&mut PagedSeq, u32)> = seqs
+            .iter_mut()
+            .map(|s| (s, (step % 250) as u32))
+            .collect();
+        let _ = eng.decode(&mut batch);
+    }
+    let dt = t0.elapsed().as_secs_f32();
+    let tps = (steps * n_seqs) as f32 / dt;
+    println!(
+        "{label:<26} {n_seqs:>4} seqs x {steps} steps  {tps:>8.0} tok/s (decode)"
+    );
+    for s in seqs.iter_mut() {
+        eng.release(s);
+    }
+    tps
+}
+
+/// Phase 3b (artifacts-gated): PJRT decode at batch >= 8 with lanes at
+/// staggered positions — resident fast path vs the per-step re-gather
+/// baseline.  Returns `(tps_resident, tps_regather)`.
+fn bench_pjrt_decode(n_seqs: usize, steps: usize) -> Option<(f32, f32)> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(root).join("manifest.json").exists() {
+        println!("pjrt decode phase skipped: artifacts missing");
+        return None;
+    }
+    // size the pool for the full workload: every sequence ends at
+    // prompt (4 + 3i) + 1 warm + `steps` decoded positions
+    let n_blocks = (0..n_seqs)
+        .map(|i| (4 + 3 * i + 1 + steps).div_ceil(4) + 1)
+        .sum::<usize>()
+        + 16;
+    let run = |resident: bool| -> f32 {
+        let mut eng = PagedPjrtEngine::new(root, "fp", n_blocks, 4).unwrap();
+        eng.set_residency(resident);
+        // staggered prompt lengths -> unequal lane positions
+        let mut seqs: Vec<PagedSeq> = (0..n_seqs)
+            .map(|i| {
+                let p: Vec<u32> = (0..4 + 3 * i as u32).map(|j| 30 + j % 90).collect();
+                let mut s = eng.new_seq();
+                eng.try_prefill(&mut s, &p).unwrap().unwrap();
+                s
+            })
+            .collect();
+        // warm the resident lanes (and the compiled graph) outside the clock
+        let mut warm: Vec<(&mut PagedSeq, u32)> =
+            seqs.iter_mut().map(|s| (s, 40u32)).collect();
+        eng.decode(&mut warm).unwrap();
+        drop(warm);
+        let t0 = Instant::now();
+        for step in 0..steps {
+            let mut batch: Vec<(&mut PagedSeq, u32)> = seqs
+                .iter_mut()
+                .map(|s| (s, (40 + step % 50) as u32))
+                .collect();
+            eng.decode(&mut batch).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f32();
+        let rs = eng.residency_stats();
+        let mode = if eng.residency_enabled() { "resident" } else { "re-gather" };
+        let tps = (steps * n_seqs) as f32 / dt;
+        println!(
+            "pjrt decode ({mode:<9})      {n_seqs:>4} seqs x {steps} steps  \
+             {tps:>8.0} tok/s  ({} gathers, {} graph calls)",
+            rs.kv_gather_total, rs.decode_graph_calls
+        );
+        for s in seqs.iter_mut() {
+            eng.release(s);
+        }
+        tps
+    };
+    let regather = run(false);
+    let resident = run(true);
+    println!(
+        "resident-lane decode speedup: {:.2}x",
+        resident / regather.max(1e-9)
+    );
+    Some((resident, regather))
+}
+
+fn write_bench_decode_json(
+    batch: usize,
+    steps: usize,
+    tps0: f32,
+    tps90: f32,
+    pjrt: Option<(f32, f32)>,
+) {
+    let pjrt_json = match pjrt {
+        Some((resident, regather)) => obj(vec![
+            ("tokens_per_s_resident", (resident as f64).into()),
+            ("tokens_per_s_regather", (regather as f64).into()),
+            (
+                "resident_speedup",
+                ((resident / regather.max(1e-9)) as f64).into(),
+            ),
+        ]),
+        None => Json::Null,
+    };
+    let j = obj(vec![
+        ("bench", "kvpool_decode".into()),
+        ("batch", batch.into()),
+        ("steps", steps.into()),
+        (
+            "interpreted",
+            obj(vec![
+                ("tokens_per_s_shared0", (tps0 as f64).into()),
+                ("tokens_per_s_shared90", (tps90 as f64).into()),
+            ]),
+        ),
+        ("pjrt", pjrt_json),
+    ]);
+    let path = "BENCH_decode.json";
+    match std::fs::write(path, j.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let (n, len) = if full { (64, 160) } else { (24, 80) };
@@ -143,4 +285,17 @@ fn main() {
         "prefix-aware admission concurrency gain: {:.2}x ({c0} -> {c90})",
         c90 as f32 / c0.max(1) as f32
     );
+
+    // ── batched decode throughput (steady state) ───────────────────────
+    let (dbatch, dsteps) = if full { (16, 96) } else { (8, 48) };
+    let dlen = 48usize;
+    let dshared = (dlen * 9 / 10) / BLOCK_SIZE * BLOCK_SIZE;
+    println!(
+        "\ndecode: batch {dbatch} x {dlen}-token prompts (shared prefix \
+         {dshared} tokens)"
+    );
+    let d0 = bench_decode("0% shared prefix", dbatch, dlen, 0, dsteps);
+    let d90 = bench_decode("90% shared prefix", dbatch, dlen, dshared, dsteps);
+    let pjrt = bench_pjrt_decode(dbatch, dsteps);
+    write_bench_decode_json(dbatch, dsteps, d0, d90, pjrt);
 }

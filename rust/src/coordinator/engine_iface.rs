@@ -9,6 +9,7 @@
 use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
 use crate::model::engine::{KvCache, QuantModel};
+use crate::runtime::residency::ResidencyStats;
 
 /// Opaque per-sequence state owned by the backend.
 pub trait ServeEngine: Send + Sync {
@@ -69,6 +70,13 @@ pub trait ServeEngine: Send + Sync {
 
     /// KV-pool occupancy counters, when the backend is paged.
     fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
+
+    /// Resident-lane gather/scatter/refresh counters, when the backend
+    /// serves decode from resident dense lanes
+    /// ([`crate::runtime::PagedPjrtEngine`]).
+    fn residency_stats(&self) -> Option<ResidencyStats> {
         None
     }
 }

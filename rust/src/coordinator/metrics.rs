@@ -4,6 +4,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::kvpool::PoolStats;
+use crate::runtime::residency::ResidencyStats;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 
@@ -41,6 +42,14 @@ pub struct Metrics {
     pub prefix_queries: AtomicU64,
     pub prefix_query_tokens: AtomicU64,
     pub prefix_hit_tokens: AtomicU64,
+    // Resident-lane gauges, refreshed by the scheduler loop on backends
+    // that decode from resident dense lanes (runtime::PagedPjrtEngine).
+    // kv_gather_total flat across steady-state decode is the O(1) claim.
+    pub kv_gather_total: AtomicU64,
+    pub kv_scatter_rows_total: AtomicU64,
+    pub lane_refresh_total: AtomicU64,
+    pub resident_hits: AtomicU64,
+    pub decode_graph_calls: AtomicU64,
     lat_total_ms: Mutex<Vec<f32>>,
     lat_queue_ms: Mutex<Vec<f32>>,
     lat_per_token_ms: Mutex<Vec<f32>>,
@@ -86,6 +95,17 @@ impl Metrics {
         self.prefix_queries.store(s.prefix_queries, Ordering::Relaxed);
         self.prefix_query_tokens.store(s.prefix_query_tokens, Ordering::Relaxed);
         self.prefix_hit_tokens.store(s.prefix_hit_tokens, Ordering::Relaxed);
+    }
+
+    /// Refresh the resident-lane gauges from an engine snapshot
+    /// (scheduler loop, paged PJRT backend).
+    pub fn update_residency(&self, s: &ResidencyStats) {
+        self.kv_gather_total.store(s.kv_gather_total, Ordering::Relaxed);
+        self.kv_scatter_rows_total
+            .store(s.kv_scatter_rows_total, Ordering::Relaxed);
+        self.lane_refresh_total.store(s.lane_refresh_total, Ordering::Relaxed);
+        self.resident_hits.store(s.resident_hits, Ordering::Relaxed);
+        self.decode_graph_calls.store(s.decode_graph_calls, Ordering::Relaxed);
     }
 
     /// Fraction of probed prompt tokens served from the prefix cache.
@@ -160,6 +180,35 @@ impl Metrics {
                 ]),
             ),
             (
+                "lane_residency",
+                obj(vec![
+                    (
+                        "kv_gather_total",
+                        (self.kv_gather_total.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "kv_scatter_rows_total",
+                        (self.kv_scatter_rows_total.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "lane_refresh_total",
+                        (self.lane_refresh_total.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "resident_hits",
+                        (self.resident_hits.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "decode_graph_calls",
+                        (self.decode_graph_calls.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                ]),
+            ),
+            (
                 "latency_ms",
                 obj(vec![
                     ("p50", (s.p50 as f64).into()),
@@ -195,6 +244,25 @@ mod tests {
         assert_eq!(j.get("submitted").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(30));
         assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+    }
+
+    #[test]
+    fn residency_gauges_snapshot() {
+        let m = Metrics::new();
+        m.update_residency(&ResidencyStats {
+            kv_gather_total: 7,
+            kv_scatter_rows_total: 640,
+            lane_refresh_total: 5,
+            resident_hits: 120,
+            decode_graph_calls: 33,
+        });
+        let j = m.snapshot_json();
+        let lr = j.get("lane_residency").unwrap();
+        assert_eq!(lr.get("kv_gather_total").unwrap().as_usize(), Some(7));
+        assert_eq!(lr.get("kv_scatter_rows_total").unwrap().as_usize(), Some(640));
+        assert_eq!(lr.get("lane_refresh_total").unwrap().as_usize(), Some(5));
+        assert_eq!(lr.get("resident_hits").unwrap().as_usize(), Some(120));
+        assert_eq!(lr.get("decode_graph_calls").unwrap().as_usize(), Some(33));
     }
 
     #[test]

@@ -379,6 +379,9 @@ fn run_loop<E: ServeEngine>(
         if let Some(ps) = engine.pool_stats() {
             metrics.update_pool(&ps);
         }
+        if let Some(rs) = engine.residency_stats() {
+            metrics.update_residency(&rs);
+        }
         retire(&engine, &mut active, &metrics);
     }
 }

@@ -8,6 +8,7 @@
 //! is bit-identical by construction (asserted in
 //! rust/tests/kvpool_paged.rs).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::linalg::gemm::Mat;
@@ -15,6 +16,9 @@ use crate::model::engine::{KvSeqBatch, QuantModel};
 
 use super::block::BlockId;
 use super::pool::{KvPool, KvPoolConfig, PoolStats, HASH_SEED};
+
+/// Process-wide sequence identity source ([`PagedSeq::id`]).
+static NEXT_SEQ_ID: AtomicU64 = AtomicU64::new(1);
 
 /// Per-sequence state on the paged backend: a block table plus the token
 /// history needed to seal full blocks into the prefix cache.  Shared by
@@ -27,6 +31,20 @@ pub struct PagedSeq {
     pub len: usize,
     /// Tokens whose K/V rows are cached (`tokens.len() == len`).
     pub tokens: Vec<u32>,
+    /// Process-unique identity, minted by [`PagedSeq::new`].  Release
+    /// replaces the state with a fresh one, so a recycled slot never
+    /// aliases an old identity — this is what lets resident-lane caches
+    /// ([`crate::runtime::residency`]) trust a `(id, epoch)` match.
+    pub id: u64,
+    /// Bumped whenever pool-side rows for this sequence change outside a
+    /// decode append the owning engine performed itself (today: prompt
+    /// admission, which pins prefix hits and adopts partial tails).  A
+    /// resident dense copy tagged with a stale epoch must be re-gathered.
+    /// In the current lifecycle every admission also starts from a
+    /// freshly-minted `id` (release replaces the state), so the id check
+    /// already subsumes this one — the epoch is belt-and-braces for any
+    /// future in-place re-admission path.
+    pub epoch: u64,
     /// Blocks already sealed into the prefix map.
     pub(crate) sealed_blocks: usize,
     /// Chain hash up to `sealed_blocks`.
@@ -39,6 +57,8 @@ impl PagedSeq {
             table: Vec::new(),
             len: 0,
             tokens: Vec::new(),
+            id: NEXT_SEQ_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: 0,
             sealed_blocks: 0,
             chain: HASH_SEED,
         }
@@ -64,6 +84,9 @@ pub(crate) fn begin_paged_prefill(
     tokens: &[u32],
 ) -> Option<usize> {
     debug_assert!(seq.len == 0 && seq.table.is_empty(), "prefill on a live seq");
+    // admission mutates pool-side rows (prefix pins, partial-tail
+    // adoption): any resident dense copy of this sequence goes stale
+    seq.epoch = seq.epoch.wrapping_add(1);
     let matched = pool.match_prefix(tokens, &mut seq.table);
     seq.len = matched;
     seq.tokens.extend_from_slice(tokens);

@@ -740,6 +740,84 @@ mod tests {
     }
 
     #[test]
+    fn prop_chain_hash_invariant_under_any_split() {
+        // hashing a token stream in one shot must equal hashing it in
+        // arbitrary chunks — block-aligned and mid-block alike — since
+        // the prefix cache seals per block while admission probes whole
+        // prompts
+        use crate::util::proptest::{check, Config};
+        check("chain-hash-split-invariant", Config::default(), |rng, _| {
+            let n = 1 + rng.below(96);
+            let stream: Vec<u32> = (0..n).map(|_| rng.next_u32() % 512).collect();
+            let whole = chain_hash(HASH_SEED, &stream);
+            let mut h = HASH_SEED;
+            let mut at = 0usize;
+            while at < n {
+                let step = 1 + rng.below(n - at);
+                h = chain_hash(h, &stream[at..at + step]);
+                at += step;
+            }
+            if h != whole {
+                return Err(format!("split hash {h:#x} != whole {whole:#x}"));
+            }
+            // a stream differing in any single token must diverge
+            let flip = rng.below(n);
+            let mut other = stream.clone();
+            other[flip] ^= 1 + rng.next_u32() % 255;
+            if chain_hash(HASH_SEED, &other) == whole {
+                return Err(format!("flip at {flip} did not change the hash"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_distinct_streams_never_adopt_foreign_tails() {
+        // seal a random stream, then probe random relatives: the match
+        // must cover exactly the shared prefix (capped one short of the
+        // probe, which always forwards its last token) and never serve
+        // rows past the divergence point — for block-aligned and
+        // mid-block divergences alike
+        use crate::util::proptest::{check, Config};
+        check("no-foreign-tail-adoption", Config { cases: 48, ..Config::default() },
+            |rng, _| {
+                let bs = 4usize;
+                let mut pool = KvPool::new(cfg(32, bs));
+                let n = bs + 1 + rng.below(20);
+                let stream: Vec<u32> = (0..n).map(|_| rng.next_u32() % 64).collect();
+                let mut t1 = Vec::new();
+                fill_seq(&mut pool, &mut t1, &stream);
+                pool.seal_full_blocks(&t1, &stream, 0, HASH_SEED);
+
+                // relative: shares `share` tokens then diverges hard
+                // (probe values never collide with stream values)
+                let share = rng.below(n + 1);
+                let mut probe: Vec<u32> = stream[..share].to_vec();
+                let tail = 1 + rng.below(8);
+                probe.extend((0..tail).map(|_| 1000 + rng.next_u32() % 64));
+                // only sealed (full) blocks are servable: the stream's
+                // trailing partial block never enters the prefix cache
+                let expect = share.min(n / bs * bs);
+                let got = pool.probe_prefix(&probe);
+                if got != expect {
+                    return Err(format!(
+                        "probe over {share}-shared prefix matched {got}, \
+                         want {expect} (stream {n} tokens)"
+                    ));
+                }
+                // the pinning walk agrees with the read-only probe
+                let mut t2 = Vec::new();
+                let matched = pool.match_prefix(&probe, &mut t2);
+                if matched != expect {
+                    return Err(format!("match {matched} != probe {expect}"));
+                }
+                pool.release_seq(&mut t2);
+                pool.release_seq(&mut t1);
+                Ok(())
+            });
+    }
+
+    #[test]
     fn gather_rows_roundtrips_block_table() {
         let mut pool = KvPool::new(cfg(4, 4));
         let tokens: Vec<u32> = (0..6).collect();

@@ -100,6 +100,21 @@ impl Artifacts {
             .with_context(|| format!("artifact graph '{name}' not in manifest"))
     }
 
+    /// Width of the decode graphs' `pos` input (their fourth input):
+    /// `decode_batch` on per-lane-position artifacts, where every lane
+    /// carries its own position and unequal-length sequences share one
+    /// graph call; `1` on legacy scalar-position artifacts (and when no
+    /// decode graph is present).  Sniffed from the manifest specs so
+    /// both artifact generations keep working.
+    pub fn decode_pos_width(&self) -> usize {
+        self.graphs
+            .iter()
+            .find(|g| g.name.starts_with("decode_"))
+            .and_then(|g| g.inputs.get(3))
+            .map(|s| s.numel())
+            .unwrap_or(1)
+    }
+
     pub fn weights_path(&self) -> PathBuf {
         self.root.join("weights.rrsw")
     }
@@ -147,6 +162,34 @@ mod tests {
         assert_eq!(g.inputs[0].shape, vec![1, 96]);
         assert_eq!(g.outputs[0].numel(), 96 * 256);
         assert!(a.graph("nope").is_err());
+        // no decode graph in the manifest: legacy scalar-pos default
+        assert_eq!(a.decode_pos_width(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn decode_pos_width_sniffs_per_lane_artifacts() {
+        let dir = std::env::temp_dir().join("rrs_artifacts_poswidth_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":{"vocab":256,"dim":128,"n_layers":4,"n_heads":4,
+                "n_kv_heads":2,"ffn":256,"max_seq":256,"rope_theta":10000.0},
+               "prefill":{"batch":1,"seq":96},
+               "decode":{"batch":4,"max_t":160,"pos_per_lane":true},
+               "graphs":{"decode_fp":{"file":"decode_fp.hlo.txt",
+                 "inputs":[["token","i32",[4,1]],
+                           ["kcache","f32",[4,4,160,2,32]],
+                           ["vcache","f32",[4,4,160,2,32]],
+                           ["pos","i32",[4]]],
+                 "outputs":[["logits","f32",[4,1,256]],
+                            ["kcache","f32",[4,4,160,2,32]],
+                            ["vcache","f32",[4,4,160,2,32]]]}}}"#,
+        )
+        .unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.decode_pos_width(), 4);
+        assert_eq!(a.decode_batch, 4);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -251,12 +251,11 @@ impl PjrtEngine {
 
     /// The stateless core of [`decode_step`](PjrtEngine::decode_step):
     /// run `decode_{variant}` over caller-owned dense caches (shape
-    /// [`kv_cache_shape`](PjrtEngine::kv_cache_shape), flattened) at
-    /// position `pos`, returning `(logits, kcache, vcache)` with the new
-    /// row written at `pos`.  This is what the paged backend
-    /// ([`super::paged::PagedPjrtEngine`]) drives — it gathers the dense
-    /// caches from pool blocks per step instead of round-tripping one
-    /// monolithic state.
+    /// [`kv_cache_shape`](PjrtEngine::kv_cache_shape), flattened) with
+    /// every lane at the same position `pos`, returning
+    /// `(logits, kcache, vcache)` with the new row written at `pos`.
+    /// Thin uniform-position wrapper over
+    /// [`decode_step_lanes`](PjrtEngine::decode_step_lanes).
     pub fn decode_step_raw(
         &self,
         variant: &str,
@@ -265,20 +264,58 @@ impl PjrtEngine {
         vcache: Vec<f32>,
         pos: usize,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let pos_lanes = vec![pos; self.artifacts.decode_batch];
+        self.decode_step_lanes(variant, tokens, kcache, vcache, &pos_lanes)
+    }
+
+    /// Run `decode_{variant}` with one position per lane: lane `i`'s new
+    /// row is written at `pos[i]` and its attention masks positions
+    /// beyond `pos[i]`, so unequal-length sequences share one graph
+    /// call.  On per-lane-position artifacts
+    /// ([`Artifacts::decode_pos_width`] == batch) the positions pass
+    /// straight through; legacy scalar-position artifacts accept only
+    /// position-aligned lanes (an error otherwise).  This is the hot
+    /// path the resident-lane paged backend
+    /// ([`super::paged::PagedPjrtEngine`]) drives.
+    pub fn decode_step_lanes(
+        &self,
+        variant: &str,
+        tokens: &[i32],
+        kcache: Vec<f32>,
+        vcache: Vec<f32>,
+        pos: &[usize],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let b = self.artifacts.decode_batch;
         if tokens.len() != b {
             bail!("decode batch is {b}, got {} tokens", tokens.len());
         }
-        if pos >= self.artifacts.decode_max_t {
-            bail!("decode position {pos} out of range");
+        if pos.len() != b {
+            bail!("decode batch is {b}, got {} lane positions", pos.len());
         }
+        for &p in pos {
+            if p >= self.artifacts.decode_max_t {
+                bail!("decode position {p} out of range");
+            }
+        }
+        let pos_input = if self.artifacts.decode_pos_width() == b {
+            HostTensor::i32(vec![b], pos.iter().map(|&p| p as i32).collect())
+        } else {
+            let p0 = pos[0];
+            if pos.iter().any(|&p| p != p0) {
+                bail!(
+                    "decode_{variant} takes a scalar position (legacy \
+                     artifacts); lanes must be position-aligned"
+                );
+            }
+            HostTensor::i32(vec![1], vec![p0 as i32])
+        };
         let shape = self.kv_cache_shape();
         let runner = self.runner(&format!("decode_{variant}"))?;
         let inputs = vec![
             HostTensor::i32(vec![b, 1], tokens.to_vec()),
             HostTensor::f32(shape.clone(), kcache),
             HostTensor::f32(shape, vcache),
-            HostTensor::i32(vec![1], vec![pos as i32]),
+            pos_input,
         ];
         let out = runner.run(&inputs)?;
         let mut it = out.into_iter();

@@ -10,12 +10,17 @@
 //! Serving runs through [`paged::PagedPjrtEngine`], which keeps the
 //! decode graphs' KV rows in the shared paged pool
 //! ([`crate::kvpool`]) — the AOT path and the interpreted path are
-//! governed by the same allocator, prefix cache, and admission gates.
+//! governed by the same allocator, prefix cache, and admission gates —
+//! and serves steady-state decode from resident lanes
+//! ([`residency::LaneResidency`]): O(1) per token, refreshed from the
+//! pool only when a sequence's identity or epoch changes.
 
 pub mod artifacts;
 pub mod executor;
 pub mod paged;
+pub mod residency;
 
 pub use artifacts::Artifacts;
 pub use executor::{GraphRunner, PjrtEngine, PjrtKvState};
 pub use paged::PagedPjrtEngine;
+pub use residency::{LaneResidency, ResidencyStats};

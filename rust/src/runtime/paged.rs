@@ -1,23 +1,30 @@
 //! Paged serving backend for the PJRT runtime: AOT-compiled decode
 //! graphs whose KV memory lives in the same [`KvPool`] as the
-//! interpreted engine's.
+//! interpreted engine's, served from **resident decode lanes**.
 //!
 //! The decode graph is stateless over dense host tensors (caches of
 //! shape `[L, B, maxT, H, D]` round-tripped through every call, see
-//! [`PjrtEngine::decode_step_raw`]).  This module keeps the
-//! *authoritative* KV rows in pool blocks instead: before a step, each
-//! active lane's block table is gathered into the dense cache — blocks
-//! store f32 rows for the PJRT path, so the gather is bit-exact — and
-//! after the step the one new row per layer is scattered back into the
-//! pool.  Allocation, prefix sharing (full-block and partial-tail),
-//! copy-on-write, and prefix-aware admission are therefore *identical*
-//! to the interpreted [`crate::kvpool::PagedEngine`] path: one
-//! pool-governed scheduler serves every backend.
-//! `rust/tests/runtime_paged.rs` asserts the paged path is bit-identical
-//! to the flat [`PjrtKvState`] path.
+//! [`PjrtEngine::decode_step_lanes`]).  The *authoritative* KV rows
+//! live in pool blocks — blocks store f32 rows for the PJRT path, so
+//! every copy is bit-exact — while a [`LaneResidency`] keeps per-lane
+//! dense copies alive between steps.  Steady-state decode is O(1) per
+//! token: a lane whose `(id, epoch, rows)` tag still matches its
+//! sequence skips the gather entirely, the graph appends the new row in
+//! place (per-lane positions, so unequal-length sequences share one
+//! call), and only that row is scattered back into the pool.  Lanes are
+//! re-gathered only on admission, preemption/re-admission, or CoW
+//! adoption (epoch/id changes — see [`crate::runtime::residency`]).
+//!
+//! Allocation, prefix sharing (full-block and partial-tail),
+//! copy-on-write, and prefix-aware admission are *identical* to the
+//! interpreted [`crate::kvpool::PagedEngine`] path: one pool-governed
+//! scheduler serves every backend.  `rust/tests/runtime_paged.rs` and
+//! `rust/tests/paged_churn.rs` assert the paged path is bit-identical
+//! to the flat [`PjrtKvState`] path, across admission/preemption churn.
 //!
 //! [`PjrtKvState`]: super::executor::PjrtKvState
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -28,15 +35,18 @@ use crate::kvpool::{BlockId, KvPool, KvPoolConfig, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
 
 use super::executor::PjrtEngine;
+use super::residency::{LaneResidency, ResidencyStats};
 
 /// Pool-governed serving engine over AOT-compiled `decode_{variant}`
-/// graphs.  Implements [`ServeEngine`], so the coordinator's scheduler
-/// drives it exactly like the interpreted paged backend: block-gated
-/// admission, prompt-prefix reuse, and preemption to the queue.
+/// graphs with resident decode lanes.  Implements [`ServeEngine`], so
+/// the coordinator's scheduler drives it exactly like the interpreted
+/// paged backend: block-gated admission, prompt-prefix reuse, and
+/// preemption to the queue.
 pub struct PagedPjrtEngine {
     rt: PjrtEngine,
     variant: String,
     pool: Mutex<KvPool>,
+    resident: Mutex<LaneResidency>,
     n_layers: usize,
     /// K/V row width: `n_kv_heads * head_dim`.
     kv_dim: usize,
@@ -45,14 +55,22 @@ pub struct PagedPjrtEngine {
     /// Positions per lane in the dense cache tensors.
     max_t: usize,
     vocab: usize,
+    /// The decode graphs take one position input per lane (new
+    /// artifacts); legacy scalar-position graphs force the re-gather
+    /// path with equal-position lane grouping.
+    per_lane_pos: bool,
+    /// Resident fast path enabled (requires `per_lane_pos`; see
+    /// [`set_residency`](PagedPjrtEngine::set_residency)).
+    use_residency: bool,
 }
 
 // SAFETY: the xla handles (PJRT client + compiled executables) are only
 // reached through `&self` methods of `PjrtEngine`, whose runner cache is
 // internally locked, and the PJRT CPU client's execute path is
-// thread-safe; the pool sits behind its own mutex.  `Send + Sync` is
-// what lets the coordinator move the engine onto its single worker
-// thread (the `ServeEngine` bound).
+// thread-safe; the pool and the resident lanes sit behind their own
+// mutexes (lock order: pool, then resident).  `Send + Sync` is what
+// lets the coordinator move the engine onto its single worker thread
+// (the `ServeEngine` bound).
 unsafe impl Send for PagedPjrtEngine {}
 unsafe impl Sync for PagedPjrtEngine {}
 
@@ -77,14 +95,21 @@ impl PagedPjrtEngine {
             kv_bits: 32,
             kv_group: 1,
         };
+        let lanes = rt.artifacts.decode_batch;
+        let max_t = rt.artifacts.decode_max_t;
+        let per_lane_pos = rt.artifacts.decode_pos_width() == lanes;
+        let dense_len = m.n_layers * lanes * max_t * m.kv_dim();
         Ok(PagedPjrtEngine {
             variant: variant.to_string(),
             pool: Mutex::new(KvPool::new(cfg)),
+            resident: Mutex::new(LaneResidency::new(lanes, dense_len)),
             n_layers: m.n_layers,
             kv_dim: m.kv_dim(),
-            lanes: rt.artifacts.decode_batch,
-            max_t: rt.artifacts.decode_max_t,
+            lanes,
+            max_t,
             vocab: m.vocab,
+            per_lane_pos,
+            use_residency: per_lane_pos,
             rt,
         })
     }
@@ -92,6 +117,32 @@ impl PagedPjrtEngine {
     /// The graph variant served (`fp` / `rtn` / `rrs`).
     pub fn variant(&self) -> &str {
         &self.variant
+    }
+
+    /// `true` when the loaded artifacts lower a per-lane position input
+    /// (unequal-length sequences share one decode call).
+    pub fn per_lane_pos(&self) -> bool {
+        self.per_lane_pos
+    }
+
+    /// `true` when decode runs on resident lanes (the O(1) fast path).
+    pub fn residency_enabled(&self) -> bool {
+        self.use_residency
+    }
+
+    /// Toggle the resident fast path — `false` forces the per-step
+    /// re-gather baseline (what `cargo bench --bench kvpool_prefill`
+    /// measures against).  Residency cannot be enabled on legacy
+    /// scalar-position artifacts: a resident bank would have idle lanes
+    /// clobbered at the shared position, so the request is ignored.
+    pub fn set_residency(&mut self, on: bool) {
+        self.use_residency = on && self.per_lane_pos;
+    }
+
+    /// Cumulative gather/scatter/refresh counters of the resident-lane
+    /// subsystem (both paths count their gathers).
+    pub fn residency_stats(&self) -> ResidencyStats {
+        self.resident.lock().unwrap().stats()
     }
 
     /// Create an empty paged sequence (same state type as the
@@ -110,8 +161,10 @@ impl PagedPjrtEngine {
     }
 
     /// Gather a sequence's pooled rows into lane `lane` of the dense
-    /// cache tensors (positions `[0, len)`; the rest stays zero, exactly
-    /// like a fresh flat state).
+    /// cache tensors (positions `[0, len)` from the pool).  `zero_tail`
+    /// scrubs `[len, max_t)` so a *refreshed resident* lane is
+    /// indistinguishable from a fresh flat state; callers packing into
+    /// freshly zero-allocated buffers skip the redundant memset.
     fn pack_lane(
         &self,
         pool: &KvPool,
@@ -120,6 +173,7 @@ impl PagedPjrtEngine {
         lane: usize,
         kc: &mut [f32],
         vc: &mut [f32],
+        zero_tail: bool,
     ) {
         let mut ks: Vec<Vec<f32>> = Vec::new();
         let mut vs: Vec<Vec<f32>> = Vec::new();
@@ -129,6 +183,12 @@ impl PagedPjrtEngine {
                 let off = self.row_off(layer, lane, pos);
                 kc[off..off + self.kv_dim].copy_from_slice(&keys[pos]);
                 vc[off..off + self.kv_dim].copy_from_slice(&vals[pos]);
+            }
+            if zero_tail {
+                let tail = self.row_off(layer, lane, len);
+                let end = self.row_off(layer, lane, self.max_t);
+                kc[tail..end].fill(0.0);
+                vc[tail..end].fill(0.0);
             }
         }
     }
@@ -174,7 +234,11 @@ impl PagedPjrtEngine {
         };
         let mut kc = vec![0.0f32; self.dense_len()];
         let mut vc = vec![0.0f32; self.dense_len()];
-        self.pack_lane(&pool, &seq.table, matched, 0, &mut kc, &mut vc);
+        self.pack_lane(&pool, &seq.table, matched, 0, &mut kc, &mut vc, false);
+        {
+            let mut res = self.resident.lock().unwrap();
+            res.note_gather();
+        }
         let mut logits = Vec::new();
         for (i, &tok) in tokens[matched..].iter().enumerate() {
             let pos = matched + i;
@@ -195,18 +259,27 @@ impl PagedPjrtEngine {
             vc = vc2;
             self.harvest_row(&mut pool, &mut seq.table, &kc, &vc, 0, pos);
             seq.len += 1;
+            let mut res = self.resident.lock().unwrap();
+            res.note_graph_call();
+            res.note_scatter(self.n_layers as u64);
         }
         seal_paged_seq(&mut pool, seq);
         logits.truncate(self.vocab);
         Ok(Some(logits))
     }
 
-    /// One pool-governed decode step for a batch of sequences.  The
-    /// graph's `pos` input is a scalar shared across lanes, so sequences
-    /// at the same position share one graph call (up to the lane count);
-    /// the rest run in further calls.  Returns logits `[batch, vocab]`.
-    /// On a graph error the already-stepped sequences keep their (valid)
-    /// state; the caller still owns every sequence and releases as usual.
+    /// One pool-governed decode step for a batch of sequences.  With
+    /// per-lane-position artifacts the batch runs on resident lanes:
+    /// unequal-length sequences share one graph call per bank of
+    /// `lanes` lanes, resident lanes skip the gather, and only the
+    /// appended row is scattered back.  Legacy scalar-position artifacts
+    /// (or [`set_residency`](PagedPjrtEngine::set_residency)`(false)`)
+    /// fall back to grouping equal-position sequences and re-gathering
+    /// each group.  Returns logits `[batch, vocab]`.  On a graph error
+    /// the already-stepped sequences keep their advanced (valid) pool
+    /// state, un-stepped sequences are rolled back to their pre-call
+    /// state; the caller still owns every sequence and releases as
+    /// usual.
     pub fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Result<Mat> {
         let mut pool = self.pool.lock().unwrap();
         let mut out = Mat::zeros(batch.len(), self.vocab);
@@ -217,6 +290,99 @@ impl PagedPjrtEngine {
                 "kvpool exhausted during decode (reserve_decode must gate)"
             );
         }
+        let mut res = self.resident.lock().unwrap();
+        let stepped = if self.use_residency {
+            self.decode_resident(&mut pool, &mut res, batch, &mut out)
+        } else {
+            self.decode_regather(&mut pool, &mut res, batch, &mut out)
+        };
+        if let Err(e) = stepped {
+            // un-stepped sequences still carry the token pushed above
+            // (tokens.len() == len + 1) with no KV row behind it: pop it
+            // so the tokens/len invariant — and future prefix sealing —
+            // stays sound
+            for (seq, _) in batch.iter_mut() {
+                if seq.tokens.len() == seq.len + 1 {
+                    seq.tokens.pop();
+                }
+            }
+            return Err(e);
+        }
+        Ok(out)
+    }
+
+    /// The O(1) fast path: resident banks, per-lane positions.
+    fn decode_resident(
+        &self,
+        pool: &mut KvPool,
+        res: &mut LaneResidency,
+        batch: &mut [(&mut PagedSeq, u32)],
+        out: &mut Mat,
+    ) -> Result<()> {
+        let occ: Vec<(u64, u64, usize)> =
+            batch.iter().map(|(s, _)| (s.id, s.epoch, s.len)).collect();
+        let plan = res.assign(&occ);
+        for (i, a) in plan.iter().enumerate() {
+            if a.refresh {
+                let (kc, vc) = res.bank_buffers_mut(a.bank);
+                let seq = &batch[i].0;
+                self.pack_lane(pool, &seq.table, seq.len, a.lane, kc, vc, true);
+            }
+        }
+        let mut by_bank: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, a) in plan.iter().enumerate() {
+            by_bank.entry(a.bank).or_default().push(i);
+        }
+        for (&bank, items) in &by_bank {
+            let mut toks = vec![0i32; self.lanes];
+            let mut pos: Vec<usize> = (0..self.lanes)
+                .map(|l| res.idle_pos(bank, l, self.max_t))
+                .collect();
+            for &i in items {
+                let a = plan[i];
+                toks[a.lane] = batch[i].1 as i32;
+                pos[a.lane] = batch[i].0.len;
+            }
+            let (kc, vc) = res.take_bank_buffers(bank);
+            let step = self.rt.decode_step_lanes(&self.variant, &toks, kc, vc, &pos);
+            let (lg, kc2, vc2) = match step {
+                Ok(x) => x,
+                Err(e) => {
+                    // the in-flight buffers are gone: restore a zeroed
+                    // bank so no lane trusts stale data
+                    res.reset_bank(bank);
+                    return Err(e);
+                }
+            };
+            res.note_graph_call();
+            for &i in items {
+                let a = plan[i];
+                let seq = &mut *batch[i].0;
+                let p = seq.len;
+                self.harvest_row(pool, &mut seq.table, &kc2, &vc2, a.lane, p);
+                res.note_scatter(self.n_layers as u64);
+                seq.len += 1;
+                seal_paged_seq(pool, seq);
+                res.committed(a.bank, a.lane, seq.len);
+                out.row_mut(i)
+                    .copy_from_slice(&lg[a.lane * self.vocab..(a.lane + 1) * self.vocab]);
+            }
+            res.put_bank_buffers(bank, kc2, vc2);
+        }
+        Ok(())
+    }
+
+    /// The re-gather baseline (legacy scalar-position artifacts, and the
+    /// benchmark comparison point): group sequences by equal position,
+    /// pack every group's lanes from pool blocks, one graph call per
+    /// group.
+    fn decode_regather(
+        &self,
+        pool: &mut KvPool,
+        res: &mut LaneResidency,
+        batch: &mut [(&mut PagedSeq, u32)],
+        out: &mut Mat,
+    ) -> Result<()> {
         let mut order: Vec<usize> = (0..batch.len()).collect();
         order.sort_by_key(|&i| batch[i].0.len);
         let mut g0 = 0usize;
@@ -234,29 +400,36 @@ impl PagedPjrtEngine {
             let mut vc = vec![0.0f32; self.dense_len()];
             let mut toks = vec![batch[group[0]].1 as i32; self.lanes];
             for (lane, &i) in group.iter().enumerate() {
-                self.pack_lane(&pool, &batch[i].0.table, pos, lane, &mut kc, &mut vc);
+                self.pack_lane(pool, &batch[i].0.table, pos, lane, &mut kc, &mut vc, false);
+                res.note_gather();
                 toks[lane] = batch[i].1 as i32;
             }
             let (lg, kc2, vc2) =
                 self.rt.decode_step_raw(&self.variant, &toks, kc, vc, pos)?;
+            res.note_graph_call();
             for (lane, &i) in group.iter().enumerate() {
-                self.harvest_row(&mut pool, &mut batch[i].0.table, &kc2, &vc2, lane, pos);
+                self.harvest_row(pool, &mut batch[i].0.table, &kc2, &vc2, lane, pos);
+                res.note_scatter(self.n_layers as u64);
                 let seq = &mut *batch[i].0;
                 seq.len += 1;
-                seal_paged_seq(&mut pool, seq);
+                seal_paged_seq(pool, seq);
                 out.row_mut(i)
                     .copy_from_slice(&lg[lane * self.vocab..(lane + 1) * self.vocab]);
             }
             g0 = g1;
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Release the sequence's blocks back to the pool (retire or
-    /// preemption); sealed blocks stay cached for prefix reuse.
+    /// preemption); sealed blocks stay cached for prefix reuse.  The
+    /// sequence's resident lane is dropped eagerly (and trailing empty
+    /// banks freed), and the fresh state carries a new identity, so a
+    /// stale tag can never alias it.
     pub fn release(&self, seq: &mut PagedSeq) {
         let mut pool = self.pool.lock().unwrap();
         pool.release_seq(&mut seq.table);
+        self.resident.lock().unwrap().invalidate_seq(seq.id);
         *seq = PagedSeq::new();
     }
 
@@ -343,5 +516,9 @@ impl ServeEngine for PagedPjrtEngine {
 
     fn pool_stats(&self) -> Option<PoolStats> {
         Some(self.stats())
+    }
+
+    fn residency_stats(&self) -> Option<ResidencyStats> {
+        Some(PagedPjrtEngine::residency_stats(self))
     }
 }
