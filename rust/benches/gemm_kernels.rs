@@ -1,0 +1,173 @@
+//! GEMM kernel-layer bench: the staged scalar reference path vs the
+//! runtime-dispatched packed microkernel, on decode- and prefill-shaped
+//! problems.
+//!
+//! * decode shape — a handful of token rows against a wide weight
+//!   (memory-bound over the weight: this is where consuming the
+//!   nibble-packed weight directly halves the traffic);
+//! * prefill shape — many rows, square-ish weight (compute-bound).
+//!
+//! Three measurements per shape: the raw INT4 igemm (unpacked reference
+//! `igemm_i8_bt` vs dispatched packed), the fused RRS GEMM (staged
+//! `forward_rs_fused_prepermuted` vs dispatched), and the RRS prologue
+//! (staged vs fused).  Results land in `BENCH_gemm.json` (CI uploads all
+//! `BENCH_*.json`), tagged with the live backend + autotuned tile so the
+//! perf trajectory is attributable.  Set `RRS_KERNEL=scalar` for an A/B
+//! of the dispatch itself.
+//!
+//! Run: `cargo bench --bench gemm_kernels` (add `--full` for bigger
+//! shapes)
+
+use rrs::kernels;
+use rrs::linalg::igemm::{igemm_i8_bt, MatI8};
+use rrs::quant::pack4::PackedI4;
+use rrs::quant::qlinear::forward_rs_fused_prepermuted;
+use rrs::quant::{rtn, runtime_smooth};
+use rrs::util::bench::{black_box, Bencher};
+use rrs::util::json::{obj, Json};
+use rrs::util::rng::Pcg;
+
+struct ShapeResult {
+    name: &'static str,
+    n: usize,
+    k: usize,
+    m: usize,
+    igemm_ref_ns: f32,
+    igemm_disp_ns: f32,
+    rs_ref_ns: f32,
+    rs_disp_ns: f32,
+    prologue_ref_ns: f32,
+    prologue_disp_ns: f32,
+}
+
+fn rand_codes(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.below(15) as i8 - 7).collect()
+}
+
+fn measure(name: &'static str, n: usize, k: usize, m: usize, quick: bool) -> ShapeResult {
+    let mut rng = Pcg::new(0xBE7C);
+    let x = rrs::linalg::gemm::Mat::from_vec(n, k, rng.normal_vec(n * k));
+    let a = MatI8::from_vec(n, k, rand_codes(&mut rng, n * k));
+    let wq = MatI8::from_vec(m, k, rand_codes(&mut rng, m * k));
+    let sw: Vec<f32> = (0..m).map(|j| 0.01 + (j % 13) as f32 * 1e-3).collect();
+    let group = 128.min(k);
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+
+    // raw INT4 igemm: unpacked i8 reference vs packed dispatched
+    let r_ref = bencher.run("igemm ref", || {
+        black_box(igemm_i8_bt(&a, &wq));
+    });
+    let bp = PackedI4::pack(&wq);
+    let r_disp = bencher.run("igemm dispatched", || {
+        black_box(kernels::igemm_packed(&a, &bp));
+    });
+
+    // fused RRS GEMM over a pre-permuted weight (the sticky-perm hot
+    // loop): staged reference vs dispatched packed kernel
+    let sa = runtime_smooth::prepare_staged(&x, group);
+    let wqp = wq.permute_cols(&sa.perm);
+    let bpp = PackedI4::pack(&wqp);
+    let f_ref = bencher.run("rs fused ref", || {
+        black_box(forward_rs_fused_prepermuted(&sa, &wqp, &sw));
+    });
+    let f_disp = bencher.run("rs fused dispatched", || {
+        black_box(kernels::gemm_rs_fused_packed(
+            &sa.q,
+            &sa.token_scales,
+            sa.group,
+            &sa.group_scales,
+            &bpp,
+            &sw,
+        ));
+    });
+
+    // activation prologue: staged passes vs fused kernel
+    let p_ref = bencher.run("prologue ref", || {
+        black_box(runtime_smooth::prepare_staged(&x, group));
+    });
+    let p_disp = bencher.run("prologue dispatched", || {
+        black_box(runtime_smooth::prepare(&x, group));
+    });
+
+    let r = ShapeResult {
+        name,
+        n,
+        k,
+        m,
+        igemm_ref_ns: r_ref.ns_per_iter(),
+        igemm_disp_ns: r_disp.ns_per_iter(),
+        rs_ref_ns: f_ref.ns_per_iter(),
+        rs_disp_ns: f_disp.ns_per_iter(),
+        prologue_ref_ns: p_ref.ns_per_iter(),
+        prologue_disp_ns: p_disp.ns_per_iter(),
+    };
+    println!(
+        "{name:<8} [{n}x{k}x{m}]  igemm {:>10.0} -> {:>10.0} ns ({:.2}x)  \
+         rs-fused {:>10.0} -> {:>10.0} ns ({:.2}x)  \
+         prologue {:>9.0} -> {:>9.0} ns ({:.2}x)",
+        r.igemm_ref_ns,
+        r.igemm_disp_ns,
+        r.igemm_ref_ns / r.igemm_disp_ns.max(1.0),
+        r.rs_ref_ns,
+        r.rs_disp_ns,
+        r.rs_ref_ns / r.rs_disp_ns.max(1.0),
+        r.prologue_ref_ns,
+        r.prologue_disp_ns,
+        r.prologue_ref_ns / r.prologue_disp_ns.max(1.0),
+    );
+    r
+}
+
+fn shape_json(r: &ShapeResult) -> Json {
+    obj(vec![
+        ("shape", r.name.into()),
+        ("n", r.n.into()),
+        ("k", r.k.into()),
+        ("m", r.m.into()),
+        ("igemm_ref_ns", (r.igemm_ref_ns as f64).into()),
+        ("igemm_dispatched_ns", (r.igemm_disp_ns as f64).into()),
+        (
+            "igemm_speedup",
+            ((r.igemm_ref_ns / r.igemm_disp_ns.max(1.0)) as f64).into(),
+        ),
+        ("rs_fused_ref_ns", (r.rs_ref_ns as f64).into()),
+        ("rs_fused_dispatched_ns", (r.rs_disp_ns as f64).into()),
+        (
+            "rs_fused_speedup",
+            ((r.rs_ref_ns / r.rs_disp_ns.max(1.0)) as f64).into(),
+        ),
+        ("prologue_ref_ns", (r.prologue_ref_ns as f64).into()),
+        ("prologue_dispatched_ns", (r.prologue_disp_ns as f64).into()),
+    ])
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let ks = kernels::stats();
+    println!(
+        "gemm_kernels bench: backend {} (tile {}, autotuned {}, {} us)",
+        ks.backend,
+        ks.tiles.label(),
+        ks.autotuned,
+        ks.autotune_us
+    );
+    // decode: small batch, wide weight (weight streaming dominates);
+    // prefill: many rows, moderate weight
+    let (dk, dm) = if full { (2048, 4096) } else { (1024, 2048) };
+    let (pn, pk, pm) = if full { (256, 1024, 1024) } else { (96, 512, 512) };
+    let decode = measure("decode", 8, dk, dm, !full);
+    let prefill = measure("prefill", pn, pk, pm, !full);
+
+    let j = obj(vec![
+        ("bench", "gemm_kernels".into()),
+        ("backend", ks.backend.into()),
+        ("tile", Json::Str(ks.tiles.label())),
+        ("autotuned", ks.autotuned.into()),
+        ("shapes", Json::Arr(vec![shape_json(&decode), shape_json(&prefill)])),
+    ]);
+    let path = "BENCH_gemm.json";
+    match std::fs::write(path, j.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -3,6 +3,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::kernels;
 use crate::kvpool::PoolStats;
 use crate::runtime::residency::ResidencyStats;
 use crate::util::json::{obj, Json};
@@ -179,6 +180,7 @@ impl Metrics {
                     ("prefix_hit_rate", self.prefix_hit_rate().into()),
                 ]),
             ),
+            ("kernels", kernel_json()),
             (
                 "lane_residency",
                 obj(vec![
@@ -229,6 +231,31 @@ impl Metrics {
     }
 }
 
+/// Kernel-layer snapshot for the `stats` endpoint: the live backend, the
+/// autotuned tile shape, and cumulative dispatch counters.  Read straight
+/// from the process-wide [`crate::kernels`] registry — all serving
+/// backends share one kernel layer, so there is nothing per-engine to
+/// poll.  Uses the non-forcing peek so a metrics poll never runs the
+/// startup autotune sweep itself (a pure-PJRT server may never resolve
+/// the interpreted kernel registry at all).
+fn kernel_json() -> Json {
+    let Some(ks) = kernels::stats_peek() else {
+        return obj(vec![("backend", "uninitialized".into())]);
+    };
+    obj(vec![
+        ("backend", ks.backend.into()),
+        ("tile", Json::Str(ks.tiles.label())),
+        ("autotuned", ks.autotuned.into()),
+        ("autotune_us", (ks.autotune_us as usize).into()),
+        ("fused_gemm_calls", (ks.fused_gemm_calls as usize).into()),
+        ("fused_gemm_rows", (ks.fused_gemm_rows as usize).into()),
+        ("per_channel_calls", (ks.per_channel_calls as usize).into()),
+        ("igemm_calls", (ks.igemm_calls as usize).into()),
+        ("prologue_rows", (ks.prologue_rows as usize).into()),
+        ("fwht_rows", (ks.fwht_rows as usize).into()),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +290,31 @@ mod tests {
         assert_eq!(lr.get("lane_refresh_total").unwrap().as_usize(), Some(5));
         assert_eq!(lr.get("resident_hits").unwrap().as_usize(), Some(120));
         assert_eq!(lr.get("decode_graph_calls").unwrap().as_usize(), Some(33));
+    }
+
+    #[test]
+    fn kernel_gauges_snapshot() {
+        // exercise one dispatched GEMM so the counters are live, then
+        // check the stats snapshot carries the kernel section
+        use crate::linalg::igemm::MatI8;
+        use crate::quant::pack4::PackedI4;
+        let xq = MatI8::from_vec(1, 16, vec![1i8; 16]);
+        let wq = MatI8::from_vec(2, 16, vec![2i8; 32]);
+        let _ = crate::kernels::gemm_per_channel_packed(
+            &xq,
+            &[0.5],
+            &PackedI4::pack(&wq),
+            &[0.25, 0.25],
+        );
+        let m = Metrics::new();
+        let j = m.snapshot_json();
+        let kj = j.get("kernels").unwrap();
+        assert!(!kj.get("backend").unwrap().as_str().unwrap().is_empty());
+        let tile = kj.get("tile").unwrap().as_str().unwrap().to_string();
+        assert_eq!(tile.split('x').count(), 3, "tile label {tile}");
+        assert!(kj.get("per_channel_calls").unwrap().as_usize().unwrap() >= 1);
+        assert!(kj.get("fused_gemm_calls").is_some());
+        assert!(kj.get("prologue_rows").is_some());
     }
 
     #[test]

@@ -1,0 +1,83 @@
+//! One-shot startup autotuner: pick the (MR, NR, KC) tile shape for the
+//! dispatched GEMM microkernel by timing a decode-shaped workload.
+//!
+//! Decode is the shape that matters — a handful of token rows against
+//! thousands of packed weight channels — so the probe GEMM is small-`n`,
+//! wide-`m`.  The whole sweep budgets a few milliseconds (it runs once
+//! per process, warmed by `QuantModel::prepare`); the chosen shape and
+//! the time spent are recorded in the registry and exported through the
+//! metrics `stats` snapshot.  `RRS_TILE=MRxNRxKC` overrides the sweep,
+//! `RRS_AUTOTUNE=0` (or the scalar backend) skips it.
+
+use std::time::Instant;
+
+use crate::linalg::igemm::MatI8;
+use crate::quant::pack4::PackedI4;
+use crate::util::rng::Pcg;
+
+use super::{igemm_packed_with, KernelBackend, TileConfig};
+
+/// Decode-shaped probe: token rows × K × output channels.
+const PROBE_N: usize = 8;
+const PROBE_K: usize = 512;
+const PROBE_M: usize = 128;
+/// Timed repetitions per candidate (best-of, after one warmup).
+const REPS: usize = 2;
+
+fn probe_operands() -> (MatI8, PackedI4) {
+    let mut rng = Pcg::new(0xA070);
+    let a = MatI8::from_vec(
+        PROBE_N,
+        PROBE_K,
+        (0..PROBE_N * PROBE_K).map(|_| rng.below(15) as i8 - 7).collect(),
+    );
+    let b = MatI8::from_vec(
+        PROBE_M,
+        PROBE_K,
+        (0..PROBE_M * PROBE_K).map(|_| rng.below(15) as i8 - 7).collect(),
+    );
+    (a, PackedI4::pack(&b))
+}
+
+/// Sweep the candidate grid on `backend`; returns the fastest tile shape
+/// and the total microseconds spent tuning.
+pub fn autotune(backend: &dyn KernelBackend) -> (TileConfig, u64) {
+    let t0 = Instant::now();
+    let (a, bp) = probe_operands();
+    let mut best = TileConfig::DEFAULT;
+    let mut best_ns = u128::MAX;
+    for &nr in &[16usize, 32, 64] {
+        for &kc in &[128usize, 256, 512] {
+            let cand = TileConfig { mr: 8, nr, kc };
+            // warmup pass (page in scratch, settle the branch predictor)
+            let _ = igemm_packed_with(backend, cand, &a, &bp);
+            let mut cand_ns = u128::MAX;
+            for _ in 0..REPS {
+                let s = Instant::now();
+                let out = igemm_packed_with(backend, cand, &a, &bp);
+                let dt = s.elapsed().as_nanos();
+                std::hint::black_box(out);
+                cand_ns = cand_ns.min(dt);
+            }
+            if cand_ns < best_ns {
+                best_ns = cand_ns;
+                best = cand;
+            }
+        }
+    }
+    (best, t0.elapsed().as_micros() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autotune_returns_a_candidate() {
+        // sweep the portable backend explicitly (cheap and always built)
+        let (tiles, us) = autotune(&super::super::portable::PortableBackend);
+        assert!(tiles.mr > 0 && tiles.nr > 0 && tiles.kc > 0);
+        assert!([16, 32, 64].contains(&tiles.nr));
+        assert!(us > 0);
+    }
+}

@@ -1,0 +1,426 @@
+//! The AVX2 backend: explicit `std::arch` intrinsics for the packed
+//! INT4 GEMM, the RRS prologue reductions, and the FWHT butterflies.
+//!
+//! The GEMM microkernel consumes nibble-packed weight rows directly:
+//! each 16-byte chunk is masked into its low/high nibbles, sign-extended
+//! with the `(n ^ 8) - 8` trick, widened to i16 and multiply-accumulated
+//! with `pmaddwd` against the activation row split into even/odd lanes
+//! (one deinterleave per row block, amortized over every output
+//! channel).  All integer accumulation is exact and the f32 epilogue
+//! follows the fixed order of the [`super::KernelBackend`] contract, so
+//! this backend is bit-identical to the scalar reference — asserted by
+//! `rust/tests/kernel_diff.rs`.
+//!
+//! Only compiled on x86-64; [`super::registry`] selects it when
+//! `is_x86_feature_detected!("avx2")` holds (or `RRS_KERNEL=avx2`).
+
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use std::arch::x86_64::*;
+
+    use crate::quant::pack4::PackedI4;
+
+    use super::super::{scalar, KernelBackend, TileConfig};
+
+    /// See the module docs.
+    pub struct Avx2Backend;
+
+    impl KernelBackend for Avx2Backend {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn igemm_block(
+            &self,
+            a: &[i8],
+            n: usize,
+            k: usize,
+            b: &PackedI4,
+            j0: usize,
+            j1: usize,
+            tiles: TileConfig,
+            acc: &mut [i32],
+        ) {
+            // sound: this backend is only registered after runtime AVX2
+            // detection (see kernels::select_backend)
+            unsafe { igemm_block_avx2(a, n, k, b, j0, j1, tiles, acc) }
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn gemm_scaled_block(
+            &self,
+            a: &[i8],
+            n: usize,
+            k: usize,
+            group: usize,
+            sg: &[f32],
+            sx: &[f32],
+            b: &PackedI4,
+            sw: &[f32],
+            j0: usize,
+            j1: usize,
+            tiles: TileConfig,
+            out: &mut [f32],
+        ) {
+            unsafe { gemm_scaled_block_avx2(a, n, k, group, sg, sx, b, sw, j0, j1, tiles, out) }
+        }
+
+        fn colmax_abs(&self, x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
+            unsafe { colmax_abs_avx2(x, rows, k, s) }
+        }
+
+        fn smooth_row(
+            &self,
+            row: &[f32],
+            perm: &[usize],
+            group: usize,
+            sg: &[f32],
+            out: &mut [f32],
+        ) -> f32 {
+            unsafe { smooth_row_avx2(row, perm, group, sg, out) }
+        }
+
+        fn fwht(&self, x: &mut [f32]) {
+            unsafe { fwht_avx2(x) }
+        }
+
+        fn dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+            unsafe { dot4_sse(a, b) }
+        }
+    }
+
+    /// Split `rows` activation rows starting at `ib` into even/odd
+    /// element planes (`ae[t] = a[2t]`, `ao[t] = a[2t+1]`), zero-padding
+    /// to `stride` so the SIMD loop can read whole chunks.
+    fn deinterleave(
+        a: &[i8],
+        k: usize,
+        ib: usize,
+        rows: usize,
+        stride: usize,
+        ae: &mut [i8],
+        ao: &mut [i8],
+    ) {
+        let half = k / 2;
+        let used = k.div_ceil(2);
+        for r in 0..rows {
+            let arow = &a[(ib + r) * k..(ib + r + 1) * k];
+            let e = &mut ae[r * stride..(r + 1) * stride];
+            let o = &mut ao[r * stride..(r + 1) * stride];
+            for t in 0..half {
+                e[t] = arow[2 * t];
+                o[t] = arow[2 * t + 1];
+            }
+            if k % 2 == 1 {
+                e[half] = arow[k - 1];
+                o[half] = 0;
+            }
+            // the scratch is reused across row blocks: re-zero the tail
+            for v in e[used..].iter_mut() {
+                *v = 0;
+            }
+            for v in o[used..].iter_mut() {
+                *v = 0;
+            }
+        }
+    }
+
+    /// Exact i32 dot over one packed byte range (`bp.len() % 16 == 0`):
+    /// nibble mask + sign-extend + widen + `pmaddwd` per 16-byte chunk.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_chunks(ae: &[i8], ao: &[i8], bp: &[u8]) -> i32 {
+        debug_assert_eq!(bp.len() % 16, 0);
+        debug_assert!(ae.len() >= bp.len() && ao.len() >= bp.len());
+        let mask = _mm_set1_epi8(0x0f);
+        let eight = _mm_set1_epi8(8);
+        let mut acc = _mm256_setzero_si256();
+        let mut t = 0;
+        while t < bp.len() {
+            let bv = _mm_loadu_si128(bp.as_ptr().add(t) as *const __m128i);
+            let lo = _mm_and_si128(bv, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(bv), mask);
+            // sign-extend 4-bit two's complement: (n ^ 8) - 8
+            let lo = _mm_sub_epi8(_mm_xor_si128(lo, eight), eight);
+            let hi = _mm_sub_epi8(_mm_xor_si128(hi, eight), eight);
+            let ae16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                ae.as_ptr().add(t) as *const __m128i,
+            ));
+            let ao16 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                ao.as_ptr().add(t) as *const __m128i,
+            ));
+            let lo16 = _mm256_cvtepi8_epi16(lo);
+            let hi16 = _mm256_cvtepi8_epi16(hi);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(lo16, ae16));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(hi16, ao16));
+            t += 16;
+        }
+        hsum_epi32(acc)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0100_1110>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b1011_0001>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn igemm_block_avx2(
+        a: &[i8],
+        n: usize,
+        k: usize,
+        b: &PackedI4,
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        acc: &mut [i32],
+    ) {
+        let w = j1 - j0;
+        let stride = b.stride;
+        let mr = tiles.mr.max(1);
+        let nr = tiles.nr.max(1);
+        let kc_bytes = (tiles.kc.max(32) / 2).next_multiple_of(16).min(stride);
+        let mut ae = vec![0i8; mr * stride];
+        let mut ao = vec![0i8; mr * stride];
+        for ib in (0..n).step_by(mr) {
+            let ih = (ib + mr).min(n);
+            let rows = ih - ib;
+            deinterleave(a, k, ib, rows, stride, &mut ae, &mut ao);
+            for jt in (j0..j1).step_by(nr) {
+                let jh = (jt + nr).min(j1);
+                let mut kb = 0;
+                while kb < stride {
+                    let ke = (kb + kc_bytes).min(stride);
+                    for j in jt..jh {
+                        let brow = b.row(j);
+                        for r in 0..rows {
+                            let d = dot_chunks(
+                                &ae[r * stride + kb..r * stride + ke],
+                                &ao[r * stride + kb..r * stride + ke],
+                                &brow[kb..ke],
+                            );
+                            acc[(ib + r) * w + (j - j0)] += d;
+                        }
+                    }
+                    kb = ke;
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn gemm_scaled_block_avx2(
+        a: &[i8],
+        n: usize,
+        k: usize,
+        group: usize,
+        sg: &[f32],
+        sx: &[f32],
+        b: &PackedI4,
+        sw: &[f32],
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        let stride = b.stride;
+        let ng = sg.len();
+        let mr = tiles.mr.max(1);
+        let nr = tiles.nr.max(1);
+        // group spans whole 16-byte packed chunks => per-group SIMD dots
+        let chunky = group % 32 == 0;
+        let mut ae = vec![0i8; mr * stride];
+        let mut ao = vec![0i8; mr * stride];
+        for ib in (0..n).step_by(mr) {
+            let ih = (ib + mr).min(n);
+            let rows = ih - ib;
+            deinterleave(a, k, ib, rows, stride, &mut ae, &mut ao);
+            for jt in (j0..j1).step_by(nr) {
+                let jh = (jt + nr).min(j1);
+                for j in jt..jh {
+                    let brow = b.row(j);
+                    let swj = sw[j];
+                    for r in 0..rows {
+                        let i = ib + r;
+                        let fsum = if ng == 1 {
+                            // single group: whole-row i32 dot (padding
+                            // nibbles are zero), one scale at the end
+                            let d = dot_chunks(
+                                &ae[r * stride..(r + 1) * stride],
+                                &ao[r * stride..(r + 1) * stride],
+                                brow,
+                            );
+                            d as f32 * sg[0]
+                        } else if chunky {
+                            let gb = group / 2; // bytes per group, %16==0
+                            let mut fs = 0.0f32;
+                            for (g, &sgv) in sg.iter().enumerate() {
+                                let lo = g * gb;
+                                let d = dot_chunks(
+                                    &ae[r * stride + lo..r * stride + lo + gb],
+                                    &ao[r * stride + lo..r * stride + lo + gb],
+                                    &brow[lo..lo + gb],
+                                );
+                                fs += d as f32 * sgv;
+                            }
+                            fs
+                        } else {
+                            // small/odd groups: the reference nibble loop
+                            // (the integer dot is exact either way)
+                            let arow = &a[i * k..(i + 1) * k];
+                            let mut fs = 0.0f32;
+                            for (g, &sgv) in sg.iter().enumerate() {
+                                let lo = g * group;
+                                let d = scalar::dot_seg(arow, brow, lo, lo + group);
+                                fs += d as f32 * sgv;
+                            }
+                            fs
+                        };
+                        out[i * w + (j - j0)] = fsum * sx[i] * swj;
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn colmax_abs_avx2(x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        for i in 0..rows {
+            let row = &x[i * k..(i + 1) * k];
+            let mut j = 0;
+            while j + 8 <= k {
+                let v = _mm256_and_ps(_mm256_loadu_ps(row.as_ptr().add(j)), absmask);
+                let cur = _mm256_loadu_ps(s.as_ptr().add(j));
+                _mm256_storeu_ps(s.as_mut_ptr().add(j), _mm256_max_ps(cur, v));
+                j += 8;
+            }
+            while j < k {
+                s[j] = s[j].max(row[j].abs());
+                j += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn smooth_row_avx2(
+        row: &[f32],
+        perm: &[usize],
+        group: usize,
+        sg: &[f32],
+        out: &mut [f32],
+    ) -> f32 {
+        let k = perm.len();
+        // gather by the runtime permutation (random access stays scalar)
+        for (o, &p) in out[..k].iter_mut().zip(perm) {
+            *o = row[p];
+        }
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut vmax = _mm256_setzero_ps();
+        let mut smax = 0.0f32;
+        for (g, &sgv) in sg.iter().enumerate() {
+            let lo = g * group;
+            let hi = (lo + group).min(k);
+            let d = _mm256_set1_ps(sgv);
+            let mut j = lo;
+            while j + 8 <= hi {
+                let q = _mm256_div_ps(_mm256_loadu_ps(out.as_ptr().add(j)), d);
+                _mm256_storeu_ps(out.as_mut_ptr().add(j), q);
+                vmax = _mm256_max_ps(vmax, _mm256_and_ps(q, absmask));
+                j += 8;
+            }
+            while j < hi {
+                out[j] /= sgv;
+                smax = smax.max(out[j].abs());
+                j += 1;
+            }
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+        for l in lanes {
+            smax = smax.max(l); // f32 max is exact: any reduce order works
+        }
+        smax
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn fwht_avx2(x: &mut [f32]) {
+        let k = x.len();
+        debug_assert!(k.is_power_of_two());
+        if k < 16 {
+            crate::linalg::fwht::fwht_inplace_scalar(x);
+            return;
+        }
+        let norm = 1.0 / (k as f32).sqrt();
+        let nv = _mm256_set1_ps(norm);
+        let mut h = 1;
+        while h < k {
+            let step = h * 2;
+            // fuse the normalization into the final stage: (a±b)*norm is
+            // the same value the staged butterfly+scale pair produces
+            let last = step == k;
+            let mut base = 0;
+            while base < k {
+                if h >= 8 {
+                    let mut i = base;
+                    while i < base + h {
+                        let a = _mm256_loadu_ps(x.as_ptr().add(i));
+                        let b = _mm256_loadu_ps(x.as_ptr().add(i + h));
+                        let mut s = _mm256_add_ps(a, b);
+                        let mut d = _mm256_sub_ps(a, b);
+                        if last {
+                            s = _mm256_mul_ps(s, nv);
+                            d = _mm256_mul_ps(d, nv);
+                        }
+                        _mm256_storeu_ps(x.as_mut_ptr().add(i), s);
+                        _mm256_storeu_ps(x.as_mut_ptr().add(i + h), d);
+                        i += 8;
+                    }
+                } else {
+                    for i in base..base + h {
+                        let a = x[i];
+                        let b = x[i + h];
+                        x[i] = a + b;
+                        x[i + h] = a - b;
+                    }
+                }
+                base += step;
+            }
+            h = step;
+        }
+        // k >= 16: the final stage (h = k/2 >= 8) ran vectorized with the
+        // normalization fused, so there is nothing left to scale
+    }
+
+    /// f32 dot with the exact 4-lane pattern of
+    /// [`crate::linalg::gemm::dot`]: lane `l` accumulates elements
+    /// `4c + l`, lanes reduce left-to-right — bit-identical to scalar.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_sse(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 4;
+        let mut accv = _mm_setzero_ps();
+        for c in 0..chunks {
+            let i = c * 4;
+            let av = _mm_loadu_ps(a.as_ptr().add(i));
+            let bv = _mm_loadu_ps(b.as_ptr().add(i));
+            accv = _mm_add_ps(accv, _mm_mul_ps(av, bv));
+        }
+        let mut lanes = [0.0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), accv);
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use imp::Avx2Backend;

@@ -1,0 +1,586 @@
+//! Runtime-dispatched SIMD microkernel layer for the fused
+//! RRS → INT4 GEMM hot path.
+//!
+//! The paper's pipeline — smooth → quantize → nibble-unpack → igemm →
+//! group-scale epilogue — *is* the serving hot loop (Runtime Smooth
+//! happens per batch, at inference time), so this module gives it a real
+//! kernel layer instead of the naive scalar loops it grew up with:
+//!
+//! * [`KernelBackend`] — the microkernel contract: a cache-blocked
+//!   INT4×INT4→i32 GEMM that consumes [`PackedI4`] nibble-packed weights
+//!   **directly** (no unpack-to-i8 materialization), the fused
+//!   channel-max + smooth + per-token-quantize activation prologue, the
+//!   FWHT rotation butterflies, and the f32 attention dot.
+//! * Three backends: `scalar` (the pre-existing reference loops, kept
+//!   bit-for-bit), `portable` (blocked safe-Rust loops shaped for the
+//!   autovectorizer), and `avx2` (explicit `std::arch` intrinsics, built
+//!   on x86-64 and selected via `is_x86_feature_detected!`).
+//! * A process-wide [`Registry`] selecting the backend once at startup
+//!   (override with `RRS_KERNEL=scalar|portable|avx2`), running the
+//!   one-shot tile-size [`autotune`](autotune::autotune) (override with
+//!   `RRS_TILE=MRxNRxKC`, disable with `RRS_AUTOTUNE=0`), and exposing
+//!   call/row counters that [`crate::coordinator::Metrics`] publishes in
+//!   the TCP `stats` snapshot.
+//!
+//! # The bit-identity contract
+//!
+//! Every backend must produce **bit-identical** results for the INT4
+//! paths: i32 accumulators are exact integer sums (associativity is
+//! free), and the fused epilogue applies its f32 scales in one fixed
+//! order — per output element, group partials ascending, then
+//! `(Σ_g sg[g]·dot_g) * sx[i] * sw[j]` — so scalar, portable and avx2
+//! agree to the last bit with the staged reference path
+//! ([`crate::quant::qlinear::forward_rs_fused_prepermuted`] over
+//! [`crate::quant::runtime_smooth::prepare_staged`]).  The differential
+//! suite (`rust/tests/kernel_diff.rs`) locks this in for every compiled
+//! backend; CI re-runs it with `RRS_KERNEL=scalar` forced so the
+//! reference stays exercised on AVX2 runners.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::linalg::gemm::Mat;
+use crate::linalg::igemm::MatI8;
+use crate::quant::pack4::PackedI4;
+use crate::quant::runtime_smooth::{self, SmoothedAct};
+use crate::quant::rtn;
+use crate::util::threadpool;
+
+pub mod autotune;
+pub mod avx2;
+pub mod portable;
+pub mod scalar;
+
+/// Cache-blocking tile sizes, in elements of the unpacked K dimension.
+///
+/// `mr` = activation rows per inner block, `nr` = output channels per
+/// tile, `kc` = K-block depth.  Chosen once at startup by the autotuner
+/// (or `RRS_TILE`); backends are free to clamp them to their lane
+/// widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    pub mr: usize,
+    pub nr: usize,
+    pub kc: usize,
+}
+
+impl TileConfig {
+    /// Safe default when autotuning is disabled or not worthwhile.
+    pub const DEFAULT: TileConfig = TileConfig { mr: 8, nr: 32, kc: 256 };
+
+    /// `"MRxNRxKC"` — the form `RRS_TILE` accepts and metrics export.
+    pub fn label(&self) -> String {
+        format!("{}x{}x{}", self.mr, self.nr, self.kc)
+    }
+
+    fn parse(s: &str) -> Option<TileConfig> {
+        let mut it = s.split('x');
+        let mr = it.next()?.trim().parse().ok()?;
+        let nr = it.next()?.trim().parse().ok()?;
+        let kc = it.next()?.trim().parse().ok()?;
+        if it.next().is_some() || mr == 0 || nr == 0 || kc == 0 {
+            return None;
+        }
+        Some(TileConfig { mr, nr, kc })
+    }
+}
+
+/// The microkernel contract one CPU backend implements.
+///
+/// All slices are row-major; `acc`/`out` tiles are `[n, j1-j0]`.  See
+/// the module docs for the cross-backend bit-identity contract.
+pub trait KernelBackend: Send + Sync {
+    /// Backend name as reported by metrics (`"scalar"`, `"avx2"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Accumulate `acc[i][j-j0] += Σ_t a[i·k+t] · unpack(b)[j][t]` for
+    /// `j ∈ [j0, j1)`, consuming the packed weight rows directly.
+    /// `acc` arrives zeroed from the driver; integer sums are exact, so
+    /// blocking order is unconstrained.
+    #[allow(clippy::too_many_arguments)]
+    fn igemm_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        b: &PackedI4,
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        acc: &mut [i32],
+    );
+
+    /// Fused scaled GEMM tile:
+    /// `out[i][j-j0] = (Σ_g sg[g] · dot_g(i, j)) · sx[i] · sw[j]` with
+    /// the group sum taken ascending in `g` (the staged-epilogue order).
+    /// `group · sg.len() == k`; `sg == [1.0]` with `group == k` is the
+    /// per-channel (non-grouped) epilogue.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_scaled_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        group: usize,
+        sg: &[f32],
+        sx: &[f32],
+        b: &PackedI4,
+        sw: &[f32],
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        out: &mut [f32],
+    );
+
+    /// Column-wise absolute maxima: `s[j] = max(s[j], |x[i·k + j]|)`
+    /// over all `rows` rows (the Runtime-Smooth channel-max reduction;
+    /// f32 max is exact, so vectorization order is free).
+    fn colmax_abs(&self, x: &[f32], rows: usize, k: usize, s: &mut [f32]);
+
+    /// Fused gather + smooth + absmax over one activation row:
+    /// `out[j] = row[perm[j]] / sg[j / group]`; returns `max_j |out[j]|`.
+    fn smooth_row(
+        &self,
+        row: &[f32],
+        perm: &[usize],
+        group: usize,
+        sg: &[f32],
+        out: &mut [f32],
+    ) -> f32;
+
+    /// Normalized FWHT in place (`x.len()` a power of two) — the
+    /// rotation butterfly kernel.  Must match the scalar reference
+    /// ([`crate::linalg::fwht::fwht_inplace_scalar`]) bit-for-bit.
+    fn fwht(&self, x: &mut [f32]);
+
+    /// f32 dot with the exact 4-lane accumulation pattern of
+    /// [`crate::linalg::gemm::dot`] — bit-identical across backends (the
+    /// attention score path stays deterministic under `RRS_KERNEL`).
+    fn dot_f32(&self, a: &[f32], b: &[f32]) -> f32;
+}
+
+// ───────────────────────────── registry ─────────────────────────────
+
+/// The process-wide kernel selection: one backend + one tile config,
+/// resolved once on first use.
+pub struct Registry {
+    pub backend: &'static dyn KernelBackend,
+    pub tiles: TileConfig,
+    /// `true` when `tiles` came from the startup autotuner (as opposed
+    /// to `RRS_TILE` or the static default).
+    pub autotuned: bool,
+    /// Wall time the autotuner spent, in microseconds (0 if skipped).
+    pub autotune_us: u64,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+static SCALAR: scalar::ScalarBackend = scalar::ScalarBackend;
+static PORTABLE: portable::PortableBackend = portable::PortableBackend;
+#[cfg(target_arch = "x86_64")]
+static AVX2: avx2::Avx2Backend = avx2::Avx2Backend;
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_backend() -> Option<&'static dyn KernelBackend> {
+    if avx2_available() {
+        Some(&AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_backend() -> Option<&'static dyn KernelBackend> {
+    None
+}
+
+fn select_backend() -> &'static dyn KernelBackend {
+    match std::env::var("RRS_KERNEL").ok().as_deref() {
+        Some("scalar") => &SCALAR,
+        Some("portable") => &PORTABLE,
+        Some("avx2") => avx2_backend().unwrap_or_else(|| {
+            eprintln!("RRS_KERNEL=avx2 requested but AVX2 is unavailable; \
+                       falling back to portable");
+            &PORTABLE
+        }),
+        Some("") | Some("auto") | None => avx2_backend().unwrap_or(&PORTABLE),
+        Some(other) => {
+            eprintln!("unknown RRS_KERNEL={other:?}; using auto selection");
+            avx2_backend().unwrap_or(&PORTABLE)
+        }
+    }
+}
+
+/// The process-wide kernel registry (backend select + autotune happen on
+/// the first call; [`crate::model::engine::QuantModel::prepare`] warms it
+/// so serving never pays the one-shot cost mid-request).
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| {
+        let backend = select_backend();
+        let env_tile =
+            std::env::var("RRS_TILE").ok().and_then(|s| TileConfig::parse(&s));
+        if let Some(t) = env_tile {
+            return Registry { backend, tiles: t, autotuned: false, autotune_us: 0 };
+        }
+        let skip = std::env::var("RRS_AUTOTUNE").ok().as_deref() == Some("0")
+            || backend.name() == "scalar";
+        if skip {
+            return Registry {
+                backend,
+                tiles: TileConfig::DEFAULT,
+                autotuned: false,
+                autotune_us: 0,
+            };
+        }
+        let (tiles, us) = autotune::autotune(backend);
+        Registry { backend, tiles, autotuned: true, autotune_us: us }
+    })
+}
+
+/// Every backend compiled into this binary *and usable on this CPU* —
+/// the set the differential tests sweep.
+pub fn all_backends() -> Vec<&'static dyn KernelBackend> {
+    let mut v: Vec<&'static dyn KernelBackend> = vec![&SCALAR, &PORTABLE];
+    if let Some(b) = avx2_backend() {
+        v.push(b);
+    }
+    v
+}
+
+// ───────────────────────────── counters ─────────────────────────────
+
+static FUSED_GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+static FUSED_GEMM_ROWS: AtomicU64 = AtomicU64::new(0);
+static PER_CHANNEL_CALLS: AtomicU64 = AtomicU64::new(0);
+static IGEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+static PROLOGUE_ROWS: AtomicU64 = AtomicU64::new(0);
+static FWHT_ROWS: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time snapshot of the kernel layer: which backend is live,
+/// the autotuned tile shape, and cumulative dispatch counters.
+#[derive(Clone, Debug)]
+pub struct KernelStats {
+    pub backend: &'static str,
+    pub tiles: TileConfig,
+    pub autotuned: bool,
+    pub autotune_us: u64,
+    /// Fused (grouped-epilogue) GEMM dispatches / activation rows.
+    pub fused_gemm_calls: u64,
+    pub fused_gemm_rows: u64,
+    /// Per-channel-epilogue GEMM dispatches.
+    pub per_channel_calls: u64,
+    /// Raw packed-igemm dispatches (i32 accumulator output).
+    pub igemm_calls: u64,
+    /// Activation rows through the fused RRS prologue.
+    pub prologue_rows: u64,
+    /// Rows rotated by the FWHT kernel.
+    pub fwht_rows: u64,
+}
+
+/// Snapshot the registry + counters (forces registry init, autotune
+/// included — use [`stats_peek`] on paths that must not pay for it).
+pub fn stats() -> KernelStats {
+    snapshot(registry())
+}
+
+/// Snapshot without forcing initialization: `None` until the first
+/// kernel dispatch (or [`registry`] call) resolves the backend.  This is
+/// what the metrics endpoint reads, so a `stats` poll on a server that
+/// never touched the interpreted hot path (e.g. a pure PJRT deployment)
+/// does not run the autotune sweep inside a monitoring request.
+pub fn stats_peek() -> Option<KernelStats> {
+    REGISTRY.get().map(snapshot)
+}
+
+fn snapshot(r: &Registry) -> KernelStats {
+    KernelStats {
+        backend: r.backend.name(),
+        tiles: r.tiles,
+        autotuned: r.autotuned,
+        autotune_us: r.autotune_us,
+        fused_gemm_calls: FUSED_GEMM_CALLS.load(Ordering::Relaxed),
+        fused_gemm_rows: FUSED_GEMM_ROWS.load(Ordering::Relaxed),
+        per_channel_calls: PER_CHANNEL_CALLS.load(Ordering::Relaxed),
+        igemm_calls: IGEMM_CALLS.load(Ordering::Relaxed),
+        prologue_rows: PROLOGUE_ROWS.load(Ordering::Relaxed),
+        fwht_rows: FWHT_ROWS.load(Ordering::Relaxed),
+    }
+}
+
+// ─────────────────────── threaded tile drivers ───────────────────────
+
+/// Raw output pointer smuggled across the scoped-thread boundary; every
+/// task writes a disjoint column range `[j0, j1)` of the `[n, m]`
+/// buffer, so the pointer writes never alias.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Split the `m` output columns into per-thread blocks (aligned to the
+/// tile width) and run `body(j0, j1, tile)` for each; `tile` is a zeroed
+/// `[n, j1-j0]` scratch the body fills, copied into `out` afterwards.
+///
+/// Threading over *columns* (not rows, as the legacy GEMMs did) is what
+/// makes batch-1 decode GEMMs parallel: the output row is one token, but
+/// its thousands of output channels split across cores.
+fn parallel_col_blocks<T, F>(out: &mut [T], n: usize, m: usize, nr: usize, zero: T, body: F)
+where
+    T: Copy + Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || m == 0 {
+        return;
+    }
+    let threads = threadpool::default_threads();
+    let chunk = m.div_ceil(threads).max(1).next_multiple_of(nr.max(1));
+    let n_chunks = m.div_ceil(chunk);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let ptr = &ptr;
+    threadpool::parallel_for(n_chunks, threads, |range| {
+        for c in range {
+            let j0 = c * chunk;
+            let j1 = (j0 + chunk).min(m);
+            let w = j1 - j0;
+            let mut tile = vec![zero; n * w];
+            body(j0, j1, &mut tile);
+            for i in 0..n {
+                // sound: tasks own disjoint column ranges of each row
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        tile.as_ptr().add(i * w),
+                        ptr.0.add(i * m + j0),
+                        w,
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// `C_i32 = A_i8 @ unpack(B)^T` through an explicit backend + tiles
+/// (test / autotune entry; serving uses [`igemm_packed`]).
+pub fn igemm_packed_with(
+    bk: &dyn KernelBackend,
+    tiles: TileConfig,
+    a: &MatI8,
+    b: &PackedI4,
+) -> Vec<i32> {
+    assert_eq!(a.cols, b.cols, "igemm_packed: inner dims");
+    let (n, k, m) = (a.rows, a.cols, b.rows);
+    let mut out = vec![0i32; n * m];
+    parallel_col_blocks(&mut out, n, m, tiles.nr, 0i32, |j0, j1, tile| {
+        bk.igemm_block(&a.data, n, k, b, j0, j1, tiles, tile);
+    });
+    out
+}
+
+/// `C_i32 = A_i8 @ unpack(B)^T` on the dispatched backend — the packed
+/// counterpart of [`crate::linalg::igemm::igemm_i8_bt`], bit-identical
+/// to it by the backend contract.
+pub fn igemm_packed(a: &MatI8, b: &PackedI4) -> Vec<i32> {
+    IGEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+    let r = registry();
+    igemm_packed_with(r.backend, r.tiles, a, b)
+}
+
+/// Fused Runtime-Smooth GEMM over a packed, pre-permuted weight, through
+/// an explicit backend + tiles.  `q`/`sx`/`group`/`sg` come from the
+/// prologue ([`rrs_prologue`]); `sw` is the per-output-channel weight
+/// scale.  Output matches the staged
+/// [`crate::quant::qlinear::forward_rs_fused_prepermuted`] bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_rs_fused_packed_with(
+    bk: &dyn KernelBackend,
+    tiles: TileConfig,
+    q: &MatI8,
+    sx: &[f32],
+    group: usize,
+    sg: &[f32],
+    b: &PackedI4,
+    sw: &[f32],
+) -> Mat {
+    assert_eq!(q.cols, b.cols, "rs_fused: inner dims");
+    assert_eq!(q.rows, sx.len(), "rs_fused: token scales");
+    assert_eq!(b.rows, sw.len(), "rs_fused: weight scales");
+    assert!(group >= 1 && q.cols % group == 0, "rs_fused: group | k");
+    assert_eq!(sg.len(), q.cols / group, "rs_fused: group scales");
+    let (n, k, m) = (q.rows, q.cols, b.rows);
+    let mut out = Mat::zeros(n, m);
+    parallel_col_blocks(&mut out.data, n, m, tiles.nr, 0.0f32, |j0, j1, tile| {
+        bk.gemm_scaled_block(&q.data, n, k, group, sg, sx, b, sw, j0, j1, tiles, tile);
+    });
+    out
+}
+
+/// Fused Runtime-Smooth GEMM on the dispatched backend (the serving hot
+/// path behind [`crate::quant::qlinear::QLinear`]).
+pub fn gemm_rs_fused_packed(
+    q: &MatI8,
+    sx: &[f32],
+    group: usize,
+    sg: &[f32],
+    b: &PackedI4,
+    sw: &[f32],
+) -> Mat {
+    FUSED_GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+    FUSED_GEMM_ROWS.fetch_add(q.rows as u64, Ordering::Relaxed);
+    let r = registry();
+    gemm_rs_fused_packed_with(r.backend, r.tiles, q, sx, group, sg, b, sw)
+}
+
+/// Per-channel A4W4 GEMM (per-token activation scale × per-channel
+/// weight scale) over a packed weight — the degenerate one-group case of
+/// the fused kernel, bit-identical to the staged
+/// [`crate::quant::qlinear::forward_per_channel_a4w4`] epilogue.
+pub fn gemm_per_channel_packed(xq: &MatI8, sx: &[f32], b: &PackedI4, sw: &[f32]) -> Mat {
+    PER_CHANNEL_CALLS.fetch_add(1, Ordering::Relaxed);
+    let r = registry();
+    gemm_per_channel_packed_with(r.backend, r.tiles, xq, sx, b, sw)
+}
+
+/// Explicit-backend form of [`gemm_per_channel_packed`].
+pub fn gemm_per_channel_packed_with(
+    bk: &dyn KernelBackend,
+    tiles: TileConfig,
+    xq: &MatI8,
+    sx: &[f32],
+    b: &PackedI4,
+    sw: &[f32],
+) -> Mat {
+    gemm_rs_fused_packed_with(bk, tiles, xq, sx, xq.cols.max(1), &[1.0], b, sw)
+}
+
+/// Fused RRS activation prologue on an explicit backend: channel-max
+/// reduction, reorder permutation, group scales, then a fused gather +
+/// smooth + per-token RTN quantize pass per row.  Bit-identical to the
+/// staged [`crate::quant::runtime_smooth::prepare_staged`].
+pub fn rrs_prologue_with(bk: &dyn KernelBackend, x: &Mat, group: usize) -> SmoothedAct {
+    let mut s = vec![0.0f32; x.cols];
+    bk.colmax_abs(&x.data, x.rows, x.cols, &mut s);
+    for v in s.iter_mut() {
+        *v = v.max(1e-8);
+    }
+    let perm = runtime_smooth::reorder_perm(&s);
+    let sg = runtime_smooth::group_scales(&s, &perm, group);
+    let mut q = MatI8::zeros(x.rows, x.cols);
+    let mut token_scales = vec![0.0f32; x.rows];
+    let mut smooth = vec![0.0f32; x.cols];
+    for i in 0..x.rows {
+        let absmax = bk.smooth_row(x.row(i), &perm, group, &sg, &mut smooth);
+        let sxi = rtn::scale_for(absmax);
+        token_scales[i] = sxi;
+        rtn::quantize_row(&smooth, sxi, &mut q.data[i * x.cols..(i + 1) * x.cols]);
+    }
+    SmoothedAct { q, token_scales, perm, group_scales: sg, group }
+}
+
+/// Fused RRS activation prologue on the dispatched backend (what
+/// [`crate::quant::runtime_smooth::prepare`] runs).
+pub fn rrs_prologue(x: &Mat, group: usize) -> SmoothedAct {
+    PROLOGUE_ROWS.fetch_add(x.rows as u64, Ordering::Relaxed);
+    let r = registry();
+    rrs_prologue_with(r.backend, x, group)
+}
+
+/// Dispatched in-place normalized FWHT over one row.
+pub fn fwht_dispatch(x: &mut [f32]) {
+    FWHT_ROWS.fetch_add(1, Ordering::Relaxed);
+    registry().backend.fwht(x);
+}
+
+/// Apply the dispatched FWHT to every `k`-length row, rows in parallel
+/// (the rotation path of QuaRot/RRS linears).
+pub fn fwht_rows_par(data: &mut [f32], k: usize) {
+    assert!(k.is_power_of_two(), "fwht length {k} not a power of two");
+    assert_eq!(data.len() % k, 0);
+    let rows = data.len() / k;
+    FWHT_ROWS.fetch_add(rows as u64, Ordering::Relaxed);
+    let bk = registry().backend;
+    let threads = threadpool::default_threads();
+    threadpool::parallel_rows(data, k, threads, |_i, row| bk.fwht(row));
+}
+
+/// Dispatched f32 dot product (attention scores); bit-identical to
+/// [`crate::linalg::gemm::dot`] on every backend.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    registry().backend.dot_f32(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn tile_parse_roundtrip() {
+        let t = TileConfig::parse("8x32x256").unwrap();
+        assert_eq!(t, TileConfig { mr: 8, nr: 32, kc: 256 });
+        assert_eq!(t.label(), "8x32x256");
+        assert!(TileConfig::parse("8x32").is_none());
+        assert!(TileConfig::parse("0x32x256").is_none());
+        assert!(TileConfig::parse("axbxc").is_none());
+    }
+
+    #[test]
+    fn registry_resolves_and_counts() {
+        let before = stats();
+        let mut rng = Pcg::new(3);
+        let a = MatI8::from_vec(
+            2,
+            40,
+            (0..80).map(|_| rng.below(15) as i8 - 7).collect(),
+        );
+        let b = MatI8::from_vec(
+            3,
+            40,
+            (0..120).map(|_| rng.below(15) as i8 - 7).collect(),
+        );
+        let bp = PackedI4::pack(&b);
+        let got = igemm_packed(&a, &bp);
+        let want = crate::linalg::igemm::igemm_i8_bt(&a, &b);
+        assert_eq!(got, want);
+        let after = stats();
+        assert!(!after.backend.is_empty());
+        assert_eq!(after.igemm_calls, before.igemm_calls + 1);
+    }
+
+    #[test]
+    fn per_channel_equals_one_group_fused() {
+        let mut rng = Pcg::new(4);
+        let xq = MatI8::from_vec(
+            3,
+            32,
+            (0..96).map(|_| rng.below(15) as i8 - 7).collect(),
+        );
+        let wq = MatI8::from_vec(
+            5,
+            32,
+            (0..160).map(|_| rng.below(15) as i8 - 7).collect(),
+        );
+        let sx: Vec<f32> = (0..3).map(|i| 0.1 + i as f32 * 0.03).collect();
+        let sw: Vec<f32> = (0..5).map(|j| 0.2 + j as f32 * 0.01).collect();
+        let bp = PackedI4::pack(&wq);
+        let y = gemm_per_channel_packed(&xq, &sx, &bp, &sw);
+        // staged reference epilogue
+        for i in 0..3 {
+            for j in 0..5 {
+                let acc = crate::linalg::igemm::idot(xq.row(i), wq.row(j));
+                let want = acc as f32 * sx[i] * sw[j];
+                assert_eq!(y.at(i, j).to_bits(), want.to_bits());
+            }
+        }
+    }
+}

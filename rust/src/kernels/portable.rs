@@ -1,0 +1,192 @@
+//! The portable fallback backend: cache-blocked safe-Rust loops shaped
+//! for the autovectorizer (byte-pair nibble unpacking with independent
+//! even/odd accumulators, split-slice FWHT butterflies).  This is the
+//! default on CPUs without AVX2 and the floor every platform gets;
+//! results are bit-identical to the scalar reference (integer
+//! accumulation is exact, f32 scale order follows the contract).
+
+use crate::quant::pack4::PackedI4;
+
+use super::{scalar, KernelBackend, TileConfig};
+
+/// See the module docs.
+pub struct PortableBackend;
+
+/// Exact i32 dot over elements `[lo, hi)` (`lo` even): unpack each
+/// packed byte into its two nibbles and accumulate even/odd lanes
+/// independently — the shape LLVM turns into `pmaddwd`-style vectors.
+#[inline]
+fn dot_span(arow: &[i8], brow: &[u8], lo: usize, hi: usize) -> i32 {
+    debug_assert_eq!(lo % 2, 0, "span must start on a byte boundary");
+    let full = hi / 2;
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    for t in lo / 2..full {
+        let byte = brow[t];
+        let ln = (((byte & 0x0f) << 4) as i8) >> 4;
+        let hn = ((byte & 0xf0) as i8) >> 4;
+        acc0 += arow[2 * t] as i32 * ln as i32;
+        acc1 += arow[2 * t + 1] as i32 * hn as i32;
+    }
+    let mut acc = acc0 + acc1;
+    if hi % 2 == 1 {
+        acc += arow[hi - 1] as i32 * scalar::nib(brow, hi - 1);
+    }
+    acc
+}
+
+/// Bit-exact FWHT with split-slice butterflies (vectorizable form of
+/// the reference loop: identical pairs, identical op order).
+pub(crate) fn fwht_portable(x: &mut [f32]) {
+    let k = x.len();
+    debug_assert!(k.is_power_of_two());
+    let mut h = 1;
+    while h < k {
+        let step = h * 2;
+        let mut base = 0;
+        while base < k {
+            let (lhs, rhs) = x[base..base + step].split_at_mut(h);
+            for (a, b) in lhs.iter_mut().zip(rhs.iter_mut()) {
+                let t = *a;
+                *a = t + *b;
+                *b = t - *b;
+            }
+            base += step;
+        }
+        h = step;
+    }
+    let norm = 1.0 / (k as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+impl KernelBackend for PortableBackend {
+    fn name(&self) -> &'static str {
+        "portable"
+    }
+
+    fn igemm_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        b: &PackedI4,
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        acc: &mut [i32],
+    ) {
+        let w = j1 - j0;
+        let mr = tiles.mr.max(1);
+        let nr = tiles.nr.max(1);
+        let kc = (tiles.kc.max(32) / 2) * 2; // even K blocks
+        for ib in (0..n).step_by(mr) {
+            let ih = (ib + mr).min(n);
+            for jt in (j0..j1).step_by(nr) {
+                let jh = (jt + nr).min(j1);
+                let mut klo = 0;
+                while klo < k {
+                    let khi = (klo + kc).min(k);
+                    for j in jt..jh {
+                        let brow = b.row(j);
+                        for i in ib..ih {
+                            let arow = &a[i * k..(i + 1) * k];
+                            acc[i * w + (j - j0)] += dot_span(arow, brow, klo, khi);
+                        }
+                    }
+                    klo = khi;
+                }
+            }
+        }
+    }
+
+    fn gemm_scaled_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        group: usize,
+        sg: &[f32],
+        sx: &[f32],
+        b: &PackedI4,
+        sw: &[f32],
+        j0: usize,
+        j1: usize,
+        tiles: TileConfig,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        let mr = tiles.mr.max(1);
+        let nr = tiles.nr.max(1);
+        // the group structure already blocks K; odd groups fall back to
+        // the nibble-at-a-time reference (identical integer result)
+        let even = group % 2 == 0;
+        for ib in (0..n).step_by(mr) {
+            let ih = (ib + mr).min(n);
+            for jt in (j0..j1).step_by(nr) {
+                let jh = (jt + nr).min(j1);
+                for j in jt..jh {
+                    let brow = b.row(j);
+                    let swj = sw[j];
+                    for i in ib..ih {
+                        let arow = &a[i * k..(i + 1) * k];
+                        let mut fsum = 0.0f32;
+                        for (g, &sgv) in sg.iter().enumerate() {
+                            let lo = g * group;
+                            let d = if even {
+                                dot_span(arow, brow, lo, lo + group)
+                            } else {
+                                scalar::dot_seg(arow, brow, lo, lo + group)
+                            };
+                            fsum += d as f32 * sgv;
+                        }
+                        out[i * w + (j - j0)] = fsum * sx[i] * swj;
+                    }
+                }
+            }
+        }
+    }
+
+    fn colmax_abs(&self, x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
+        for i in 0..rows {
+            for (sj, &v) in s.iter_mut().zip(&x[i * k..(i + 1) * k]) {
+                *sj = sj.max(v.abs());
+            }
+        }
+    }
+
+    fn smooth_row(
+        &self,
+        row: &[f32],
+        perm: &[usize],
+        group: usize,
+        sg: &[f32],
+        out: &mut [f32],
+    ) -> f32 {
+        // gather, then divide per group segment with a hoisted divisor:
+        // the same elementwise divisions as the reference, vectorizable
+        let k = perm.len();
+        for (o, &p) in out[..k].iter_mut().zip(perm) {
+            *o = row[p];
+        }
+        let mut absmax = 0.0f32;
+        for (g, &sgv) in sg.iter().enumerate() {
+            let lo = g * group;
+            let hi = (lo + group).min(k);
+            for v in out[lo..hi].iter_mut() {
+                *v /= sgv;
+                absmax = absmax.max(v.abs());
+            }
+        }
+        absmax
+    }
+
+    fn fwht(&self, x: &mut [f32]) {
+        fwht_portable(x);
+    }
+
+    fn dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        crate::linalg::gemm::dot(a, b)
+    }
+}

@@ -1,0 +1,126 @@
+//! The scalar reference backend: the pre-existing staged loops, kept
+//! verbatim in spirit so every other backend has a bit-exact oracle.
+//!
+//! It still consumes the packed weight nibble-by-nibble (no i8
+//! materialization) — the *semantics* of the packed microkernel with
+//! none of the blocking or SIMD.  Selected with `RRS_KERNEL=scalar`; CI
+//! forces it once per run so the oracle itself stays exercised on AVX2
+//! runners.
+
+use crate::quant::pack4::PackedI4;
+
+use super::{KernelBackend, TileConfig};
+
+/// See the module docs.
+pub struct ScalarBackend;
+
+/// Sign-extended nibble `t` of a packed row (low nibble = even `t`).
+#[inline]
+pub(crate) fn nib(brow: &[u8], t: usize) -> i32 {
+    let byte = brow[t >> 1];
+    let n = if t & 1 == 0 { byte & 0x0f } else { byte >> 4 };
+    (((n << 4) as i8) >> 4) as i32
+}
+
+/// Exact i32 dot of an i8 row segment against packed nibbles `[lo, hi)`.
+#[inline]
+pub(crate) fn dot_seg(arow: &[i8], brow: &[u8], lo: usize, hi: usize) -> i32 {
+    let mut acc = 0i32;
+    for t in lo..hi {
+        acc += arow[t] as i32 * nib(brow, t);
+    }
+    acc
+}
+
+impl KernelBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn igemm_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        b: &PackedI4,
+        j0: usize,
+        j1: usize,
+        _tiles: TileConfig,
+        acc: &mut [i32],
+    ) {
+        let w = j1 - j0;
+        for (jj, j) in (j0..j1).enumerate() {
+            let brow = b.row(j);
+            for i in 0..n {
+                let arow = &a[i * k..(i + 1) * k];
+                acc[i * w + jj] += dot_seg(arow, brow, 0, k);
+            }
+        }
+    }
+
+    fn gemm_scaled_block(
+        &self,
+        a: &[i8],
+        n: usize,
+        k: usize,
+        group: usize,
+        sg: &[f32],
+        sx: &[f32],
+        b: &PackedI4,
+        sw: &[f32],
+        j0: usize,
+        j1: usize,
+        _tiles: TileConfig,
+        out: &mut [f32],
+    ) {
+        let w = j1 - j0;
+        for (jj, j) in (j0..j1).enumerate() {
+            let brow = b.row(j);
+            let swj = sw[j];
+            for i in 0..n {
+                let arow = &a[i * k..(i + 1) * k];
+                // group partials ascending — the contract's f32 order
+                let mut fsum = 0.0f32;
+                for (g, &sgv) in sg.iter().enumerate() {
+                    let lo = g * group;
+                    let d = dot_seg(arow, brow, lo, lo + group);
+                    fsum += d as f32 * sgv;
+                }
+                out[i * w + jj] = fsum * sx[i] * swj;
+            }
+        }
+    }
+
+    fn colmax_abs(&self, x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
+        for i in 0..rows {
+            for (sj, &v) in s.iter_mut().zip(&x[i * k..(i + 1) * k]) {
+                *sj = sj.max(v.abs());
+            }
+        }
+    }
+
+    fn smooth_row(
+        &self,
+        row: &[f32],
+        perm: &[usize],
+        group: usize,
+        sg: &[f32],
+        out: &mut [f32],
+    ) -> f32 {
+        let mut absmax = 0.0f32;
+        for (j, &p) in perm.iter().enumerate() {
+            let v = row[p] / sg[j / group];
+            out[j] = v;
+            absmax = absmax.max(v.abs());
+        }
+        absmax
+    }
+
+    fn fwht(&self, x: &mut [f32]) {
+        crate::linalg::fwht::fwht_inplace_scalar(x);
+    }
+
+    fn dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+        crate::linalg::gemm::dot(a, b)
+    }
+}

@@ -90,7 +90,14 @@ pub(crate) fn begin_paged_prefill(
     let matched = pool.match_prefix(tokens, &mut seq.table);
     seq.len = matched;
     seq.tokens.extend_from_slice(tokens);
-    if !pool.reserve(&mut seq.table, tokens.len() + 1) {
+    // a match ending mid-block shared its tail block read-only; the
+    // first append materializes the deferred CoW copy from a fresh
+    // block, so the reservation-time re-check must also see one
+    // allocatable block beyond the table itself
+    let pending_cow = matched % pool.block_size() != 0;
+    if !pool.reserve(&mut seq.table, tokens.len() + 1)
+        || (pending_cow && pool.available() == 0)
+    {
         pool.release_seq(&mut seq.table);
         *seq = PagedSeq::new();
         return None;

@@ -9,9 +9,11 @@
 //!   as the flat cache (so paged attention is bit-identical);
 //! * [`pool::KvPool`] — free-list allocation over a bounded slab,
 //!   refcounted block sharing, a chain-hashed prefix cache with verified
-//!   hits, copy-on-write (including partial-block tail adoption for
-//!   prefixes that end mid-block), LRU eviction of released sealed
-//!   blocks, and exact prefix-aware admission accounting
+//!   hits, copy-on-write (including *lazy* partial-block tail adoption
+//!   for prefixes that end mid-block: the sealed tail is shared
+//!   read-only at match time and its rows are copied only on the first
+//!   append), LRU eviction of released sealed blocks, and exact
+//!   prefix-aware admission accounting
 //!   ([`pool::KvPool::can_fit_prompt`]);
 //! * [`engine::PagedEngine`] — the serving backend: prefill with prompt
 //!   prefix reuse + batched decode over block tables, implementing the

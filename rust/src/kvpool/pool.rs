@@ -11,9 +11,12 @@
 //!   directly into the new sequence's table (zero-copy sharing);
 //! * **partial-block tail hits** — when the shared prefix ends
 //!   mid-block, the sealed sibling that extends the chain is found via
-//!   the parent-hash index and its leading rows are copied into a fresh
-//!   unsealed block (the copy-on-write path), so those tokens still
-//!   skip the forward pass.
+//!   the parent-hash index and pinned into the table *read-only*; the
+//!   shared leading rows are copied into a fresh block only on the
+//!   first append into that block (lazy copy-on-write — a sequence that
+//!   is released before it ever appends, e.g. on a failed reservation,
+//!   never pays the copy; `lazy_tail_shares` vs `lazy_tail_copies`
+//!   proves the deferral).
 //!
 //! [`KvPool::can_fit_prompt`] is the admission-side mirror: it charges a
 //! prompt only for the blocks `match_prefix` + [`KvPool::reserve`] would
@@ -70,11 +73,18 @@ pub struct PoolStats {
     pub prefix_query_tokens: u64,
     pub prefix_hit_tokens: u64,
     pub prefix_hit_blocks: u64,
-    /// Prefix hits that ended mid-block and were served by copying the
-    /// shared rows into a fresh block (partial-block tail sharing).
+    /// Prefix hits that ended mid-block and were served by sharing the
+    /// sealed tail block (partial-block tail sharing).
     pub prefix_partial_hits: u64,
     pub evictions: u64,
     pub cow_copies: u64,
+    /// Sealed tail blocks shared read-only at match time (the lazy
+    /// partial-tail path: no rows copied yet).
+    pub lazy_tail_shares: u64,
+    /// Lazily-shared tails actually materialized by a first append.
+    /// `lazy_tail_shares - lazy_tail_copies` = copies the lazy scheme
+    /// avoided outright (sequences released before ever appending).
+    pub lazy_tail_copies: u64,
 }
 
 struct Slot {
@@ -145,6 +155,8 @@ pub struct KvPool {
     prefix_partial_hits: u64,
     evictions: u64,
     cow_copies: u64,
+    lazy_tail_shares: u64,
+    lazy_tail_copies: u64,
 }
 
 impl KvPool {
@@ -176,6 +188,8 @@ impl KvPool {
             prefix_partial_hits: 0,
             evictions: 0,
             cow_copies: 0,
+            lazy_tail_shares: 0,
+            lazy_tail_copies: 0,
         }
     }
 
@@ -300,10 +314,16 @@ impl KvPool {
     }
 
     /// Walk the prompt through the prefix cache, pinning every full-block
-    /// hit into `table` and adopting a partial tail block (copy-on-write
-    /// of its shared leading rows) when the prefix ends mid-block.
-    /// Returns the number of matched tokens; at least one prompt token is
-    /// always left for the forward pass.
+    /// hit into `table`; when the prefix ends mid-block, the sealed tail
+    /// sibling is pinned **read-only** (lazy partial-tail adoption — no
+    /// rows move).  The first [`append_row`](KvPool::append_row) into
+    /// that block copies just the shared leading rows (CoW on write
+    /// instead of at match time), so a sequence released before it ever
+    /// appends never pays the copy.  Returns the number of matched
+    /// tokens; at least one prompt token is always left for the forward
+    /// pass.  Callers must budget one allocatable block for the deferred
+    /// copy when the match ends mid-block (admission does: see
+    /// [`can_fit_prompt`](KvPool::can_fit_prompt)).
     pub fn match_prefix(&mut self, tokens: &[u32], table: &mut Vec<BlockId>) -> usize {
         self.prefix_queries += 1;
         self.prefix_query_tokens += tokens.len() as u64;
@@ -315,35 +335,16 @@ impl KvPool {
         let mut matched = walk.matched;
         if let Some((src, rows)) = walk.partial {
             if rows > 0 {
-                // best-effort: when no block can be spared the caller
-                // simply forwards those tokens instead
-                if let Some(copy) = self.adopt_partial(src, rows) {
-                    table.push(copy);
-                    matched += rows;
-                    self.prefix_partial_hits += 1;
-                    self.cow_copies += 1;
-                }
+                self.slots[src as usize].refcount += 1;
+                table.push(src);
+                matched += rows;
+                self.prefix_partial_hits += 1;
+                self.lazy_tail_shares += 1;
             }
         }
         self.prefix_hit_blocks += walk.hits.len() as u64;
         self.prefix_hit_tokens += matched as u64;
         matched
-    }
-
-    /// Copy the first `rows` positions of sealed block `src` into a fresh
-    /// unsealed block (partial-block tail sharing: the adopting sequence
-    /// appends its own tail after them).  `None` = no block to spare.
-    fn adopt_partial(&mut self, src: BlockId, rows: usize) -> Option<BlockId> {
-        // pin src so alloc()'s LRU eviction cannot reclaim it mid-copy
-        self.slots[src as usize].refcount += 1;
-        let got = self.alloc();
-        let out = got.map(|id| {
-            let data = self.slots[src as usize].block.clone_prefix(rows);
-            self.slots[id as usize].block = data;
-            id
-        });
-        self.release_block(src);
-        out
     }
 
     /// Read-only prefix probe: matched token count (full-block plus
@@ -364,13 +365,22 @@ impl KvPool {
     /// concurrent pool mutation is guaranteed to reserve.
     pub fn can_fit_prompt(&self, tokens: &[u32]) -> bool {
         let walk = self.walk_prefix(tokens);
-        let evictable_hits = walk
+        let mut pinned_supply = walk
             .hits
             .iter()
             .filter(|&&id| self.slots[id as usize].refcount == 0)
             .count();
+        // a lazily-shared tail stays pinned until its deferred CoW copy
+        // lands, so a currently-evictable tail also leaves the supply
+        // (the copy target itself is already charged: the tail's block
+        // position is not subtracted from `needed`)
+        if let Some((id, rows)) = walk.partial {
+            if rows > 0 && self.slots[id as usize].refcount == 0 {
+                pinned_supply += 1;
+            }
+        }
         let needed = self.blocks_for(tokens.len() + 1) - walk.hits.len();
-        needed <= self.free.len() + self.cached_count() - evictable_hits
+        needed <= self.free.len() + self.cached_count() - pinned_supply
     }
 
     /// Append one K/V row pair at absolute position `pos` of the sequence
@@ -395,14 +405,27 @@ impl KvPool {
             table.push(id);
         }
         let id = table[bi];
-        if self.slots[id as usize].refcount > 1 {
-            // shared block: copy before mutating
+        // copy before mutating when the block is shared with another
+        // live sequence (refcount) OR sealed into the prefix cache
+        // (hash): a sealed tail lazily adopted from a *released* owner
+        // has refcount 1, but mutating it in place would corrupt the
+        // registered prefix block every future hit verifies against
+        let shared = self.slots[id as usize].refcount > 1;
+        let sealed = self.slots[id as usize].hash.is_some();
+        if shared || sealed {
+            // only the rows this sequence actually owns move (positions
+            // `[bi*bs, pos)`), which for a lazily-shared sealed tail
+            // trims the foreign rows past the shared prefix and
+            // materializes the deferred copy
+            let owned = pos - bi * bs;
             let copy = self
                 .alloc()
                 .expect("kvpool exhausted during copy-on-write");
-            let data = self.slots[id as usize].block.clone_data();
-            let dst = &mut self.slots[copy as usize];
-            dst.block = data;
+            let data = self.slots[id as usize].block.clone_prefix(owned);
+            self.slots[copy as usize].block = data;
+            if sealed {
+                self.lazy_tail_copies += 1;
+            }
             self.release_block(id);
             table[bi] = copy;
             self.cow_copies += 1;
@@ -522,6 +545,8 @@ impl KvPool {
             prefix_partial_hits: self.prefix_partial_hits,
             evictions: self.evictions,
             cow_copies: self.cow_copies,
+            lazy_tail_shares: self.lazy_tail_shares,
+            lazy_tail_copies: self.lazy_tail_copies,
         }
     }
 }
@@ -588,14 +613,19 @@ mod tests {
 
         // an exactly-block-aligned prompt full-matches the first block and
         // partial-matches 3 rows of the second (one token is always left
-        // for the forward pass, so the last position is never served)
+        // for the forward pass, so the last position is never served);
+        // the tail block is shared READ-ONLY — no rows copied at match
         let aligned: Vec<u32> = (0..8).collect();
         let mut t4 = Vec::new();
         assert_eq!(pool.match_prefix(&aligned, &mut t4), 7);
         assert_eq!(t4.len(), 2);
-        assert_ne!(t4[1], t1[1], "partial tail must be a private copy");
-        assert_eq!(pool.slots[t4[1] as usize].block.fill(), 3);
-        assert_eq!(pool.stats().prefix_partial_hits, 1);
+        assert_eq!(t4[1], t1[1], "tail shared read-only until first append");
+        // pinned by t1 (owner), t2 (full hit), and t4 (lazy tail share)
+        assert_eq!(pool.slots[t4[1] as usize].refcount, 3);
+        let s = pool.stats();
+        assert_eq!(s.prefix_partial_hits, 1);
+        assert_eq!(s.lazy_tail_shares, 1);
+        assert_eq!(s.cow_copies, 0, "lazy adoption copies nothing at match");
         pool.release_seq(&mut t2);
         pool.release_seq(&mut t4);
         pool.release_seq(&mut t1);
@@ -650,37 +680,79 @@ mod tests {
     }
 
     #[test]
-    fn partial_tail_adoption_copies_shared_rows_only() {
+    fn partial_tail_shares_lazily_then_copies_on_first_append() {
         let mut pool = KvPool::new(cfg(8, 4));
         let tokens: Vec<u32> = (0..9).collect();
         let mut t1 = Vec::new();
         fill_seq(&mut pool, &mut t1, &tokens);
         pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
 
-        // shares 6 tokens: block 0 fully, 2 rows into block 1
+        // shares 6 tokens: block 0 fully, 2 rows into block 1 — the
+        // sealed tail is pinned read-only, nothing copied yet
         let probe: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 99, 98];
         assert_eq!(pool.probe_prefix(&probe), 6);
         let mut t2 = Vec::new();
         assert_eq!(pool.match_prefix(&probe, &mut t2), 6);
         assert_eq!(t2.len(), 2);
         assert_eq!(t2[0], t1[0], "full block shared zero-copy");
-        assert_ne!(t2[1], t1[1], "partial block adopted by copy");
-        assert_eq!(pool.slots[t2[1] as usize].block.fill(), 2);
-        assert_eq!(pool.slots[t2[1] as usize].refcount, 1);
+        assert_eq!(t2[1], t1[1], "tail block shared read-only");
         let s = pool.stats();
         assert_eq!(s.prefix_partial_hits, 1);
-        assert_eq!(s.cow_copies, 1);
+        assert_eq!(s.lazy_tail_shares, 1);
+        assert_eq!(s.lazy_tail_copies, 0);
+        assert_eq!(s.cow_copies, 0, "copy deferred to first append");
         assert_eq!(s.prefix_hit_tokens, 6);
 
-        // the adopted rows decode to block 1's leading rows, and the
-        // source block's own rows are untouched
+        // the shared rows decode to block 1's leading rows straight from
+        // the shared sealed block (readers slice by sequence length)
         let mut ks = Vec::new();
         let mut vs = Vec::new();
         let (keys, _) = pool.gather_rows(&t2, 0, &mut ks, &mut vs);
-        assert_eq!(keys.len(), 6);
         assert!((keys[4][0] - 4.0).abs() < 0.5);
+
+        // first append (position 6 = 2 rows into the tail block)
+        // materializes the deferred copy: only the 2 shared rows move,
+        // the source keeps its 4 rows and stays sealed
+        let row = vec![0.25f32; 16];
+        for layer in 0..2 {
+            pool.append_row(&mut t2, layer, 6, &row, &row);
+        }
+        assert_ne!(t2[1], t1[1], "first append must unshare the tail");
+        assert_eq!(pool.slots[t2[1] as usize].block.fill(), 3);
+        assert_eq!(pool.slots[t2[1] as usize].refcount, 1);
         assert_eq!(pool.slots[t1[1] as usize].block.fill(), 4);
+        assert_eq!(pool.slots[t1[1] as usize].refcount, 1);
+        let s = pool.stats();
+        assert_eq!(s.lazy_tail_copies, 1);
+        assert_eq!(s.cow_copies, 1);
         pool.release_seq(&mut t2);
+        pool.release_seq(&mut t1);
+    }
+
+    #[test]
+    fn lazy_tail_share_released_unused_never_copies() {
+        // the deferral payoff: a sequence that matches a mid-block tail
+        // but is released before appending (failed reservation, abort)
+        // pays zero row copies — the eager scheme always copied here
+        let mut pool = KvPool::new(cfg(8, 4));
+        let tokens: Vec<u32> = (0..9).collect();
+        let mut t1 = Vec::new();
+        fill_seq(&mut pool, &mut t1, &tokens);
+        pool.seal_full_blocks(&t1, &tokens, 0, HASH_SEED);
+        let free_before = pool.stats().blocks_free;
+
+        let probe: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 99, 98];
+        let mut t2 = Vec::new();
+        assert_eq!(pool.match_prefix(&probe, &mut t2), 6);
+        pool.release_seq(&mut t2);
+
+        let s = pool.stats();
+        assert_eq!(s.lazy_tail_shares, 1);
+        assert_eq!(s.lazy_tail_copies, 0, "copy avoided entirely");
+        assert_eq!(s.cow_copies, 0);
+        assert_eq!(s.blocks_free, free_before, "no block consumed");
+        // the sealed tail survives for the next arrival
+        assert_eq!(pool.probe_prefix(&probe), 6);
         pool.release_seq(&mut t1);
     }
 

@@ -11,8 +11,11 @@
 //!   LRU eviction, scheduler preemption) — plus a pure-rust INT4
 //!   inference engine whose quantized GEMMs implement every smoothing
 //!   method in the paper (RTN / SmoothQuant / RS / QuaRot / RRS / GPTQ),
-//!   and a PJRT runtime that loads the AOT-lowered JAX graphs and serves
-//!   them through the same pool ([`runtime::PagedPjrtEngine`]).
+//!   running over a runtime-dispatched SIMD microkernel layer
+//!   ([`kernels`]: packed-weight INT4 GEMM, fused RRS prologue, FWHT —
+//!   scalar / portable / AVX2 backends selected at startup), and a PJRT
+//!   runtime that loads the AOT-lowered JAX graphs and serves them
+//!   through the same pool ([`runtime::PagedPjrtEngine`]).
 //!
 //! See `README.md` for the repo map and `docs/ARCHITECTURE.md` for the
 //! full data-flow diagram.
@@ -29,6 +32,7 @@
 pub mod coordinator;
 pub mod eval;
 pub mod harness;
+pub mod kernels;
 pub mod kvpool;
 pub mod linalg;
 pub mod model;

@@ -4,9 +4,22 @@
 //! (`x @ H_K / sqrt(K)`-equivalent) in O(K log K).  Since Sylvester H is
 //! symmetric and orthogonal, the transform is an involution — applied
 //! twice it returns the input, which the tests exploit.
+//!
+//! The public entry points dispatch through the [`crate::kernels`]
+//! registry (SIMD butterflies on AVX2 hosts); every backend is
+//! bit-identical to [`fwht_inplace_scalar`], the reference kept here.
 
-/// In-place normalized FWHT along a power-of-two-length slice.
+/// In-place normalized FWHT along a power-of-two-length slice, on the
+/// dispatched kernel backend.
 pub fn fwht_inplace(x: &mut [f32]) {
+    let k = x.len();
+    assert!(k.is_power_of_two(), "fwht length {k} not a power of two");
+    crate::kernels::fwht_dispatch(x);
+}
+
+/// The scalar reference butterfly network (the `RRS_KERNEL=scalar`
+/// backend and the oracle the SIMD backends are diffed against).
+pub fn fwht_inplace_scalar(x: &mut [f32]) {
     let k = x.len();
     assert!(k.is_power_of_two(), "fwht length {k} not a power of two");
     let mut h = 1;
@@ -30,12 +43,11 @@ pub fn fwht_inplace(x: &mut [f32]) {
     }
 }
 
-/// Apply the normalized FWHT to every `k`-length row of a flat buffer.
+/// Apply the normalized FWHT to every `k`-length row of a flat buffer
+/// (rows in parallel on the dispatched backend).
 pub fn fwht_rows(data: &mut [f32], k: usize) {
     assert_eq!(data.len() % k, 0);
-    for row in data.chunks_mut(k) {
-        fwht_inplace(row);
-    }
+    crate::kernels::fwht_rows_par(data, k);
 }
 
 /// Dense normalized Hadamard matrix (for tests / cross-checks).

@@ -149,7 +149,7 @@ fn causal_attention(q: &Mat, k: &Mat, v: &Mat, cfg: &ModelConfig) -> Mat {
             let qh = &q.row(i)[h * hd..(h + 1) * hd];
             for j in 0..=i {
                 let kh = &k.row(j)[kvh * hd..(kvh + 1) * hd];
-                att[j] = crate::linalg::gemm::dot(qh, kh) * scale;
+                att[j] = crate::kernels::dot_f32(qh, kh) * scale;
             }
             crate::linalg::softmax_inplace(&mut att[..=i]);
             let orow = out.row_mut(i);
@@ -454,6 +454,10 @@ impl QuantModel {
         calib_tokens: Option<&[u32]>,
         spin_rotations: Option<(Mat, Mat)>,
     ) -> Result<QuantModel> {
+        // resolve the kernel registry up front: backend selection + the
+        // one-shot tile autotuner run at model-prep time, never inside a
+        // serving request
+        let _kernels = crate::kernels::registry();
         let method = ecfg.method;
         let need_calib = method == Method::SmoothQuant
             || (ecfg.gptq && ecfg.scheme.w_bits == 4 && method != Method::Fp);

@@ -63,6 +63,9 @@ pub fn silu(x: f32) -> f32 {
 /// Single-query attention against cached K/V rows (decode step).
 /// `q` is `[n_heads * hd]`; `keys`/`vals` are per-position `[kv_dim]`
 /// slices (len = seq_len); GQA maps head h -> kv head h / (n_heads/n_kv).
+/// Scores go through the dispatched [`crate::kernels::dot_f32`], which
+/// every backend implements bit-identically to `linalg::gemm::dot` — so
+/// attention stays deterministic under `RRS_KERNEL`.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_single(
     q: &[f32],
@@ -83,7 +86,7 @@ pub fn attend_single(
         let qh = &q[h * head_dim..(h + 1) * head_dim];
         for (p, krow) in keys.iter().enumerate() {
             let kh = &krow[kvh * head_dim..(kvh + 1) * head_dim];
-            scratch[p] = crate::linalg::gemm::dot(qh, kh) * scale;
+            scratch[p] = crate::kernels::dot_f32(qh, kh) * scale;
         }
         softmax_inplace(&mut scratch[..t]);
         let oh = &mut out[h * head_dim..(h + 1) * head_dim];

@@ -1,7 +1,12 @@
 //! INT4 nibble packing: two codes per byte.  Used by the KV-cache manager
-//! so a 4-bit cache really occupies 4 bits (+ scales), and by weight
-//! storage.  Codes are in [-8, 7] two's-complement nibbles (we only emit
-//! [-7, 7], matching the paper's symmetric range).
+//! so a 4-bit cache really occupies 4 bits (+ scales), by weight storage,
+//! and — as [`PackedI4`] — by the [`crate::kernels`] microkernels, which
+//! consume nibble-packed weights *directly* (no unpack-to-i8
+//! materialization, half the memory traffic of an i8 weight).  Codes are
+//! in [-8, 7] two's-complement nibbles (we only emit [-7, 7], matching
+//! the paper's symmetric range).
+
+use crate::linalg::igemm::MatI8;
 
 /// Pack i8 codes (each in [-8, 7]) into nibbles; pairs `(2i, 2i+1)` share
 /// byte `i` (low nibble first).  Odd lengths pad the final high nibble
@@ -40,6 +45,74 @@ fn sign_extend(nibble: u8) -> i8 {
 /// Bytes needed to pack `n` INT4 codes.
 pub fn packed_len(n: usize) -> usize {
     n.div_ceil(2)
+}
+
+/// A row-major matrix of INT4 codes stored two-per-byte, the weight
+/// layout the [`crate::kernels`] GEMM microkernels read directly.
+///
+/// Byte `t` of a row holds codes `2t` (low nibble) and `2t + 1` (high
+/// nibble), exactly the [`pack_i4`] convention.  Rows are padded with
+/// zero bytes to a [`PackedI4::ROW_ALIGN`]-byte stride so a SIMD kernel
+/// can always read whole 16-byte chunks: zero nibbles contribute zero to
+/// any dot product, making the padding numerically inert.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedI4 {
+    /// Output channels (GEMM `m`).
+    pub rows: usize,
+    /// Unpacked inner dimension (GEMM `k`).
+    pub cols: usize,
+    /// Bytes per row (`>= packed_len(cols)`, multiple of `ROW_ALIGN`).
+    pub stride: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedI4 {
+    /// Row stride alignment in bytes (one 128-bit SIMD lane).
+    pub const ROW_ALIGN: usize = 16;
+
+    /// Pack an i8 code matrix (each value in [-8, 7]) row by row.
+    pub fn pack(m: &MatI8) -> PackedI4 {
+        let pl = packed_len(m.cols);
+        let stride = pl.next_multiple_of(Self::ROW_ALIGN).max(Self::ROW_ALIGN);
+        let mut data = vec![0u8; m.rows * stride];
+        for i in 0..m.rows {
+            let row = m.row(i);
+            let dst = &mut data[i * stride..i * stride + pl];
+            for (t, pair) in row.chunks(2).enumerate() {
+                let lo = (pair[0] as u8) & 0x0f;
+                let hi = if let Some(&second) = pair.get(1) {
+                    ((second as u8) & 0x0f) << 4
+                } else {
+                    0
+                };
+                dst[t] = lo | hi;
+            }
+        }
+        PackedI4 { rows: m.rows, cols: m.cols, stride, data }
+    }
+
+    /// One packed row, including the zero padding tail (`stride` bytes).
+    #[inline]
+    pub fn row(&self, j: usize) -> &[u8] {
+        &self.data[j * self.stride..(j + 1) * self.stride]
+    }
+
+    /// Unpack back to an i8 matrix (test / cross-check path).
+    pub fn unpack(&self) -> MatI8 {
+        let pl = packed_len(self.cols);
+        let mut out = MatI8::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let packed = &self.data[i * self.stride..i * self.stride + pl];
+            let row = unpack_i4(packed, self.cols);
+            out.data[i * self.cols..(i + 1) * self.cols].copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Payload bytes (padding included).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +155,46 @@ mod tests {
     fn density_is_half() {
         assert_eq!(packed_len(128), 64);
         assert_eq!(packed_len(1), 1);
+    }
+
+    #[test]
+    fn packed_mat_roundtrip_at_odd_widths() {
+        // widths straddling every alignment edge: odd, one-under/over a
+        // 16-byte stride boundary, and tiny
+        check("packedi4-roundtrip", Config { cases: 96, ..Config::default() },
+            |rng, case| {
+                let rows = 1 + rng.below(7);
+                let cols = match case % 4 {
+                    0 => 1 + 2 * rng.below(40),      // odd
+                    1 => 31 + rng.below(4),           // around the 32 edge
+                    2 => 1 + rng.below(8),            // tiny
+                    _ => 1 + rng.below(130),          // anything
+                };
+                let codes: Vec<i8> =
+                    (0..rows * cols).map(|_| rng.below(16) as i8 - 8).collect();
+                let m = MatI8::from_vec(rows, cols, codes);
+                let p = PackedI4::pack(&m);
+                if p.stride % PackedI4::ROW_ALIGN != 0
+                    || p.stride < packed_len(cols)
+                {
+                    return Err(format!("bad stride {} for cols {cols}", p.stride));
+                }
+                // padding bytes beyond the payload must be zero (SIMD
+                // kernels read them and rely on 0 * x == 0)
+                for i in 0..rows {
+                    let row = p.row(i);
+                    if row[packed_len(cols)..].iter().any(|&b| b != 0) {
+                        return Err("nonzero padding".into());
+                    }
+                    // odd cols: the final payload byte's high nibble pads 0
+                    if cols % 2 == 1 && row[packed_len(cols) - 1] >> 4 != 0 {
+                        return Err("nonzero odd-width pad nibble".into());
+                    }
+                }
+                if p.unpack() != m {
+                    return Err("packed matrix roundtrip mismatch".into());
+                }
+                Ok(())
+            });
     }
 }

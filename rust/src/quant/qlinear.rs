@@ -12,11 +12,21 @@
 //!   group scale per K-block in the epilogue (negligible overhead claim).
 //!
 //! [`QLinear`] bundles a prepared weight with a method and dispatches.
+//! Its INT4 runtime paths go through the [`crate::kernels`] registry:
+//! weights are nibble-packed offline ([`PackedI4`]) and the dispatched
+//! microkernel consumes them directly.  The free `forward_*` functions
+//! below are the *staged scalar references* those kernels are diffed
+//! against (`rust/tests/kernel_diff.rs`) — they keep the original loops
+//! on purpose.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::kernels;
 use crate::linalg::gemm::{gemm_f32_bt, Mat};
 use crate::linalg::igemm::{idot, MatI8};
+use crate::quant::pack4::PackedI4;
 use crate::util::threadpool;
 
 use super::runtime_smooth::{self, SmoothedAct};
@@ -29,8 +39,23 @@ use super::{gptq, smoothquant, Method, Scheme};
 pub enum PreparedWeight {
     /// Full-precision (possibly rotated / smooth-merged) weight.
     Fp(Mat),
-    /// Per-output-channel INT4 (RTN or GPTQ).
-    Int4 { q: MatI8, scales: Vec<f32> },
+    /// Per-output-channel INT4 (RTN or GPTQ).  `packed` is the
+    /// nibble-packed mirror of `q` the [`crate::kernels`] GEMMs consume
+    /// directly (half the weight traffic of the i8 codes).  It is only
+    /// materialized for methods that serve the per-channel path; the
+    /// Runtime-Smooth methods instead pack the *permuted* weight into
+    /// the sticky perm cache, so a second copy here would be dead
+    /// memory.
+    Int4 { q: MatI8, packed: Option<PackedI4>, scales: Vec<f32> },
+}
+
+impl PreparedWeight {
+    /// Quantized weight from i8 codes; `pack` materializes the
+    /// nibble-packed mirror for the per-channel serving path.
+    fn int4(q: MatI8, scales: Vec<f32>, pack: bool) -> PreparedWeight {
+        let packed = pack.then(|| PackedI4::pack(&q));
+        PreparedWeight::Int4 { q, packed, scales }
+    }
 }
 
 impl PreparedWeight {
@@ -91,10 +116,10 @@ pub struct QLinear {
     /// Activation-side rotation (weight was rotated offline).
     pub rotation: Option<Rotation>,
     /// Sticky reorder cache: channel maxima ordering is stable across
-    /// decode steps, so the permuted weight is reused until the runtime
-    /// permutation actually changes (big win: the gather is comparable
-    /// to the GEMM itself at decode batch sizes).
-    perm_cache: std::sync::Mutex<Option<(Vec<usize>, std::sync::Arc<MatI8>)>>,
+    /// decode steps, so the permuted + re-packed weight is reused until
+    /// the runtime permutation actually changes (big win: the gather is
+    /// comparable to the GEMM itself at decode batch sizes).
+    perm_cache: std::sync::Mutex<Option<(Vec<usize>, Arc<PackedI4>)>>,
 }
 
 impl QLinear {
@@ -138,7 +163,8 @@ impl QLinear {
                 Some(x) => gptq::gptq_quantize(&w_eff, x, 0.01, 64)?,
                 None => rtn::quant_per_channel_w(&w_eff),
             };
-            PreparedWeight::Int4 { q, scales }
+            // RS/RRS serve through the permuted perm-cache packing
+            PreparedWeight::int4(q, scales, !method.runtime_smoothed())
         } else {
             PreparedWeight::Fp(w_eff)
         };
@@ -159,9 +185,7 @@ impl QLinear {
         match self.method {
             Method::Fp => match &self.weight {
                 PreparedWeight::Fp(w) => gemm_f32_bt(x, w),
-                PreparedWeight::Int4 { q, scales } => {
-                    forward_per_channel_a4w4(x, q, scales)
-                }
+                PreparedWeight::Int4 { .. } => self.act_quant_gemm(x),
             },
             Method::Rtn | Method::GptqOnly => self.act_quant_gemm(x),
             Method::SmoothQuant => {
@@ -208,21 +232,30 @@ impl QLinear {
     fn rs_forward_rotated(&self, x: &Mat) -> Mat {
         let group = effective_group(self.group, x.cols);
         match &self.weight {
-            PreparedWeight::Int4 { q, scales } => {
+            PreparedWeight::Int4 { q, scales, .. } => {
+                // fused prologue + fused GEMM on the dispatched kernel
+                // backend — bit-identical to the staged reference path
                 let sa = runtime_smooth::prepare(x, group);
                 let wqp = {
                     let mut cache = self.perm_cache.lock().unwrap();
                     match cache.as_ref() {
                         Some((perm, wqp)) if *perm == sa.perm => wqp.clone(),
                         _ => {
-                            let wqp =
-                                std::sync::Arc::new(q.permute_cols(&sa.perm));
+                            let permuted = q.permute_cols(&sa.perm);
+                            let wqp = Arc::new(PackedI4::pack(&permuted));
                             *cache = Some((sa.perm.clone(), wqp.clone()));
                             wqp
                         }
                     }
                 };
-                forward_rs_fused_prepermuted(&sa, &wqp, scales)
+                kernels::gemm_rs_fused_packed(
+                    &sa.q,
+                    &sa.token_scales,
+                    sa.group,
+                    &sa.group_scales,
+                    &wqp,
+                    scales,
+                )
             }
             PreparedWeight::Fp(w) => {
                 // A4W16: activation-only quantization
@@ -234,9 +267,15 @@ impl QLinear {
 
     fn act_quant_gemm(&self, x: &Mat) -> Mat {
         match &self.weight {
-            PreparedWeight::Int4 { q, scales } => {
-                forward_per_channel_a4w4(x, q, scales)
-            }
+            PreparedWeight::Int4 { q, packed, scales } => match packed {
+                Some(p) => {
+                    let (xq, sx) = rtn::quant_per_token(x);
+                    kernels::gemm_per_channel_packed(&xq, &sx, p, scales)
+                }
+                // RS-method weights skip the packed mirror; this path is
+                // unreachable from their dispatch but stays correct
+                None => forward_per_channel_a4w4(x, q, scales),
+            },
             PreparedWeight::Fp(w) => {
                 let xdq = rtn::fake_quant_per_token(x);
                 gemm_f32_bt(&xdq, w)
@@ -259,6 +298,9 @@ pub fn effective_group(group: usize, k: usize) -> usize {
 }
 
 /// Per-channel A4W4: per-token INT4 activation x per-channel INT4 weight.
+/// Staged scalar reference — [`QLinear`] serves this path through
+/// [`crate::kernels::gemm_per_channel_packed`], which must match this
+/// bit-for-bit.
 pub fn forward_per_channel_a4w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
     let (xq, sx) = rtn::quant_per_token(x);
     let (n, k, m) = (xq.rows, xq.cols, wq.rows);
@@ -326,7 +368,9 @@ pub fn forward_rs_fused(sa: &SmoothedAct, wq: &MatI8, sw: &[f32]) -> Mat {
 }
 
 /// Fused RS GEMM when the weight is already in the reordered layout
-/// (bench hot path / sticky-permutation optimization).
+/// (staged scalar reference; [`QLinear`] serves this path through
+/// [`crate::kernels::gemm_rs_fused_packed`], which must match this
+/// bit-for-bit).
 pub fn forward_rs_fused_prepermuted(
     sa: &SmoothedAct,
     wqp: &MatI8,

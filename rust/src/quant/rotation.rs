@@ -5,7 +5,7 @@
 //! O(K log K); learned rotations are dense [K,K] matmuls.  Pairing
 //! `(X R)(R^T W^T)^T` keeps the layer output exact (Fig. 2a).
 
-use crate::linalg::fwht::fwht_inplace;
+use crate::linalg::fwht::fwht_rows;
 use crate::linalg::gemm::{gemm_f32, Mat};
 
 /// Rotation operator applied to activation/weight rows along K.
@@ -23,10 +23,10 @@ impl Rotation {
     pub fn apply(&self, x: &Mat) -> Mat {
         match self {
             Rotation::Hadamard => {
+                // dispatched FWHT kernel, rows in parallel
                 let mut out = x.clone();
-                for i in 0..out.rows {
-                    fwht_inplace(out.row_mut(i));
-                }
+                let k = out.cols;
+                fwht_rows(&mut out.data, k);
                 out
             }
             Rotation::Dense(r) => {

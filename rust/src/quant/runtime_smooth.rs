@@ -65,8 +65,20 @@ pub struct SmoothedAct {
     pub group: usize,
 }
 
-/// Full runtime stage of the fused pipeline (Fig. 4 steps 1-2 + quant).
+/// Full runtime stage of the fused pipeline (Fig. 4 steps 1-2 + quant),
+/// on the dispatched [`crate::kernels`] backend: fused channel-max
+/// reduction + smooth + per-token RTN quantize.  Bit-identical to
+/// [`prepare_staged`] on every backend (asserted by
+/// `rust/tests/kernel_diff.rs`).
 pub fn prepare(x: &Mat, group: usize) -> SmoothedAct {
+    crate::kernels::rrs_prologue(x, group)
+}
+
+/// The staged reference pipeline: separate channel-max, gather/smooth,
+/// absmax and quantize passes — the oracle the fused kernel prologue
+/// (every backend of [`crate::kernels::rrs_prologue`]) is diffed
+/// against.
+pub fn prepare_staged(x: &Mat, group: usize) -> SmoothedAct {
     let s = channel_scales(x);
     let perm = reorder_perm(&s);
     let sg = group_scales(&s, &perm, group);

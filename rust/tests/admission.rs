@@ -122,6 +122,54 @@ fn evictable_hits_are_not_double_counted() {
     eng2.release(&mut seq_d);
 }
 
+/// Lazy partial-tail adoption and admission stay consistent: the gate
+/// budgets one allocatable block for the deferred CoW copy of a
+/// mid-block tail, the reservation-time re-check refuses (cleanly) when
+/// that block is missing, and a refused request pays zero row copies —
+/// the whole point of deferring the copy from match time to first
+/// append.
+#[test]
+fn lazy_tail_cow_block_is_budgeted_and_deferred() {
+    let eng = engine(3, 4);
+    let mut prompt_a = shared_prefix(6);
+    prompt_a.extend([1, 2]); // 8 tokens = exactly 2 sealed blocks
+    let mut seq_a = eng.new_seq();
+    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    eng.release(&mut seq_a);
+    let s = eng.stats();
+    assert_eq!((s.blocks_cached, s.blocks_free), (2, 1));
+
+    // refusal: 6 shared tokens (1 full block + 2 tail rows) + 5 unique
+    // needs 2 fresh blocks beyond the shared pair PLUS the CoW block —
+    // one more than the pool holds once the hits are pinned
+    let mut prompt_c = prompt_a[..6].to_vec();
+    prompt_c.extend([240, 241, 242, 243, 244]);
+    assert!(!eng.can_admit(&prompt_c), "gate must charge the CoW block");
+    let mut seq_c = eng.new_seq();
+    assert!(eng.try_prefill(&mut seq_c, &prompt_c).is_none());
+    let s = eng.stats();
+    assert_eq!((s.blocks_cached, s.blocks_free), (2, 1), "clean unwind");
+    assert_eq!(s.lazy_tail_shares, 1);
+    assert_eq!(s.lazy_tail_copies, 0, "refused request copies nothing");
+    assert_eq!(s.cow_copies, 0);
+
+    // success: a 7-token relative fits (table reuses the shared pair,
+    // the single free block serves the deferred copy at first append)
+    let mut prompt_b = prompt_a[..6].to_vec();
+    prompt_b.push(250);
+    assert!(eng.can_admit(&prompt_b));
+    let mut seq_b = eng.new_seq();
+    assert!(eng.try_prefill(&mut seq_b, &prompt_b).is_some());
+    let s = eng.stats();
+    assert_eq!(s.lazy_tail_shares, 2);
+    assert_eq!(s.lazy_tail_copies, 1, "first append materialized the copy");
+    assert_eq!(s.cow_copies, 1);
+    // the CoW unpinned the sealed tail: it is cached again, while the
+    // sequence now owns the hit block and the fresh copy
+    assert_eq!((s.blocks_active, s.blocks_cached, s.blocks_free), (2, 1, 0));
+    eng.release(&mut seq_b);
+}
+
 /// End-to-end through the coordinator: six concurrent requests sharing a
 /// 24-token prefix all fit a 20-block pool (8 + 5 x 2 blocks), which a
 /// flat per-request charge (6 x 8 = 48 blocks) could never admit

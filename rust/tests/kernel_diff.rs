@@ -1,0 +1,249 @@
+//! Kernel-layer differential suite: every compiled backend (scalar,
+//! portable, and avx2 when the host supports it) must produce
+//! **bit-identical** results on the INT4 hot path —
+//!
+//! * packed-direct igemm == the unpacked `igemm_i8_bt` i32 accumulators,
+//! * the fused RRS prologue + fused GEMM == the staged reference
+//!   pipeline (`prepare_staged` + `forward_rs_fused_prepermuted`),
+//! * the per-channel epilogue == `forward_per_channel_a4w4`,
+//! * the FWHT butterflies == the scalar reference, and
+//! * the f32 attention dot == `linalg::gemm::dot`.
+//!
+//! Shapes deliberately include odd K, K not divisible by the group /
+//! tile sizes, and batch-1 decode rows.  CI runs this suite once more
+//! with `RRS_KERNEL=scalar` forced so the reference backend itself stays
+//! exercised on AVX2 runners (the dispatched entry points are covered by
+//! the crate's unit/integration tests; this file sweeps `all_backends`).
+
+use rrs::kernels::{self, KernelBackend, TileConfig};
+use rrs::linalg::fwht::fwht_inplace_scalar;
+use rrs::linalg::igemm::{igemm_i8_bt, MatI8};
+use rrs::quant::pack4::PackedI4;
+use rrs::quant::qlinear::{
+    effective_group, forward_per_channel_a4w4, forward_rs_fused_prepermuted,
+};
+use rrs::quant::{rtn, runtime_smooth};
+use rrs::util::proptest::{check, Config};
+use rrs::util::rng::Pcg;
+
+fn rand_codes(rng: &mut Pcg, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.below(16) as i8 - 8).collect()
+}
+
+fn rand_mat(rng: &mut Pcg, r: usize, c: usize) -> rrs::linalg::gemm::Mat {
+    rrs::linalg::gemm::Mat::from_vec(r, c, rng.normal_vec(r * c))
+}
+
+/// Tile shapes chosen to force partial tiles, tiny K blocks, and blocks
+/// larger than the problem.
+fn tile_grid() -> Vec<TileConfig> {
+    vec![
+        TileConfig::DEFAULT,
+        TileConfig { mr: 1, nr: 1, kc: 32 },
+        TileConfig { mr: 3, nr: 7, kc: 64 },
+        TileConfig { mr: 16, nr: 128, kc: 4096 },
+    ]
+}
+
+#[test]
+fn packed_igemm_matches_unpacked_bitwise() {
+    // includes K odd / prime / not divisible by any tile or group size
+    check("kdiff-igemm", Config { cases: 48, ..Config::default() }, |rng, case| {
+        let n = 1 + rng.below(6);
+        let k = [1, 2, 3, 17, 31, 32, 33, 64, 97, 130][case % 10] + rng.below(8);
+        let m = 1 + rng.below(12);
+        let a = MatI8::from_vec(n, k, rand_codes(rng, n * k));
+        let b = MatI8::from_vec(m, k, rand_codes(rng, m * k));
+        let bp = PackedI4::pack(&b);
+        let want = igemm_i8_bt(&a, &b);
+        for bk in kernels::all_backends() {
+            for tiles in tile_grid() {
+                let got = kernels::igemm_packed_with(bk, tiles, &a, &bp);
+                if got != want {
+                    return Err(format!(
+                        "{} tiles {} diverged on n={n} k={k} m={m}",
+                        bk.name(),
+                        tiles.label()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn assert_bits(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{what}: bit mismatch at {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn fused_rrs_pipeline_matches_staged_bitwise() {
+    check("kdiff-rrs", Config { cases: 32, ..Config::default() }, |rng, case| {
+        let n = 1 + rng.below(5);
+        let k = [32, 64, 96, 128, 160, 256][case % 6];
+        let m = 1 + rng.below(10);
+        // groups including 1 (exact RS), odd-ish, and K itself; snapped
+        // to a divisor of K exactly like the serving path
+        let group = effective_group([1, 8, 24, 32, 64, k][case % 6], k);
+        let x = rand_mat(rng, n, k);
+        let w = rand_mat(rng, m, k);
+        let (wq, sw) = rtn::quant_per_channel_w(&w);
+
+        // staged oracle
+        let sa = runtime_smooth::prepare_staged(&x, group);
+        let wqp = wq.permute_cols(&sa.perm);
+        let want = forward_rs_fused_prepermuted(&sa, &wqp, &sw);
+        let bp = PackedI4::pack(&wqp);
+
+        for bk in kernels::all_backends() {
+            // fused prologue must reproduce the staged one exactly
+            let fa = kernels::rrs_prologue_with(bk, &x, group);
+            if fa.q.data != sa.q.data || fa.perm != sa.perm {
+                return Err(format!("{}: prologue codes/perm diverged", bk.name()));
+            }
+            assert_bits(
+                &fa.token_scales,
+                &sa.token_scales,
+                &format!("{} token scales", bk.name()),
+            )?;
+            assert_bits(
+                &fa.group_scales,
+                &sa.group_scales,
+                &format!("{} group scales", bk.name()),
+            )?;
+            // fused GEMM must reproduce the staged epilogue exactly
+            for tiles in tile_grid() {
+                let got = kernels::gemm_rs_fused_packed_with(
+                    bk,
+                    tiles,
+                    &fa.q,
+                    &fa.token_scales,
+                    fa.group,
+                    &fa.group_scales,
+                    &bp,
+                    &sw,
+                );
+                assert_bits(
+                    &got.data,
+                    &want.data,
+                    &format!("{} tiles {} fused rrs", bk.name(), tiles.label()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_channel_matches_staged_bitwise() {
+    check("kdiff-perchannel", Config { cases: 32, ..Config::default() }, |rng, case| {
+        let n = 1 + rng.below(6);
+        let k = [8, 16, 33, 64, 100, 128][case % 6];
+        let m = 1 + rng.below(10);
+        let x = rand_mat(rng, n, k);
+        let w = rand_mat(rng, m, k);
+        let (wq, sw) = rtn::quant_per_channel_w(&w);
+        let want = forward_per_channel_a4w4(&x, &wq, &sw);
+        let (xq, sx) = rtn::quant_per_token(&x);
+        let bp = PackedI4::pack(&wq);
+        for bk in kernels::all_backends() {
+            for tiles in tile_grid() {
+                let got = kernels::gemm_per_channel_packed_with(
+                    bk, tiles, &xq, &sx, &bp, &sw,
+                );
+                assert_bits(
+                    &got.data,
+                    &want.data,
+                    &format!("{} tiles {} per-channel", bk.name(), tiles.label()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fwht_backends_match_scalar_bitwise_and_involute() {
+    check("kdiff-fwht", Config { cases: 48, ..Config::default() }, |rng, case| {
+        let k = 1usize << (case % 10); // 1 .. 512
+        let x0 = rng.normal_vec(k);
+        let mut want = x0.clone();
+        fwht_inplace_scalar(&mut want);
+        for bk in kernels::all_backends() {
+            let mut got = x0.clone();
+            bk.fwht(&mut got);
+            assert_bits(&got, &want, &format!("{} fwht k={k}", bk.name()))?;
+            // involution sanity on the backend's own output
+            bk.fwht(&mut got);
+            for (a, b) in got.iter().zip(&x0) {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!(
+                        "{} fwht k={k} not an involution: {a} vs {b}",
+                        bk.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dot_f32_matches_reference_bitwise() {
+    check("kdiff-dot", Config { cases: 64, ..Config::default() }, |rng, _| {
+        let len = 1 + rng.below(70);
+        let a = rng.normal_vec(len);
+        let b = rng.normal_vec(len);
+        let want = rrs::linalg::gemm::dot(&a, &b);
+        for bk in kernels::all_backends() {
+            let got = bk.dot_f32(&a, &b);
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "{} dot len={len}: {got} vs {want}",
+                    bk.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The dispatched serving path (whatever `RRS_KERNEL` selected) agrees
+/// with the staged reference end-to-end — this is the invocation CI
+/// repeats with `RRS_KERNEL=scalar`.
+#[test]
+fn dispatched_backend_matches_staged_reference() {
+    let mut rng = Pcg::new(0xD1FF);
+    let x = rand_mat(&mut rng, 4, 128);
+    let w = rand_mat(&mut rng, 24, 128);
+    let (wq, sw) = rtn::quant_per_channel_w(&w);
+    let group = 32;
+    let sa = runtime_smooth::prepare(&x, group); // dispatched prologue
+    let staged = runtime_smooth::prepare_staged(&x, group);
+    assert_eq!(sa.q.data, staged.q.data);
+    assert_eq!(sa.perm, staged.perm);
+    let wqp = wq.permute_cols(&sa.perm);
+    let want = forward_rs_fused_prepermuted(&staged, &wqp, &sw);
+    let got = kernels::gemm_rs_fused_packed(
+        &sa.q,
+        &sa.token_scales,
+        sa.group,
+        &sa.group_scales,
+        &PackedI4::pack(&wqp),
+        &sw,
+    );
+    assert_bits(&got.data, &want.data, "dispatched fused rrs").unwrap();
+    eprintln!(
+        "dispatched backend: {} (tile {})",
+        kernels::stats().backend,
+        kernels::stats().tiles.label()
+    );
+}
