@@ -23,6 +23,11 @@ use rrs::runtime::Artifacts;
 use rrs::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
+    // demo the quant-health probes unless the caller set a rate already
+    // (RRS_OBS_SAMPLE=0 disables; see README "Observability")
+    if std::env::var("RRS_OBS_SAMPLE").is_err() {
+        rrs::obs::set_sample_every(16);
+    }
     let artifacts = Artifacts::load("artifacts")?;
     let weights = Weights::load(artifacts.weights_path(), &artifacts.model)?;
     let val = artifacts.val_text()?;
@@ -101,6 +106,24 @@ fn main() -> anyhow::Result<()> {
     println!("latency p50/p90: {:.1} / {:.1} ms", s.p50, s.p90);
     let m = coord.metrics.snapshot_json();
     println!("coordinator:     {}", m.dump());
+
+    // sampled per-layer quantization health (the paper's runtime
+    // statistics, measured during the serve run above)
+    let health = rrs::obs::health::snapshot();
+    if !health.is_empty() {
+        let period = rrs::obs::sample_period();
+        println!("\n== quant health (sampled, period {period}) ==");
+        println!(
+            "{:<12} {:>7} {:>12} {:>7} {:>9} {:>10}",
+            "layer", "probes", "channel_max", "spike", "kurtosis", "clip_rate"
+        );
+        for (layer, h) in &health {
+            println!(
+                "{layer:<12} {:>7} {:>12.2} {:>7.2} {:>9.2} {:>10.4}",
+                h.probes, h.channel_max, h.spike_ratio, h.kurtosis, h.clip_rate
+            );
+        }
+    }
 
     // shut the server down over the wire
     let stream = TcpStream::connect(("127.0.0.1", port))?;

@@ -1,0 +1,114 @@
+//! Observability overhead bench: batched INT4 RRS decode with the
+//! quant-health sampler off vs on, locking in the "obs-off is within
+//! run-to-run noise" budget from `docs/ARCHITECTURE.md`.
+//!
+//! Measures decode tokens/s four ways — sampler off twice (the noise
+//! baseline), then period 16 (the recommended production rate), then
+//! period 1 (every call, the worst case) — and writes `BENCH_obs.json`
+//! (CI uploads `BENCH_*.json` and asserts the off/off ratio and the
+//! period-16 overhead).
+//!
+//! Run: `cargo bench --bench obs_overhead`
+
+use std::time::Instant;
+
+use rrs::model::{EngineConfig, KvCache, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::util::json::obj;
+
+const BATCH: usize = 4;
+const WARMUP: usize = 20;
+const STEPS: usize = 200;
+
+fn decode_tps(model: &QuantModel, mcfg: &ModelConfig, ecfg: &EngineConfig) -> f32 {
+    let prompt: Vec<u32> = (1u32..9).collect();
+    let mut caches: Vec<KvCache> = (0..BATCH)
+        .map(|_| {
+            let mut c = KvCache::new(mcfg, ecfg);
+            model.forward_full(&prompt, Some(&mut c));
+            c
+        })
+        .collect();
+    let mut next = vec![1u32; BATCH];
+    let mut step = |next: &mut [u32]| {
+        let mut batch: Vec<(&mut KvCache, u32)> = caches
+            .iter_mut()
+            .zip(next.iter())
+            .map(|(c, &t)| (c, t))
+            .collect();
+        let logits = model.decode_batch(&mut batch);
+        for (i, t) in next.iter_mut().enumerate() {
+            // cheap argmax-free "sampling": keep tokens in vocab range
+            *t = (logits.row(i)[0].abs() as u32 % 250) + 1;
+        }
+    };
+    for _ in 0..WARMUP {
+        step(&mut next);
+    }
+    let t0 = Instant::now();
+    for _ in 0..STEPS {
+        step(&mut next);
+    }
+    (STEPS * BATCH) as f32 / t0.elapsed().as_secs_f32()
+}
+
+fn main() {
+    let mcfg = ModelConfig { n_layers: 2, max_seq: 512, ..Default::default() };
+    let w = Weights::random(&mcfg, 42);
+    let ecfg = EngineConfig {
+        method: Method::Rrs,
+        scheme: Scheme::A4W4KV16,
+        group: 32,
+        kv_group: 32,
+        alpha: 0.5,
+        gptq: false,
+    };
+    let model = QuantModel::prepare(&w, &mcfg, &ecfg, None, None).unwrap();
+    println!("obs overhead bench: {BATCH} seqs x {STEPS} decode steps (RRS A4W4)");
+
+    rrs::obs::health::reset();
+    rrs::obs::set_sample_every(0);
+    let off_a = decode_tps(&model, &mcfg, &ecfg);
+    let off_b = decode_tps(&model, &mcfg, &ecfg);
+    rrs::obs::set_sample_every(16);
+    let sampled16 = decode_tps(&model, &mcfg, &ecfg);
+    rrs::obs::set_sample_every(1);
+    let sampled1 = decode_tps(&model, &mcfg, &ecfg);
+    rrs::obs::set_sample_every(0);
+
+    let probes: u64 = rrs::obs::health::snapshot()
+        .iter()
+        .map(|(_, h)| h.probes)
+        .sum();
+    let off_mean = 0.5 * (off_a + off_b);
+    let noise_ratio = off_a / off_b.max(1e-9);
+    let pct = |on: f32| 100.0 * (off_mean - on) / off_mean.max(1e-9);
+    println!("  obs off   : {off_a:>8.0} / {off_b:>8.0} tok/s (ratio {noise_ratio:.3})");
+    println!(
+        "  period 16 : {sampled16:>8.0} tok/s ({:+.1}% vs off)",
+        pct(sampled16)
+    );
+    println!(
+        "  period 1  : {sampled1:>8.0} tok/s ({:+.1}% vs off, {probes} probes)",
+        pct(sampled1)
+    );
+
+    let j = obj(vec![
+        ("bench", "obs_overhead".into()),
+        ("batch", BATCH.into()),
+        ("steps", STEPS.into()),
+        ("off_tps_a", (off_a as f64).into()),
+        ("off_tps_b", (off_b as f64).into()),
+        ("off_noise_ratio", (noise_ratio as f64).into()),
+        ("sampled16_tps", (sampled16 as f64).into()),
+        ("sampled16_overhead_pct", (pct(sampled16) as f64).into()),
+        ("sampled1_tps", (sampled1 as f64).into()),
+        ("sampled1_overhead_pct", (pct(sampled1) as f64).into()),
+        ("probes_recorded", (probes as usize).into()),
+    ]);
+    let path = "BENCH_obs.json";
+    match std::fs::write(path, j.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -1,10 +1,22 @@
-//! Serving metrics: counters + latency reservoirs, snapshotted as JSON.
+//! Serving metrics: counters, bounded log-scale latency histograms, and
+//! the request-lifecycle trace ring, snapshotted as JSON (the `metrics`
+//! / `stats` commands) or Prometheus text ([`crate::obs::prom`], the
+//! `metrics_prom` command).
+//!
+//! Latencies live in fixed-memory lock-free
+//! [`LogHistogram`](crate::obs::hist::LogHistogram)s — the old
+//! unbounded `Mutex<Vec<f32>>` reservoirs grew forever on a long-running
+//! server and their mutexes could poison the stats endpoint; the
+//! histograms have neither failure mode while keeping the same
+//! [`Summary`] output shape for existing callers.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::kernels;
 use crate::kvpool::PoolStats;
+use crate::obs::hist::LogHistogram;
+use crate::obs::trace::TraceRing;
+use crate::obs::{self, Sampler};
 use crate::runtime::residency::ResidencyStats;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
@@ -40,9 +52,14 @@ pub struct Metrics {
     /// High-water mark of pool_blocks_used.
     pub pool_blocks_peak: AtomicU64,
     pub pool_evictions: AtomicU64,
+    pub pool_cow_copies: AtomicU64,
+    pub pool_lazy_tail_shares: AtomicU64,
+    pub pool_lazy_tail_copies: AtomicU64,
     pub prefix_queries: AtomicU64,
     pub prefix_query_tokens: AtomicU64,
     pub prefix_hit_tokens: AtomicU64,
+    pub prefix_hit_blocks: AtomicU64,
+    pub prefix_partial_hits: AtomicU64,
     // Resident-lane gauges, refreshed by the scheduler loop on backends
     // that decode from resident dense lanes (runtime::PagedPjrtEngine).
     // kv_gather_total flat across steady-state decode is the O(1) claim.
@@ -51,9 +68,16 @@ pub struct Metrics {
     pub lane_refresh_total: AtomicU64,
     pub resident_hits: AtomicU64,
     pub decode_graph_calls: AtomicU64,
-    lat_total_ms: Mutex<Vec<f32>>,
-    lat_queue_ms: Mutex<Vec<f32>>,
-    lat_per_token_ms: Mutex<Vec<f32>>,
+    /// Request-lifecycle span ring (`trace` command exports it).
+    pub trace: TraceRing,
+    /// Sampler gating per-decode-step trace spans (`RRS_OBS_SAMPLE`).
+    pub step_trace: Sampler,
+    lat_total: LogHistogram,
+    lat_queue: LogHistogram,
+    lat_per_token: LogHistogram,
+    lat_prefill: LogHistogram,
+    lat_ttft: LogHistogram,
+    lat_itl: LogHistogram,
 }
 
 impl Metrics {
@@ -64,26 +88,88 @@ impl Metrics {
     pub fn observe_completion(&self, total_ms: f32, queue_ms: f32, n_tokens: usize) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(n_tokens as u64, Ordering::Relaxed);
-        self.lat_total_ms.lock().unwrap().push(total_ms);
-        self.lat_queue_ms.lock().unwrap().push(queue_ms);
+        self.lat_total.observe(total_ms);
+        self.lat_queue.observe(queue_ms);
         if n_tokens > 0 {
-            self.lat_per_token_ms
-                .lock()
-                .unwrap()
-                .push(total_ms / n_tokens as f32);
+            self.lat_per_token.observe(total_ms / n_tokens as f32);
         }
     }
 
+    /// Record one prompt prefill (compute only, this admission round).
+    pub fn observe_prefill(&self, prefill_ms: f32) {
+        self.lat_prefill.observe(prefill_ms);
+    }
+
+    /// Record time-to-first-token: submission to the first sampled token.
+    pub fn observe_ttft(&self, ttft_ms: f32) {
+        self.lat_ttft.observe(ttft_ms);
+    }
+
+    /// Record one inter-token latency (gap between consecutive tokens of
+    /// one request, measured across batched decode steps).
+    pub fn observe_itl(&self, itl_ms: f32) {
+        self.lat_itl.observe(itl_ms);
+    }
+
     pub fn total_summary(&self) -> Summary {
-        Summary::of(&self.lat_total_ms.lock().unwrap())
+        self.lat_total.summary()
     }
 
     pub fn queue_summary(&self) -> Summary {
-        Summary::of(&self.lat_queue_ms.lock().unwrap())
+        self.lat_queue.summary()
     }
 
     pub fn per_token_summary(&self) -> Summary {
-        Summary::of(&self.lat_per_token_ms.lock().unwrap())
+        self.lat_per_token.summary()
+    }
+
+    pub fn prefill_summary(&self) -> Summary {
+        self.lat_prefill.summary()
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        self.lat_ttft.summary()
+    }
+
+    pub fn itl_summary(&self) -> Summary {
+        self.lat_itl.summary()
+    }
+
+    /// Histogram families as `(prometheus_name, help, histogram)` — the
+    /// [`crate::obs::prom`] renderer iterates this.
+    pub fn histograms(&self) -> [(&'static str, &'static str, &LogHistogram); 6] {
+        [
+            (
+                "rrs_request_latency_ms",
+                "End-to-end request latency (queue + prefill + decode).",
+                &self.lat_total,
+            ),
+            (
+                "rrs_queue_wait_ms",
+                "Queue wait before first admission.",
+                &self.lat_queue,
+            ),
+            (
+                "rrs_per_token_ms",
+                "Total latency divided by generated tokens.",
+                &self.lat_per_token,
+            ),
+            (
+                "rrs_prefill_ms",
+                "Prompt prefill compute per admission round.",
+                &self.lat_prefill,
+            ),
+            (
+                "rrs_ttft_ms",
+                "Time to first token (submission to first sample).",
+                &self.lat_ttft,
+            ),
+            (
+                "rrs_itl_ms",
+                "Inter-token latency across batched decode steps.",
+                &self.lat_itl,
+            ),
+        ]
     }
 
     /// Refresh the KV-pool gauges from a pool snapshot (scheduler loop).
@@ -93,9 +179,14 @@ impl Metrics {
         self.pool_blocks_cached.store(s.blocks_cached as u64, Ordering::Relaxed);
         self.pool_blocks_peak.fetch_max(s.blocks_active as u64, Ordering::Relaxed);
         self.pool_evictions.store(s.evictions, Ordering::Relaxed);
+        self.pool_cow_copies.store(s.cow_copies, Ordering::Relaxed);
+        self.pool_lazy_tail_shares.store(s.lazy_tail_shares, Ordering::Relaxed);
+        self.pool_lazy_tail_copies.store(s.lazy_tail_copies, Ordering::Relaxed);
         self.prefix_queries.store(s.prefix_queries, Ordering::Relaxed);
         self.prefix_query_tokens.store(s.prefix_query_tokens, Ordering::Relaxed);
         self.prefix_hit_tokens.store(s.prefix_hit_tokens, Ordering::Relaxed);
+        self.prefix_hit_blocks.store(s.prefix_hit_blocks, Ordering::Relaxed);
+        self.prefix_partial_hits.store(s.prefix_partial_hits, Ordering::Relaxed);
     }
 
     /// Refresh the resident-lane gauges from an engine snapshot
@@ -124,6 +215,9 @@ impl Metrics {
         let s = self.total_summary();
         let q = self.queue_summary();
         let pt = self.per_token_summary();
+        let pf = self.prefill_summary();
+        let tt = self.ttft_summary();
+        let it = self.itl_summary();
         obj(vec![
             ("submitted", (self.submitted.load(Ordering::Relaxed) as usize).into()),
             ("rejected", (self.rejected.load(Ordering::Relaxed) as usize).into()),
@@ -169,12 +263,37 @@ impl Metrics {
                         (self.pool_evictions.load(Ordering::Relaxed) as usize).into(),
                     ),
                     (
+                        "cow_copies",
+                        (self.pool_cow_copies.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "lazy_tail_shares",
+                        (self.pool_lazy_tail_shares.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "lazy_tail_copies",
+                        (self.pool_lazy_tail_copies.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
                         "prefix_queries",
                         (self.prefix_queries.load(Ordering::Relaxed) as usize).into(),
                     ),
                     (
                         "prefix_hit_tokens",
                         (self.prefix_hit_tokens.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "prefix_hit_blocks",
+                        (self.prefix_hit_blocks.load(Ordering::Relaxed) as usize)
+                            .into(),
+                    ),
+                    (
+                        "prefix_partial_hits",
+                        (self.prefix_partial_hits.load(Ordering::Relaxed) as usize)
                             .into(),
                     ),
                     ("prefix_hit_rate", self.prefix_hit_rate().into()),
@@ -227,6 +346,39 @@ impl Metrics {
                 "per_token_ms",
                 obj(vec![("p50", (pt.p50 as f64).into()), ("p90", (pt.p90 as f64).into())]),
             ),
+            (
+                "prefill_ms",
+                obj(vec![("p50", (pf.p50 as f64).into()), ("p90", (pf.p90 as f64).into())]),
+            ),
+            (
+                "ttft_ms",
+                obj(vec![
+                    ("n", tt.n.into()),
+                    ("p50", (tt.p50 as f64).into()),
+                    ("p90", (tt.p90 as f64).into()),
+                    ("p99", (tt.p99 as f64).into()),
+                    ("mean", (tt.mean as f64).into()),
+                ]),
+            ),
+            (
+                "itl_ms",
+                obj(vec![
+                    ("n", it.n.into()),
+                    ("p50", (it.p50 as f64).into()),
+                    ("p90", (it.p90 as f64).into()),
+                    ("p99", (it.p99 as f64).into()),
+                    ("mean", (it.mean as f64).into()),
+                ]),
+            ),
+            ("quant_health", obs::health::snapshot_json()),
+            (
+                "trace",
+                obj(vec![
+                    ("events_total", (self.trace.total() as usize).into()),
+                    ("dropped", (self.trace.dropped() as usize).into()),
+                    ("capacity", self.trace.capacity().into()),
+                ]),
+            ),
         ])
     }
 }
@@ -271,6 +423,48 @@ mod tests {
         assert_eq!(j.get("submitted").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(30));
         assert!(j.get("latency_ms").unwrap().get("p50").is_some());
+    }
+
+    #[test]
+    fn latency_reservoirs_are_bounded_histograms() {
+        // the old Vec reservoirs grew without bound; the histograms must
+        // absorb any number of observations at fixed memory while keeping
+        // the Summary shape for callers
+        let m = Metrics::new();
+        for i in 0..10_000 {
+            m.observe_completion(50.0 + (i % 100) as f32, 1.0, 10);
+        }
+        let s = m.total_summary();
+        assert_eq!(s.n, 10_000);
+        assert!(s.p50 >= 50.0 && s.p50 <= 170.0, "p50 {}", s.p50);
+        assert!(s.min >= 50.0 && s.max <= 150.0);
+        // per-token: 10k observations around 5-15 ms
+        let pt = m.per_token_summary();
+        assert_eq!(pt.n, 10_000);
+        assert!(pt.p90 <= 16.0, "p90 {}", pt.p90);
+    }
+
+    #[test]
+    fn ttft_itl_prefill_snapshot() {
+        let m = Metrics::new();
+        m.observe_ttft(25.0);
+        m.observe_ttft(35.0);
+        m.observe_itl(4.0);
+        m.observe_prefill(18.0);
+        let j = m.snapshot_json();
+        let tt = j.get("ttft_ms").unwrap();
+        assert_eq!(tt.get("n").unwrap().as_usize(), Some(2));
+        let p50 = tt.get("p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 20.0 && p50 < 40.0, "ttft p50 {p50}");
+        let it = j.get("itl_ms").unwrap();
+        assert_eq!(it.get("n").unwrap().as_usize(), Some(1));
+        let ip50 = it.get("p50").unwrap().as_f64().unwrap();
+        assert!((ip50 - 4.0).abs() < 1e-3, "itl p50 {ip50}");
+        assert!(j.get("prefill_ms").unwrap().get("p50").is_some());
+        assert!(j.get("quant_health").is_some());
+        let tr = j.get("trace").unwrap();
+        assert_eq!(tr.get("events_total").unwrap().as_usize(), Some(0));
+        assert!(tr.get("capacity").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]
@@ -328,6 +522,9 @@ mod tests {
             prefix_query_tokens: 100,
             prefix_hit_tokens: 25,
             prefix_queries: 5,
+            cow_copies: 3,
+            lazy_tail_shares: 2,
+            prefix_partial_hits: 1,
             ..Default::default()
         };
         m.update_pool(&s);
@@ -338,6 +535,9 @@ mod tests {
         assert_eq!(pool.get("blocks_total").unwrap().as_usize(), Some(64));
         assert_eq!(pool.get("blocks_used").unwrap().as_usize(), Some(4));
         assert_eq!(pool.get("blocks_peak").unwrap().as_usize(), Some(16));
+        assert_eq!(pool.get("cow_copies").unwrap().as_usize(), Some(3));
+        assert_eq!(pool.get("lazy_tail_shares").unwrap().as_usize(), Some(2));
+        assert_eq!(pool.get("prefix_partial_hits").unwrap().as_usize(), Some(1));
         let rate = pool.get("prefix_hit_rate").unwrap().as_f64().unwrap();
         assert!((rate - 0.25).abs() < 1e-9);
     }

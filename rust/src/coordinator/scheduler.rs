@@ -29,6 +29,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::model::sampler::{sample, Sampling};
+use crate::obs::trace::SpanKind;
 use crate::util::rng::Pcg;
 
 use super::engine_iface::ServeEngine;
@@ -71,9 +72,16 @@ struct Active<S> {
     sampling: Sampling,
     stop_token: Option<u32>,
     submitted_at: Instant,
+    /// When this request's latest token landed (inter-token latency).
+    last_token_at: Instant,
     queue_ms: f32,
     prefill_ms: f32,
     reply: mpsc::Sender<Response>,
+}
+
+/// Milliseconds (f32) to whole microseconds for trace spans.
+fn ms_us(ms: f32) -> u64 {
+    (ms.max(0.0) * 1e3) as u64
 }
 
 /// A request waiting for (re-)admission: fresh from the public queue, or
@@ -171,6 +179,7 @@ impl Coordinator {
             });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let prompt_len = prompt.len();
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id,
@@ -183,7 +192,12 @@ impl Coordinator {
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.queue.submit(req) {
-            Ok(()) => Ok((id, rx)),
+            Ok(()) => {
+                self.metrics
+                    .trace
+                    .instant(id, SpanKind::Enqueue, prompt_len as u64);
+                Ok((id, rx))
+            }
             Err(e) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
@@ -311,8 +325,24 @@ fn run_loop<E: ServeEngine>(
             metrics
                 .prefill_tokens
                 .fetch_add(full_prompt.len() as u64, Ordering::Relaxed);
-            let prefill_ms = prior_prefill_ms + t0.elapsed().as_secs_f32() * 1e3;
+            let round_prefill_ms = t0.elapsed().as_secs_f32() * 1e3;
+            let prefill_ms = prior_prefill_ms + round_prefill_ms;
+            metrics.observe_prefill(round_prefill_ms);
+            metrics
+                .trace
+                .span(req.id, SpanKind::Admit, ms_us(measured_queue_ms), 0);
+            metrics.trace.span(
+                req.id,
+                SpanKind::Prefill,
+                ms_us(round_prefill_ms),
+                full_prompt.len() as u64,
+            );
             let next = sample(&logits, req.sampling, &mut rng);
+            // TTFT only on first admission: a re-prefilled (preempted)
+            // request already delivered its first token long ago
+            if generated.is_empty() {
+                metrics.observe_ttft(req.submitted_at.elapsed().as_secs_f32() * 1e3);
+            }
             generated.push(next);
             active.push(Active {
                 id: req.id,
@@ -324,6 +354,7 @@ fn run_loop<E: ServeEngine>(
                 sampling: req.sampling,
                 stop_token: req.stop_token,
                 submitted_at: req.submitted_at,
+                last_token_at: Instant::now(),
                 queue_ms,
                 prefill_ms,
                 reply: req.reply,
@@ -354,6 +385,9 @@ fn run_loop<E: ServeEngine>(
             let mut victim = active.pop().unwrap(); // youngest (may be i itself)
             engine.release_seq(&mut victim.seq);
             metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+            metrics
+                .trace
+                .instant(victim.id, SpanKind::Preempt, victim.generated.len() as u64);
             preempted.push_front(Pending::resumed(victim));
         }
         if active.is_empty() {
@@ -371,10 +405,26 @@ fn run_loop<E: ServeEngine>(
         let logits = engine.decode(&mut pairs);
         drop(pairs);
         metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        let step_done = Instant::now();
+        // sampled once per batched step, not per row: one step = one span
+        // per participating request when the sampler fires
+        let step_traced = metrics.step_trace.hit();
         for (i, a) in active.iter_mut().enumerate() {
             let tok = sample(logits.row(i), a.sampling, &mut rng);
             a.generated.push(tok);
             a.next_token = tok;
+            let itl_ms =
+                step_done.duration_since(a.last_token_at).as_secs_f32() * 1e3;
+            a.last_token_at = step_done;
+            metrics.observe_itl(itl_ms);
+            if step_traced {
+                metrics.trace.span(
+                    a.id,
+                    SpanKind::DecodeStep,
+                    ms_us(itl_ms),
+                    a.generated.len() as u64,
+                );
+            }
         }
         if let Some(ps) = engine.pool_stats() {
             metrics.update_pool(&ps);
@@ -388,6 +438,9 @@ fn run_loop<E: ServeEngine>(
 
 fn abort(p: Pending, metrics: &Metrics) {
     metrics.aborted.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .trace
+        .instant(p.req.id, SpanKind::Abort, p.generated.len() as u64);
     let total_ms = p.req.submitted_at.elapsed().as_secs_f32() * 1e3;
     let _ = p.req.reply.send(Response {
         id: p.req.id,
@@ -432,6 +485,9 @@ fn retire<E: ServeEngine>(
             let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
             let decode_ms = total_ms - a.queue_ms - a.prefill_ms;
             metrics.observe_completion(total_ms, a.queue_ms, a.generated.len());
+            metrics
+                .trace
+                .instant(a.id, SpanKind::Finish, a.generated.len() as u64);
             let _ = a.reply.send(Response {
                 id: a.id,
                 tokens: a.generated,

@@ -4,6 +4,11 @@
 //!   -> {"prompt": "arlo is", "max_tokens": 24, "temperature": 0.0}
 //!   <- {"id": 1, "text": " red.", "tokens": 5, "total_ms": 12.3, ...}
 //!   -> {"cmd": "metrics"}            <- metrics snapshot
+//!   -> {"cmd": "metrics_prom"}       <- Prometheus text exposition 0.0.4
+//!                                       (wrapped as {"content_type", "body"})
+//!   -> {"cmd": "trace"}              <- Chrome trace_event document; add
+//!                                       {"format": "jsonl"} for one event
+//!                                       per line in "body"
 //!   -> {"cmd": "shutdown"}           <- {"ok": true} and server exits
 //!
 //! Each connection gets a handler thread; generation responses block the
@@ -81,6 +86,28 @@ pub fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             // "stats" is an alias: the snapshot includes the KV-pool
             // gauges (blocks used/cached/peak, prefix hit rate, ...)
             "metrics" | "stats" => coord.metrics.snapshot_json(),
+            // Prometheus exposition rides the JSON protocol as a wrapped
+            // body; an HTTP shim only needs to echo body with the given
+            // content type
+            "metrics_prom" => obj(vec![
+                ("content_type", "text/plain; version=0.0.4".into()),
+                (
+                    "body",
+                    Json::Str(crate::obs::prom::render(&coord.metrics)),
+                ),
+            ]),
+            "trace" => {
+                let jsonl = req.get("format").and_then(Json::as_str)
+                    == Some("jsonl");
+                if jsonl {
+                    obj(vec![(
+                        "body",
+                        Json::Str(coord.metrics.trace.chrome_trace_jsonl()),
+                    )])
+                } else {
+                    coord.metrics.trace.chrome_trace_json()
+                }
+            }
             "ping" => obj(vec![("ok", true.into())]),
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);

@@ -487,11 +487,19 @@ pub fn rrs_prologue_with(bk: &dyn KernelBackend, x: &Mat, group: usize) -> Smoot
 }
 
 /// Fused RRS activation prologue on the dispatched backend (what
-/// [`crate::quant::runtime_smooth::prepare`] runs).
+/// [`crate::quant::runtime_smooth::prepare`] runs).  Sampled
+/// quant-health probes ([`crate::obs::health`]) hang off this entry
+/// point: the pre-smoothing activation and its INT4 codes are both in
+/// hand here, so the probe costs one extra pass only on sampled calls.
 pub fn rrs_prologue(x: &Mat, group: usize) -> SmoothedAct {
     PROLOGUE_ROWS.fetch_add(x.rows as u64, Ordering::Relaxed);
     let r = registry();
-    rrs_prologue_with(r.backend, x, group)
+    let sa = rrs_prologue_with(r.backend, x, group);
+    if crate::obs::health::sampled() {
+        let layer = crate::obs::current_layer_or("rrs_prologue");
+        crate::obs::health::probe_quant(&layer, x, &sa.q);
+    }
+    sa
 }
 
 /// Dispatched in-place normalized FWHT over one row.

@@ -15,7 +15,11 @@
 //!   ([`kernels`]: packed-weight INT4 GEMM, fused RRS prologue, FWHT —
 //!   scalar / portable / AVX2 backends selected at startup), and a PJRT
 //!   runtime that loads the AOT-lowered JAX graphs and serves them
-//!   through the same pool ([`runtime::PagedPjrtEngine`]).
+//!   through the same pool ([`runtime::PagedPjrtEngine`]).  A unified
+//!   observability layer ([`obs`]: lock-free log-scale latency
+//!   histograms, per-request span tracing with Chrome `trace_event`
+//!   export, Prometheus text exposition, sampled per-layer
+//!   quant-health probes) instruments the whole stack.
 //!
 //! See `README.md` for the repo map and `docs/ARCHITECTURE.md` for the
 //! full data-flow diagram.
@@ -36,6 +40,7 @@ pub mod kernels;
 pub mod kvpool;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod util;

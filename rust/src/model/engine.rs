@@ -498,7 +498,11 @@ impl QuantModel {
                     _ => &a.down[i],
                 })
             };
-            let prep = |wmat: &Mat, kind: usize, rot: &Rotation| -> Result<QLinear> {
+            let prep = |wmat: &Mat,
+                        name: &str,
+                        kind: usize,
+                        rot: &Rotation|
+             -> Result<QLinear> {
                 let x = act_for(kind);
                 // calibration for SmoothQuant
                 let calib = x.map(|xm| {
@@ -544,18 +548,21 @@ impl QuantModel {
                     gptq_calib: gptq_x.as_ref(),
                     rotation: Some(rot.clone()),
                 };
-                QLinear::prepare(wmat, &opts)
+                let mut lin = QLinear::prepare(wmat, &opts)?;
+                // per-layer quant-health label (sampled probes key on it)
+                lin.probe = Some(format!("l{i}.{name}"));
+                Ok(lin)
             };
             layers.push(QLayer {
                 attn_norm: lw.attn_norm.clone(),
                 mlp_norm: lw.mlp_norm.clone(),
-                wq: prep(&lw.wq, 0, &rot_dim)?,
-                wk: prep(&lw.wk, 0, &rot_dim)?,
-                wv: prep(&lw.wv, 0, &rot_dim)?,
-                wo: prep(&lw.wo, 1, &rot_dim)?,
-                w_gate: prep(&lw.w_gate, 2, &rot_dim)?,
-                w_up: prep(&lw.w_up, 2, &rot_dim)?,
-                w_down: prep(&lw.w_down, 3, &rot_ffn)?,
+                wq: prep(&lw.wq, "wq", 0, &rot_dim)?,
+                wk: prep(&lw.wk, "wk", 0, &rot_dim)?,
+                wv: prep(&lw.wv, "wv", 0, &rot_dim)?,
+                wo: prep(&lw.wo, "wo", 1, &rot_dim)?,
+                w_gate: prep(&lw.w_gate, "w_gate", 2, &rot_dim)?,
+                w_up: prep(&lw.w_up, "w_up", 2, &rot_dim)?,
+                w_down: prep(&lw.w_down, "w_down", 3, &rot_ffn)?,
             });
         }
         Ok(QuantModel {

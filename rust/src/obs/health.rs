@@ -1,0 +1,236 @@
+//! Sampled quantization-health probes: the runtime activation statistics
+//! the paper's whole argument rests on, measured in production instead of
+//! offline.  Each probe of a layer's pre-quantization activation `x` and
+//! its INT4 codes `q` records:
+//!
+//! * **channel_max** — `max_j max_i |X_ij|`, the magnitude of the worst
+//!   channel outlier (eq. 1's `s_j` peak; what Runtime Smooth divides by);
+//! * **spike_ratio** — `max(s) / p99(s)` over the channel maxima: ≈1 for
+//!   flat channels, large when a few channels spike (Fig. 2's outlier
+//!   taxonomy — this is the statistic rotation alone cannot fix);
+//! * **kurtosis** — excess-free kurtosis proxy `m4/m2²` over all of `x`:
+//!   ≈3 for Gaussian (well-rotated) activations, large for heavy tails —
+//!   the post-rotation flatness check;
+//! * **clip_rate** — fraction of INT4 codes at saturation (|code| = 7):
+//!   direct evidence of quantizer overload.
+//!
+//! Probes are gated by the process-wide [`crate::obs`] sampler
+//! (`RRS_OBS_SAMPLE`), keyed by the layer label installed via
+//! [`crate::obs::layer_scope`] (the model assembler tags each
+//! [`crate::quant::qlinear::QLinear`] as `l{i}.wq` etc.), and aggregated
+//! into a bounded per-layer registry exported through the metrics
+//! snapshot and Prometheus exposition.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::linalg::gemm::Mat;
+use crate::linalg::igemm::MatI8;
+use crate::quant::runtime_smooth;
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+
+use super::{lock_recover, Sampler};
+
+/// Cap on distinct layer labels (a runaway label source must not turn
+/// the registry into the unbounded-memory bug this PR removes).
+const MAX_LAYERS: usize = 512;
+
+static SAMPLER: Sampler = Sampler::new();
+
+/// True when this call site should pay for a probe (sampled; false when
+/// `RRS_OBS_SAMPLE` is unset or 0).
+#[inline]
+pub fn sampled() -> bool {
+    SAMPLER.hit()
+}
+
+#[derive(Clone, Debug, Default)]
+struct Agg {
+    probes: u64,
+    channel_max_peak: f32,
+    spike_sum: f64,
+    kurt_sum: f64,
+    clip_sum: f64,
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Agg>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Agg>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Aggregated health of one layer label (peak channel-max, mean of the
+/// other statistics over all probes).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerHealth {
+    pub probes: u64,
+    pub channel_max: f32,
+    pub spike_ratio: f32,
+    pub kurtosis: f32,
+    pub clip_rate: f32,
+}
+
+/// Probe one (activation, INT4 codes) pair under `layer`.  The caller
+/// decides *whether* to pay for this via [`sampled`]; the probe itself
+/// is two passes over `x` plus one over `q` (O(rows·cols), no
+/// allocation beyond the channel-scale vector).
+pub fn probe_quant(layer: &str, x: &Mat, q: &MatI8) {
+    if x.data.is_empty() || q.data.is_empty() {
+        return;
+    }
+    let s = runtime_smooth::channel_scales(x);
+    let channel_max = s.iter().fold(0.0f32, |a, &v| a.max(v));
+    let p99 = stats::percentile(&s, 99.0).max(1e-8);
+    let spike_ratio = (channel_max / p99).max(1.0);
+    let n = x.data.len() as f64;
+    let mean = x.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut m2 = 0.0f64;
+    let mut m4 = 0.0f64;
+    for &v in &x.data {
+        let d = v as f64 - mean;
+        let d2 = d * d;
+        m2 += d2;
+        m4 += d2 * d2;
+    }
+    m2 /= n;
+    m4 /= n;
+    let kurtosis = if m2 > 1e-24 { (m4 / (m2 * m2)) as f32 } else { 0.0 };
+    let clipped = q.data.iter().filter(|c| c.unsigned_abs() >= 7).count();
+    let clip_rate = clipped as f32 / q.data.len() as f32;
+    record(layer, channel_max, spike_ratio, kurtosis, clip_rate);
+}
+
+fn record(layer: &str, channel_max: f32, spike: f32, kurt: f32, clip: f32) {
+    let mut map = lock_recover(registry());
+    if !map.contains_key(layer) && map.len() >= MAX_LAYERS {
+        return;
+    }
+    let a = map.entry(layer.to_string()).or_default();
+    a.probes += 1;
+    a.channel_max_peak = a.channel_max_peak.max(channel_max);
+    a.spike_sum += spike as f64;
+    a.kurt_sum += kurt as f64;
+    a.clip_sum += clip as f64;
+}
+
+/// Per-layer aggregates, sorted by label.
+pub fn snapshot() -> Vec<(String, LayerHealth)> {
+    let map = lock_recover(registry());
+    map.iter()
+        .map(|(k, a)| {
+            let n = a.probes.max(1) as f64;
+            (
+                k.clone(),
+                LayerHealth {
+                    probes: a.probes,
+                    channel_max: a.channel_max_peak,
+                    spike_ratio: (a.spike_sum / n) as f32,
+                    kurtosis: (a.kurt_sum / n) as f32,
+                    clip_rate: (a.clip_sum / n) as f32,
+                },
+            )
+        })
+        .collect()
+}
+
+/// JSON object keyed by layer label (the `quant_health` section of the
+/// metrics snapshot; empty object when sampling is off).
+pub fn snapshot_json() -> Json {
+    Json::Obj(
+        snapshot()
+            .into_iter()
+            .map(|(name, h)| {
+                (
+                    name,
+                    obj(vec![
+                        ("probes", (h.probes as usize).into()),
+                        ("channel_max", (h.channel_max as f64).into()),
+                        ("spike_ratio", (h.spike_ratio as f64).into()),
+                        ("kurtosis", (h.kurtosis as f64).into()),
+                        ("clip_rate", (h.clip_rate as f64).into()),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Clear all per-layer aggregates (tests / benches).
+pub fn reset() {
+    lock_recover(registry()).clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn;
+    use crate::util::rng::Pcg;
+
+    fn probe_mat(label: &str, x: &Mat) {
+        let (q, _s) = rtn::quant_per_token(x);
+        probe_quant(label, x, &q);
+    }
+
+    #[test]
+    fn spike_and_clip_detected() {
+        let mut rng = Pcg::new(77);
+        // 256 channels so p99 of the channel maxima excludes the single
+        // spiking channel (1/256 < 1%)
+        let mut x = Mat::from_vec(8, 256, rng.normal_vec(8 * 256));
+        for i in 0..8 {
+            x.data[i * 256 + 5] = 300.0; // one spiking channel
+        }
+        probe_mat("obs-health-spiky", &x);
+        let snap = snapshot();
+        let (_, h) = snap
+            .iter()
+            .find(|(k, _)| k == "obs-health-spiky")
+            .expect("layer recorded");
+        assert_eq!(h.probes, 1);
+        assert!(h.channel_max >= 300.0, "channel_max {}", h.channel_max);
+        assert!(h.spike_ratio > 5.0, "spike_ratio {}", h.spike_ratio);
+        // per-token RTN against a 300x spike clips the spike channel only:
+        // a low but nonzero saturation rate
+        assert!(h.clip_rate > 0.0 && h.clip_rate < 0.5, "clip {}", h.clip_rate);
+        assert!(h.kurtosis > 3.0, "spiky input must be heavy-tailed");
+    }
+
+    #[test]
+    fn gaussian_input_is_flat() {
+        let mut rng = Pcg::new(78);
+        let x = Mat::from_vec(16, 128, rng.normal_vec(16 * 128));
+        probe_mat("obs-health-flat", &x);
+        let snap = snapshot();
+        let (_, h) = snap
+            .iter()
+            .find(|(k, _)| k == "obs-health-flat")
+            .expect("layer recorded");
+        assert!(h.kurtosis > 2.0 && h.kurtosis < 4.5, "kurt {}", h.kurtosis);
+        assert!(h.spike_ratio < 2.0, "spike_ratio {}", h.spike_ratio);
+    }
+
+    #[test]
+    fn aggregates_average_over_probes() {
+        let mut rng = Pcg::new(79);
+        let x = Mat::from_vec(4, 32, rng.normal_vec(4 * 32));
+        probe_mat("obs-health-agg", &x);
+        probe_mat("obs-health-agg", &x);
+        let snap = snapshot();
+        let (_, h) = snap
+            .iter()
+            .find(|(k, _)| k == "obs-health-agg")
+            .expect("layer recorded");
+        assert_eq!(h.probes, 2);
+        let j = snapshot_json();
+        let lj = j.get("obs-health-agg").unwrap();
+        assert_eq!(lj.get("probes").unwrap().as_usize(), Some(2));
+        assert!(lj.get("clip_rate").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn empty_inputs_are_ignored() {
+        let before = snapshot().len();
+        probe_quant("obs-health-empty", &Mat::zeros(0, 0), &MatI8::zeros(0, 0));
+        assert_eq!(snapshot().len(), before);
+    }
+}

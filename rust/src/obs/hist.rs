@@ -1,0 +1,286 @@
+//! Fixed-bucket log-scale latency histograms (lock-free).
+//!
+//! Replaces the coordinator's unbounded `Mutex<Vec<f32>>` latency
+//! reservoirs: a [`LogHistogram`] is a fixed 160-slot array of atomic
+//! counters covering `[1 µs, 100 s)` in geometric buckets (20 per
+//! decade, ratio `10^(1/20) ≈ 1.122`), so memory is O(1) regardless of
+//! how many requests a server retires and `observe` is a handful of
+//! relaxed atomic adds — safe to call from the scheduler hot loop with
+//! no lock on the snapshot path (a poisoned-mutex cannot take the stats
+//! endpoint down because there is no mutex).
+//!
+//! Quantile queries interpolate geometrically inside the landing bucket
+//! and clamp to the exact observed `[min, max]`, which bounds the
+//! relative error of any percentile by one bucket ratio (~12%); the
+//! error bound is locked in by `rust/tests/obs.rs` against the exact
+//! sort-based [`crate::util::stats::percentile`].
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::util::stats::Summary;
+
+/// Lower edge of bucket 0 in milliseconds (1 µs).
+pub const LO_MS: f64 = 1e-3;
+/// Geometric buckets per decade.
+pub const PER_DECADE: usize = 20;
+/// Decades covered: `[1 µs, 100 s)`; out-of-range values clamp to the
+/// end buckets (and the min/max clamp keeps their quantiles honest).
+pub const DECADES: usize = 8;
+/// Total bucket count.
+pub const NBUCKETS: usize = PER_DECADE * DECADES;
+
+/// Lock-free fixed-memory log-scale histogram of millisecond latencies.
+///
+/// # Examples
+///
+/// ```
+/// use rrs::obs::hist::LogHistogram;
+///
+/// let h = LogHistogram::new();
+/// for _ in 0..100 {
+///     h.observe(5.0);
+/// }
+/// assert_eq!(h.count(), 100);
+/// assert_eq!(h.quantile(0.5), 5.0); // clamped to observed min == max
+/// ```
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum in integer microseconds (atomic f32 adds don't exist; µs
+    /// resolution keeps the mean honest for any realistic latency).
+    sum_us: AtomicU64,
+    /// Observed min/max as f32 bit patterns: for non-negative floats the
+    /// IEEE-754 bit order matches the numeric order, so atomic integer
+    /// `fetch_min`/`fetch_max` maintain them without a lock.
+    min_bits: AtomicU32,
+    max_bits: AtomicU32,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            min_bits: AtomicU32::new(f32::INFINITY.to_bits()),
+            max_bits: AtomicU32::new(0.0f32.to_bits()),
+        }
+    }
+
+    /// Bucket index for a value in ms (clamped to the covered range).
+    pub fn bucket_index(ms: f32) -> usize {
+        let v = ms as f64;
+        if v.is_nan() || v <= LO_MS {
+            return 0;
+        }
+        let idx = ((v / LO_MS).log10() * PER_DECADE as f64).floor() as isize;
+        idx.clamp(0, NBUCKETS as isize - 1) as usize
+    }
+
+    /// Lower edge of bucket `i` in ms.
+    pub fn lower_edge(i: usize) -> f64 {
+        LO_MS * 10f64.powf(i as f64 / PER_DECADE as f64)
+    }
+
+    /// Upper edge of bucket `i` in ms.
+    pub fn upper_edge(i: usize) -> f64 {
+        LO_MS * 10f64.powf((i + 1) as f64 / PER_DECADE as f64)
+    }
+
+    /// Record one latency in ms.  Negative / non-finite values count as 0.
+    #[inline]
+    pub fn observe(&self, ms: f32) {
+        let v = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((v as f64 * 1000.0).round() as u64, Ordering::Relaxed);
+        self.min_bits.fetch_min(v.to_bits(), Ordering::Relaxed);
+        self.max_bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations in ms.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Smallest observed value (0 when empty).
+    pub fn min(&self) -> f32 {
+        if self.count() == 0 {
+            return 0.0;
+        }
+        f32::from_bits(self.min_bits.load(Ordering::Relaxed))
+    }
+
+    /// Largest observed value (0 when empty).
+    pub fn max(&self) -> f32 {
+        if self.count() == 0 {
+            return 0.0;
+        }
+        f32::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Interpolated quantile (`q` in [0,1]); geometric within the landing
+    /// bucket, clamped to the exact observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f32 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        // 0-based rank, matching util::stats::percentile's convention
+        let rank = q.clamp(0.0, 1.0) * (n as f64 - 1.0);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 > rank {
+                let frac =
+                    ((rank - cum as f64 + 0.5) / c as f64).clamp(0.0, 1.0);
+                let lo = Self::lower_edge(i);
+                let hi = Self::upper_edge(i);
+                let est = (lo * (hi / lo).powf(frac)) as f32;
+                return est.clamp(self.min(), self.max());
+            }
+            cum += c;
+        }
+        self.max()
+    }
+
+    /// Percentile (`p` in [0,100]) — convenience mirror of
+    /// [`crate::util::stats::percentile`].
+    pub fn percentile(&self, p: f32) -> f32 {
+        self.quantile(p as f64 / 100.0)
+    }
+
+    /// [`Summary`]-shaped snapshot: the drop-in replacement for
+    /// `Summary::of(&reservoir)` on the old unbounded Vec reservoirs.
+    pub fn summary(&self) -> Summary {
+        let n = self.count();
+        if n == 0 {
+            return Summary::default();
+        }
+        Summary {
+            n: n as usize,
+            mean: (self.sum_ms() / n as f64) as f32,
+            p10: self.quantile(0.10),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    /// Cumulative `(upper_edge_ms, count_at_or_below)` pairs for
+    /// Prometheus exposition, merging `stride` native buckets per
+    /// exported `le` bucket (stride 4 → 40 exported buckets).
+    pub fn cumulative(&self, stride: usize) -> Vec<(f64, u64)> {
+        let stride = stride.max(1);
+        let mut out = Vec::with_capacity(NBUCKETS / stride + 1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if (i + 1) % stride == 0 || i + 1 == NBUCKETS {
+                out.push((Self::upper_edge(i), cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_are_monotone_and_cover_range() {
+        for i in 0..NBUCKETS {
+            assert!(LogHistogram::upper_edge(i) > LogHistogram::lower_edge(i));
+            if i > 0 {
+                let prev = LogHistogram::upper_edge(i - 1);
+                let lo = LogHistogram::lower_edge(i);
+                assert!((prev - lo).abs() / lo < 1e-9, "bucket {i} gap");
+            }
+        }
+        assert!((LogHistogram::lower_edge(0) - LO_MS).abs() < 1e-12);
+        assert!(LogHistogram::upper_edge(NBUCKETS - 1) > 1e4); // > 10 s
+    }
+
+    #[test]
+    fn bucket_index_respects_edges() {
+        for i in 0..NBUCKETS {
+            // geometric midpoint is safely inside bucket i
+            let mid = (LogHistogram::lower_edge(i)
+                * LogHistogram::upper_edge(i))
+            .sqrt();
+            assert_eq!(LogHistogram::bucket_index(mid as f32), i, "bucket {i}");
+        }
+        assert_eq!(LogHistogram::bucket_index(0.0), 0);
+        assert_eq!(LogHistogram::bucket_index(-5.0), 0);
+        assert_eq!(LogHistogram::bucket_index(1e9), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn single_value_quantiles_are_exact() {
+        let h = LogHistogram::new();
+        for _ in 0..1000 {
+            h.observe(3.7);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.quantile(0.0), 3.7);
+        assert_eq!(h.quantile(0.5), 3.7);
+        assert_eq!(h.quantile(0.99), 3.7);
+        assert_eq!(h.min(), 3.7);
+        assert_eq!(h.max(), 3.7);
+        assert!((h.summary().mean - 3.7).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.summary().n, 0);
+    }
+
+    #[test]
+    fn cumulative_reaches_count() {
+        let h = LogHistogram::new();
+        for i in 0..500 {
+            h.observe(0.1 + i as f32);
+        }
+        let cum = h.cumulative(4);
+        assert_eq!(cum.len(), NBUCKETS / 4);
+        assert_eq!(cum.last().unwrap().1, 500);
+        // cumulative counts are non-decreasing
+        for w in cum.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+
+    #[test]
+    fn nonpositive_and_nan_observations_are_safe() {
+        let h = LogHistogram::new();
+        h.observe(f32::NAN);
+        h.observe(-1.0);
+        h.observe(0.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Unified observability layer: log-scale latency histograms, request
+//! lifecycle tracing, Prometheus exposition, and sampled quant-health
+//! probes.
+//!
+//! * [`hist`] — fixed-memory lock-free log-scale histograms (replace the
+//!   coordinator's unbounded latency reservoirs);
+//! * [`trace`] — bounded per-request span ring, Chrome `trace_event`
+//!   export (`trace` TCP command);
+//! * [`prom`] — Prometheus text exposition 0.0.4 renderer
+//!   (`metrics_prom` TCP command);
+//! * [`health`] — sampled per-layer quantization-health probes
+//!   (channel-max, spike ratio, kurtosis, INT4 clip rate).
+//!
+//! # Sampling (`RRS_OBS_SAMPLE`)
+//!
+//! Probes and per-decode-step trace spans ride the serving hot path, so
+//! they are **sampled**: `RRS_OBS_SAMPLE` is a rate in `[0, 1]` (`0` /
+//! unset = off, `1` = every call, `0.0625` = every 16th call).  The rate
+//! is resolved to an integer period once and shared process-wide; each
+//! call site then pays one relaxed atomic increment when sampling is
+//! active and a single atomic load when it is off — the measured
+//! obs-off overhead budget (`rust/benches/obs_overhead.rs` →
+//! `BENCH_obs.json`) is "within run-to-run noise".
+//!
+//! Lifecycle events (enqueue/admit/prefill/finish/preempt/abort) and
+//! histogram observations are per-request, not per-step, and are always
+//! on.
+
+pub mod health;
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning: observability consumers
+/// (stats endpoint, trace export) must keep working after a worker
+/// panicked mid-update — for these read-mostly aggregates a torn update
+/// is strictly better than a dead metrics endpoint.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Sentinel: `RRS_OBS_SAMPLE` not parsed yet.
+const UNRESOLVED: u64 = u64::MAX;
+
+/// Process-wide sampling period: 0 = off, n = every nth call.
+static PERIOD: AtomicU64 = AtomicU64::new(UNRESOLVED);
+
+fn rate_to_period(rate: f64) -> u64 {
+    if !rate.is_finite() || rate <= 0.0 {
+        0
+    } else if rate >= 1.0 {
+        1
+    } else {
+        (1.0 / rate).round() as u64
+    }
+}
+
+fn period() -> u64 {
+    let p = PERIOD.load(Ordering::Relaxed);
+    if p != UNRESOLVED {
+        return p;
+    }
+    let parsed = std::env::var("RRS_OBS_SAMPLE")
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .map(rate_to_period)
+        .unwrap_or(0);
+    // first resolver wins; a racing set_sample_* call is preserved
+    let _ = PERIOD.compare_exchange(
+        UNRESOLVED,
+        parsed,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    PERIOD.load(Ordering::Relaxed)
+}
+
+/// Set the sampling rate programmatically (overrides `RRS_OBS_SAMPLE`;
+/// tests and benches use this instead of racing on the environment).
+pub fn set_sample_rate(rate: f64) {
+    PERIOD.store(rate_to_period(rate), Ordering::Relaxed);
+}
+
+/// Set the sampling period directly: 0 = off, n = every nth call.
+pub fn set_sample_every(n: u64) {
+    PERIOD.store(n.min(UNRESOLVED - 1), Ordering::Relaxed);
+}
+
+/// The resolved sampling period (0 = off).
+pub fn sample_period() -> u64 {
+    period()
+}
+
+/// A call-site sampling counter over the process-wide period: `hit()`
+/// is true on every `period()`th call, false always when sampling is
+/// off.  Each hot call site owns one so interleaved sites keep their
+/// own cadence.
+pub struct Sampler {
+    counter: AtomicU64,
+}
+
+impl Sampler {
+    pub const fn new() -> Sampler {
+        Sampler { counter: AtomicU64::new(0) }
+    }
+
+    /// Should this call pay for observability work?
+    #[inline]
+    pub fn hit(&self) -> bool {
+        let p = period();
+        if p == 0 {
+            return false;
+        }
+        self.counter.fetch_add(1, Ordering::Relaxed) % p == 0
+    }
+}
+
+impl Default for Sampler {
+    fn default() -> Self {
+        Sampler::new()
+    }
+}
+
+thread_local! {
+    /// Layer label the current thread is executing under (probe keying).
+    static LAYER: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// RAII guard restoring the previous thread-local layer label on drop.
+pub struct LayerScope {
+    prev: Option<String>,
+}
+
+/// Install `label` as the current thread's layer label for the duration
+/// of the returned guard ([`crate::quant::qlinear::QLinear::forward`]
+/// wraps itself in one, so probes fired from nested kernel code land on
+/// the right per-layer bucket).  `None` leaves the outer label intact.
+pub fn layer_scope(label: Option<&str>) -> LayerScope {
+    let prev = match label {
+        Some(l) => LAYER.with(|s| {
+            s.borrow_mut().replace(l.to_string())
+        }),
+        None => LAYER.with(|s| s.borrow().clone()),
+    };
+    LayerScope { prev }
+}
+
+impl Drop for LayerScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        LAYER.with(|s| *s.borrow_mut() = prev);
+    }
+}
+
+/// The current thread's layer label, or `fallback` if none is set.
+pub fn current_layer_or(fallback: &str) -> String {
+    LAYER.with(|s| s.borrow().clone()).unwrap_or_else(|| fallback.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_resolves_to_period() {
+        assert_eq!(rate_to_period(0.0), 0);
+        assert_eq!(rate_to_period(-1.0), 0);
+        assert_eq!(rate_to_period(f64::NAN), 0);
+        assert_eq!(rate_to_period(1.0), 1);
+        assert_eq!(rate_to_period(2.0), 1);
+        assert_eq!(rate_to_period(0.5), 2);
+        assert_eq!(rate_to_period(0.0625), 16);
+    }
+
+    #[test]
+    fn layer_scope_nests_and_restores() {
+        let _outer = layer_scope(Some("outer"));
+        assert_eq!(current_layer_or("x"), "outer");
+        {
+            let _inner = layer_scope(Some("inner"));
+            assert_eq!(current_layer_or("x"), "inner");
+            {
+                // None keeps the enclosing label
+                let _keep = layer_scope(None);
+                assert_eq!(current_layer_or("x"), "inner");
+            }
+            assert_eq!(current_layer_or("x"), "inner");
+        }
+        assert_eq!(current_layer_or("x"), "outer");
+        drop(_outer);
+        assert_eq!(current_layer_or("fallback"), "fallback");
+    }
+
+    #[test]
+    fn sampler_period_cadence() {
+        // programmatic override: global, so this test owns period 4
+        // briefly; other tests in this binary never assert on cadence
+        set_sample_every(4);
+        let s = Sampler::new();
+        let hits: Vec<bool> = (0..8).map(|_| s.hit()).collect();
+        assert_eq!(hits, vec![true, false, false, false, true, false, false, false]);
+        set_sample_every(0);
+        assert!(!s.hit());
+        assert_eq!(sample_period(), 0);
+    }
+}

@@ -1,0 +1,457 @@
+//! Prometheus text exposition (format 0.0.4) for the coordinator
+//! metrics: every counter/gauge the JSON snapshot carries (requests,
+//! KV pool, prefix cache, resident lanes, kernel registry) plus the
+//! log-scale latency histograms as native `_bucket{le=...}` families
+//! and the per-layer quant-health gauges.  Served by the coordinator's
+//! `metrics_prom` TCP command; scrape-side the body is plain
+//! `text/plain; version=0.0.4`.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::Metrics;
+use crate::kernels;
+
+use super::health;
+use super::hist::LogHistogram;
+
+/// Render the full exposition document for one metrics snapshot.
+pub fn render(m: &Metrics) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+    let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+
+    // request lifecycle counters
+    let request_counters: [(&str, &str, u64); 8] = [
+        (
+            "rrs_requests_submitted_total",
+            "Requests accepted by the coordinator.",
+            c(&m.submitted),
+        ),
+        (
+            "rrs_requests_rejected_total",
+            "Requests rejected on queue backpressure.",
+            c(&m.rejected),
+        ),
+        (
+            "rrs_requests_completed_total",
+            "Requests retired with a response.",
+            c(&m.completed),
+        ),
+        (
+            "rrs_requests_aborted_total",
+            "Requests aborted (can never fit the pool).",
+            c(&m.aborted),
+        ),
+        (
+            "rrs_preemptions_total",
+            "Sequences preempted back to the queue on pool exhaustion.",
+            c(&m.preemptions),
+        ),
+        (
+            "rrs_tokens_generated_total",
+            "Tokens generated across completed requests.",
+            c(&m.tokens_generated),
+        ),
+        (
+            "rrs_prefill_tokens_total",
+            "Prompt tokens prefilled (re-prefills included).",
+            c(&m.prefill_tokens),
+        ),
+        (
+            "rrs_decode_steps_total",
+            "Batched decode steps executed.",
+            c(&m.decode_steps),
+        ),
+    ];
+    for (name, help, v) in request_counters {
+        counter(&mut out, name, help, v);
+    }
+
+    // KV-pool occupancy gauges
+    let pool_gauges: [(&str, &str, u64); 4] = [
+        (
+            "rrs_pool_blocks_total",
+            "KV pool capacity in blocks.",
+            c(&m.pool_blocks_total),
+        ),
+        (
+            "rrs_pool_blocks_used",
+            "KV pool blocks held by active sequences.",
+            c(&m.pool_blocks_used),
+        ),
+        (
+            "rrs_pool_blocks_cached",
+            "KV pool blocks held only by the prefix cache.",
+            c(&m.pool_blocks_cached),
+        ),
+        (
+            "rrs_pool_blocks_peak",
+            "High-water mark of used blocks.",
+            c(&m.pool_blocks_peak),
+        ),
+    ];
+    for (name, help, v) in pool_gauges {
+        gauge(&mut out, name, help, v as f64);
+    }
+
+    // KV-pool + prefix-cache counters
+    let pool_counters: [(&str, &str, u64); 8] = [
+        (
+            "rrs_pool_evictions_total",
+            "Prefix-cache blocks evicted (LRU).",
+            c(&m.pool_evictions),
+        ),
+        (
+            "rrs_pool_cow_copies_total",
+            "Copy-on-write block copies.",
+            c(&m.pool_cow_copies),
+        ),
+        (
+            "rrs_pool_lazy_tail_shares_total",
+            "Partial tail blocks shared lazily on prefix hit.",
+            c(&m.pool_lazy_tail_shares),
+        ),
+        (
+            "rrs_pool_lazy_tail_copies_total",
+            "Lazily shared tail blocks copied on divergence.",
+            c(&m.pool_lazy_tail_copies),
+        ),
+        (
+            "rrs_prefix_queries_total",
+            "Prefix-cache lookups.",
+            c(&m.prefix_queries),
+        ),
+        (
+            "rrs_prefix_query_tokens_total",
+            "Prompt tokens probed against the prefix cache.",
+            c(&m.prefix_query_tokens),
+        ),
+        (
+            "rrs_prefix_hit_tokens_total",
+            "Prompt tokens served from the prefix cache.",
+            c(&m.prefix_hit_tokens),
+        ),
+        (
+            "rrs_prefix_hit_blocks_total",
+            "Whole blocks served from the prefix cache.",
+            c(&m.prefix_hit_blocks),
+        ),
+    ];
+    for (name, help, v) in pool_counters {
+        counter(&mut out, name, help, v);
+    }
+    counter(
+        &mut out,
+        "rrs_prefix_partial_hits_total",
+        "Prefix hits ending inside a partial tail block.",
+        c(&m.prefix_partial_hits),
+    );
+    gauge(
+        &mut out,
+        "rrs_prefix_hit_rate",
+        "Fraction of probed prompt tokens served from the prefix cache.",
+        m.prefix_hit_rate(),
+    );
+
+    // resident-lane counters (paged PJRT backend)
+    let lane_counters: [(&str, &str, u64); 5] = [
+        (
+            "rrs_kv_gathers_total",
+            "Full KV gathers into dense decode lanes.",
+            c(&m.kv_gather_total),
+        ),
+        (
+            "rrs_kv_scatter_rows_total",
+            "KV rows scattered back to the paged pool.",
+            c(&m.kv_scatter_rows_total),
+        ),
+        (
+            "rrs_lane_refreshes_total",
+            "Resident-lane refreshes (gather on lane miss).",
+            c(&m.lane_refresh_total),
+        ),
+        (
+            "rrs_resident_hits_total",
+            "Decode steps served from resident lanes (no gather).",
+            c(&m.resident_hits),
+        ),
+        (
+            "rrs_decode_graph_calls_total",
+            "PJRT decode graph invocations.",
+            c(&m.decode_graph_calls),
+        ),
+    ];
+    for (name, help, v) in lane_counters {
+        counter(&mut out, name, help, v);
+    }
+
+    // kernel registry (non-forcing peek: a metrics scrape never runs
+    // the autotune sweep itself)
+    if let Some(ks) = kernels::stats_peek() {
+        head(
+            &mut out,
+            "rrs_kernel_info",
+            "gauge",
+            "Live kernel backend and tile (value is always 1).",
+        );
+        let tile = ks.tiles.label();
+        sample(
+            &mut out,
+            "rrs_kernel_info",
+            &[("backend", ks.backend), ("tile", &tile)],
+            1.0,
+        );
+        gauge(
+            &mut out,
+            "rrs_kernel_autotune_us",
+            "Startup autotune sweep duration in microseconds.",
+            ks.autotune_us as f64,
+        );
+        let kernel_counters: [(&str, &str, u64); 6] = [
+            (
+                "rrs_kernel_fused_gemm_calls_total",
+                "Fused RRS GEMM dispatches.",
+                ks.fused_gemm_calls,
+            ),
+            (
+                "rrs_kernel_fused_gemm_rows_total",
+                "Activation rows through the fused RRS GEMM.",
+                ks.fused_gemm_rows,
+            ),
+            (
+                "rrs_kernel_per_channel_calls_total",
+                "Per-channel packed GEMM dispatches.",
+                ks.per_channel_calls,
+            ),
+            (
+                "rrs_kernel_igemm_calls_total",
+                "Raw INT8 GEMM dispatches.",
+                ks.igemm_calls,
+            ),
+            (
+                "rrs_kernel_prologue_rows_total",
+                "Activation rows through the fused RRS prologue.",
+                ks.prologue_rows,
+            ),
+            (
+                "rrs_kernel_fwht_rows_total",
+                "Rows rotated by the dispatched FWHT.",
+                ks.fwht_rows,
+            ),
+        ];
+        for (name, help, v) in kernel_counters {
+            counter(&mut out, name, help, v);
+        }
+    }
+
+    // latency histograms
+    for (name, help, h) in m.histograms() {
+        histogram(&mut out, name, help, h);
+    }
+
+    // per-layer quant health (present once sampling has fired)
+    render_health(&mut out);
+
+    // trace ring
+    counter(
+        &mut out,
+        "rrs_trace_events_total",
+        "Lifecycle trace events recorded (including overwritten).",
+        m.trace.total(),
+    );
+    counter(
+        &mut out,
+        "rrs_trace_events_dropped_total",
+        "Trace events lost to ring wraparound.",
+        m.trace.dropped(),
+    );
+    gauge(
+        &mut out,
+        "rrs_trace_ring_capacity",
+        "Trace ring capacity in events.",
+        m.trace.capacity() as f64,
+    );
+    out
+}
+
+/// The per-layer quant-health gauge families.
+fn render_health(out: &mut String) {
+    let layers = health::snapshot();
+    if layers.is_empty() {
+        return;
+    }
+    head(
+        out,
+        "rrs_quant_probes_total",
+        "counter",
+        "Quant-health probes recorded per layer.",
+    );
+    for (l, h) in &layers {
+        sample(out, "rrs_quant_probes_total", &[("layer", l)], h.probes as f64);
+    }
+    head(
+        out,
+        "rrs_quant_channel_max",
+        "gauge",
+        "Peak channel-wise |activation| maximum (pre-smoothing).",
+    );
+    for (l, h) in &layers {
+        let v = h.channel_max as f64;
+        sample(out, "rrs_quant_channel_max", &[("layer", l)], v);
+    }
+    head(
+        out,
+        "rrs_quant_spike_ratio",
+        "gauge",
+        "Mean max/p99 ratio of the channel maxima (1 = flat).",
+    );
+    for (l, h) in &layers {
+        let v = h.spike_ratio as f64;
+        sample(out, "rrs_quant_spike_ratio", &[("layer", l)], v);
+    }
+    head(
+        out,
+        "rrs_quant_kurtosis",
+        "gauge",
+        "Mean activation kurtosis proxy m4/m2^2 (3 = Gaussian).",
+    );
+    for (l, h) in &layers {
+        let v = h.kurtosis as f64;
+        sample(out, "rrs_quant_kurtosis", &[("layer", l)], v);
+    }
+    head(
+        out,
+        "rrs_quant_clip_rate",
+        "gauge",
+        "Mean fraction of INT4 codes at saturation (|code| = 7).",
+    );
+    for (l, h) in &layers {
+        let v = h.clip_rate as f64;
+        sample(out, "rrs_quant_clip_rate", &[("layer", l)], v);
+    }
+}
+
+fn head(out: &mut String, name: &str, ty: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    head(out, name, "counter", help);
+    sample(out, name, &[], v as f64);
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    head(out, name, "gauge", help);
+    sample(out, name, &[], v);
+}
+
+/// One sample line, labels escaped per the exposition format.
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {}", fmt_value(v));
+        return;
+    }
+    let labs: Vec<String> = labels
+        .iter()
+        .map(|(k, val)| format!("{k}=\"{}\"", escape_label(val)))
+        .collect();
+    let _ = writeln!(out, "{name}{{{}}} {}", labs.join(","), fmt_value(v));
+}
+
+/// Integer-valued samples render without a fraction (counter idiom).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the text exposition format: backslash,
+/// double-quote, and newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            ch => out.push(ch),
+        }
+    }
+    out
+}
+
+/// Render one histogram family: cumulative `_bucket{le}` lines (every
+/// 4th native bucket edge), `+Inf`, `_sum`, `_count`.
+fn histogram(out: &mut String, name: &str, help: &str, h: &LogHistogram) {
+    head(out, name, "histogram", help);
+    let bucket = format!("{name}_bucket");
+    for (edge, cum) in h.cumulative(4) {
+        // round the geometric edge so the le label stays compact
+        let le = (edge * 1e6).round() / 1e6;
+        sample(out, &bucket, &[("le", &fmt_value(le))], cum as f64);
+    }
+    sample(out, &bucket, &[("le", "+Inf")], h.count() as f64);
+    sample(out, &format!("{name}_sum"), &[], h.sum_ms());
+    sample(out, &format!("{name}_count"), &[], h.count() as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_value(42.0), "42");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(1.5), "1.5");
+        assert_eq!(fmt_value(0.001585), "0.001585");
+    }
+
+    #[test]
+    fn render_covers_core_families() {
+        let m = Metrics::new();
+        m.observe_completion(12.0, 2.0, 6);
+        m.observe_ttft(3.5);
+        m.observe_itl(0.8);
+        let text = render(&m);
+        for family in [
+            "rrs_requests_completed_total",
+            "rrs_pool_blocks_total",
+            "rrs_prefix_hit_rate",
+            "rrs_request_latency_ms_bucket",
+            "rrs_ttft_ms_sum",
+            "rrs_itl_ms_count",
+            "rrs_trace_ring_capacity",
+        ] {
+            assert!(text.contains(family), "missing {family}:\n{text}");
+        }
+        assert!(text.contains("le=\"+Inf\""));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (metric, value) = line.rsplit_once(' ').expect("two fields");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
+            let name = metric.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name {name}"
+            );
+            if metric.contains('{') {
+                assert!(metric.ends_with('}'), "unterminated labels: {line}");
+            }
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Per-request span tracing: a bounded ring of lifecycle events
+//! (`enqueue → admit → prefill → decode-step* → finish/preempt/abort`)
+//! with monotonic timestamps, exportable in Chrome `trace_event` format
+//! (load the JSON in `chrome://tracing` / Perfetto; one track per
+//! request id).
+//!
+//! The ring is fixed-capacity: when full, the oldest event is
+//! overwritten and `dropped` is incremented, so a long-running server
+//! keeps the most recent window at O(1) memory.  Lifecycle events
+//! (enqueue/admit/prefill/finish/preempt/abort) are always recorded;
+//! per-decode-step spans go through the coordinator's sampler so the
+//! decode hot loop stays within the observability overhead budget
+//! (`RRS_OBS_SAMPLE`, see [`crate::obs`]).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+use super::lock_recover;
+
+/// Default ring capacity (events).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Request-lifecycle event kinds, in span order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request accepted into the public queue.
+    Enqueue,
+    /// Popped from the queue into the active set (duration = queue wait).
+    Admit,
+    /// Prompt prefill (duration = prefill compute this admission).
+    Prefill,
+    /// One batched decode step this request took part in (sampled).
+    DecodeStep,
+    /// Response sent (tokens = generated length).
+    Finish,
+    /// Preempted back to the queue on pool exhaustion.
+    Preempt,
+    /// Aborted (capacity can never fit the request).
+    Abort,
+}
+
+impl SpanKind {
+    /// Chrome trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Admit => "admit",
+            SpanKind::Prefill => "prefill",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::Finish => "finish",
+            SpanKind::Preempt => "preempt",
+            SpanKind::Abort => "abort",
+        }
+    }
+}
+
+/// One recorded span: timestamps are µs since the ring's epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub req: u64,
+    pub kind: SpanKind,
+    /// Span start, µs since ring creation (monotonic clock).
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instant events).
+    pub dur_us: u64,
+    /// Tokens involved (prompt len, generated len, or step size).
+    pub tokens: u64,
+}
+
+struct RingInner {
+    buf: Vec<TraceEvent>,
+    /// Next overwrite position once the buffer is full.
+    head: usize,
+    total: u64,
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s (thread-safe).
+///
+/// # Examples
+///
+/// ```
+/// use rrs::obs::trace::{SpanKind, TraceRing};
+///
+/// let ring = TraceRing::new(8);
+/// ring.instant(1, SpanKind::Enqueue, 5);
+/// ring.span(1, SpanKind::Prefill, 1200, 5);
+/// assert_eq!(ring.len(), 2);
+/// let jsonl = ring.chrome_trace_jsonl();
+/// assert_eq!(jsonl.lines().count(), 2);
+/// ```
+pub struct TraceRing {
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(1);
+        TraceRing {
+            epoch: Instant::now(),
+            cap,
+            inner: Mutex::new(RingInner {
+                buf: Vec::with_capacity(cap.min(1024)),
+                head: 0,
+                total: 0,
+            }),
+        }
+    }
+
+    /// µs since the ring's epoch (the trace timebase).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record a span that just ended, lasting `dur_us`.
+    pub fn span(&self, req: u64, kind: SpanKind, dur_us: u64, tokens: u64) {
+        let ts_us = self.now_us().saturating_sub(dur_us);
+        self.push(TraceEvent { req, kind, ts_us, dur_us, tokens });
+    }
+
+    /// Record an instantaneous event happening now.
+    pub fn instant(&self, req: u64, kind: SpanKind, tokens: u64) {
+        self.span(req, kind, 0, tokens);
+    }
+
+    fn push(&self, e: TraceEvent) {
+        let mut g = lock_recover(&self.inner);
+        if g.buf.len() < self.cap {
+            g.buf.push(e);
+        } else {
+            let h = g.head;
+            g.buf[h] = e;
+            g.head = (h + 1) % self.cap;
+        }
+        g.total += 1;
+    }
+
+    /// Events currently held, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let g = lock_recover(&self.inner);
+        let mut out = Vec::with_capacity(g.buf.len());
+        out.extend_from_slice(&g.buf[g.head..]);
+        out.extend_from_slice(&g.buf[..g.head]);
+        out
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        lock_recover(&self.inner).buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        lock_recover(&self.inner).total
+    }
+
+    /// Events lost to ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        let g = lock_recover(&self.inner);
+        g.total - g.buf.len() as u64
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Full Chrome `trace_event` document: `{"traceEvents": [...]}`.
+    pub fn chrome_trace_json(&self) -> Json {
+        let events: Vec<Json> =
+            self.events().iter().map(chrome_event_json).collect();
+        obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    /// Chrome trace events as JSONL (one complete event per line) — the
+    /// shape the coordinator's `trace` TCP command streams.
+    pub fn chrome_trace_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&chrome_event_json(&e).dump());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One event as a Chrome "complete" (`ph: "X"`) trace record: `ts`/`dur`
+/// in µs, one `tid` track per request id.
+fn chrome_event_json(e: &TraceEvent) -> Json {
+    obj(vec![
+        ("name", e.kind.name().into()),
+        ("cat", "rrs".into()),
+        ("ph", "X".into()),
+        ("ts", (e.ts_us as usize).into()),
+        ("dur", (e.dur_us as usize).into()),
+        ("pid", 1usize.into()),
+        ("tid", (e.req as usize).into()),
+        ("args", obj(vec![("tokens", (e.tokens as usize).into())])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_holds_and_orders_events() {
+        let r = TraceRing::new(16);
+        for i in 0..5u64 {
+            r.instant(i, SpanKind::Enqueue, i);
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 5);
+        assert_eq!(r.total(), 5);
+        assert_eq!(r.dropped(), 0);
+        for (i, e) in ev.iter().enumerate() {
+            assert_eq!(e.req, i as u64);
+        }
+        // timestamps monotonic
+        for w in ev.windows(2) {
+            assert!(w[1].ts_us >= w[0].ts_us);
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_most_recent() {
+        let r = TraceRing::new(8);
+        for i in 0..20u64 {
+            r.instant(i, SpanKind::Finish, 0);
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.capacity(), 8);
+        assert_eq!(r.total(), 20);
+        assert_eq!(r.dropped(), 12);
+        let ev = r.events();
+        // oldest surviving event is #12, newest is #19, in order
+        let ids: Vec<u64> = ev.iter().map(|e| e.req).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let r = TraceRing::new(8);
+        r.instant(3, SpanKind::Enqueue, 4);
+        r.span(3, SpanKind::Prefill, 250, 4);
+        let doc = r.chrome_trace_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let e = &events[1];
+        assert_eq!(e.get("name").unwrap().as_str(), Some("prefill"));
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("dur").unwrap().as_usize(), Some(250));
+        assert_eq!(e.get("tid").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            e.get("args").unwrap().get("tokens").unwrap().as_usize(),
+            Some(4)
+        );
+        // JSONL round-trips line by line
+        for line in r.chrome_trace_jsonl().lines() {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("ts").is_some());
+        }
+    }
+
+    #[test]
+    fn span_start_precedes_now() {
+        let r = TraceRing::new(4);
+        r.span(1, SpanKind::Admit, 1_000_000, 0); // 1 s span
+        let e = r.events()[0];
+        assert!(e.ts_us + e.dur_us <= r.now_us() + 1_000);
+    }
+}

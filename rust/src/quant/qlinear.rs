@@ -120,6 +120,11 @@ pub struct QLinear {
     /// the runtime permutation actually changes (big win: the gather is
     /// comparable to the GEMM itself at decode batch sizes).
     perm_cache: std::sync::Mutex<Option<(Vec<usize>, Arc<PackedI4>)>>,
+    /// Observability label (e.g. `l3.wq`): installed as the thread's
+    /// layer scope for the duration of [`QLinear::forward`] so sampled
+    /// quant-health probes ([`crate::obs::health`]) land on this layer's
+    /// bucket.  `None` (the default) inherits the caller's scope.
+    pub probe: Option<String>,
 }
 
 impl QLinear {
@@ -156,6 +161,7 @@ impl QLinear {
                 smooth: None,
                 rotation: None,
                 perm_cache: std::sync::Mutex::new(None),
+                probe: None,
             });
         }
         let weight = if opts.scheme.w_bits == 4 && method != Method::Fp {
@@ -176,12 +182,14 @@ impl QLinear {
             smooth,
             rotation,
             perm_cache: std::sync::Mutex::new(None),
+            probe: None,
         })
     }
 
     /// Runtime forward: `y = method(x) @ W^T` with the method's
     /// quantization pipeline applied.
     pub fn forward(&self, x: &Mat) -> Mat {
+        let _layer = crate::obs::layer_scope(self.probe.as_deref());
         match self.method {
             Method::Fp => match &self.weight {
                 PreparedWeight::Fp(w) => gemm_f32_bt(x, w),
@@ -237,7 +245,7 @@ impl QLinear {
                 // backend — bit-identical to the staged reference path
                 let sa = runtime_smooth::prepare(x, group);
                 let wqp = {
-                    let mut cache = self.perm_cache.lock().unwrap();
+                    let mut cache = crate::obs::lock_recover(&self.perm_cache);
                     match cache.as_ref() {
                         Some((perm, wqp)) if *perm == sa.perm => wqp.clone(),
                         _ => {
@@ -270,6 +278,10 @@ impl QLinear {
             PreparedWeight::Int4 { q, packed, scales } => match packed {
                 Some(p) => {
                     let (xq, sx) = rtn::quant_per_token(x);
+                    if crate::obs::health::sampled() {
+                        let layer = crate::obs::current_layer_or("act_quant");
+                        crate::obs::health::probe_quant(&layer, x, &xq);
+                    }
                     kernels::gemm_per_channel_packed(&xq, &sx, p, scales)
                 }
                 // RS-method weights skip the packed mirror; this path is

@@ -1,0 +1,233 @@
+//! Observability layer integration: histogram accuracy against exact
+//! quantiles, Prometheus exposition grammar over a live server, trace
+//! ring behavior, and an end-to-end serve run asserting request spans +
+//! per-layer quant health land in the snapshot.
+//!
+//! Sampling discipline: the sampling period is process-global, so tests
+//! here only ever *raise* it to "every call" (`set_sample_every(1)`) and
+//! never disable it — a parallel test must not see sampling switched off
+//! under its feet.
+
+use std::sync::atomic::AtomicBool;
+
+use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::model::sampler::Sampling;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::obs::hist::LogHistogram;
+use rrs::obs::trace::{SpanKind, TraceRing};
+use rrs::quant::{Method, Scheme};
+use rrs::util::rng::Pcg;
+use rrs::util::stats;
+
+fn tiny_coord(method: Method) -> Coordinator {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let ecfg = EngineConfig {
+        method,
+        scheme: Scheme::A4W4KV16,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+    Coordinator::start(RustServeEngine::new(model), SchedulerConfig::default())
+}
+
+#[test]
+fn histogram_percentiles_within_bucket_error_bound() {
+    // log-uniform latencies over 3.6 decades: the histogram's geometric
+    // interpolation must track the exact sort-based percentile within
+    // one bucket ratio (10^(1/20) ~ 12%; assert 15% for headroom)
+    let mut rng = Pcg::new(4242);
+    let h = LogHistogram::new();
+    let mut vals = Vec::with_capacity(20_000);
+    for _ in 0..20_000 {
+        let v = 10f32.powf(rng.range(-0.3, 3.3));
+        vals.push(v);
+        h.observe(v);
+    }
+    for p in [10.0, 50.0, 90.0, 99.0] {
+        let exact = stats::percentile(&vals, p);
+        let est = h.percentile(p);
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.15, "p{p}: est {est} vs exact {exact} (rel {rel:.3})");
+    }
+    // mean is tracked exactly (sum, not buckets)
+    let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+    let s = h.summary();
+    assert!((s.mean - mean).abs() / mean < 0.01, "mean {} vs {mean}", s.mean);
+    assert_eq!(s.n, 20_000);
+}
+
+#[test]
+fn histogram_concurrent_observers() {
+    // lock-free claim: concurrent observers never lose counts
+    let h = std::sync::Arc::new(LogHistogram::new());
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let hh = h.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..10_000 {
+                hh.observe(1.0 + ((t * 10_000 + i) % 100) as f32);
+            }
+        }));
+    }
+    for j in handles {
+        j.join().unwrap();
+    }
+    assert_eq!(h.count(), 40_000);
+    assert_eq!(h.cumulative(4).last().unwrap().1, 40_000);
+}
+
+#[test]
+fn trace_ring_wraparound_keeps_newest_window() {
+    let r = TraceRing::new(32);
+    for i in 0..100u64 {
+        r.span(i, SpanKind::DecodeStep, 10, i);
+    }
+    assert_eq!(r.len(), 32);
+    assert_eq!(r.total(), 100);
+    assert_eq!(r.dropped(), 68);
+    let ids: Vec<u64> = r.events().iter().map(|e| e.req).collect();
+    assert_eq!(ids, (68..100).collect::<Vec<u64>>());
+    // the Chrome document stays parseable across the wrap
+    let doc = r.chrome_trace_json();
+    assert_eq!(doc.get("traceEvents").unwrap().as_arr().unwrap().len(), 32);
+}
+
+#[test]
+fn prom_exposition_grammar_from_live_server() {
+    rrs::obs::set_sample_every(1);
+    let coord = tiny_coord(Method::Rrs);
+    for i in 0..3u32 {
+        coord
+            .generate(vec![5 + i, 9, 13], 6, Sampling::Greedy, None)
+            .unwrap();
+    }
+    // a hostile layer label must render escaped, not break the format
+    {
+        use rrs::linalg::gemm::Mat;
+        let mut rng = Pcg::new(9);
+        let x = Mat::from_vec(4, 32, rng.normal_vec(4 * 32));
+        let (q, _s) = rrs::quant::rtn::quant_per_token(&x);
+        rrs::obs::health::probe_quant("weird\"layer\\n", &x, &q);
+    }
+    let stop = AtomicBool::new(false);
+    let reply = server::handle_line(r#"{"cmd": "metrics_prom"}"#, &coord, &stop);
+    assert_eq!(
+        reply.get("content_type").unwrap().as_str(),
+        Some("text/plain; version=0.0.4")
+    );
+    let text = reply.get("body").unwrap().as_str().unwrap().to_string();
+
+    // every family used by a sample line must carry a # TYPE header
+    let mut declared = std::collections::HashSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            declared.insert(rest.split(' ').next().unwrap().to_string());
+        }
+    }
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (metric, value) = line.rsplit_once(' ').expect("metric and value");
+        assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+        let name = metric.split('{').next().unwrap();
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| declared.contains(*b))
+            .unwrap_or(name);
+        assert!(declared.contains(base), "sample without TYPE header: {line}");
+        if let Some(rest) = metric.strip_prefix(&format!("{name}{{")) {
+            assert!(rest.ends_with('}'), "unterminated label set: {line}");
+        }
+    }
+    // served requests put real data behind the new families
+    for needle in [
+        "rrs_ttft_ms_bucket",
+        "rrs_itl_ms_count",
+        "rrs_requests_completed_total 3",
+        "rrs_quant_channel_max",
+        "layer=\"weird\\\"layer\\\\n\"",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn e2e_serve_records_spans_and_quant_health() {
+    rrs::obs::set_sample_every(1);
+    let coord = tiny_coord(Method::Rrs);
+    let (id, rx) = coord
+        .submit(vec![11, 22, 33], 5, Sampling::Greedy, None)
+        .unwrap();
+    let resp = rx.recv().unwrap();
+    assert_eq!(resp.tokens.len(), 5);
+
+    // quant-health probes landed under the engine's layer labels
+    let snap = coord.metrics.snapshot_json();
+    let health = snap.get("quant_health").unwrap();
+    let rrs::util::json::Json::Obj(layers) = health else {
+        panic!("quant_health must be an object");
+    };
+    let l0: Vec<&String> =
+        layers.iter().map(|(k, _)| k).filter(|k| k.starts_with("l0.")).collect();
+    assert!(!l0.is_empty(), "no l0.* layer in quant_health: {:?}", layers);
+    let (_, first) = layers.iter().find(|(k, _)| k.starts_with("l0.")).unwrap();
+    assert!(first.get("probes").unwrap().as_usize().unwrap() >= 1);
+    assert!(first.get("channel_max").unwrap().as_f64().unwrap() > 0.0);
+    assert!(first.get("clip_rate").unwrap().as_f64().unwrap() >= 0.0);
+
+    // the request's lifecycle is in the trace ring: enqueue -> admit ->
+    // prefill -> ... -> finish, all on the request's own track
+    let events = coord.metrics.trace.events();
+    let mine: Vec<_> = events.iter().filter(|e| e.req == id).collect();
+    for kind in
+        [SpanKind::Enqueue, SpanKind::Admit, SpanKind::Prefill, SpanKind::Finish]
+    {
+        assert!(
+            mine.iter().any(|e| e.kind == kind),
+            "missing {kind:?} for req {id}: {mine:?}"
+        );
+    }
+    let prefill =
+        mine.iter().find(|e| e.kind == SpanKind::Prefill).unwrap();
+    let finish = mine.iter().find(|e| e.kind == SpanKind::Finish).unwrap();
+    assert_eq!(prefill.tokens, 3, "prefill span carries the prompt length");
+    assert_eq!(finish.tokens, 5, "finish span carries the generated length");
+    assert!(finish.ts_us >= prefill.ts_us);
+
+    // trace TCP command round-trips the same lifecycle in Chrome format
+    let stop = AtomicBool::new(false);
+    let doc = server::handle_line(r#"{"cmd": "trace"}"#, &coord, &stop);
+    let arr = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let tid = id as usize;
+    let names: Vec<&str> = arr
+        .iter()
+        .filter(|e| e.get("tid").unwrap().as_usize() == Some(tid))
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(names.contains(&"prefill") && names.contains(&"finish"), "{names:?}");
+    let jsonl = server::handle_line(
+        r#"{"cmd": "trace", "format": "jsonl"}"#,
+        &coord,
+        &stop,
+    );
+    let body = jsonl.get("body").unwrap().as_str().unwrap();
+    for line in body.lines() {
+        rrs::util::json::Json::parse(line).unwrap();
+    }
+
+    // snapshot carries the new latency sections with data
+    assert!(snap.get("ttft_ms").unwrap().get("n").unwrap().as_usize().unwrap() >= 1);
+    assert!(snap.get("itl_ms").unwrap().get("n").unwrap().as_usize().unwrap() >= 1);
+    assert!(
+        snap.get("trace").unwrap().get("events_total").unwrap().as_usize().unwrap()
+            >= 4
+    );
+    coord.shutdown();
+}
