@@ -1,9 +1,11 @@
 //! End-to-end serving driver (the repo's headline validation run):
 //! start the coordinator on the trained model under A4W4KV4 RRS, fire a
 //! batch of concurrent generation requests through the real TCP front-end
-//! and report per-request latency + aggregate throughput; then rerun a
-//! shared-prefix workload over the paged KV pool and report the
-//! prefix-cache hit rate + peak pool occupancy.
+//! (every third client streams token frames; odd clients exercise the
+//! sampler: temperature + top-p with a fixed seed) and report per-request
+//! latency + aggregate throughput; then rerun a shared-prefix workload
+//! over the paged KV pool and report the prefix-cache hit rate + peak
+//! pool occupancy.
 //!
 //!     make artifacts && cargo run --release --example serve_batch
 //!
@@ -75,14 +77,35 @@ fn main() -> anyhow::Result<()> {
             let stream = TcpStream::connect(("127.0.0.1", port))?;
             let mut w = stream.try_clone()?;
             let mut r = BufReader::new(stream);
+            // every third client streams token frames; odd clients run
+            // seeded temperature + nucleus sampling instead of greedy
+            let stream_on = i % 3 == 0;
+            let sampled = if i % 2 == 1 {
+                format!(r#", "temperature": 0.8, "top_p": 0.95, "seed": {i}"#)
+            } else {
+                String::new()
+            };
             let req = format!(
-                r#"{{"prompt": "{prompt}", "max_tokens": 24, "stop": "."}}"#
+                r#"{{"prompt": "{prompt}", "max_tokens": 24, "stop": ".", "stream": {stream_on}{sampled}}}"#
             );
             w.write_all(req.as_bytes())?;
             w.write_all(b"\n")?;
             let mut line = String::new();
-            r.read_line(&mut line)?;
-            Ok((prompt, Json::parse(&line).map_err(|e| anyhow::anyhow!(e))?))
+            loop {
+                line.clear();
+                if r.read_line(&mut line)? == 0 {
+                    anyhow::bail!("server closed the connection");
+                }
+                let j = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!(e))?;
+                // streamed clients drain token frames to the terminal
+                // response; blocking clients get it in one line
+                if !stream_on
+                    || j.get("done").and_then(Json::as_bool) == Some(true)
+                    || j.get("error").is_some()
+                {
+                    return Ok((prompt, j));
+                }
+            }
         }));
     }
     let mut total_tokens = 0usize;

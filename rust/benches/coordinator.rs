@@ -64,15 +64,15 @@ fn main() {
     let (tx, _rx) = std::sync::mpsc::channel();
     let mut i = 0u64;
     let r = b.run("queue submit+drain", || {
-        let req = rrs::coordinator::Request {
-            id: i,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 4,
-            sampling: Sampling::Greedy,
-            stop_token: None,
-            submitted_at: Instant::now(),
-            reply: tx.clone(),
-        };
+        let req = rrs::coordinator::Request::new(
+            i,
+            vec![1, 2, 3],
+            rrs::coordinator::RequestOptions {
+                max_new_tokens: 4,
+                ..Default::default()
+            },
+            tx.clone(),
+        );
         i += 1;
         q.submit(req).unwrap();
         black_box(q.drain_now(1));

@@ -1,0 +1,306 @@
+//! Serving load harness: ≥1024 concurrent streaming TCP connections
+//! against the live coordinator + paged INT4 engine, with a mixed
+//! sampling-parameter population (greedy, temperature, top-k, top-p,
+//! penalties, logit bias, stop conditions, priorities, deadlines) and a
+//! dropper cohort that disconnects mid-stream.  Measures client-side
+//! TTFT and inter-token latency percentiles, then audits the
+//! no-hung-lanes ledger: every submission reaches a terminal state and
+//! every KV block is reclaimed.  Writes `BENCH_serving.json` (CI uploads
+//! `BENCH_*.json` and asserts the ledger + connection count).
+//!
+//! Run: `cargo bench --bench serving_load`
+//! Scale: `RRS_LOAD_CONNS=128 cargo bench --bench serving_load`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rrs::coordinator::{server, Coordinator, SchedulerConfig};
+use rrs::kvpool::PagedEngine;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::util::json::{obj, Json};
+use rrs::util::stats::Summary;
+
+const MAX_BATCH: usize = 16;
+const TOKENS_PER_CONN: usize = 8;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn tiny_model() -> QuantModel {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 53 + 7) % 256).collect();
+    let ecfg = EngineConfig {
+        method: Method::Rrs,
+        scheme: Scheme::A4W4KV4,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap()
+}
+
+/// The i-th connection's request line: eight parameter presets cycle
+/// through the sampling suite so every feature is live under load.
+fn request_line(i: usize) -> String {
+    let prompts = ["arlo is", "count: 1 2 3", "the fox named", "senna likes"];
+    let prompt = prompts[i % prompts.len()];
+    let base = format!(
+        r#""prompt": "{prompt}", "max_tokens": {TOKENS_PER_CONN}, "stream": true"#
+    );
+    let extra = match i % 8 {
+        0 => String::new(), // greedy
+        1 => format!(r#", "temperature": 0.8, "seed": {}"#, 100 + i),
+        2 => r#", "temperature": 1.0, "top_k": 40"#.into(),
+        3 => r#", "temperature": 1.0, "top_p": 0.9"#.into(),
+        // NOTE: each preset must stay a single line — the protocol is
+        // newline-delimited
+        4 => concat!(
+            r#", "temperature": 0.8, "repetition_penalty": 1.2"#,
+            r#", "presence_penalty": 0.2, "frequency_penalty": 0.1"#
+        )
+        .into(),
+        5 => r#", "temperature": 0.9, "logit_bias": {"10": -1e9, "65": 2.0}"#.into(),
+        6 => r#", "temperature": 0.7, "stop": ["zzz"], "stop_token_ids": [255]"#
+            .into(),
+        _ => r#", "priority": 5, "deadline_ms": 60000"#.into(),
+    };
+    format!("{{{base}{extra}}}\n")
+}
+
+struct ConnStats {
+    ttft_ms: f32,
+    itl_ms: Vec<f32>,
+    tokens: usize,
+    finish: String,
+}
+
+/// Drive one connection; `dropper` connections vanish after two frames.
+fn run_conn(port: u16, i: usize, dropper: bool) -> Option<ConnStats> {
+    // staggered connects: the kernel backlog is far smaller than the
+    // connection count, so spread arrivals and retry refused attempts
+    std::thread::sleep(Duration::from_micros((i as u64 % 64) * 300));
+    let mut stream = None;
+    for attempt in 0..50 {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10 * (attempt + 1))),
+        }
+    }
+    let mut s = stream?;
+    let mut reader = BufReader::new(s.try_clone().ok()?);
+    let t0 = Instant::now();
+    s.write_all(request_line(i).as_bytes()).ok()?;
+    s.flush().ok()?;
+    let mut ttft_ms = 0.0f32;
+    let mut itl_ms = Vec::new();
+    let mut tokens = 0usize;
+    let mut last = t0;
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).ok()? == 0 {
+            return None; // server closed on us
+        }
+        let frame = Json::parse(line.trim()).ok()?;
+        if frame.get("error").is_some() {
+            return Some(ConnStats {
+                ttft_ms: 0.0,
+                itl_ms,
+                tokens: 0,
+                finish: "error".into(),
+            });
+        }
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            let finish = frame
+                .get("finish")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            return Some(ConnStats { ttft_ms, itl_ms, tokens, finish });
+        }
+        let now = Instant::now();
+        if tokens == 0 {
+            ttft_ms = now.duration_since(t0).as_secs_f32() * 1e3;
+        } else {
+            itl_ms.push(now.duration_since(last).as_secs_f32() * 1e3);
+        }
+        last = now;
+        tokens += 1;
+        if dropper && tokens == 2 {
+            let _ = s.shutdown(Shutdown::Both);
+            return Some(ConnStats {
+                ttft_ms,
+                itl_ms,
+                tokens,
+                finish: "dropped".into(),
+            });
+        }
+    }
+}
+
+fn main() {
+    let conns = env_usize("RRS_LOAD_CONNS", 1024);
+    let pool_blocks = env_usize("RRS_LOAD_BLOCKS", 96);
+    println!(
+        "serving load harness: {conns} streaming connections x \
+         {TOKENS_PER_CONN} tokens (max_batch {MAX_BATCH})"
+    );
+    let coord = Arc::new(Coordinator::start(
+        PagedEngine::new(tiny_model(), pool_blocks, 8),
+        SchedulerConfig {
+            max_batch: MAX_BATCH,
+            queue_capacity: conns.max(64) * 2,
+            ..Default::default()
+        },
+    ));
+    let (port, accept_handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
+
+    let stats: Arc<Mutex<Vec<ConnStats>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..conns {
+        let stats = stats.clone();
+        let dropper = i % 32 == 9;
+        joins.push(
+            std::thread::Builder::new()
+                .stack_size(256 * 1024)
+                .name(format!("load-{i}"))
+                .spawn(move || {
+                    if let Some(cs) = run_conn(port, i, dropper) {
+                        stats.lock().unwrap().push(cs);
+                    }
+                })
+                .unwrap(),
+        );
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+    let wall_s = t0.elapsed().as_secs_f32();
+
+    // no-hung-lanes ledger: poll until every submission is terminal and
+    // the pool has reclaimed every block
+    let m: &rrs::coordinator::Metrics = &coord.metrics;
+    let ledger = |m: &rrs::coordinator::Metrics| {
+        let sub = m.submitted.load(Ordering::Relaxed);
+        let term = m.completed.load(Ordering::Relaxed)
+            + m.cancelled.load(Ordering::Relaxed)
+            + m.aborted.load(Ordering::Relaxed)
+            + m.deadline_missed.load(Ordering::Relaxed)
+            + m.rejected.load(Ordering::Relaxed);
+        (sub, term, m.pool_blocks_used.load(Ordering::Relaxed))
+    };
+    let drain_t0 = Instant::now();
+    let balanced = loop {
+        let (sub, term, used) = ledger(m);
+        if sub == term && used == 0 {
+            break true;
+        }
+        if drain_t0.elapsed() > Duration::from_secs(60) {
+            eprintln!(
+                "LEDGER IMBALANCE: submitted {sub} != terminal {term} \
+                 or blocks_used {used} != 0"
+            );
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+
+    let all = stats.lock().unwrap();
+    let ttfts: Vec<f32> = all.iter().filter(|c| c.tokens > 0).map(|c| c.ttft_ms).collect();
+    let itls: Vec<f32> = all.iter().flat_map(|c| c.itl_ms.iter().copied()).collect();
+    let ttft = Summary::of(&ttfts);
+    let itl = Summary::of(&itls);
+    let client_tokens: usize = all.iter().map(|c| c.tokens).sum();
+    let errors = all.iter().filter(|c| c.finish == "error").count();
+    let dropped = all.iter().filter(|c| c.finish == "dropped").count();
+    let completed = m.completed.load(Ordering::Relaxed);
+    let cancelled = m.cancelled.load(Ordering::Relaxed);
+    let deadline_missed = m.deadline_missed.load(Ordering::Relaxed);
+
+    println!(
+        "  {completed} completed, {cancelled} cancelled, {deadline_missed} \
+         deadline-missed, {dropped} dropped, {errors} errors in {wall_s:.1}s \
+         ({:.0} tok/s streamed)",
+        client_tokens as f32 / wall_s
+    );
+    println!(
+        "  TTFT p50 {:>8.1}ms  p99 {:>8.1}ms   (n={})",
+        ttft.p50, ttft.p99, ttft.n
+    );
+    println!(
+        "  ITL  p50 {:>8.1}ms  p99 {:>8.1}ms   (n={})",
+        itl.p50, itl.p99, itl.n
+    );
+
+    let j = obj(vec![
+        ("bench", "serving_load".into()),
+        ("conns", conns.into()),
+        ("max_batch", MAX_BATCH.into()),
+        ("tokens_per_conn", TOKENS_PER_CONN.into()),
+        ("pool_blocks", pool_blocks.into()),
+        ("wall_s", (wall_s as f64).into()),
+        ("submitted", (m.submitted.load(Ordering::Relaxed) as usize).into()),
+        ("completed", (completed as usize).into()),
+        ("cancelled", (cancelled as usize).into()),
+        ("deadline_missed", (deadline_missed as usize).into()),
+        ("aborted", (m.aborted.load(Ordering::Relaxed) as usize).into()),
+        ("rejected", (m.rejected.load(Ordering::Relaxed) as usize).into()),
+        (
+            "tokens_streamed",
+            (m.tokens_streamed.load(Ordering::Relaxed) as usize).into(),
+        ),
+        ("client_tokens", client_tokens.into()),
+        ("client_errors", errors.into()),
+        ("droppers", dropped.into()),
+        ("tokens_per_s", (client_tokens as f64 / wall_s as f64).into()),
+        (
+            "ttft_ms",
+            obj(vec![
+                ("n", ttft.n.into()),
+                ("p50", (ttft.p50 as f64).into()),
+                ("p99", (ttft.p99 as f64).into()),
+                ("mean", (ttft.mean as f64).into()),
+            ]),
+        ),
+        (
+            "itl_ms",
+            obj(vec![
+                ("n", itl.n.into()),
+                ("p50", (itl.p50 as f64).into()),
+                ("p99", (itl.p99 as f64).into()),
+                ("mean", (itl.mean as f64).into()),
+            ]),
+        ),
+        ("no_hung_lanes", balanced.into()),
+    ]);
+    let path = "BENCH_serving.json";
+    match std::fs::write(path, j.dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+
+    // shut the server down before the final verdict so the process exits
+    if let Ok(mut c) = TcpStream::connect(("127.0.0.1", port)) {
+        let _ = c.write_all(b"{\"cmd\": \"shutdown\"}\n");
+        let mut line = String::new();
+        let _ = BufReader::new(c).read_line(&mut line);
+    }
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    let _ = accept_handle.join();
+
+    assert!(balanced, "no-hung-lanes ledger failed (see BENCH_serving.json)");
+    assert!(
+        ttft.n + dropped + errors >= conns * 9 / 10,
+        "too few connections produced tokens: {} of {conns}",
+        ttft.n
+    );
+}

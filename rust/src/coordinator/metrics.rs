@@ -40,7 +40,13 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub aborted: AtomicU64,
+    /// Client went away (stream receiver dropped / cancel flag set).
+    pub cancelled: AtomicU64,
+    /// Requests finished by deadline-aware preemption past their deadline.
+    pub deadline_missed: AtomicU64,
     pub tokens_generated: AtomicU64,
+    /// Token frames actually delivered to live stream receivers.
+    pub tokens_streamed: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_steps: AtomicU64,
     /// Sequences preempted back to the queue on pool exhaustion.
@@ -235,6 +241,15 @@ impl Metrics {
                 (self.preemptions.load(Ordering::Relaxed) as usize).into(),
             ),
             ("aborted", (self.aborted.load(Ordering::Relaxed) as usize).into()),
+            ("cancelled", (self.cancelled.load(Ordering::Relaxed) as usize).into()),
+            (
+                "deadline_missed",
+                (self.deadline_missed.load(Ordering::Relaxed) as usize).into(),
+            ),
+            (
+                "tokens_streamed",
+                (self.tokens_streamed.load(Ordering::Relaxed) as usize).into(),
+            ),
             (
                 "kv_pool",
                 obj(vec![

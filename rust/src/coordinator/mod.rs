@@ -9,7 +9,12 @@
 //! worker thread started by [`scheduler::Coordinator`] admits waiting
 //! requests into the active set (prefill) and steps all active sequences
 //! one token per iteration (continuous batching), retiring finished
-//! sequences.
+//! sequences.  Requests join and leave the batch at step granularity;
+//! every sampled token streams back immediately as a
+//! [`request::Event::Token`] frame, and the per-request sampling suite
+//! (top-k/top-p, penalties, stop sequences, logit bias, seeds —
+//! [`sampling::SamplingParams`]) runs as one vectorized pass over the
+//! batch's logit rows each step.
 //!
 //! Three engine backends serve the scheduler: the flat per-sequence
 //! cache ([`RustServeEngine`]), the paged INT4 KV pool
@@ -24,6 +29,7 @@ pub mod engine_iface;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod sampling;
 pub mod scheduler;
 pub mod server;
 
@@ -31,5 +37,9 @@ pub use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 pub use engine_iface::{RustServeEngine, ServeEngine};
 pub use metrics::Metrics;
 pub use queue::RequestQueue;
-pub use request::{Request, RequestId, Response, SubmitError};
+pub use request::{
+    Event, FinishReason, Request, RequestId, RequestOptions, Response,
+    StreamHandle, SubmitError,
+};
+pub use sampling::{SamplerState, SamplingParams};
 pub use scheduler::{Coordinator, SchedulerConfig};

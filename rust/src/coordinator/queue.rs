@@ -6,28 +6,21 @@ use std::time::Duration;
 
 use super::request::{Request, SubmitError};
 
-/// MPMC bounded FIFO; producers fail fast when full (shed load rather
-/// than queue unboundedly — the serving-side backpressure policy).
+/// MPMC bounded priority queue; producers fail fast when full (shed
+/// load rather than queue unboundedly — the serving-side backpressure
+/// policy).  Higher [`Request::priority`] pops first; within a priority
+/// class order stays FIFO (stable insertion).
 ///
 /// # Examples
 ///
 /// ```
-/// use rrs::coordinator::{Request, RequestQueue};
-/// use rrs::model::sampler::Sampling;
-/// use std::time::{Duration, Instant};
+/// use rrs::coordinator::{Request, RequestOptions, RequestQueue};
+/// use std::time::Duration;
 ///
 /// let q = RequestQueue::new(2);
 /// let (tx, _rx) = std::sync::mpsc::channel();
-/// q.submit(Request {
-///     id: 1,
-///     prompt: vec![1, 2],
-///     max_new_tokens: 4,
-///     sampling: Sampling::Greedy,
-///     stop_token: None,
-///     submitted_at: Instant::now(),
-///     reply: tx,
-/// })
-/// .unwrap();
+/// q.submit(Request::new(1, vec![1, 2], RequestOptions::default(), tx))
+///     .unwrap();
 /// let batch = q.pop_batch(8, Duration::ZERO);
 /// assert_eq!(batch.len(), 1);
 /// assert_eq!(batch[0].id, 1);
@@ -61,7 +54,14 @@ impl RequestQueue {
         if g.items.len() >= self.capacity {
             return Err(SubmitError::QueueFull);
         }
-        g.items.push_back(req);
+        // stable priority insert: after the last request with priority
+        // >= the new one, so equal priorities stay FIFO
+        let pos = g
+            .items
+            .iter()
+            .position(|r| r.priority < req.priority)
+            .unwrap_or(g.items.len());
+        g.items.insert(pos, req);
         self.cv.notify_one();
         Ok(())
     }
@@ -137,24 +137,22 @@ impl RequestQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::sampler::Sampling;
+    use super::super::request::{Event, RequestOptions};
     use std::sync::mpsc;
     use std::time::Instant;
 
-    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+    fn req(id: u64) -> (Request, mpsc::Receiver<Event>) {
+        req_prio(id, 0)
+    }
+
+    fn req_prio(id: u64, priority: i32) -> (Request, mpsc::Receiver<Event>) {
         let (tx, rx) = mpsc::channel();
-        (
-            Request {
-                id,
-                prompt: vec![1, 2],
-                max_new_tokens: 4,
-                sampling: Sampling::Greedy,
-                stop_token: None,
-                submitted_at: Instant::now(),
-                reply: tx,
-            },
-            rx,
-        )
+        let opts = RequestOptions {
+            max_new_tokens: 4,
+            priority,
+            ..Default::default()
+        };
+        (Request::new(id, vec![1, 2], opts, tx), rx)
     }
 
     #[test]
@@ -168,6 +166,22 @@ mod tests {
         }
         let batch = q.pop_batch(10, Duration::from_millis(1));
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn priority_pops_first_fifo_within_class() {
+        let q = RequestQueue::new(8);
+        let mut keep = Vec::new();
+        for (id, prio) in [(0, 0), (1, 0), (2, 5), (3, 5), (4, -1)] {
+            let (r, rx) = req_prio(id, prio);
+            q.submit(r).unwrap();
+            keep.push(rx);
+        }
+        let got = q.pop_batch(10, Duration::from_millis(1));
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 3, 0, 1, 4]
+        );
     }
 
     #[test]

@@ -1,23 +1,120 @@
 //! Request/response types crossing the coordinator boundary.
+//!
+//! Replies stream: the scheduler sends one [`Event::Token`] per sampled
+//! token as it is produced, then exactly one [`Event::Done`] carrying
+//! the full [`Response`].  Dropping the receiver (or setting the
+//! [`StreamHandle`] cancel flag) tells the scheduler the client went
+//! away; the lane is retired as [`FinishReason::Cancelled`] and its KV
+//! blocks are freed.
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-use crate::model::sampler::Sampling;
+use super::sampling::SamplingParams;
 
 pub type RequestId = u64;
+
+/// One frame of a streaming reply.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A freshly sampled token; `index` is its position in the
+    /// generated sequence (0-based, gap-free).
+    Token { id: RequestId, index: usize, token: u32 },
+    /// Terminal frame: the complete response with timings.
+    Done(Response),
+}
+
+/// Submission-time knobs beyond the prompt itself.
+#[derive(Clone, Debug)]
+pub struct RequestOptions {
+    pub max_new_tokens: usize,
+    pub params: SamplingParams,
+    /// Higher runs first; lower is preempted first.  Default 0.
+    pub priority: i32,
+    /// Relative deadline; a lane past it finishes as
+    /// [`FinishReason::Deadline`] with whatever it produced.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for RequestOptions {
+    fn default() -> Self {
+        RequestOptions {
+            max_new_tokens: 32,
+            params: SamplingParams::default(),
+            priority: 0,
+            deadline: None,
+        }
+    }
+}
 
 /// A generation request.
 pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
-    pub sampling: Sampling,
-    /// Stop generation at this token (e.g. b'.' for the demo corpus).
-    pub stop_token: Option<u32>,
+    pub params: SamplingParams,
+    pub priority: i32,
+    /// Absolute deadline (resolved from [`RequestOptions::deadline`]).
+    pub deadline: Option<Instant>,
+    /// Client-side cancellation flag (shared with the [`StreamHandle`]).
+    pub cancel: Arc<AtomicBool>,
     pub submitted_at: Instant,
-    /// Channel the scheduler answers on.
-    pub reply: mpsc::Sender<Response>,
+    /// Channel the scheduler streams events on.
+    pub reply: mpsc::Sender<Event>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        prompt: Vec<u32>,
+        opts: RequestOptions,
+        reply: mpsc::Sender<Event>,
+    ) -> Request {
+        let submitted_at = Instant::now();
+        Request {
+            id,
+            prompt,
+            max_new_tokens: opts.max_new_tokens,
+            params: opts.params,
+            priority: opts.priority,
+            deadline: opts.deadline.map(|d| submitted_at + d),
+            cancel: Arc::new(AtomicBool::new(false)),
+            submitted_at,
+            reply,
+        }
+    }
+}
+
+/// Client side of a streaming submission.
+pub struct StreamHandle {
+    pub id: RequestId,
+    pub events: mpsc::Receiver<Event>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl StreamHandle {
+    /// Ask the scheduler to stop this request at the next step; it
+    /// finishes as [`FinishReason::Cancelled`] and frees its lane.
+    pub fn abort(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the terminal frame, discarding token frames.
+    pub fn wait(self) -> Result<Response, SubmitError> {
+        wait_done(&self.events)
+    }
+}
+
+/// Drain token frames until the terminal [`Event::Done`].
+pub fn wait_done(rx: &mpsc::Receiver<Event>) -> Result<Response, SubmitError> {
+    loop {
+        match rx.recv() {
+            Ok(Event::Token { .. }) => continue,
+            Ok(Event::Done(resp)) => return Ok(resp),
+            Err(_) => return Err(SubmitError::Closed),
+        }
+    }
 }
 
 /// Completion + per-request timing breakdown.
@@ -36,11 +133,33 @@ pub struct Response {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
     MaxTokens,
+    /// A token in `stop_token_ids` was produced.
     StopToken,
+    /// The generated tail matched a stop sequence.
+    StopSequence,
     /// KV capacity exhausted.
     Truncated,
-    /// Coordinator shutting down.
+    /// Coordinator shutting down or the request could never fit.
     Aborted,
+    /// Deadline passed before completion.
+    Deadline,
+    /// Client went away (receiver dropped or cancel flag set).
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Stable wire string used by the TCP protocol and metrics.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop",
+            FinishReason::StopSequence => "stop_seq",
+            FinishReason::Truncated => "truncated",
+            FinishReason::Aborted => "aborted",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
 }
 
 /// Submission failures (backpressure surface).
@@ -52,6 +171,8 @@ pub enum SubmitError {
     Closed,
     /// Prompt longer than the engine's max sequence.
     PromptTooLong { prompt: usize, max: usize },
+    /// Sampling params failed validation (never silently coerced).
+    InvalidParams(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -61,6 +182,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "coordinator closed"),
             SubmitError::PromptTooLong { prompt, max } => {
                 write!(f, "prompt length {prompt} exceeds max {max}")
+            }
+            SubmitError::InvalidParams(e) => {
+                write!(f, "invalid sampling params: {e}")
             }
         }
     }

@@ -1,0 +1,647 @@
+//! Per-request sampling: the full parameter suite (top-k, top-p,
+//! repetition / presence / frequency penalties, stop sequences and stop
+//! token ids, logit bias, per-request seeds) applied in one vectorized
+//! pass over the batch's logit rows.
+//!
+//! The scheduler owns one [`SamplerState`] per in-flight request.  Each
+//! decode step it builds a [`Lane`] per active row and calls
+//! [`sample_lanes`], which fans the rows out over
+//! [`crate::util::threadpool::parallel_rows`] — sampling is pure
+//! per-row CPU work (penalty application + partial top-k selection +
+//! softmax), so it threads the same way the GEMM tile driver does.
+//!
+//! Determinism contract: a state carries its own [`Pcg`] stream seeded
+//! from the request (`seed` param, falling back to the request id), so
+//! the sampled token stream for a request is a pure function of
+//! (logits, params, seed) — independent of batch composition, admission
+//! order, or preemption.  The scheduler preserves the state across
+//! preemption, and both engines produce bit-identical logits for a
+//! given token history, so a preempted-and-resumed request continues
+//! the exact stream it would have produced uninterrupted.
+
+use std::collections::HashMap;
+
+use crate::model::sampler::Sampling;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::util::threadpool;
+
+use super::request::FinishReason;
+
+/// A bias at or below this value bans the token outright (−inf logit).
+pub const BAN_BIAS: f32 = -1e9;
+
+/// Most stop sequences accepted per request (and max tokens per one).
+const MAX_STOP_SEQS: usize = 8;
+const MAX_STOP_SEQ_LEN: usize = 64;
+
+/// Full per-request sampling parameter suite.
+///
+/// Defaults are the identity: greedy argmax with every modifier off.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// `<= 0` means greedy argmax (after bias/penalties).
+    pub temperature: f32,
+    /// Keep only the `k` highest logits; `0` disables.
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability-descending prefix
+    /// with mass `>= top_p`; `1.0` disables.
+    pub top_p: f32,
+    /// HF-style repetition penalty over prompt + generated tokens:
+    /// positive logits are divided by it, negative multiplied.  `1.0`
+    /// disables; values `> 1` discourage repeats.
+    pub repetition_penalty: f32,
+    /// Flat subtraction from every token generated at least once.
+    pub presence_penalty: f32,
+    /// Subtraction proportional to a token's generated-count.
+    pub frequency_penalty: f32,
+    /// Additive per-token logit adjustments; a bias `<= BAN_BIAS` bans
+    /// the token outright.
+    pub logit_bias: Vec<(u32, f32)>,
+    /// Finish with [`FinishReason::StopToken`] when one is produced.
+    pub stop_token_ids: Vec<u32>,
+    /// Finish with [`FinishReason::StopSequence`] when the generated
+    /// token tail matches one (spans token boundaries by construction).
+    pub stop_sequences: Vec<Vec<u32>>,
+    /// RNG seed; `None` derives one from the request id.
+    pub seed: Option<u64>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            presence_penalty: 0.0,
+            frequency_penalty: 0.0,
+            logit_bias: Vec::new(),
+            stop_token_ids: Vec::new(),
+            stop_sequences: Vec::new(),
+            seed: None,
+        }
+    }
+}
+
+/// The legacy three-mode enum maps onto the full suite.
+impl From<Sampling> for SamplingParams {
+    fn from(s: Sampling) -> SamplingParams {
+        match s {
+            Sampling::Greedy => SamplingParams::default(),
+            Sampling::Temperature(t) => {
+                SamplingParams { temperature: t, ..Default::default() }
+            }
+            Sampling::TopK { k, temperature } => SamplingParams {
+                temperature,
+                top_k: k,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+/// Read an optional numeric field; present-but-not-a-number is an error
+/// (never a silent fallback).
+pub(crate) fn num_field(req: &Json, key: &str) -> Result<Option<f64>, String> {
+    match req.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(x)) => Ok(Some(*x)),
+        Some(_) => Err(format!("'{key}' must be a number")),
+    }
+}
+
+/// Read an optional non-negative integer field (rejects fractions).
+pub(crate) fn usize_field(req: &Json, key: &str) -> Result<Option<usize>, String> {
+    match num_field(req, key)? {
+        None => Ok(None),
+        Some(x) if x.is_finite() && x >= 0.0 && x.fract() == 0.0 => {
+            Ok(Some(x as usize))
+        }
+        Some(_) => Err(format!("'{key}' must be a non-negative integer")),
+    }
+}
+
+/// Read an optional (possibly negative) integer field.
+pub(crate) fn int_field(req: &Json, key: &str) -> Result<Option<i64>, String> {
+    match num_field(req, key)? {
+        None => Ok(None),
+        Some(x) if x.is_finite() && x.fract() == 0.0 => Ok(Some(x as i64)),
+        Some(_) => Err(format!("'{key}' must be an integer")),
+    }
+}
+
+impl SamplingParams {
+    /// Parse the sampling fields of a protocol request.  Strict: a field
+    /// that is present with the wrong type or an out-of-range value is a
+    /// protocol error, not a silent greedy fallback.  `stop` (string
+    /// matching) is layered on by the server, which owns the tokenizer.
+    pub fn from_json(req: &Json) -> Result<SamplingParams, String> {
+        let mut p = SamplingParams::default();
+        if let Some(t) = num_field(req, "temperature")? {
+            p.temperature = t as f32;
+        }
+        if let Some(k) = usize_field(req, "top_k")? {
+            p.top_k = k;
+        }
+        if let Some(tp) = num_field(req, "top_p")? {
+            p.top_p = tp as f32;
+        }
+        if let Some(r) = num_field(req, "repetition_penalty")? {
+            p.repetition_penalty = r as f32;
+        }
+        if let Some(x) = num_field(req, "presence_penalty")? {
+            p.presence_penalty = x as f32;
+        }
+        if let Some(x) = num_field(req, "frequency_penalty")? {
+            p.frequency_penalty = x as f32;
+        }
+        if let Some(s) = usize_field(req, "seed")? {
+            p.seed = Some(s as u64);
+        }
+        match req.get("logit_bias") {
+            None | Some(Json::Null) => {}
+            // {"65": -5.0, "66": 1e9} — keys are token-id strings
+            Some(Json::Obj(kvs)) => {
+                for (k, v) in kvs {
+                    let tok: u32 = k
+                        .parse()
+                        .map_err(|_| format!("logit_bias key '{k}' is not a token id"))?;
+                    let b = v
+                        .as_f64()
+                        .ok_or_else(|| format!("logit_bias['{k}'] must be a number"))?;
+                    p.logit_bias.push((tok, b as f32));
+                }
+            }
+            Some(_) => {
+                return Err("'logit_bias' must be an object of token-id: bias".into())
+            }
+        }
+        match req.get("stop_token_ids") {
+            None | Some(Json::Null) => {}
+            Some(Json::Arr(xs)) => {
+                for x in xs {
+                    match x.as_usize() {
+                        Some(t) => p.stop_token_ids.push(t as u32),
+                        None => {
+                            return Err(
+                                "'stop_token_ids' entries must be token ids".into()
+                            )
+                        }
+                    }
+                }
+            }
+            Some(_) => return Err("'stop_token_ids' must be an array".into()),
+        }
+        Ok(p)
+    }
+
+    /// Range-check every knob; called at submission so a bad request is
+    /// rejected before it ever reaches the scheduler.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!("temperature {} out of range", self.temperature));
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            return Err(format!("top_p {} must be in (0, 1]", self.top_p));
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            return Err(format!(
+                "repetition_penalty {} must be positive",
+                self.repetition_penalty
+            ));
+        }
+        for (name, x) in [
+            ("presence_penalty", self.presence_penalty),
+            ("frequency_penalty", self.frequency_penalty),
+        ] {
+            if !x.is_finite() || x.abs() > 1e4 {
+                return Err(format!("{name} {x} out of range"));
+            }
+        }
+        for &(_, b) in &self.logit_bias {
+            if b.is_nan() {
+                return Err("logit_bias must not be NaN".into());
+            }
+        }
+        if self.stop_sequences.len() > MAX_STOP_SEQS {
+            return Err(format!("at most {MAX_STOP_SEQS} stop sequences"));
+        }
+        for s in &self.stop_sequences {
+            if s.is_empty() || s.len() > MAX_STOP_SEQ_LEN {
+                return Err(format!(
+                    "stop sequences must be 1..={MAX_STOP_SEQ_LEN} tokens"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// First index of the maximum finite value (`0` when everything is
+/// `-inf`/NaN — callers ban at most V−1 tokens in practice).
+fn argmax_finite(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if !x.is_nan() && x > best_v {
+            best = i;
+            best_v = x;
+        }
+    }
+    best
+}
+
+/// Per-request sampler: params + private RNG stream + the token history
+/// the penalties and stop matching need.  Cheap to keep across
+/// preemption (a few hash maps), which is what makes resumed requests
+/// continue their exact token stream.
+#[derive(Clone, Debug)]
+pub struct SamplerState {
+    params: SamplingParams,
+    rng: Pcg,
+    /// Occurrences in prompt + generated (repetition penalty domain).
+    seen: HashMap<u32, u32>,
+    /// Occurrences in generated only (presence/frequency domain).
+    gen_counts: HashMap<u32, u32>,
+    /// Trailing generated tokens, as long as the longest stop sequence.
+    tail: Vec<u32>,
+    tail_cap: usize,
+    stop_hit: Option<FinishReason>,
+}
+
+impl SamplerState {
+    /// `fallback_seed` (the request id) keeps unseeded requests
+    /// deterministic per-request yet decorrelated across a batch.
+    pub fn new(params: SamplingParams, fallback_seed: u64, prompt: &[u32]) -> Self {
+        let seed = params.seed.unwrap_or(0x5eed_0000_0000 ^ fallback_seed);
+        let tail_cap =
+            params.stop_sequences.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut seen = HashMap::new();
+        for &t in prompt {
+            *seen.entry(t).or_insert(0) += 1;
+        }
+        SamplerState {
+            params,
+            rng: Pcg::new(seed),
+            seen,
+            gen_counts: HashMap::new(),
+            tail: Vec::with_capacity(tail_cap),
+            tail_cap,
+            stop_hit: None,
+        }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Set when a recorded token completed a stop id / stop sequence.
+    pub fn stop_hit(&self) -> Option<FinishReason> {
+        self.stop_hit
+    }
+
+    /// Logits after NaN scrubbing, bias, and the three penalties — the
+    /// distribution every downstream step (and the property tests) work
+    /// from.  NaN logits are treated as banned, never sampled.
+    pub fn adjusted_logits(&self, logits: &[f32]) -> Vec<f32> {
+        let p = &self.params;
+        let mut adj: Vec<f32> = logits
+            .iter()
+            .map(|&l| if l.is_nan() { f32::NEG_INFINITY } else { l })
+            .collect();
+        for &(tok, bias) in &p.logit_bias {
+            if let Some(x) = adj.get_mut(tok as usize) {
+                *x = if bias <= BAN_BIAS { f32::NEG_INFINITY } else { *x + bias };
+            }
+        }
+        if p.repetition_penalty != 1.0 {
+            for &tok in self.seen.keys() {
+                if let Some(x) = adj.get_mut(tok as usize) {
+                    if x.is_finite() {
+                        *x = if *x > 0.0 {
+                            *x / p.repetition_penalty
+                        } else {
+                            *x * p.repetition_penalty
+                        };
+                    }
+                }
+            }
+        }
+        if p.presence_penalty != 0.0 || p.frequency_penalty != 0.0 {
+            for (&tok, &n) in &self.gen_counts {
+                if let Some(x) = adj.get_mut(tok as usize) {
+                    if x.is_finite() {
+                        *x -= p.presence_penalty + p.frequency_penalty * n as f32;
+                    }
+                }
+            }
+        }
+        adj
+    }
+
+    /// The final categorical distribution as `(token, probability)`
+    /// pairs.  Greedy collapses to a single pair; when nucleus
+    /// truncation is active the pairs come back probability-descending.
+    /// Probabilities are renormalized to sum to 1 (up to rounding).
+    pub fn distribution(&self, logits: &[f32]) -> Vec<(u32, f32)> {
+        let adj = self.adjusted_logits(logits);
+        let p = &self.params;
+        if p.temperature <= 0.0 {
+            return vec![(argmax_finite(&adj) as u32, 1.0)];
+        }
+        let mut idx: Vec<usize> =
+            (0..adj.len()).filter(|&i| adj[i] > f32::NEG_INFINITY).collect();
+        if idx.is_empty() {
+            // every token banned: degenerate, pick token 0 by convention
+            return vec![(0, 1.0)];
+        }
+        // partial selection, not a full sort: O(V) instead of O(V log V)
+        let k = if p.top_k == 0 { idx.len() } else { p.top_k.min(idx.len()) };
+        if k < idx.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| adj[b].total_cmp(&adj[a]));
+            idx.truncate(k);
+        }
+        let mut probs: Vec<f32> =
+            idx.iter().map(|&i| adj[i] / p.temperature).collect();
+        crate::linalg::softmax_inplace(&mut probs);
+        let mut cand: Vec<(u32, f32)> =
+            idx.iter().zip(&probs).map(|(&i, &pr)| (i as u32, pr)).collect();
+        if p.top_p < 1.0 {
+            cand.sort_by(|a, b| b.1.total_cmp(&a.1));
+            let mut cum = 0.0f32;
+            let mut keep = cand.len();
+            for (i, &(_, pr)) in cand.iter().enumerate() {
+                cum += pr;
+                if cum >= p.top_p {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            cand.truncate(keep);
+            let total: f32 = cand.iter().map(|c| c.1).sum();
+            if total > 0.0 {
+                for c in cand.iter_mut() {
+                    c.1 /= total;
+                }
+            }
+        }
+        cand
+    }
+
+    /// Sample one token and record it (penalty counts + stop matching).
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        let cand = self.distribution(logits);
+        let tok = pick(&cand, &mut self.rng);
+        self.record(tok);
+        tok
+    }
+
+    fn record(&mut self, tok: u32) {
+        *self.seen.entry(tok).or_insert(0) += 1;
+        *self.gen_counts.entry(tok).or_insert(0) += 1;
+        if self.stop_hit.is_some() {
+            return;
+        }
+        if self.params.stop_token_ids.contains(&tok) {
+            self.stop_hit = Some(FinishReason::StopToken);
+            return;
+        }
+        if self.tail_cap > 0 {
+            self.tail.push(tok);
+            if self.tail.len() > self.tail_cap {
+                let excess = self.tail.len() - self.tail_cap;
+                self.tail.drain(..excess);
+            }
+            if self.params.stop_sequences.iter().any(|s| self.tail.ends_with(s)) {
+                self.stop_hit = Some(FinishReason::StopSequence);
+            }
+        }
+    }
+}
+
+/// Weighted draw robust to probability mass summing below 1.0 (the draw
+/// is scaled by the actual mass; a degenerate all-zero mass falls back
+/// to the most probable candidate rather than silently picking the
+/// last).
+fn pick(cand: &[(u32, f32)], rng: &mut Pcg) -> u32 {
+    let total: f32 = cand.iter().map(|c| c.1).sum();
+    if !(total > 0.0) || !total.is_finite() {
+        return cand
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|c| c.0)
+            .unwrap_or(0);
+    }
+    let r = rng.uniform() * total;
+    let mut acc = 0.0f32;
+    for &(tok, pr) in cand {
+        acc += pr;
+        if r < acc {
+            return tok;
+        }
+    }
+    cand.last().map(|c| c.0).unwrap_or(0)
+}
+
+/// One batch row for [`sample_lanes`]: a request's sampler + its logit
+/// row, filled with the sampled token.
+pub struct Lane<'a> {
+    state: &'a mut SamplerState,
+    logits: &'a [f32],
+    out: u32,
+}
+
+impl<'a> Lane<'a> {
+    pub fn new(state: &'a mut SamplerState, logits: &'a [f32]) -> Lane<'a> {
+        Lane { state, logits, out: 0 }
+    }
+
+    /// The sampled token (valid after [`sample_lanes`]).
+    pub fn token(&self) -> u32 {
+        self.out
+    }
+}
+
+/// Sample every lane in one vectorized pass, threaded across the batch
+/// via the crate's scoped pool.  Each lane's RNG stream is private, so
+/// the result is identical to sampling the lanes serially — the
+/// parallelism is free of ordering effects by construction.
+pub fn sample_lanes(lanes: &mut [Lane<'_>]) {
+    let threads = threadpool::default_threads().min(lanes.len().max(1));
+    threadpool::parallel_rows(lanes, 1, threads, |_, row| {
+        let lane = &mut row[0];
+        lane.out = lane.state.sample(lane.logits);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn logits_v(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| rng.normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn default_params_are_greedy_identity() {
+        let p = SamplingParams::default();
+        assert!(p.validate().is_ok());
+        let st = SamplerState::new(p, 7, &[]);
+        let l = logits_v(32, 1);
+        let d = st.distribution(&l);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0 as usize, argmax_finite(&l));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_fields() {
+        for bad in [
+            r#"{"temperature": "hot"}"#,
+            r#"{"top_k": -3}"#,
+            r#"{"top_k": 2.5}"#,
+            r#"{"logit_bias": [1, 2]}"#,
+            r#"{"logit_bias": {"x": 1}}"#,
+            r#"{"stop_token_ids": 4}"#,
+            r#"{"seed": -1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SamplingParams::from_json(&j).is_err(), "accepted {bad}");
+        }
+        for bad in [
+            SamplingParams { top_p: 0.0, ..Default::default() },
+            SamplingParams { top_p: 1.5, ..Default::default() },
+            SamplingParams { temperature: f32::NAN, ..Default::default() },
+            SamplingParams { repetition_penalty: 0.0, ..Default::default() },
+            SamplingParams {
+                stop_sequences: vec![vec![]],
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "validated {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrips_the_full_suite() {
+        let j = Json::parse(
+            r#"{"temperature": 0.8, "top_k": 40, "top_p": 0.9,
+                "repetition_penalty": 1.3, "presence_penalty": 0.5,
+                "frequency_penalty": 0.25, "seed": 42,
+                "logit_bias": {"65": -1e9, "66": 2.0},
+                "stop_token_ids": [10, 13]}"#,
+        )
+        .unwrap();
+        let p = SamplingParams::from_json(&j).unwrap();
+        assert_eq!(p.top_k, 40);
+        assert_eq!(p.seed, Some(42));
+        assert_eq!(p.stop_token_ids, vec![10, 13]);
+        assert_eq!(p.logit_bias.len(), 2);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn ban_bias_excludes_token_entirely() {
+        let l = {
+            let mut l = logits_v(16, 3);
+            l[5] = 100.0; // would dominate
+            l
+        };
+        let p = SamplingParams {
+            temperature: 1.0,
+            logit_bias: vec![(5, BAN_BIAS)],
+            ..Default::default()
+        };
+        let mut st = SamplerState::new(p, 1, &[]);
+        assert!(st.distribution(&l).iter().all(|&(t, _)| t != 5));
+        for _ in 0..50 {
+            assert_ne!(st.sample(&l), 5);
+        }
+    }
+
+    #[test]
+    fn stop_sequence_matches_across_records() {
+        let p = SamplingParams {
+            stop_sequences: vec![vec![7, 8, 9]],
+            ..Default::default()
+        };
+        let mut st = SamplerState::new(p, 1, &[]);
+        for t in [1, 7, 8] {
+            st.record(t);
+            assert_eq!(st.stop_hit(), None);
+        }
+        st.record(9);
+        assert_eq!(st.stop_hit(), Some(FinishReason::StopSequence));
+    }
+
+    #[test]
+    fn stop_token_id_reported_as_stop_token() {
+        let p = SamplingParams {
+            stop_token_ids: vec![3],
+            ..Default::default()
+        };
+        let mut st = SamplerState::new(p, 1, &[]);
+        st.record(2);
+        assert_eq!(st.stop_hit(), None);
+        st.record(3);
+        assert_eq!(st.stop_hit(), Some(FinishReason::StopToken));
+    }
+
+    #[test]
+    fn seeded_states_replay_identically() {
+        let p = SamplingParams {
+            temperature: 0.9,
+            top_k: 8,
+            top_p: 0.95,
+            seed: Some(99),
+            ..Default::default()
+        };
+        let l = logits_v(64, 5);
+        let mut a = SamplerState::new(p.clone(), 1, &[4, 5]);
+        let mut b = SamplerState::new(p, 999, &[4, 5]); // id must not matter
+        for _ in 0..32 {
+            assert_eq!(a.sample(&l), b.sample(&l));
+        }
+    }
+
+    #[test]
+    fn lanes_match_serial_sampling() {
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 12,
+            top_p: 0.9,
+            ..Default::default()
+        };
+        let rows: Vec<Vec<f32>> = (0..9).map(|i| logits_v(48, 100 + i)).collect();
+        let mut par: Vec<SamplerState> =
+            (0..9).map(|i| SamplerState::new(p.clone(), i, &[])).collect();
+        let mut ser = par.clone();
+        let toks: Vec<u32> = {
+            let mut lanes: Vec<Lane> = par
+                .iter_mut()
+                .zip(&rows)
+                .map(|(s, l)| Lane::new(s, l))
+                .collect();
+            sample_lanes(&mut lanes);
+            lanes.iter().map(|l| l.token()).collect()
+        };
+        for (i, s) in ser.iter_mut().enumerate() {
+            assert_eq!(s.sample(&rows[i]), toks[i], "lane {i}");
+        }
+    }
+
+    #[test]
+    fn pick_is_robust_to_undermass() {
+        let mut rng = Pcg::new(2);
+        // mass sums to 0.5: scaled draw must stay within the candidates
+        let cand = vec![(1u32, 0.2f32), (2, 0.2), (3, 0.1)];
+        for _ in 0..200 {
+            let t = pick(&cand, &mut rng);
+            assert!(cand.iter().any(|&(c, _)| c == t));
+        }
+        // zero mass: fall back to the most probable candidate
+        assert_eq!(pick(&[(4, 0.0), (9, 0.0)], &mut rng), 4);
+    }
+}

@@ -7,15 +7,29 @@
 //!      backends gate prefix-aware: a prompt is charged only for its
 //!      unshared suffix blocks, and the reservation inside
 //!      `try_prefill` re-checks jointly so same-round admissions cannot
-//!      oversubscribe the pool;
+//!      oversubscribe the pool.  Requests whose client vanished or
+//!      whose deadline already passed are dropped here, before any
+//!      prefill compute is spent on them;
 //!   2. **reserve** — every active sequence must be able to grow by one
-//!      token; when the paged pool is exhausted, the most recently
-//!      admitted sequence is preempted back to the queue
-//!      (recompute-style: its blocks are released and its progress is
-//!      re-prefilled on re-admission);
-//!   3. **decode** — one batched step over all active sequences;
-//!   4. **retire** — sequences hitting max_new_tokens / stop token / KV
-//!      capacity get their responses sent and their cache released.
+//!      token; when the paged pool is exhausted the least-important
+//!      lane is preempted back to the queue: lowest priority first,
+//!      then (deadline-aware) the lane with the most slack, then the
+//!      youngest (recompute-style: its blocks are released and its
+//!      progress is re-prefilled on re-admission);
+//!   3. **decode** — one batched step over all active sequences, then
+//!      one vectorized sampling pass over the batch's logit rows
+//!      ([`super::sampling::sample_lanes`], threaded).  Every sampled
+//!      token is streamed to its client as an [`Event::Token`] frame
+//!      immediately;
+//!   4. **retire** — sequences hitting a stop id / stop sequence /
+//!      max_new_tokens / KV capacity / their deadline — or whose client
+//!      disconnected — get their terminal [`Event::Done`] sent and
+//!      their cache released.
+//!
+//! Requests join and leave the running batch at *step* granularity:
+//! admission happens every loop iteration (bounded by
+//! `admit_per_step`), and retirement both before and after each decode
+//! step, so a short request never waits for the batch to drain.
 //!
 //! Prefill happens inside the loop (chunked admission), so short decode
 //! steps are never starved by long prompts beyond one admission slot —
@@ -23,19 +37,22 @@
 //! decode = memory-bound) maps onto exactly this split.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::model::sampler::{sample, Sampling};
+use crate::model::sampler::Sampling;
 use crate::obs::trace::SpanKind;
-use crate::util::rng::Pcg;
 
 use super::engine_iface::ServeEngine;
 use super::metrics::Metrics;
 use super::queue::RequestQueue;
-use super::request::{FinishReason, Request, RequestId, Response, SubmitError};
+use super::request::{
+    wait_done, Event, FinishReason, Request, RequestId, RequestOptions, Response,
+    StreamHandle, SubmitError,
+};
+use super::sampling::{self, SamplerState, SamplingParams};
 
 /// Scheduler policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -69,14 +86,18 @@ struct Active<S> {
     generated: Vec<u32>,
     next_token: u32,
     max_new_tokens: usize,
-    sampling: Sampling,
-    stop_token: Option<u32>,
+    sampler: SamplerState,
+    priority: i32,
+    deadline: Option<Instant>,
+    cancel: Arc<AtomicBool>,
+    /// The reply receiver was dropped: stream no further, retire soon.
+    disconnected: bool,
     submitted_at: Instant,
     /// When this request's latest token landed (inter-token latency).
     last_token_at: Instant,
     queue_ms: f32,
     prefill_ms: f32,
-    reply: mpsc::Sender<Response>,
+    reply: mpsc::Sender<Event>,
 }
 
 /// Milliseconds (f32) to whole microseconds for trace spans.
@@ -96,6 +117,9 @@ struct Pending {
     queue_ms: Option<f32>,
     /// Prefill time spent before preemption (re-prefill adds to it).
     prior_prefill_ms: f32,
+    /// Preserved sampler state: a resumed request continues the exact
+    /// RNG stream and penalty counts it was preempted with.
+    sampler: Option<SamplerState>,
 }
 
 impl Pending {
@@ -107,6 +131,7 @@ impl Pending {
             full_prompt,
             queue_ms: None,
             prior_prefill_ms: 0.0,
+            sampler: None,
         }
     }
 
@@ -118,8 +143,10 @@ impl Pending {
                 id: a.id,
                 prompt: a.prompt,
                 max_new_tokens: a.max_new_tokens,
-                sampling: a.sampling,
-                stop_token: a.stop_token,
+                params: a.sampler.params().clone(),
+                priority: a.priority,
+                deadline: a.deadline,
+                cancel: a.cancel,
                 submitted_at: a.submitted_at,
                 reply: a.reply,
             },
@@ -127,6 +154,17 @@ impl Pending {
             full_prompt,
             queue_ms: Some(a.queue_ms),
             prior_prefill_ms: a.prefill_ms,
+            sampler: Some(a.sampler),
+        }
+    }
+
+    fn dead_reason(&self) -> Option<FinishReason> {
+        if self.req.cancel.load(Ordering::Relaxed) {
+            Some(FinishReason::Cancelled)
+        } else if self.req.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+            Some(FinishReason::Deadline)
+        } else {
+            None
         }
     }
 }
@@ -164,45 +202,60 @@ impl Coordinator {
         }
     }
 
-    /// Submit a generation request; returns (id, receiver) or backpressure.
-    pub fn submit(
+    /// Submit with the full option set; returns a streaming handle
+    /// (token events as produced, then the terminal response).
+    pub fn submit_opts(
         &self,
         prompt: Vec<u32>,
-        max_new_tokens: usize,
-        sampling: Sampling,
-        stop_token: Option<u32>,
-    ) -> Result<(RequestId, mpsc::Receiver<Response>), SubmitError> {
-        if prompt.is_empty() || prompt.len() + max_new_tokens > self.max_seq {
+        opts: RequestOptions,
+    ) -> Result<StreamHandle, SubmitError> {
+        if prompt.is_empty() || prompt.len() + opts.max_new_tokens > self.max_seq {
             return Err(SubmitError::PromptTooLong {
-                prompt: prompt.len() + max_new_tokens,
+                prompt: prompt.len() + opts.max_new_tokens,
                 max: self.max_seq,
             });
+        }
+        if let Err(e) = opts.params.validate() {
+            return Err(SubmitError::InvalidParams(e));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let prompt_len = prompt.len();
         let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id,
-            prompt,
-            max_new_tokens,
-            sampling,
-            stop_token,
-            submitted_at: Instant::now(),
-            reply: tx,
-        };
+        let req = Request::new(id, prompt, opts, tx);
+        let cancel = req.cancel.clone();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match self.queue.submit(req) {
             Ok(()) => {
                 self.metrics
                     .trace
                     .instant(id, SpanKind::Enqueue, prompt_len as u64);
-                Ok((id, rx))
+                Ok(StreamHandle { id, events: rx, cancel })
             }
             Err(e) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
         }
+    }
+
+    /// Submit a generation request; returns (id, receiver) or
+    /// backpressure.  Legacy three-mode surface over [`Self::submit_opts`].
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        max_new_tokens: usize,
+        sampling: Sampling,
+        stop_token: Option<u32>,
+    ) -> Result<(RequestId, mpsc::Receiver<Event>), SubmitError> {
+        let mut params: SamplingParams = sampling.into();
+        if let Some(s) = stop_token {
+            params.stop_token_ids.push(s);
+        }
+        let h = self.submit_opts(
+            prompt,
+            RequestOptions { max_new_tokens, params, ..Default::default() },
+        )?;
+        Ok((h.id, h.events))
     }
 
     /// Convenience: submit and block until the response arrives.
@@ -214,7 +267,16 @@ impl Coordinator {
         stop_token: Option<u32>,
     ) -> Result<Response, SubmitError> {
         let (_, rx) = self.submit(prompt, max_new_tokens, sampling, stop_token)?;
-        rx.recv().map_err(|_| SubmitError::Closed)
+        wait_done(&rx)
+    }
+
+    /// Convenience: full-option submit and block until done.
+    pub fn generate_opts(
+        &self,
+        prompt: Vec<u32>,
+        opts: RequestOptions,
+    ) -> Result<Response, SubmitError> {
+        self.submit_opts(prompt, opts)?.wait()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -247,8 +309,15 @@ fn run_loop<E: ServeEngine>(
 ) {
     let mut active: Vec<Active<E::Seq>> = Vec::new();
     let mut preempted: VecDeque<Pending> = VecDeque::new();
-    let mut rng = Pcg::new(0x5eed);
     loop {
+        // drop dead work at the head of the resume queue (client gone or
+        // deadline passed) before spending any capacity on it
+        while let Some(p) = preempted.front() {
+            match p.dead_reason() {
+                Some(r) => finish_waiting(preempted.pop_front().unwrap(), r, &metrics),
+                None => break,
+            }
+        }
         // 1. admit — preempted requests first (they hold progress), then
         // the public queue; both gated on the backend's capacity check
         let mut room = cfg.max_batch.saturating_sub(active.len());
@@ -284,14 +353,22 @@ fn run_loop<E: ServeEngine>(
         if active.is_empty() && incoming.is_empty() {
             if let Some(p) = preempted.front() {
                 if !engine.can_admit(&p.full_prompt) {
-                    abort(preempted.pop_front().unwrap(), &metrics);
+                    finish_waiting(
+                        preempted.pop_front().unwrap(),
+                        FinishReason::Aborted,
+                        &metrics,
+                    );
                 }
             } else {
                 for req in queue.pop_batch(1, cfg.idle_wait) {
                     if engine.can_admit(&req.prompt) {
                         incoming.push(Pending::fresh(req));
                     } else {
-                        abort(Pending::fresh(req), &metrics);
+                        finish_waiting(
+                            Pending::fresh(req),
+                            FinishReason::Aborted,
+                            &metrics,
+                        );
                     }
                 }
             }
@@ -299,8 +376,18 @@ fn run_loop<E: ServeEngine>(
 
         // prefill admitted requests
         for p in incoming {
-            let Pending { req, mut generated, full_prompt, queue_ms, prior_prefill_ms } =
-                p;
+            if let Some(r) = p.dead_reason() {
+                finish_waiting(p, r, &metrics);
+                continue;
+            }
+            let Pending {
+                req,
+                mut generated,
+                full_prompt,
+                queue_ms,
+                prior_prefill_ms,
+                sampler,
+            } = p;
             let measured_queue_ms = queue_ms
                 .unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f32() * 1e3);
             let t0 = Instant::now();
@@ -318,6 +405,7 @@ fn run_loop<E: ServeEngine>(
                     full_prompt,
                     queue_ms,
                     prior_prefill_ms,
+                    sampler,
                 });
                 continue;
             };
@@ -337,13 +425,21 @@ fn run_loop<E: ServeEngine>(
                 ms_us(round_prefill_ms),
                 full_prompt.len() as u64,
             );
-            let next = sample(&logits, req.sampling, &mut rng);
+            // fresh admissions build their sampler here (prompt counts
+            // seeded); resumed ones continue their preserved state, so
+            // the token stream is identical to the uninterrupted run
+            let mut sampler = sampler.unwrap_or_else(|| {
+                SamplerState::new(req.params.clone(), req.id, &req.prompt)
+            });
+            let next = sampler.sample(&logits);
             // TTFT only on first admission: a re-prefilled (preempted)
             // request already delivered its first token long ago
             if generated.is_empty() {
                 metrics.observe_ttft(req.submitted_at.elapsed().as_secs_f32() * 1e3);
             }
+            let index = generated.len();
             generated.push(next);
+            let disconnected = send_token(&metrics, &req.reply, req.id, index, next);
             active.push(Active {
                 id: req.id,
                 seq,
@@ -351,8 +447,11 @@ fn run_loop<E: ServeEngine>(
                 generated,
                 next_token: next,
                 max_new_tokens: req.max_new_tokens,
-                sampling: req.sampling,
-                stop_token: req.stop_token,
+                sampler,
+                priority: req.priority,
+                deadline: req.deadline,
+                cancel: req.cancel,
+                disconnected,
                 submitted_at: req.submitted_at,
                 last_token_at: Instant::now(),
                 queue_ms,
@@ -362,6 +461,9 @@ fn run_loop<E: ServeEngine>(
         }
 
         if active.is_empty() {
+            // keep pool/residency gauges honest while idle, so a client
+            // watching `stats` sees freed blocks without new traffic
+            refresh_gauges(&engine, &metrics);
             if preempted.is_empty() && queue.is_closed() && queue.is_empty() {
                 return;
             }
@@ -371,18 +473,26 @@ fn run_loop<E: ServeEngine>(
         // 2. retire finished BEFORE stepping (first token may already stop)
         retire(&engine, &mut active, &metrics);
         if active.is_empty() {
+            refresh_gauges(&engine, &metrics);
             continue;
         }
 
         // 2b. reserve — every sequence must be able to take one more
-        // token; preempt the most recently admitted until the step fits
-        let mut i = 0;
-        while i < active.len() {
-            if engine.reserve_decode(&mut active[i].seq) {
-                i += 1;
-                continue;
+        // token; on exhaustion preempt the least-important lane until
+        // the step fits (KvPool::reserve only tops a table up to the
+        // next block, so re-checking already-reserved lanes is free)
+        loop {
+            let mut short = false;
+            for a in active.iter_mut() {
+                if !engine.reserve_decode(&mut a.seq) {
+                    short = true;
+                    break;
+                }
             }
-            let mut victim = active.pop().unwrap(); // youngest (may be i itself)
+            if !short || active.is_empty() {
+                break;
+            }
+            let mut victim = active.remove(victim_index(&active));
             engine.release_seq(&mut victim.seq);
             metrics.preemptions.fetch_add(1, Ordering::Relaxed);
             metrics
@@ -406,13 +516,29 @@ fn run_loop<E: ServeEngine>(
         drop(pairs);
         metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
         let step_done = Instant::now();
+        // one vectorized sampling pass over the batch's logit rows:
+        // each lane applies its own penalties/top-k/top-p from its own
+        // RNG stream, threaded across the batch
+        let tokens: Vec<u32> = {
+            let mut lanes: Vec<sampling::Lane> = active
+                .iter_mut()
+                .enumerate()
+                .map(|(i, a)| sampling::Lane::new(&mut a.sampler, logits.row(i)))
+                .collect();
+            sampling::sample_lanes(&mut lanes);
+            lanes.iter().map(|l| l.token()).collect()
+        };
         // sampled once per batched step, not per row: one step = one span
         // per participating request when the sampler fires
         let step_traced = metrics.step_trace.hit();
         for (i, a) in active.iter_mut().enumerate() {
-            let tok = sample(logits.row(i), a.sampling, &mut rng);
+            let tok = tokens[i];
+            let index = a.generated.len();
             a.generated.push(tok);
             a.next_token = tok;
+            if !a.disconnected {
+                a.disconnected = send_token(&metrics, &a.reply, a.id, index, tok);
+            }
             let itl_ms =
                 step_done.duration_since(a.last_token_at).as_secs_f32() * 1e3;
             a.last_token_at = step_done;
@@ -426,41 +552,97 @@ fn run_loop<E: ServeEngine>(
                 );
             }
         }
-        if let Some(ps) = engine.pool_stats() {
-            metrics.update_pool(&ps);
-        }
-        if let Some(rs) = engine.residency_stats() {
-            metrics.update_residency(&rs);
-        }
+        refresh_gauges(&engine, &metrics);
         retire(&engine, &mut active, &metrics);
     }
 }
 
-fn abort(p: Pending, metrics: &Metrics) {
-    metrics.aborted.fetch_add(1, Ordering::Relaxed);
+/// Stream one token frame; returns `true` when the client is gone.
+fn send_token(
+    metrics: &Metrics,
+    reply: &mpsc::Sender<Event>,
+    id: RequestId,
+    index: usize,
+    token: u32,
+) -> bool {
+    match reply.send(Event::Token { id, index, token }) {
+        Ok(()) => {
+            metrics.tokens_streamed.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+        Err(_) => true,
+    }
+}
+
+fn refresh_gauges<E: ServeEngine>(engine: &E, metrics: &Metrics) {
+    if let Some(ps) = engine.pool_stats() {
+        metrics.update_pool(&ps);
+    }
+    if let Some(rs) = engine.residency_stats() {
+        metrics.update_residency(&rs);
+    }
+}
+
+/// Preemption victim: lowest priority loses first; within a priority
+/// class the lane with the most deadline slack (deadline-less =
+/// infinite) is safest to pause; ties fall to the youngest lane, which
+/// has the least progress to recompute.
+fn victim_index<S>(active: &[Active<S>]) -> usize {
+    let now = Instant::now();
+    let slack = |x: &Active<S>| {
+        x.deadline
+            .map(|d| d.saturating_duration_since(now).as_micros() as u64)
+            .unwrap_or(u64::MAX)
+    };
+    let mut best = active.len() - 1; // youngest (admission order kept)
+    for i in (0..active.len()).rev() {
+        let (a, b) = (&active[i], &active[best]);
+        if a.priority < b.priority
+            || (a.priority == b.priority && slack(a) > slack(b))
+        {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Terminal accounting for a request that never (re-)entered the active
+/// set: aborted while waiting, cancelled, or past its deadline.
+fn finish_waiting(p: Pending, reason: FinishReason, metrics: &Metrics) {
+    let ctr = match reason {
+        FinishReason::Cancelled => &metrics.cancelled,
+        FinishReason::Deadline => &metrics.deadline_missed,
+        _ => &metrics.aborted,
+    };
+    ctr.fetch_add(1, Ordering::Relaxed);
     metrics
         .trace
         .instant(p.req.id, SpanKind::Abort, p.generated.len() as u64);
     let total_ms = p.req.submitted_at.elapsed().as_secs_f32() * 1e3;
-    let _ = p.req.reply.send(Response {
+    let _ = p.req.reply.send(Event::Done(Response {
         id: p.req.id,
         tokens: p.generated,
         queue_ms: p.queue_ms.unwrap_or(total_ms),
         prefill_ms: p.prior_prefill_ms,
         decode_ms: 0.0,
         total_ms,
-        finish_reason: FinishReason::Aborted,
-    });
+        finish_reason: reason,
+    }));
 }
 
-fn finishes<E: ServeEngine>(engine: &E, a: &Active<E::Seq>) -> Option<FinishReason> {
-    // the generated token list includes the token produced at prefill
-    let stop_hit = a
-        .stop_token
-        .map(|s| a.generated.last() == Some(&s))
-        .unwrap_or(false);
-    if stop_hit {
-        Some(FinishReason::StopToken)
+fn finishes<E: ServeEngine>(
+    engine: &E,
+    a: &Active<E::Seq>,
+    now: Instant,
+) -> Option<FinishReason> {
+    if a.disconnected || a.cancel.load(Ordering::Relaxed) {
+        Some(FinishReason::Cancelled)
+    } else if a.deadline.map(|d| now >= d).unwrap_or(false) {
+        Some(FinishReason::Deadline)
+    } else if let Some(r) = a.sampler.stop_hit() {
+        // stop ids / stop sequences win the race against max_tokens:
+        // the stop is checked first at the boundary step
+        Some(r)
     } else if a.generated.len() >= a.max_new_tokens {
         Some(FinishReason::MaxTokens)
     } else if engine.seq_len(&a.seq) + 1 >= engine.max_seq() {
@@ -475,30 +657,47 @@ fn retire<E: ServeEngine>(
     active: &mut Vec<Active<E::Seq>>,
     metrics: &Metrics,
 ) {
+    let now = Instant::now();
     let mut i = 0;
     while i < active.len() {
-        if let Some(reason) = finishes(engine, &active[i]) {
-            // plain remove keeps `active` in admission order, which the
-            // preemption pass relies on to pick the youngest victim
-            let mut a = active.remove(i);
-            engine.release_seq(&mut a.seq);
-            let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
-            let decode_ms = total_ms - a.queue_ms - a.prefill_ms;
-            metrics.observe_completion(total_ms, a.queue_ms, a.generated.len());
-            metrics
-                .trace
-                .instant(a.id, SpanKind::Finish, a.generated.len() as u64);
-            let _ = a.reply.send(Response {
-                id: a.id,
-                tokens: a.generated,
-                queue_ms: a.queue_ms,
-                prefill_ms: a.prefill_ms,
-                decode_ms: decode_ms.max(0.0),
-                total_ms,
-                finish_reason: reason,
-            });
-        } else {
+        let Some(reason) = finishes(engine, &active[i], now) else {
             i += 1;
+            continue;
+        };
+        // plain remove keeps `active` in admission order, which the
+        // preemption pass relies on for its youngest-lane tie-break
+        let mut a = active.remove(i);
+        engine.release_seq(&mut a.seq);
+        let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
+        let decode_ms = (total_ms - a.queue_ms - a.prefill_ms).max(0.0);
+        match reason {
+            FinishReason::Cancelled => {
+                metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .trace
+                    .instant(a.id, SpanKind::Abort, a.generated.len() as u64);
+            }
+            FinishReason::Deadline => {
+                metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .trace
+                    .instant(a.id, SpanKind::Abort, a.generated.len() as u64);
+            }
+            _ => {
+                metrics.observe_completion(total_ms, a.queue_ms, a.generated.len());
+                metrics
+                    .trace
+                    .instant(a.id, SpanKind::Finish, a.generated.len() as u64);
+            }
         }
+        let _ = a.reply.send(Event::Done(Response {
+            id: a.id,
+            tokens: a.generated,
+            queue_ms: a.queue_ms,
+            prefill_ms: a.prefill_ms,
+            decode_ms,
+            total_ms,
+            finish_reason: reason,
+        }));
     }
 }

@@ -1,8 +1,21 @@
 //! TCP front-end: newline-delimited JSON over a socket.
 //!
 //! Protocol (one JSON object per line):
-//!   -> {"prompt": "arlo is", "max_tokens": 24, "temperature": 0.0}
-//!   <- {"id": 1, "text": " red.", "tokens": 5, "total_ms": 12.3, ...}
+//!   -> {"prompt": "arlo is", "max_tokens": 24, "temperature": 0.8,
+//!       "top_k": 40, "top_p": 0.9, "repetition_penalty": 1.1,
+//!       "presence_penalty": 0.0, "frequency_penalty": 0.0,
+//!       "logit_bias": {"46": -1e9}, "seed": 7, "n": 1,
+//!       "stop": [" word"], "stop_token_ids": [10],
+//!       "priority": 0, "deadline_ms": 5000}
+//!   <- {"id": 1, "text": " red.", "tokens": 5, "total_ms": 12.3,
+//!       "finish": "stop_seq", ...}
+//!   -> same + {"stream": true}
+//!   <- one frame per token as it is sampled:
+//!      {"id": 1, "index": 0, "token": 32, "text": " "}
+//!      ... then exactly one terminal frame:
+//!      {"id": 1, "done": true, "text": " red.", "tokens": 5,
+//!       "finish": "stop_seq", "queue_ms": ..., "total_ms": ...}
+//!      (with `"n" > 1` every frame also carries `"choice"`)
 //!   -> {"cmd": "metrics"}            <- metrics snapshot
 //!   -> {"cmd": "metrics_prom"}       <- Prometheus text exposition 0.0.4
 //!                                       (wrapped as {"content_type", "body"})
@@ -11,30 +24,60 @@
 //!                                       per line in "body"
 //!   -> {"cmd": "shutdown"}           <- {"ok": true} and server exits
 //!
-//! Each connection gets a handler thread; generation responses block the
-//! connection (clients pipeline by opening several connections — the
-//! scheduler interleaves them via continuous batching).
+//! Malformed sampling params (wrong type, out of range) get an
+//! `{"error": ...}` reply — never a silent greedy fallback.  A client
+//! that disconnects mid-stream has its in-flight requests cancelled:
+//! the scheduler retires the lanes as `cancelled` and frees their KV
+//! blocks.
+//!
+//! Each connection gets a handler thread; non-streaming generation
+//! responses block the connection (clients pipeline by opening several
+//! connections — the scheduler interleaves them via continuous
+//! batching).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::TryRecvError;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::model::sampler::Sampling;
 use crate::model::tokenizer;
 use crate::util::json::{obj, Json};
 
-use super::request::FinishReason;
+use super::request::{Event, RequestOptions, Response, StreamHandle, SubmitError};
+use super::sampling::{int_field, usize_field, SamplingParams};
 use super::scheduler::Coordinator;
 
 /// Serve until a `shutdown` command arrives.  Returns the bound port.
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<u16> {
     let listener = TcpListener::bind(addr)?;
     let port = listener.local_addr()?.port();
-    let stop = Arc::new(AtomicBool::new(false));
     eprintln!("rrs server listening on port {port}");
+    accept_loop(listener, coordinator);
+    Ok(port)
+}
+
+/// Bind, then run the accept loop on a background thread.  Returns the
+/// bound port immediately (tests and load harnesses connect right
+/// away).  Shut down with `{"cmd": "shutdown"}` followed by one extra
+/// connection to unblock the accept loop, then join the handle.
+pub fn spawn(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+) -> Result<(u16, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    let handle = std::thread::Builder::new()
+        .name("rrs-accept".into())
+        .spawn(move || accept_loop(listener, coordinator))?;
+    Ok((port, handle))
+}
+
+fn accept_loop(listener: TcpListener, coordinator: Arc<Coordinator>) {
+    let stop = Arc::new(AtomicBool::new(false));
     for stream in listener.incoming() {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -49,7 +92,6 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<u16> {
             break;
         }
     }
-    Ok(port)
 }
 
 fn handle_conn(
@@ -64,10 +106,26 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(&line, &coord, &stop);
-        writer.write_all(reply.dump().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                write_line(
+                    &mut writer,
+                    &obj(vec![("error", format!("bad json: {e}").as_str().into())]),
+                )?;
+                continue;
+            }
+        };
+        if req.get("cmd").is_some() {
+            write_line(&mut writer, &handle_command(&req, &coord, &stop))?;
+        } else if req.get("stream").and_then(Json::as_bool) == Some(true) {
+            match parse_generation(&req) {
+                Ok(spec) => stream_generation(&mut writer, &coord, spec)?,
+                Err(e) => write_line(&mut writer, &obj(vec![("error", Json::Str(e))]))?,
+            }
+        } else {
+            write_line(&mut writer, &handle_request(&req, &coord))?;
+        }
         if stop.load(Ordering::Relaxed) {
             break;
         }
@@ -75,88 +133,295 @@ fn handle_conn(
     Ok(())
 }
 
-/// One protocol line -> one JSON reply (exposed for tests).
+fn write_line(w: &mut impl Write, j: &Json) -> std::io::Result<()> {
+    w.write_all(j.dump().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// One protocol line -> one JSON reply (exposed for tests).  Streaming
+/// requests need a live socket; this non-streaming surface serves
+/// commands and blocking generation.
 pub fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return obj(vec![("error", format!("bad json: {e}").as_str().into())]),
     };
-    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            // "stats" is an alias: the snapshot includes the KV-pool
-            // gauges (blocks used/cached/peak, prefix hit rate, ...)
-            "metrics" | "stats" => coord.metrics.snapshot_json(),
-            // Prometheus exposition rides the JSON protocol as a wrapped
-            // body; an HTTP shim only needs to echo body with the given
-            // content type
-            "metrics_prom" => obj(vec![
-                ("content_type", "text/plain; version=0.0.4".into()),
-                (
-                    "body",
-                    Json::Str(crate::obs::prom::render(&coord.metrics)),
-                ),
-            ]),
-            "trace" => {
-                let jsonl = req.get("format").and_then(Json::as_str)
-                    == Some("jsonl");
-                if jsonl {
-                    obj(vec![(
-                        "body",
-                        Json::Str(coord.metrics.trace.chrome_trace_jsonl()),
-                    )])
-                } else {
-                    coord.metrics.trace.chrome_trace_json()
-                }
-            }
-            "ping" => obj(vec![("ok", true.into())]),
-            "shutdown" => {
-                stop.store(true, Ordering::Relaxed);
-                obj(vec![("ok", true.into())])
-            }
-            other => obj(vec![("error", format!("unknown cmd {other}").as_str().into())]),
-        };
+    if req.get("cmd").is_some() {
+        return handle_command(&req, coord, stop);
     }
-    let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
-        return obj(vec![("error", "missing 'prompt'".into())]);
+    handle_request(&req, coord)
+}
+
+fn handle_command(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Json {
+    let Some(cmd) = req.get("cmd").and_then(Json::as_str) else {
+        return obj(vec![("error", "'cmd' must be a string".into())]);
     };
-    let max_tokens = req
-        .get("max_tokens")
-        .and_then(Json::as_usize)
-        .unwrap_or(32);
-    let temperature = req
-        .get("temperature")
-        .and_then(Json::as_f64)
-        .unwrap_or(0.0) as f32;
-    let sampling = if temperature <= 0.0 {
-        Sampling::Greedy
-    } else {
-        Sampling::Temperature(temperature)
-    };
-    let stop_token = req
-        .get("stop")
-        .and_then(Json::as_str)
-        .and_then(|s| s.bytes().next())
-        .map(|b| b as u32);
-    match coord.generate(tokenizer::encode(prompt), max_tokens, sampling, stop_token) {
-        Ok(resp) => obj(vec![
-            ("id", (resp.id as usize).into()),
-            ("text", tokenizer::decode(&resp.tokens).as_str().into()),
-            ("tokens", resp.tokens.len().into()),
-            ("queue_ms", (resp.queue_ms as f64).into()),
-            ("prefill_ms", (resp.prefill_ms as f64).into()),
-            ("decode_ms", (resp.decode_ms as f64).into()),
-            ("total_ms", (resp.total_ms as f64).into()),
-            (
-                "finish",
-                match resp.finish_reason {
-                    FinishReason::MaxTokens => "max_tokens",
-                    FinishReason::StopToken => "stop",
-                    FinishReason::Truncated => "truncated",
-                    FinishReason::Aborted => "aborted",
-                }
-                .into(),
-            ),
+    match cmd {
+        // "stats" is an alias: the snapshot includes the KV-pool
+        // gauges (blocks used/cached/peak, prefix hit rate, ...)
+        "metrics" | "stats" => coord.metrics.snapshot_json(),
+        // Prometheus exposition rides the JSON protocol as a wrapped
+        // body; an HTTP shim only needs to echo body with the given
+        // content type
+        "metrics_prom" => obj(vec![
+            ("content_type", "text/plain; version=0.0.4".into()),
+            ("body", Json::Str(crate::obs::prom::render(&coord.metrics))),
         ]),
-        Err(e) => obj(vec![("error", e.to_string().as_str().into())]),
+        "trace" => {
+            let jsonl = req.get("format").and_then(Json::as_str) == Some("jsonl");
+            if jsonl {
+                obj(vec![("body", Json::Str(coord.metrics.trace.chrome_trace_jsonl()))])
+            } else {
+                coord.metrics.trace.chrome_trace_json()
+            }
+        }
+        "ping" => obj(vec![("ok", true.into())]),
+        "shutdown" => {
+            stop.store(true, Ordering::Relaxed);
+            obj(vec![("ok", true.into())])
+        }
+        other => obj(vec![("error", format!("unknown cmd {other}").as_str().into())]),
     }
+}
+
+/// A fully parsed generation request (prompt + options + choice count).
+struct GenSpec {
+    prompt: Vec<u32>,
+    max_tokens: usize,
+    params: SamplingParams,
+    priority: i32,
+    deadline: Option<Duration>,
+    n: usize,
+}
+
+/// Strict protocol parse: any present-but-malformed field is an error
+/// reply, never a silent fallback.
+fn parse_generation(req: &Json) -> Result<GenSpec, String> {
+    let Some(prompt) = req.get("prompt").and_then(Json::as_str) else {
+        return Err("missing 'prompt'".into());
+    };
+    let max_tokens = usize_field(req, "max_tokens")?.unwrap_or(32);
+    let mut params = SamplingParams::from_json(req)?;
+    // "stop": one stop string or an array of them, matched against the
+    // generated text (token-boundary-agnostic by construction: the
+    // byte-level tokenizer makes any multi-byte stop string span tokens)
+    match req.get("stop") {
+        None | Some(Json::Null) => {}
+        Some(Json::Str(s)) if !s.is_empty() => {
+            params.stop_sequences.push(tokenizer::encode(s));
+        }
+        Some(Json::Arr(xs)) => {
+            for x in xs {
+                match x.as_str() {
+                    Some(s) if !s.is_empty() => {
+                        params.stop_sequences.push(tokenizer::encode(s));
+                    }
+                    _ => return Err("'stop' entries must be non-empty strings".into()),
+                }
+            }
+        }
+        Some(_) => return Err("'stop' must be a non-empty string or array".into()),
+    }
+    params.validate()?;
+    let priority = int_field(req, "priority")?.unwrap_or(0);
+    if !(-1_000_000..=1_000_000).contains(&priority) {
+        return Err("'priority' out of range".into());
+    }
+    let deadline = match req.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms.is_finite() && ms > 0.0 => {
+                Some(Duration::from_secs_f64(ms / 1e3))
+            }
+            _ => return Err("'deadline_ms' must be a positive number".into()),
+        },
+    };
+    let n = usize_field(req, "n")?.unwrap_or(1);
+    if n == 0 || n > 16 {
+        return Err("'n' must be in 1..=16".into());
+    }
+    Ok(GenSpec {
+        prompt: tokenizer::encode(prompt),
+        max_tokens,
+        params,
+        priority: priority as i32,
+        deadline,
+        n,
+    })
+}
+
+/// Submit choice `c` of a spec.  With an explicit seed, choice `c` uses
+/// `seed + c` so the choices differ yet stay reproducible.
+fn submit_choice(
+    coord: &Coordinator,
+    spec: &GenSpec,
+    c: usize,
+) -> Result<StreamHandle, SubmitError> {
+    let mut params = spec.params.clone();
+    if let Some(s) = params.seed {
+        params.seed = Some(s.wrapping_add(c as u64));
+    }
+    coord.submit_opts(
+        spec.prompt.clone(),
+        RequestOptions {
+            max_new_tokens: spec.max_tokens,
+            params,
+            priority: spec.priority,
+            deadline: spec.deadline,
+        },
+    )
+}
+
+fn response_json(resp: &Response, choice: Option<usize>) -> Json {
+    let mut kvs: Vec<(&str, Json)> = vec![("id", (resp.id as usize).into())];
+    if let Some(c) = choice {
+        kvs.push(("choice", c.into()));
+    }
+    kvs.extend([
+        ("text", tokenizer::decode(&resp.tokens).as_str().into()),
+        ("tokens", resp.tokens.len().into()),
+        ("queue_ms", (resp.queue_ms as f64).into()),
+        ("prefill_ms", (resp.prefill_ms as f64).into()),
+        ("decode_ms", (resp.decode_ms as f64).into()),
+        ("total_ms", (resp.total_ms as f64).into()),
+        ("finish", resp.finish_reason.as_str().into()),
+    ]);
+    obj(kvs)
+}
+
+/// Blocking (non-streaming) generation, including `n > 1` choices.
+fn handle_request(req: &Json, coord: &Coordinator) -> Json {
+    let spec = match parse_generation(req) {
+        Ok(s) => s,
+        Err(e) => return obj(vec![("error", Json::Str(e))]),
+    };
+    let mut handles = Vec::new();
+    for c in 0..spec.n {
+        match submit_choice(coord, &spec, c) {
+            Ok(h) => handles.push(h),
+            Err(e) => return obj(vec![("error", e.to_string().as_str().into())]),
+        }
+    }
+    let mut responses = Vec::new();
+    for h in handles {
+        match h.wait() {
+            Ok(r) => responses.push(r),
+            Err(e) => return obj(vec![("error", e.to_string().as_str().into())]),
+        }
+    }
+    if responses.len() == 1 {
+        response_json(&responses[0], None)
+    } else {
+        obj(vec![
+            ("id", (responses[0].id as usize).into()),
+            (
+                "choices",
+                Json::Arr(
+                    responses
+                        .iter()
+                        .enumerate()
+                        .map(|(c, r)| response_json(r, Some(c)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Stream token frames for every choice as they are produced.  A write
+/// failure means the client went away: cancel all in-flight choices so
+/// the scheduler frees their lanes.
+fn stream_generation(
+    w: &mut impl Write,
+    coord: &Coordinator,
+    spec: GenSpec,
+) -> Result<()> {
+    struct Slot {
+        choice: usize,
+        handle: StreamHandle,
+        done: bool,
+    }
+    let multi = spec.n > 1;
+    let mut slots: Vec<Slot> = Vec::new();
+    for c in 0..spec.n {
+        match submit_choice(coord, &spec, c) {
+            Ok(h) => slots.push(Slot { choice: c, handle: h, done: false }),
+            Err(e) => {
+                let mut kvs: Vec<(&str, Json)> = Vec::new();
+                if multi {
+                    kvs.push(("choice", c.into()));
+                }
+                kvs.push(("error", e.to_string().as_str().into()));
+                write_line(w, &obj(kvs))?;
+            }
+        }
+    }
+    let mut open = slots.len();
+    let mut write_err: Option<std::io::Error> = None;
+    'serve: while open > 0 {
+        let mut progressed = false;
+        for s in slots.iter_mut() {
+            if s.done {
+                continue;
+            }
+            loop {
+                match s.handle.events.try_recv() {
+                    Ok(Event::Token { id, index, token }) => {
+                        progressed = true;
+                        let mut kvs: Vec<(&str, Json)> =
+                            vec![("id", (id as usize).into())];
+                        if multi {
+                            kvs.push(("choice", s.choice.into()));
+                        }
+                        kvs.extend([
+                            ("index", index.into()),
+                            ("token", (token as usize).into()),
+                            ("text", tokenizer::decode(&[token]).as_str().into()),
+                        ]);
+                        if let Err(e) = write_line(w, &obj(kvs)) {
+                            write_err = Some(e);
+                            break 'serve;
+                        }
+                    }
+                    Ok(Event::Done(resp)) => {
+                        progressed = true;
+                        s.done = true;
+                        open -= 1;
+                        let mut frame =
+                            response_json(&resp, multi.then_some(s.choice));
+                        if let Json::Obj(kvs) = &mut frame {
+                            kvs.push(("done".to_string(), Json::Bool(true)));
+                        }
+                        if let Err(e) = write_line(w, &frame) {
+                            write_err = Some(e);
+                            break 'serve;
+                        }
+                        break;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        s.done = true;
+                        open -= 1;
+                        break;
+                    }
+                }
+            }
+        }
+        if open > 0 && !progressed {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    if let Some(e) = write_err {
+        // client disconnected mid-stream: tell the scheduler to retire
+        // every in-flight choice (freeing its KV blocks) and also drop
+        // the receivers so token sends fail fast
+        for s in slots.iter() {
+            if !s.done {
+                s.handle.abort();
+            }
+        }
+        return Err(e.into());
+    }
+    Ok(())
 }

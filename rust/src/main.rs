@@ -2,7 +2,8 @@
 //!
 //! Commands:
 //!   rrs info                         artifact + platform summary
-//!   rrs generate --prompt "arlo is"  one-shot generation (rust engine)
+//!   rrs generate --prompt "arlo is"  one-shot generation (rust engine);
+//!       sampling: --temperature --top-k --top-p --repetition-penalty --seed
 //!   rrs serve [--port 0]             TCP serving coordinator
 //!   rrs eval-ppl [--method rrs] ...  perplexity of one config cell
 //!   rrs harness <exp|all>            regenerate paper tables/figures
@@ -16,10 +17,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::coordinator::{
+    server, Coordinator, RequestOptions, RustServeEngine, SamplingParams,
+    SchedulerConfig,
+};
 use rrs::eval::perplexity::format_ppl;
 use rrs::harness::{self, Ctx};
-use rrs::model::sampler::Sampling;
 use rrs::model::weights::OutlierProfile;
 use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
 use rrs::quant::{Method, Scheme};
@@ -109,18 +112,26 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let prompt = args.get_or("prompt", "arlo is");
     let max_tokens = args.get_usize("max-tokens", 32);
-    let temperature = args.get_f32("temperature", 0.0);
     let model = build_model(args)?;
     let ecfg = model.ecfg;
     let engine = RustServeEngine::new(model);
     let coord = Coordinator::start(engine, SchedulerConfig::default());
-    let sampling = if temperature <= 0.0 {
-        Sampling::Greedy
-    } else {
-        Sampling::Temperature(temperature)
+    let seed = args.get_usize("seed", 0);
+    let params = SamplingParams {
+        temperature: args.get_f32("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        top_p: args.get_f32("top-p", 1.0),
+        repetition_penalty: args.get_f32("repetition-penalty", 1.0),
+        seed: if seed == 0 { None } else { Some(seed as u64) },
+        ..Default::default()
+    };
+    let opts = RequestOptions {
+        max_new_tokens: max_tokens,
+        params,
+        ..Default::default()
     };
     let resp = coord
-        .generate(tokenizer::encode(&prompt), max_tokens, sampling, None)
+        .generate_opts(tokenizer::encode(&prompt), opts)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("[{}] {}{}", ecfg.label(), prompt, tokenizer::decode(&resp.tokens));
     println!(

@@ -1,4 +1,9 @@
 //! Token sampling: greedy, temperature, and top-k over a logits row.
+//!
+//! This is the minimal three-mode sampler the model layer exposes; the
+//! serving front-end's full per-request suite (penalties, top-p, stop
+//! sequences, seeds) lives in [`crate::coordinator::sampling`] and maps
+//! [`Sampling`] onto it.
 
 use crate::linalg::{argmax, softmax_inplace};
 use crate::util::rng::Pcg;
@@ -20,11 +25,21 @@ pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Pcg) -> u32 {
             pick(&p, rng)
         }
         Sampling::TopK { k, temperature } => {
-            let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.sort_by(|&a, &b| {
-                logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            idx.truncate(k.max(1));
+            // partial selection, not a full sort: O(V) expected instead
+            // of O(V log V) per token.  NaN logits are filtered first —
+            // they must never win the selection or be sampled
+            let mut idx: Vec<usize> =
+                (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+            if idx.is_empty() {
+                return 0;
+            }
+            let k = k.max(1).min(idx.len());
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    logits[b].total_cmp(&logits[a])
+                });
+                idx.truncate(k);
+            }
             let mut p: Vec<f32> =
                 idx.iter().map(|&i| logits[i] / temperature.max(1e-4)).collect();
             softmax_inplace(&mut p);
@@ -33,8 +48,16 @@ pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Pcg) -> u32 {
     }
 }
 
+/// Weighted draw over `probs`.  Robust to mass summing below 1.0 (the
+/// draw is scaled by the actual mass, so the tail never soaks up the
+/// rounding deficit); a degenerate all-zero row falls back to its
+/// largest entry.
 fn pick(probs: &[f32], rng: &mut Pcg) -> u32 {
-    let r = rng.uniform();
+    let total: f32 = probs.iter().sum();
+    if !(total > 0.0) || !total.is_finite() {
+        return argmax(probs) as u32;
+    }
+    let r = rng.uniform() * total;
     let mut acc = 0.0;
     for (i, &p) in probs.iter().enumerate() {
         acc += p;
@@ -80,5 +103,51 @@ mod tests {
             );
             assert!(t < 2);
         }
+    }
+
+    #[test]
+    fn topk_ignores_nan_logits() {
+        let mut rng = Pcg::new(4);
+        let logits = vec![f32::NAN, 1.0, f32::NAN, 0.5, f32::NAN];
+        for _ in 0..100 {
+            let t = sample(
+                &logits,
+                Sampling::TopK { k: 3, temperature: 1.0 },
+                &mut rng,
+            );
+            assert!(t == 1 || t == 3, "sampled NaN index {t}");
+        }
+    }
+
+    #[test]
+    fn topk_matches_full_sort_selection() {
+        // the partial selection must keep exactly the k largest logits
+        let mut rng = Pcg::new(5);
+        let logits: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut sorted: Vec<usize> = (0..logits.len()).collect();
+        sorted.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let top8: std::collections::HashSet<usize> =
+            sorted[..8].iter().copied().collect();
+        for _ in 0..200 {
+            let t = sample(
+                &logits,
+                Sampling::TopK { k: 8, temperature: 1.0 },
+                &mut rng,
+            );
+            assert!(top8.contains(&(t as usize)), "token {t} outside top-8");
+        }
+    }
+
+    #[test]
+    fn pick_handles_undermass_and_zero_mass() {
+        let mut rng = Pcg::new(6);
+        // mass 0.5: every draw must stay in-distribution, and index 2
+        // (probability 0) must never be the rounding fallback
+        for _ in 0..500 {
+            let t = pick(&[0.3, 0.2, 0.0], &mut rng);
+            assert!(t < 2, "picked zero-probability index {t}");
+        }
+        // all-zero mass: largest entry (index 0 by tie) not the last
+        assert_eq!(pick(&[0.0, 0.0, 0.0], &mut rng), 0);
     }
 }

@@ -21,7 +21,7 @@ pub fn render(m: &Metrics) -> String {
     let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
 
     // request lifecycle counters
-    let request_counters: [(&str, &str, u64); 8] = [
+    let request_counters: [(&str, &str, u64); 11] = [
         (
             "rrs_requests_submitted_total",
             "Requests accepted by the coordinator.",
@@ -41,6 +41,21 @@ pub fn render(m: &Metrics) -> String {
             "rrs_requests_aborted_total",
             "Requests aborted (can never fit the pool).",
             c(&m.aborted),
+        ),
+        (
+            "rrs_requests_cancelled_total",
+            "Requests cancelled by client disconnect or abort flag.",
+            c(&m.cancelled),
+        ),
+        (
+            "rrs_requests_deadline_missed_total",
+            "Requests finished past their deadline.",
+            c(&m.deadline_missed),
+        ),
+        (
+            "rrs_tokens_streamed_total",
+            "Token frames delivered to live stream receivers.",
+            c(&m.tokens_streamed),
         ),
         (
             "rrs_preemptions_total",
@@ -427,6 +442,9 @@ mod tests {
         let text = render(&m);
         for family in [
             "rrs_requests_completed_total",
+            "rrs_requests_cancelled_total",
+            "rrs_requests_deadline_missed_total",
+            "rrs_tokens_streamed_total",
             "rrs_pool_blocks_total",
             "rrs_prefix_hit_rate",
             "rrs_request_latency_ms_bucket",

@@ -290,6 +290,7 @@ fn backpressure_rejects_when_saturated() {
     }
     assert!(rejected > 0, "expected backpressure rejections");
     for rx in receivers {
-        rx.recv().unwrap(); // accepted ones still complete
+        // accepted ones still complete (drain token frames to the Done)
+        rrs::coordinator::request::wait_done(&rx).unwrap();
     }
 }

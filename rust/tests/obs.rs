@@ -165,7 +165,7 @@ fn e2e_serve_records_spans_and_quant_health() {
     let (id, rx) = coord
         .submit(vec![11, 22, 33], 5, Sampling::Greedy, None)
         .unwrap();
-    let resp = rx.recv().unwrap();
+    let resp = rrs::coordinator::request::wait_done(&rx).unwrap();
     assert_eq!(resp.tokens.len(), 5);
 
     // quant-health probes landed under the engine's layer labels

@@ -1,0 +1,423 @@
+//! Sampler suite locks: seeded property tests over the per-request
+//! distribution ([`SamplerState::distribution`]) — nucleus mass
+//! invariant, temp→0 ≡ greedy, repetition-penalty monotonicity,
+//! logit-bias ban exclusion, top-k support — plus engine-level seeded
+//! determinism: the same seeded request produces the same token stream
+//! whether it runs solo, batched, flat, paged, or preempted-and-resumed
+//! mid-stream.  The PJRT variant is artifacts-gated (skips cleanly).
+
+use std::sync::Arc;
+
+use rrs::coordinator::{
+    Coordinator, RequestOptions, RustServeEngine, SamplerState, SamplingParams,
+    SchedulerConfig,
+};
+use rrs::kvpool::PagedEngine;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::util::proptest::{check, Config};
+use rrs::util::rng::Pcg;
+
+const V: usize = 64;
+
+fn rand_logits(rng: &mut Pcg, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * 2.0).collect()
+}
+
+fn rand_token(rng: &mut Pcg, n: usize) -> u32 {
+    ((rng.uniform() * n as f32) as usize).min(n - 1) as u32
+}
+
+/// Reference softmax over `logits / temp` (NaN treated as banned).
+fn ref_softmax(logits: &[f32], temp: f32) -> Vec<f32> {
+    let scaled: Vec<f32> = logits
+        .iter()
+        .map(|&l| if l.is_nan() { f32::NEG_INFINITY } else { l / temp })
+        .collect();
+    let m = scaled.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = scaled.iter().map(|&l| (l - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+fn ref_argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if !l.is_nan() && l > best_v {
+            best = i;
+            best_v = l;
+        }
+    }
+    best as u32
+}
+
+// ---------------------------------------------------------------- properties
+
+#[test]
+fn prop_zero_temperature_is_greedy() {
+    check("temp0-greedy", Config::default(), |rng, case| {
+        let logits = rand_logits(rng, V);
+        // temp 0 must collapse to argmax no matter what the other knobs
+        // or the seed say
+        let p = SamplingParams {
+            temperature: 0.0,
+            top_k: 1 + case % 16,
+            top_p: 0.25 + 0.75 * rng.uniform(),
+            seed: Some(case as u64),
+            ..Default::default()
+        };
+        let mut st = SamplerState::new(p, case as u64, &[]);
+        let d = st.distribution(&logits);
+        if d.len() != 1 {
+            return Err(format!("greedy support {} != 1", d.len()));
+        }
+        if d[0].0 != ref_argmax(&logits) {
+            return Err(format!("greedy picked {} not argmax", d[0].0));
+        }
+        let t = st.sample(&logits);
+        if t != ref_argmax(&logits) {
+            return Err(format!("sample {t} != argmax"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nucleus_mass_invariant() {
+    // the kept set is the smallest probability-descending prefix with
+    // mass >= top_p, and the returned probabilities renormalize to 1
+    check("nucleus-mass", Config { cases: 128, ..Default::default() }, |rng, _| {
+        let logits = rand_logits(rng, V);
+        let temp = 0.25 + 1.75 * rng.uniform();
+        let top_p = (rng.uniform() * 0.98 + 0.01).min(1.0);
+        let p = SamplingParams { temperature: temp, top_p, ..Default::default() };
+        let st = SamplerState::new(p, 1, &[]);
+        let d = st.distribution(&logits);
+        let sum: f32 = d.iter().map(|c| c.1).sum();
+        if (sum - 1.0).abs() > 1e-3 {
+            return Err(format!("renormalized mass {sum} != 1"));
+        }
+        for w in d.windows(2) {
+            if w[1].1 > w[0].1 + 1e-6 {
+                return Err("nucleus candidates not probability-descending".into());
+            }
+        }
+        let pref = ref_softmax(&logits, temp);
+        let kept_mass: f32 = d.iter().map(|&(t, _)| pref[t as usize]).sum();
+        if kept_mass < top_p - 1e-4 {
+            return Err(format!("kept mass {kept_mass} < top_p {top_p}"));
+        }
+        // minimality: dropping the least-probable kept candidate must
+        // fall below top_p (otherwise the nucleus was not smallest)
+        if d.len() > 1 {
+            let smallest = d
+                .iter()
+                .map(|&(t, _)| pref[t as usize])
+                .fold(f32::INFINITY, f32::min);
+            if kept_mass - smallest >= top_p + 1e-4 {
+                return Err(format!(
+                    "nucleus not minimal: {} candidates, mass {kept_mass}, \
+                     smallest {smallest}, top_p {top_p}",
+                    d.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_top_k_support_is_the_k_largest() {
+    check("topk-support", Config::default(), |rng, case| {
+        let mut logits = rand_logits(rng, V);
+        // NaN logits are banned, never sampled, never in the support
+        logits[case % V] = f32::NAN;
+        let k = 1 + case % 16;
+        let p = SamplingParams { temperature: 1.0, top_k: k, ..Default::default() };
+        let st = SamplerState::new(p, 1, &[]);
+        let d = st.distribution(&logits);
+        if d.len() > k {
+            return Err(format!("support {} > k {k}", d.len()));
+        }
+        let kept: Vec<u32> = d.iter().map(|c| c.0).collect();
+        if kept.iter().any(|&t| logits[t as usize].is_nan()) {
+            return Err("NaN logit in support".into());
+        }
+        let min_kept = kept
+            .iter()
+            .map(|&t| logits[t as usize])
+            .fold(f32::INFINITY, f32::min);
+        let max_dropped = (0..V)
+            .filter(|i| !kept.contains(&(*i as u32)) && !logits[*i].is_nan())
+            .map(|i| logits[i])
+            .fold(f32::NEG_INFINITY, f32::max);
+        if d.len() == k && max_dropped > min_kept {
+            return Err(format!(
+                "dropped logit {max_dropped} above kept {min_kept}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_repetition_penalty_is_monotone() {
+    // a token already in the history can only get less probable as the
+    // penalty grows (positive logits divided, negative multiplied)
+    check("rep-penalty-monotone", Config::default(), |rng, _| {
+        let logits = rand_logits(rng, V);
+        let h = rand_token(rng, V);
+        let r1 = 1.0 + rng.uniform();
+        let r2 = r1 + 0.25 + rng.uniform();
+        let prob_of = |r: f32| -> f32 {
+            let p = SamplingParams {
+                temperature: 1.0,
+                repetition_penalty: r,
+                ..Default::default()
+            };
+            let st = SamplerState::new(p, 1, &[h]);
+            st.distribution(&logits)
+                .iter()
+                .find(|&&(t, _)| t == h)
+                .map(|c| c.1)
+                .unwrap_or(0.0)
+        };
+        let (p0, p1, p2) = (prob_of(1.0), prob_of(r1), prob_of(r2));
+        if p1 > p0 + 1e-6 || p2 > p1 + 1e-6 {
+            return Err(format!(
+                "penalty not monotone for token {h}: {p0} -> {p1} (r {r1}) \
+                 -> {p2} (r {r2})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_banned_tokens_never_sampled() {
+    check("ban-exclusion", Config::default(), |rng, case| {
+        let mut logits = rand_logits(rng, V);
+        let banned: Vec<u32> = (0..6).map(|_| rand_token(rng, V)).collect();
+        // make a banned token the argmax so exclusion is load-bearing
+        logits[banned[0] as usize] = 50.0;
+        let p = SamplingParams {
+            temperature: 0.1 + 1.4 * rng.uniform(),
+            top_k: (case % 2) * 12, // alternate top-k off / 12
+            logit_bias: banned
+                .iter()
+                .map(|&t| (t, rrs::coordinator::sampling::BAN_BIAS))
+                .collect(),
+            seed: Some(case as u64),
+            ..Default::default()
+        };
+        let mut st = SamplerState::new(p, 1, &[]);
+        if st.distribution(&logits).iter().any(|&(t, _)| banned.contains(&t)) {
+            return Err("banned token in distribution support".into());
+        }
+        for _ in 0..20 {
+            let t = st.sample(&logits);
+            if banned.contains(&t) {
+                return Err(format!("sampled banned token {t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seeded_replay_is_exact() {
+    // the stream is a pure function of (logits, params, seed): replaying
+    // with a different request id and batch position changes nothing
+    check("seeded-replay", Config { cases: 32, ..Default::default() }, |rng, case| {
+        let p = SamplingParams {
+            temperature: 0.5 + rng.uniform(),
+            top_k: 8 + case % 24,
+            top_p: 0.8 + 0.2 * rng.uniform(),
+            repetition_penalty: 1.1,
+            seed: Some(0xabc0 + case as u64),
+            ..Default::default()
+        };
+        let mut a = SamplerState::new(p.clone(), 7, &[1, 2]);
+        let mut b = SamplerState::new(p, 99_999, &[1, 2]);
+        for step in 0..24 {
+            let logits = rand_logits(rng, V);
+            let (x, y) = (a.sample(&logits), b.sample(&logits));
+            if x != y {
+                return Err(format!("step {step}: {x} != {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- engine-level determinism
+
+fn tiny_model(method: Method, scheme: Scheme) -> QuantModel {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 53 + 7) % 256).collect();
+    let ecfg = EngineConfig {
+        method,
+        scheme,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap()
+}
+
+fn seeded_opts(seed: u64, max_new_tokens: usize) -> RequestOptions {
+    RequestOptions {
+        max_new_tokens,
+        params: SamplingParams {
+            temperature: 0.9,
+            top_k: 20,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            seed: Some(seed),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn seeded_stream_identical_flat_vs_paged() {
+    let flat = Coordinator::start(
+        RustServeEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4)),
+        SchedulerConfig::default(),
+    );
+    let paged = Coordinator::start(
+        PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
+        SchedulerConfig::default(),
+    );
+    let prompt: Vec<u32> = vec![9, 77, 140, 3, 52];
+    let a = flat.generate_opts(prompt.clone(), seeded_opts(1234, 12)).unwrap();
+    let a2 = flat.generate_opts(prompt.clone(), seeded_opts(1234, 12)).unwrap();
+    let b = paged.generate_opts(prompt, seeded_opts(1234, 12)).unwrap();
+    assert_eq!(a.tokens, a2.tokens, "flat replay diverged");
+    assert_eq!(a.tokens, b.tokens, "paged engine diverged from flat");
+    flat.shutdown();
+    paged.shutdown();
+}
+
+#[test]
+fn seeded_stream_identical_solo_vs_batched() {
+    // same prompt + seed must sample the same stream whether it runs
+    // alone or interleaved with other sampled requests (row-local quant
+    // variant, and every lane owns a private RNG stream)
+    let coord = Arc::new(Coordinator::start(
+        RustServeEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV16)),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ));
+    let solo = coord
+        .generate_opts(vec![7, 8, 9], seeded_opts(777, 10))
+        .unwrap();
+    let mut handles = Vec::new();
+    for i in 0..4u32 {
+        let c = coord.clone();
+        let (prompt, seed) = if i == 0 {
+            (vec![7, 8, 9], 777)
+        } else {
+            (vec![40 + i, 50, 60], 1000 + i as u64)
+        };
+        handles.push(std::thread::spawn(move || {
+            (i, c.generate_opts(prompt, seeded_opts(seed, 10)).unwrap())
+        }));
+    }
+    for h in handles {
+        let (i, resp) = h.join().unwrap();
+        if i == 0 {
+            assert_eq!(resp.tokens, solo.tokens, "batching changed the stream");
+        }
+    }
+}
+
+#[test]
+fn seeded_stream_survives_preemption() {
+    // a 7-block pool cannot hold both growing sequences: one is
+    // preempted (blocks released) and re-prefilled later.  The preserved
+    // SamplerState + bit-identical re-prefill must continue the exact
+    // stream an unpressured pool produces.
+    let reference = Coordinator::start(
+        PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
+        SchedulerConfig::default(),
+    );
+    let prompts: Vec<Vec<u32>> = (0..2u32)
+        .map(|i| (0..16u32).map(|j| (j * 17 + i * 101 + 1) % 256).collect())
+        .collect();
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            reference
+                .generate_opts(p.clone(), seeded_opts(11 + i as u64, 24))
+                .unwrap()
+                .tokens
+        })
+        .collect();
+    reference.shutdown();
+
+    let coord = Arc::new(Coordinator::start(
+        PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 7, 8),
+        SchedulerConfig { max_batch: 2, queue_capacity: 16, ..Default::default() },
+    ));
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let c = coord.clone();
+        let p = p.clone();
+        handles.push(std::thread::spawn(move || {
+            (i, c.generate_opts(p, seeded_opts(11 + i as u64, 24)).unwrap())
+        }));
+    }
+    for h in handles {
+        let (i, resp) = h.join().unwrap();
+        assert_eq!(resp.tokens.len(), 24);
+        assert_eq!(resp.tokens, want[i], "preemption changed request {i}'s stream");
+    }
+    assert!(
+        coord
+            .metrics
+            .preemptions
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1,
+        "pool never preempted: the property was not exercised"
+    );
+}
+
+// ----------------------------------------------------- PJRT (artifacts-gated)
+
+fn artifacts_root() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(artifacts_root()).join("manifest.json").exists()
+}
+
+#[test]
+fn pjrt_paged_seeded_stream_replays() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    use rrs::runtime::PagedPjrtEngine;
+    let prompt: Vec<u32> = vec![97, 114, 108, 111, 32, 105, 115];
+    let run = || {
+        let engine = PagedPjrtEngine::new(artifacts_root(), "fp", 64, 4).unwrap();
+        let coord = Coordinator::start(
+            engine,
+            SchedulerConfig { max_batch: 2, ..Default::default() },
+        );
+        let resp = coord
+            .generate_opts(prompt.clone(), seeded_opts(4242, 8))
+            .unwrap();
+        coord.shutdown();
+        resp.tokens
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), 8);
+    assert_eq!(a, b, "PJRT paged backend seeded stream diverged");
+}

@@ -1,0 +1,435 @@
+//! End-to-end streaming over the live TCP front-end: token frames agree
+//! with the terminal response, stop sequences span token boundaries,
+//! stop ids win the boundary race against max_tokens, malformed params
+//! get error replies without killing the connection, and a mid-stream
+//! disconnect cancels the lane and frees its KV blocks.  Runs entirely
+//! on a small random model — no artifacts needed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use rrs::coordinator::{
+    server, Coordinator, RequestOptions, RustServeEngine, SamplingParams,
+    SchedulerConfig,
+};
+use rrs::kvpool::PagedEngine;
+use rrs::model::sampler::Sampling;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::quant::{Method, Scheme};
+use rrs::util::json::Json;
+
+fn tiny_model() -> QuantModel {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let calib: Vec<u32> = (0..128u32).map(|i| (i * 53 + 7) % 256).collect();
+    let ecfg = EngineConfig {
+        method: Method::Rtn,
+        scheme: Scheme::A4W4KV4,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    QuantModel::prepare(&w, &cfg, &ecfg, Some(&calib), None).unwrap()
+}
+
+fn flat_server() -> (u16, JoinHandle<()>, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::start(
+        RustServeEngine::new(tiny_model()),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ));
+    let (port, handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
+    (port, handle, coord)
+}
+
+fn paged_server(blocks: usize) -> (u16, JoinHandle<()>, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::start(
+        PagedEngine::new(tiny_model(), blocks, 8),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ));
+    let (port, handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
+    (port, handle, coord)
+}
+
+/// One newline-delimited-JSON protocol connection.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(port: u16) -> Client {
+        let mut last = None;
+        for _ in 0..40 {
+            match TcpStream::connect(("127.0.0.1", port)) {
+                Ok(s) => {
+                    let reader = BufReader::new(s.try_clone().unwrap());
+                    return Client { stream: s, reader };
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+        panic!("could not connect to 127.0.0.1:{port}: {last:?}");
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad frame {buf:?}: {e}"))
+    }
+
+    fn req(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+
+    /// Read frames until the one with `"done": true`; returns
+    /// (token_frames, done_frame).
+    fn recv_stream(&mut self) -> (Vec<Json>, Json) {
+        let mut frames = Vec::new();
+        loop {
+            let f = self.recv();
+            assert!(f.get("error").is_none(), "error frame: {}", f.dump());
+            if f.get("done").and_then(Json::as_bool) == Some(true) {
+                return (frames, f);
+            }
+            frames.push(f);
+        }
+    }
+}
+
+fn shutdown_server(port: u16, handle: JoinHandle<()>) {
+    let mut c = Client::connect(port);
+    let ok = c.req(r#"{"cmd": "shutdown"}"#);
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+    // one extra connection unblocks the accept loop
+    let _ = TcpStream::connect(("127.0.0.1", port));
+    handle.join().unwrap();
+}
+
+/// Poll `{"cmd": "metrics"}` until `pred` holds (or panic at timeout).
+fn wait_for_metrics(
+    port: u16,
+    what: &str,
+    timeout: Duration,
+    pred: impl Fn(&Json) -> bool,
+) -> Json {
+    let mut c = Client::connect(port);
+    let t0 = Instant::now();
+    loop {
+        let snap = c.req(r#"{"cmd": "metrics"}"#);
+        if pred(&snap) {
+            return snap;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "timed out waiting for {what}; last snapshot: {}",
+            snap.dump()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn stream_frames_agree_with_terminal_response() {
+    let (port, handle, _coord) = flat_server();
+    let mut c = Client::connect(port);
+
+    // free-running greedy: structural invariants on the frame stream
+    c.send(r#"{"prompt": "arlo", "max_tokens": 6, "stream": true}"#);
+    let (frames, done) = c.recv_stream();
+    assert_eq!(frames.len(), 6);
+    let id = done.get("id").unwrap().as_usize().unwrap();
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.get("id").unwrap().as_usize(), Some(id), "{}", f.dump());
+        assert_eq!(f.get("index").unwrap().as_usize(), Some(i), "gap in stream");
+        assert!(f.get("token").unwrap().as_usize().unwrap() < 256);
+    }
+    assert_eq!(done.get("tokens").unwrap().as_usize(), Some(6));
+    assert_eq!(done.get("finish").unwrap().as_str(), Some("max_tokens"));
+
+    // forced-ASCII stream ('q' biased to dominate): the concatenated
+    // frame texts must equal the terminal text byte-for-byte
+    c.send(
+        r#"{"prompt": "ab", "max_tokens": 5, "stream": true,
+            "logit_bias": {"113": 1000000.0}}"#,
+    );
+    let (frames, done) = c.recv_stream();
+    let cat: String = frames
+        .iter()
+        .map(|f| f.get("text").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(cat, "qqqqq");
+    assert_eq!(done.get("text").unwrap().as_str(), Some("qqqqq"));
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn stream_multi_choice_frames_carry_choice() {
+    let (port, handle, _coord) = flat_server();
+    let mut c = Client::connect(port);
+    c.send(
+        r#"{"prompt": "arlo", "max_tokens": 4, "n": 2, "stream": true,
+            "temperature": 1.0, "seed": 9}"#,
+    );
+    let mut done_choices = Vec::new();
+    let mut token_frames = 0usize;
+    while done_choices.len() < 2 {
+        let f = c.recv();
+        assert!(f.get("error").is_none(), "{}", f.dump());
+        let choice = f.get("choice").unwrap().as_usize().unwrap();
+        if f.get("done").and_then(Json::as_bool) == Some(true) {
+            done_choices.push(choice);
+        } else {
+            token_frames += 1;
+        }
+    }
+    done_choices.sort_unstable();
+    assert_eq!(done_choices, vec![0, 1]);
+    assert_eq!(token_frames, 8, "4 tokens per choice, every frame streamed");
+
+    // blocking n=2 returns a choices array with per-choice finishes
+    let resp = c.req(
+        r#"{"prompt": "arlo", "max_tokens": 4, "n": 2,
+            "temperature": 1.0, "seed": 9}"#,
+    );
+    let choices = resp.get("choices").unwrap().as_arr().unwrap();
+    assert_eq!(choices.len(), 2);
+    for ch in choices {
+        assert_eq!(ch.get("tokens").unwrap().as_usize(), Some(4));
+    }
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn stop_sequence_spans_token_boundaries() {
+    let (port, handle, coord) = flat_server();
+    let mut c = Client::connect(port);
+
+    // byte-level tokenizer: the two-byte stop string "qq" can only match
+    // across two token boundaries.  Bias forces greedy onto 'q'.
+    let resp = c.req(
+        r#"{"prompt": "ab", "max_tokens": 16, "stop": ["qq"],
+            "logit_bias": {"113": 1000000.0}}"#,
+    );
+    assert_eq!(resp.get("finish").unwrap().as_str(), Some("stop_seq"));
+    assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(2));
+    assert_eq!(resp.get("text").unwrap().as_str(), Some("qq"));
+
+    // same property on an unforced stream: probe the greedy output, then
+    // stop on a 3-token window starting mid-stream
+    let probe = coord.generate(vec![5, 6, 7], 6, Sampling::Greedy, None).unwrap();
+    let stop_toks = probe.tokens[1..4].to_vec();
+    let resp = coord
+        .generate_opts(
+            vec![5, 6, 7],
+            RequestOptions {
+                max_new_tokens: 16,
+                params: SamplingParams {
+                    stop_sequences: vec![stop_toks],
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(
+        resp.finish_reason,
+        rrs::coordinator::request::FinishReason::StopSequence
+    );
+    assert_eq!(resp.tokens, probe.tokens[..4].to_vec());
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn stop_id_wins_race_against_max_tokens() {
+    let (port, handle, coord) = flat_server();
+    let first = coord
+        .generate(vec![97, 98], 1, Sampling::Greedy, None)
+        .unwrap()
+        .tokens[0];
+    // both stop conditions fire on the same (first) token: the stop id
+    // must win the boundary race, for streaming and blocking alike
+    let mut c = Client::connect(port);
+    let resp = c.req(&format!(
+        r#"{{"prompt": "ab", "max_tokens": 1, "stop_token_ids": [{first}]}}"#
+    ));
+    assert_eq!(resp.get("finish").unwrap().as_str(), Some("stop"));
+    assert_eq!(resp.get("tokens").unwrap().as_usize(), Some(1));
+
+    let resp = coord
+        .generate_opts(
+            vec![97, 98],
+            RequestOptions {
+                max_new_tokens: 1,
+                params: SamplingParams {
+                    stop_token_ids: vec![first],
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(
+        resp.finish_reason,
+        rrs::coordinator::request::FinishReason::StopToken
+    );
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn malformed_params_get_error_replies() {
+    let (port, handle, _coord) = flat_server();
+    let mut c = Client::connect(port);
+    for bad in [
+        r#"{"prompt": "a", "temperature": "hot"}"#,
+        r#"{"prompt": "a", "top_p": 0.0}"#,
+        r#"{"prompt": "a", "top_k": -1}"#,
+        r#"{"prompt": "a", "logit_bias": [1, 2]}"#,
+        r#"{"prompt": "a", "stop": 5}"#,
+        r#"{"prompt": "a", "n": 0}"#,
+        r#"{"prompt": "a", "deadline_ms": -20}"#,
+        r#"{"prompt": "a", "stream": true, "seed": 1.5}"#,
+        r#"not json"#,
+    ] {
+        let resp = c.req(bad);
+        assert!(
+            resp.get("error").is_some(),
+            "no error for {bad}: {}",
+            resp.dump()
+        );
+    }
+    // the connection survives every rejection
+    let ok = c.req(r#"{"prompt": "a", "max_tokens": 2}"#);
+    assert_eq!(ok.get("tokens").unwrap().as_usize(), Some(2));
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn disconnect_mid_stream_cancels_lane_and_frees_blocks() {
+    let (port, handle, coord) = paged_server(24);
+    let mut c = Client::connect(port);
+    c.send(
+        r#"{"prompt": "abcd", "max_tokens": 80, "stream": true,
+            "temperature": 0.7, "seed": 3}"#,
+    );
+    // take two frames, then vanish mid-stream
+    let _ = c.recv();
+    let _ = c.recv();
+    c.stream.shutdown(Shutdown::Both).unwrap();
+    drop(c);
+
+    // the scheduler must notice (failed frame write -> abort -> retire
+    // as cancelled) and the pool must drain back to zero used blocks
+    let snap = wait_for_metrics(
+        port,
+        "disconnect cancellation + block reclaim",
+        Duration::from_secs(30),
+        |snap| {
+            let cancelled =
+                snap.get("cancelled").and_then(Json::as_usize).unwrap_or(0);
+            let used = snap
+                .get("kv_pool")
+                .and_then(|p| p.get("blocks_used"))
+                .and_then(Json::as_usize)
+                .unwrap_or(usize::MAX);
+            cancelled >= 1 && used == 0
+        },
+    );
+    assert_eq!(snap.get("completed").unwrap().as_usize(), Some(0));
+    assert!(coord.metrics.cancelled.load(Ordering::Relaxed) >= 1);
+
+    // the lifecycle trace recorded the abort
+    let mut c = Client::connect(port);
+    let doc = c.req(r#"{"cmd": "trace", "format": "jsonl"}"#);
+    let body = doc.get("body").unwrap().as_str().unwrap();
+    assert!(body.contains("abort"), "no abort span in trace:\n{body}");
+    shutdown_server(port, handle);
+}
+
+#[test]
+fn churn_leaves_no_hung_lanes() {
+    let (port, handle, coord) = paged_server(48);
+    let mut joins = Vec::new();
+    for i in 0..16usize {
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(port);
+            match i % 4 {
+                // blocking request, two choices
+                0 => {
+                    let resp = c.req(
+                        r#"{"prompt": "arlo is", "max_tokens": 6, "n": 2,
+                            "temperature": 0.8, "seed": 11}"#,
+                    );
+                    assert!(resp.get("choices").is_some(), "{}", resp.dump());
+                }
+                // streamed to completion
+                1 => {
+                    c.send(
+                        r#"{"prompt": "count: 1 2", "max_tokens": 8,
+                            "stream": true, "temperature": 1.0}"#,
+                    );
+                    let (_, done) = c.recv_stream();
+                    assert_eq!(done.get("tokens").unwrap().as_usize(), Some(8));
+                }
+                // dropper: reads one frame, disconnects
+                2 => {
+                    c.send(
+                        r#"{"prompt": "the fox", "max_tokens": 64,
+                            "stream": true, "temperature": 1.0}"#,
+                    );
+                    let _ = c.recv();
+                    let _ = c.stream.shutdown(Shutdown::Both);
+                }
+                // tight deadline: finishes as deadline or completes
+                _ => {
+                    let resp = c.req(
+                        r#"{"prompt": "senna", "max_tokens": 48,
+                            "deadline_ms": 30}"#,
+                    );
+                    assert!(
+                        resp.get("finish").is_some(),
+                        "{}",
+                        resp.dump()
+                    );
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // every submission must reach a terminal state and every block must
+    // come back — the no-hung-lanes ledger
+    wait_for_metrics(port, "ledger to balance", Duration::from_secs(30), |snap| {
+        let n = |k: &str| snap.get(k).and_then(Json::as_usize).unwrap_or(0);
+        let used = snap
+            .get("kv_pool")
+            .and_then(|p| p.get("blocks_used"))
+            .and_then(Json::as_usize)
+            .unwrap_or(usize::MAX);
+        n("submitted") > 0
+            && n("submitted")
+                == n("completed")
+                    + n("cancelled")
+                    + n("aborted")
+                    + n("deadline_missed")
+                    + n("rejected")
+            && used == 0
+    });
+    assert!(coord.metrics.completed.load(Ordering::Relaxed) >= 1);
+    shutdown_server(port, handle);
+}
