@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Diff freshly-written BENCH_*.json results against the committed
+baselines (``git show HEAD:<file>``).
+
+The committed files at the repo root are the perf trajectory. CI runner
+throughput is noisy, so numeric drift is *reported*, never failed; hard
+failures are structural only:
+
+* a fresh results file is missing entirely (the bench did not run), or
+* a numeric key present in the (non-pending) baseline vanished from the
+  fresh results (a metric silently stopped being measured).
+
+Baselines carrying ``"pending": true`` are placeholders committed before
+any provisioned run recorded real numbers; they auto-accept the fresh
+results, which should then be committed to replace them.
+"""
+
+import json
+import subprocess
+import sys
+
+DEFAULT_FILES = [
+    "BENCH_decode.json",
+    "BENCH_gemm.json",
+    "BENCH_obs.json",
+    "BENCH_serving.json",
+    "BENCH_matrix.json",
+]
+
+
+def committed(path):
+    p = subprocess.run(
+        ["git", "show", f"HEAD:{path}"], capture_output=True, text=True
+    )
+    if p.returncode != 0:
+        return None
+    try:
+        return json.loads(p.stdout)
+    except ValueError:
+        return None
+
+
+def numeric_leaves(prefix, obj, out):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            numeric_leaves(f"{prefix}.{k}" if prefix else k, v, out)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            numeric_leaves(f"{prefix}[{i}]", v, out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+
+
+def diff_one(path, failures):
+    try:
+        with open(path) as f:
+            fresh = json.load(f)
+    except OSError:
+        failures.append(f"{path}: fresh results missing (bench did not write it)")
+        return
+    except ValueError as e:
+        failures.append(f"{path}: fresh results unparseable: {e}")
+        return
+    base = committed(path)
+    if base is None:
+        print(f"{path}: no committed baseline; accepting fresh results")
+        return
+    if base.get("pending"):
+        print(f"{path}: baseline pending; accepting fresh results as the first real run")
+        return
+    b_nums, f_nums = {}, {}
+    numeric_leaves("", base, b_nums)
+    numeric_leaves("", fresh, f_nums)
+    missing = sorted(set(b_nums) - set(f_nums))
+    if missing:
+        failures.append(
+            f"{path}: metrics vanished vs baseline: {', '.join(missing[:10])}"
+        )
+        return
+    drifts = []
+    for k in sorted(set(b_nums) & set(f_nums)):
+        if b_nums[k] == 0:
+            continue
+        delta = 100.0 * (f_nums[k] - b_nums[k]) / abs(b_nums[k])
+        if abs(delta) >= 5.0:
+            drifts.append(f"{k}: {b_nums[k]:g} -> {f_nums[k]:g} ({delta:+.1f}%)")
+    tag = f"{len(drifts)} metrics drifted >= 5%" if drifts else "within 5% everywhere"
+    print(f"{path}: ok vs baseline ({tag})")
+    for d in drifts[:20]:
+        print(f"    {d}")
+
+
+def main(argv):
+    paths = argv or DEFAULT_FILES
+    failures = []
+    for path in paths:
+        diff_one(path, failures)
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

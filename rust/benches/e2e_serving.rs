@@ -48,6 +48,7 @@ fn bench_config(
         kv_group: 128,
         alpha: 0.5,
         gptq: method != Method::Rtn && method != Method::Fp,
+        recipe: None,
     };
     let model = QuantModel::prepare(w, mcfg, &ecfg, Some(calib), None).unwrap();
     let label = ecfg.label();

@@ -165,9 +165,9 @@ fn main() {
         ("autotuned", ks.autotuned.into()),
         ("shapes", Json::Arr(vec![shape_json(&decode), shape_json(&prefill)])),
     ]);
-    let path = "BENCH_gemm.json";
-    match std::fs::write(path, j.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("could not write {path}: {e}"),
+    let path = rrs::util::bench::bench_output_path("BENCH_gemm.json");
+    match std::fs::write(&path, j.dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
     }
 }

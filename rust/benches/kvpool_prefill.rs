@@ -252,10 +252,10 @@ fn write_bench_decode_json(
         ),
         ("pjrt", pjrt_json),
     ]);
-    let path = "BENCH_decode.json";
-    match std::fs::write(path, j.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("could not write {path}: {e}"),
+    let path = rrs::util::bench::bench_output_path("BENCH_decode.json");
+    match std::fs::write(&path, j.dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
     }
 }
 

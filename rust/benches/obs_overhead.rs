@@ -62,6 +62,7 @@ fn main() {
         kv_group: 32,
         alpha: 0.5,
         gptq: false,
+        recipe: None,
     };
     let model = QuantModel::prepare(&w, &mcfg, &ecfg, None, None).unwrap();
     println!("obs overhead bench: {BATCH} seqs x {STEPS} decode steps (RRS A4W4)");
@@ -106,9 +107,9 @@ fn main() {
         ("sampled1_overhead_pct", (pct(sampled1) as f64).into()),
         ("probes_recorded", (probes as usize).into()),
     ]);
-    let path = "BENCH_obs.json";
-    match std::fs::write(path, j.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("could not write {path}: {e}"),
+    let path = rrs::util::bench::bench_output_path("BENCH_obs.json");
+    match std::fs::write(&path, j.dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
     }
 }

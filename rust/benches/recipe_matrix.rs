@@ -1,0 +1,56 @@
+//! Recipe-matrix ablation bench: sweep every composable quantization
+//! recipe in [`QuantRecipe::matrix`] and record perplexity + decode
+//! throughput per cell, writing `BENCH_matrix.json` at the repository
+//! root (same payload the `rrs harness matrix` command emits on trained
+//! artifacts; here the model is the small random stand-in, so the file
+//! is tagged `smoke`).
+//!
+//! Run: `cargo bench --bench recipe_matrix`
+
+use std::time::Instant;
+
+use rrs::harness::matrix::{to_json, MatrixCell};
+use rrs::model::{EngineConfig, KvCache, ModelConfig, QuantModel, Weights};
+use rrs::quant::QuantRecipe;
+
+const STEPS: usize = 100;
+
+fn main() {
+    let mcfg = ModelConfig { n_layers: 2, max_seq: 256, ..Default::default() };
+    let w = Weights::random(&mcfg, 42);
+    let calib: Vec<u32> = (0..512u32).map(|i| (i * 53 + 7) % 256).collect();
+    let text = "the quick brown fox jumps over the lazy dog. ".repeat(64);
+    println!("recipe matrix bench: {} cells x {STEPS} decode steps", QuantRecipe::matrix().len());
+
+    let mut cells = Vec::new();
+    for recipe in QuantRecipe::matrix() {
+        let ecfg = EngineConfig::from_recipe(recipe);
+        let model = QuantModel::prepare(&w, &mcfg, &ecfg, Some(&calib), None).unwrap();
+        let ppl = rrs::eval::perplexity(&model, &text, 64, 4);
+        let prompt: Vec<u32> = (1u32..17).collect();
+        let mut cache = KvCache::new(&mcfg, &ecfg);
+        model.forward_full(&prompt, Some(&mut cache));
+        let mut tok = 3u32;
+        let mut step = |cache: &mut KvCache, tok: &mut u32| {
+            let mut batch = [(&mut *cache, *tok)];
+            let logits = model.decode_batch(&mut batch);
+            *tok = (logits.row(0)[0].abs() as u32 % 250) + 1;
+        };
+        for _ in 0..10 {
+            step(&mut cache, &mut tok);
+        }
+        let t0 = Instant::now();
+        for _ in 0..STEPS {
+            step(&mut cache, &mut tok);
+        }
+        let tps = STEPS as f32 / t0.elapsed().as_secs_f32().max(1e-9);
+        println!("  {:<24} ppl {:>10.2}  {:>8.0} tok/s", recipe.label(), ppl, tps);
+        cells.push(MatrixCell { recipe, ppl, qa_avg: 0.0, decode_tps: tps });
+    }
+
+    let path = rrs::util::bench::bench_output_path("BENCH_matrix.json");
+    match std::fs::write(&path, to_json(&cells, true).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+}

@@ -282,10 +282,10 @@ fn main() {
         ),
         ("no_hung_lanes", balanced.into()),
     ]);
-    let path = "BENCH_serving.json";
-    match std::fs::write(path, j.dump()) {
-        Ok(()) => println!("wrote {path}"),
-        Err(e) => println!("could not write {path}: {e}"),
+    let path = rrs::util::bench::bench_output_path("BENCH_serving.json");
+    match std::fs::write(&path, j.dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
     }
 
     // shut the server down before the final verdict so the process exits

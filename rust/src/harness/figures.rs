@@ -80,6 +80,7 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
                 kv_group: 128,
                 alpha: 0.5,
                 gptq: method == Method::SmoothQuant,
+                recipe: None,
             };
             let ppl = ctx.ppl(&profile, &ecfg)?;
             eprintln!("fig3: {label} {} -> {}", scheme.label(), format_ppl(ppl));

@@ -1,0 +1,154 @@
+//! Strategy-matrix ablation: sweep the composable-recipe grid
+//! ([`QuantRecipe::matrix`]) and emit one comparable accuracy-vs-speed
+//! report per recipe — perplexity, zero-shot QA accuracy, and decode
+//! throughput — as `reports/matrix.{md,csv}` plus a machine-readable
+//! `BENCH_matrix.json` at the repository root (CI diffs it against the
+//! committed baseline and uploads it as the ablation artifact).
+
+use anyhow::Result;
+
+use crate::eval::perplexity::format_ppl;
+use crate::eval::qa::load_tasks;
+use crate::model::weights::OutlierProfile;
+use crate::model::{EngineConfig, KvCache, QuantModel};
+use crate::quant::{QuantRecipe, RotationKind, Smoothing};
+use crate::util::bench::bench_output_path;
+use crate::util::json::{obj, Json};
+
+use super::{Ctx, MdTable};
+
+/// One measured cell of the strategy matrix.
+pub struct MatrixCell {
+    pub recipe: QuantRecipe,
+    pub ppl: f32,
+    pub qa_avg: f32,
+    pub decode_tps: f32,
+}
+
+fn smoothing_name(s: Smoothing) -> &'static str {
+    match s {
+        Smoothing::None => "none",
+        Smoothing::Runtime => "runtime",
+        Smoothing::Calibrated => "calibrated",
+    }
+}
+
+fn rotation_name(r: RotationKind) -> &'static str {
+    match r {
+        RotationKind::None => "none",
+        RotationKind::Hadamard => "hadamard",
+        RotationKind::Dense => "dense",
+    }
+}
+
+/// Greedy-ish single-sequence decode throughput (tokens/s) after a short
+/// prefill; enough steps to amortize cache effects without turning the
+/// ablation into a benchmark suite.
+fn decode_tps(model: &QuantModel, ctx: &Ctx, ecfg: &EngineConfig, steps: usize) -> f32 {
+    let prompt: Vec<u32> = (1u32..17).collect();
+    let mut cache = KvCache::new(&ctx.mcfg, ecfg);
+    model.forward_full(&prompt, Some(&mut cache));
+    let mut tok = 1u32;
+    let mut step = |cache: &mut KvCache, tok: &mut u32| {
+        let mut batch = [(&mut *cache, *tok)];
+        let logits = model.decode_batch(&mut batch);
+        *tok = (logits.row(0)[0].abs() as u32 % 250) + 1;
+    };
+    for _ in 0..4 {
+        step(&mut cache, &mut tok);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        step(&mut cache, &mut tok);
+    }
+    steps as f32 / t0.elapsed().as_secs_f32().max(1e-9)
+}
+
+/// Run every recipe in the ablation grid over the headline outlier
+/// profile and collect (ppl, QA accuracy, decode tok/s) per cell.
+pub fn measure(ctx: &Ctx) -> Result<Vec<MatrixCell>> {
+    let profile = OutlierProfile::builtin("llama3-like").unwrap();
+    let tasks = load_tasks(&ctx.artifacts.qa_tasks_json()?)?;
+    let qa_limit = if ctx.fast { 8 } else { 50 };
+    let steps = if ctx.fast { 16 } else { 64 };
+    let mut cells = Vec::new();
+    for recipe in QuantRecipe::matrix() {
+        let ecfg = EngineConfig::from_recipe(recipe);
+        let model = ctx.prepare_model(&profile, &ecfg)?;
+        let ppl =
+            crate::eval::perplexity(&model, &ctx.val_text, 96, ctx.ppl_windows());
+        let (_, qa_avg) = crate::eval::qa::score_tasks(&model, &tasks, qa_limit);
+        let tps = decode_tps(&model, ctx, &ecfg, steps);
+        eprintln!(
+            "matrix: {} -> ppl {} qa {:.1}% {:.0} tok/s",
+            recipe.label(),
+            format_ppl(ppl),
+            qa_avg,
+            tps
+        );
+        cells.push(MatrixCell { recipe, ppl, qa_avg, decode_tps: tps });
+    }
+    Ok(cells)
+}
+
+/// Serialize measured cells as the `BENCH_matrix.json` payload.
+/// `smoke` marks runs on tiny random models (the CI scenario-matrix
+/// job) as opposed to the trained-artifact harness sweep.
+pub fn to_json(cells: &[MatrixCell], smoke: bool) -> Json {
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("recipe", c.recipe.label().as_str().into()),
+                ("smoothing", smoothing_name(c.recipe.smoothing).into()),
+                ("rotation", rotation_name(c.recipe.rotation).into()),
+                ("a_bits", (c.recipe.a_bits as usize).into()),
+                ("w_bits", (c.recipe.w_bits as usize).into()),
+                ("kv_bits", (c.recipe.kv_bits as usize).into()),
+                ("group", c.recipe.group.into()),
+                ("gptq", c.recipe.gptq.into()),
+                ("ppl", (c.ppl as f64).into()),
+                ("qa_avg_pct", (c.qa_avg as f64).into()),
+                ("decode_tps", (c.decode_tps as f64).into()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", "recipe_matrix".into()),
+        ("pending", false.into()),
+        ("smoke", smoke.into()),
+        ("cells", Json::Arr(rows)),
+    ])
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let cells = measure(ctx)?;
+    let mut table = MdTable::new(&[
+        "Recipe",
+        "Smooth",
+        "Rotation",
+        "A-W-KV",
+        "PPL",
+        "QA avg %",
+        "decode tok/s",
+    ]);
+    for c in &cells {
+        table.row(vec![
+            c.recipe.label(),
+            smoothing_name(c.recipe.smoothing).to_string(),
+            rotation_name(c.recipe.rotation).to_string(),
+            format!("{}-{}-{}", c.recipe.a_bits, c.recipe.w_bits, c.recipe.kv_bits),
+            format_ppl(c.ppl),
+            format!("{:.1}", c.qa_avg),
+            format!("{:.0}", c.decode_tps),
+        ]);
+    }
+    println!("\n## Strategy matrix — accuracy vs speed per quant recipe\n");
+    table.print();
+    ctx.write_report("matrix.md", &table.to_markdown())?;
+    ctx.write_report("matrix.csv", &table.to_csv())?;
+    let path = bench_output_path("BENCH_matrix.json");
+    std::fs::write(&path, to_json(&cells, false).dump())?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

@@ -5,6 +5,7 @@
 
 pub mod fig6;
 pub mod figures;
+pub mod matrix;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -186,6 +187,7 @@ pub fn run_all(ctx: &Ctx) -> Result<()> {
     figures::fig7(ctx)?;
     figures::fig8(ctx)?;
     figures::fig9(ctx)?;
+    matrix::run(ctx)?;
     Ok(())
 }
 

@@ -53,6 +53,7 @@ fn ecfg_for(method: Method, scheme: Scheme) -> EngineConfig {
         alpha: 0.5,
         // paper: GPTQ weights everywhere except the RTN row
         gptq: method != Method::Rtn,
+        recipe: None,
     }
 }
 

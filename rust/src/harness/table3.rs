@@ -34,6 +34,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                 kv_group: 128,
                 alpha: 0.5,
                 gptq: true,
+                recipe: None,
             };
             let ppl = ctx.ppl(&profile, &ecfg)?;
             eprintln!("table3: {} {} -> {}", method.name(), pname, format_ppl(ppl));

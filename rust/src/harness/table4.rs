@@ -36,6 +36,7 @@ pub fn run(ctx: &Ctx) -> Result<()> {
                     kv_group: 128,
                     alpha: 0.5,
                     gptq: true,
+                    recipe: None,
                 };
                 let ppl = ctx.ppl(&profile, &ecfg)?;
                 eprintln!("table4: {} {} g={} -> {}", method.name(), pname, g,

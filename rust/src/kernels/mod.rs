@@ -263,6 +263,7 @@ pub fn all_backends() -> Vec<&'static dyn KernelBackend> {
 static FUSED_GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
 static FUSED_GEMM_ROWS: AtomicU64 = AtomicU64::new(0);
 static PER_CHANNEL_CALLS: AtomicU64 = AtomicU64::new(0);
+static W4A8_CALLS: AtomicU64 = AtomicU64::new(0);
 static IGEMM_CALLS: AtomicU64 = AtomicU64::new(0);
 static PROLOGUE_ROWS: AtomicU64 = AtomicU64::new(0);
 static FWHT_ROWS: AtomicU64 = AtomicU64::new(0);
@@ -280,6 +281,8 @@ pub struct KernelStats {
     pub fused_gemm_rows: u64,
     /// Per-channel-epilogue GEMM dispatches.
     pub per_channel_calls: u64,
+    /// W4A8 (INT8 activation × packed INT4 weight) GEMM dispatches.
+    pub w4a8_calls: u64,
     /// Raw packed-igemm dispatches (i32 accumulator output).
     pub igemm_calls: u64,
     /// Activation rows through the fused RRS prologue.
@@ -312,6 +315,7 @@ fn snapshot(r: &Registry) -> KernelStats {
         fused_gemm_calls: FUSED_GEMM_CALLS.load(Ordering::Relaxed),
         fused_gemm_rows: FUSED_GEMM_ROWS.load(Ordering::Relaxed),
         per_channel_calls: PER_CHANNEL_CALLS.load(Ordering::Relaxed),
+        w4a8_calls: W4A8_CALLS.load(Ordering::Relaxed),
         igemm_calls: IGEMM_CALLS.load(Ordering::Relaxed),
         prologue_rows: PROLOGUE_ROWS.load(Ordering::Relaxed),
         fwht_rows: FWHT_ROWS.load(Ordering::Relaxed),
@@ -462,11 +466,49 @@ pub fn gemm_per_channel_packed_with(
     gemm_rs_fused_packed_with(bk, tiles, xq, sx, xq.cols.max(1), &[1.0], b, sw)
 }
 
+/// W4A8 mixed-precision GEMM: full-range INT8 activation codes × packed
+/// INT4 weights, per-token × per-channel scale epilogue.  The i32
+/// accumulator is exact for i8·i4 products at any K that fits memory
+/// (|a·w| ≤ 127·7, ~2^41 headroom at K = 2^31), and the avx2 `pmaddwd`
+/// path widens both operands to i16 before multiplying, so every
+/// backend serves INT8 codes unchanged — the entry point exists so the
+/// recipe layer dispatches it explicitly and metrics can count the
+/// W4A8 hot path separately.  Bit-identity vs the staged INT8 reference
+/// is locked by `rust/tests/kernel_diff.rs`.
+pub fn gemm_w4a8_packed(xq: &MatI8, sx: &[f32], b: &PackedI4, sw: &[f32]) -> Mat {
+    W4A8_CALLS.fetch_add(1, Ordering::Relaxed);
+    let r = registry();
+    gemm_w4a8_packed_with(r.backend, r.tiles, xq, sx, b, sw)
+}
+
+/// Explicit-backend form of [`gemm_w4a8_packed`].
+pub fn gemm_w4a8_packed_with(
+    bk: &dyn KernelBackend,
+    tiles: TileConfig,
+    xq: &MatI8,
+    sx: &[f32],
+    b: &PackedI4,
+    sw: &[f32],
+) -> Mat {
+    gemm_rs_fused_packed_with(bk, tiles, xq, sx, xq.cols.max(1), &[1.0], b, sw)
+}
+
 /// Fused RRS activation prologue on an explicit backend: channel-max
 /// reduction, reorder permutation, group scales, then a fused gather +
 /// smooth + per-token RTN quantize pass per row.  Bit-identical to the
 /// staged [`crate::quant::runtime_smooth::prepare_staged`].
 pub fn rrs_prologue_with(bk: &dyn KernelBackend, x: &Mat, group: usize) -> SmoothedAct {
+    rrs_prologue_with_q(bk, x, group, crate::quant::QMAX)
+}
+
+/// [`rrs_prologue_with`] at an arbitrary symmetric max code (7 = the
+/// INT4 golden path, 127 = the W4A8 activation recipe).
+pub fn rrs_prologue_with_q(
+    bk: &dyn KernelBackend,
+    x: &Mat,
+    group: usize,
+    qmax: f32,
+) -> SmoothedAct {
     let mut s = vec![0.0f32; x.cols];
     bk.colmax_abs(&x.data, x.rows, x.cols, &mut s);
     for v in s.iter_mut() {
@@ -479,9 +521,14 @@ pub fn rrs_prologue_with(bk: &dyn KernelBackend, x: &Mat, group: usize) -> Smoot
     let mut smooth = vec![0.0f32; x.cols];
     for i in 0..x.rows {
         let absmax = bk.smooth_row(x.row(i), &perm, group, &sg, &mut smooth);
-        let sxi = rtn::scale_for(absmax);
+        let sxi = rtn::scale_for_q(absmax, qmax);
         token_scales[i] = sxi;
-        rtn::quantize_row(&smooth, sxi, &mut q.data[i * x.cols..(i + 1) * x.cols]);
+        rtn::quantize_row_q(
+            &smooth,
+            sxi,
+            qmax,
+            &mut q.data[i * x.cols..(i + 1) * x.cols],
+        );
     }
     SmoothedAct { q, token_scales, perm, group_scales: sg, group }
 }
@@ -492,12 +539,18 @@ pub fn rrs_prologue_with(bk: &dyn KernelBackend, x: &Mat, group: usize) -> Smoot
 /// point: the pre-smoothing activation and its INT4 codes are both in
 /// hand here, so the probe costs one extra pass only on sampled calls.
 pub fn rrs_prologue(x: &Mat, group: usize) -> SmoothedAct {
+    rrs_prologue_q(x, group, crate::quant::QMAX)
+}
+
+/// [`rrs_prologue`] at an arbitrary max code (the recipe layer's entry;
+/// the health probe clips against the same code range it quantized to).
+pub fn rrs_prologue_q(x: &Mat, group: usize, qmax: f32) -> SmoothedAct {
     PROLOGUE_ROWS.fetch_add(x.rows as u64, Ordering::Relaxed);
     let r = registry();
-    let sa = rrs_prologue_with(r.backend, x, group);
+    let sa = rrs_prologue_with_q(r.backend, x, group, qmax);
     if crate::obs::health::sampled() {
         let layer = crate::obs::current_layer_or("rrs_prologue");
-        crate::obs::health::probe_quant(&layer, x, &sa.q);
+        crate::obs::health::probe_quant_q(&layer, x, &sa.q, qmax);
     }
     sa
 }
@@ -585,6 +638,37 @@ mod tests {
         // staged reference epilogue
         for i in 0..3 {
             for j in 0..5 {
+                let acc = crate::linalg::igemm::idot(xq.row(i), wq.row(j));
+                let want = acc as f32 * sx[i] * sw[j];
+                assert_eq!(y.at(i, j).to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn w4a8_full_range_codes_match_staged_reference() {
+        // INT8 activation codes span the full [-127, 127] range; the
+        // packed-weight igemm must stay exact (no i16 overflow) and the
+        // epilogue bit-identical to the staged form
+        let mut rng = Pcg::new(5);
+        let xq = MatI8::from_vec(
+            4,
+            48,
+            (0..192).map(|_| (rng.below(255) as i32 - 127) as i8).collect(),
+        );
+        let wq = MatI8::from_vec(
+            6,
+            48,
+            (0..288).map(|_| rng.below(15) as i8 - 7).collect(),
+        );
+        let sx: Vec<f32> = (0..4).map(|i| 0.01 + i as f32 * 0.002).collect();
+        let sw: Vec<f32> = (0..6).map(|j| 0.05 + j as f32 * 0.003).collect();
+        let bp = PackedI4::pack(&wq);
+        let before = stats();
+        let y = gemm_w4a8_packed(&xq, &sx, &bp, &sw);
+        assert_eq!(stats().w4a8_calls, before.w4a8_calls + 1);
+        for i in 0..4 {
+            for j in 0..6 {
                 let acc = crate::linalg::igemm::idot(xq.row(i), wq.row(j));
                 let want = acc as f32 * sx[i] * sw[j];
                 assert_eq!(y.at(i, j).to_bits(), want.to_bits());

@@ -162,7 +162,7 @@ impl PagedEngine {
             n_blocks,
             block_size,
             n_layers: model.mcfg.n_layers,
-            kv_bits: model.ecfg.scheme.kv_bits,
+            kv_bits: model.recipe.kv_bits,
             kv_group: model.kv_group(),
         };
         PagedEngine { model, pool: Mutex::new(KvPool::new(cfg)) }

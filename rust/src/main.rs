@@ -25,7 +25,7 @@ use rrs::eval::perplexity::format_ppl;
 use rrs::harness::{self, Ctx};
 use rrs::model::weights::OutlierProfile;
 use rrs::model::{tokenizer, EngineConfig, QuantModel, Weights};
-use rrs::quant::{Method, Scheme};
+use rrs::quant::{Method, QuantRecipe, Scheme};
 use rrs::runtime::PjrtEngine;
 use rrs::util::cli::Args;
 
@@ -40,6 +40,16 @@ fn parse_scheme(s: &str) -> Result<Scheme> {
 }
 
 fn engine_config(args: &Args) -> Result<EngineConfig> {
+    // a recipe spec (--recipe or RRS_RECIPE) overrides the legacy
+    // method/scheme knobs entirely: every quant axis comes from the spec
+    if let Some(spec) = args.get("recipe") {
+        let recipe = QuantRecipe::parse(spec).context("bad --recipe")?;
+        return Ok(EngineConfig::from_recipe(recipe));
+    }
+    if let Some(parsed) = QuantRecipe::from_env() {
+        let recipe = parsed.context("bad RRS_RECIPE")?;
+        return Ok(EngineConfig::from_recipe(recipe));
+    }
     let method = Method::parse(&args.get_or("method", "rrs"))
         .context("unknown --method")?;
     let scheme = parse_scheme(&args.get_or(
@@ -55,6 +65,7 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         gptq: method != Method::Rtn
             && method != Method::Fp
             && !args.has_flag("no-gptq"),
+        recipe: None,
     })
 }
 
@@ -193,6 +204,7 @@ fn cmd_harness(args: &Args) -> Result<()> {
         "fig7" => harness::figures::fig7(&ctx)?,
         "fig8" => harness::figures::fig8(&ctx)?,
         "fig9" => harness::figures::fig9(&ctx)?,
+        "matrix" => harness::matrix::run(&ctx)?,
         other => bail!("unknown experiment '{other}'"),
     }
     Ok(())
@@ -233,8 +245,11 @@ fn main() -> Result<()> {
             println!(
                 "rrs — Rotated Runtime Smooth INT4 serving stack\n\n\
                  usage: rrs <info|generate|serve|eval-ppl|harness|pjrt-demo> [flags]\n\
-                 harness experiments: all table1 table2 table3 table4 fig2b fig3 fig6 fig7 fig8 fig9\n\
-                 common flags: --artifacts DIR --method M --scheme S --group N --profile P --fast"
+                 harness experiments: all table1 table2 table3 table4 fig2b fig3 fig6 fig7 fig8 fig9 matrix\n\
+                 common flags: --artifacts DIR --method M --scheme S --group N --profile P --fast\n\
+                 quant recipe: --recipe SPEC (or RRS_RECIPE), e.g. 'sq:a8w4kv8:had:g64' —\n\
+                 axis tokens: method presets (rrs rs sq quarot dense rtn fp), aXwYkvZ,\n\
+                 nosmooth|norot|had|dense|rot, gptq|nogptq, gN kvgN alphaF migrate"
             );
             Ok(())
         }

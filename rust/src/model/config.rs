@@ -2,7 +2,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::quant::{Method, Scheme};
+use crate::quant::{Method, QuantRecipe, Scheme};
 use crate::util::json::Json;
 
 /// Transformer architecture hyper-parameters (mirror of the python
@@ -81,6 +81,10 @@ pub struct EngineConfig {
     pub alpha: f32,
     /// Use GPTQ (vs RTN) for INT4 weights.
     pub gptq: bool,
+    /// Explicit composed strategy override (`--recipe` / `RRS_RECIPE`);
+    /// `None` derives the recipe from the legacy method/scheme knobs, so
+    /// every historical config keeps its exact behavior.
+    pub recipe: Option<QuantRecipe>,
 }
 
 impl Default for EngineConfig {
@@ -92,13 +96,48 @@ impl Default for EngineConfig {
             kv_group: 128,
             alpha: 0.5,
             gptq: true,
+            recipe: None,
         }
     }
 }
 
 impl EngineConfig {
+    /// Config driven entirely by a composed [`QuantRecipe`]; the legacy
+    /// knobs are back-filled from the recipe for display and for code
+    /// that still reads them.
+    pub fn from_recipe(recipe: QuantRecipe) -> EngineConfig {
+        EngineConfig {
+            method: recipe.method(),
+            scheme: recipe.scheme(),
+            group: recipe.group,
+            kv_group: recipe.kv_group,
+            alpha: recipe.alpha,
+            gptq: recipe.gptq,
+            recipe: Some(recipe),
+        }
+    }
+
+    /// The recipe this engine runs: the explicit override when present,
+    /// otherwise the one the legacy method/scheme knobs map to
+    /// (bit-identical routes either way).
+    pub fn resolved(&self) -> QuantRecipe {
+        self.recipe.unwrap_or_else(|| {
+            QuantRecipe::from_method(
+                self.method,
+                self.scheme,
+                self.group,
+                self.kv_group,
+                self.alpha,
+                self.gptq,
+            )
+        })
+    }
+
     pub fn label(&self) -> String {
-        format!("{}-{}", self.method.name(), self.scheme.label())
+        match &self.recipe {
+            Some(r) => r.label(),
+            None => format!("{}-{}", self.method.name(), self.scheme.label()),
+        }
     }
 }
 
@@ -123,5 +162,17 @@ mod tests {
     fn missing_field_errors() {
         let j = Json::parse(r#"{"model":{"vocab":256}}"#).unwrap();
         assert!(ModelConfig::from_manifest(&j).is_err());
+    }
+
+    #[test]
+    fn recipe_resolution_round_trips() {
+        let e = EngineConfig::default();
+        let r = e.resolved();
+        assert_eq!(r.method(), Method::Rrs);
+        // legacy configs keep the historical label format
+        assert_eq!(e.label(), "RRS-A4W4KV4");
+        let e2 = EngineConfig::from_recipe(r);
+        assert_eq!(e2.resolved(), r);
+        assert_eq!(e2.label(), r.label());
     }
 }

@@ -6,11 +6,11 @@
 use anyhow::{bail, Result};
 
 use crate::linalg::gemm::{gemm_f32_bt, Mat};
-use crate::quant::kv::QuantVec;
-use crate::quant::qlinear::{PrepareOpts, QLinear};
+use crate::quant::kv::{QuantVec, QuantVec8};
+use crate::quant::qlinear::{PrepareAux, QLinear};
 use crate::quant::rotation::Rotation;
 use crate::quant::smoothquant::Calibration;
-use crate::quant::Method;
+use crate::quant::{Method, QuantRecipe, RotationKind, Smoothing};
 
 use super::config::{EngineConfig, ModelConfig};
 use super::ops::{attend_single, rmsnorm, silu, RopeTable};
@@ -182,21 +182,23 @@ pub struct QLayer {
     pub w_down: QLinear,
 }
 
-/// KV-cache storage: fp32 rows or nibble-packed INT4 (paper 4.1).
-/// Used both by the flat per-sequence [`KvCache`] and, per block, by the
-/// paged [`crate::kvpool`] allocator.
+/// KV-cache storage: fp32 rows, nibble-packed INT4 (paper 4.1), or
+/// byte-wide INT8 (the KV ablation's middle point).  Used both by the
+/// flat per-sequence [`KvCache`] and, per block, by the paged
+/// [`crate::kvpool`] allocator.
 #[derive(Clone)]
 pub enum KvStore {
     F32(Vec<Vec<f32>>),
     Int4 { rows: Vec<QuantVec>, group: usize },
+    Int8 { rows: Vec<QuantVec8>, group: usize },
 }
 
 impl KvStore {
     pub fn new(kv_bits: u8, group: usize) -> KvStore {
-        if kv_bits == 4 {
-            KvStore::Int4 { rows: Vec::new(), group }
-        } else {
-            KvStore::F32(Vec::new())
+        match kv_bits {
+            4 => KvStore::Int4 { rows: Vec::new(), group },
+            8 => KvStore::Int8 { rows: Vec::new(), group },
+            _ => KvStore::F32(Vec::new()),
         }
     }
 
@@ -214,6 +216,12 @@ impl KvStore {
                 rows.push(q);
                 b
             }
+            KvStore::Int8 { rows, group } => {
+                let q = QuantVec8::quantize(row, *group);
+                let b = q.bytes();
+                rows.push(q);
+                b
+            }
         }
     }
 
@@ -221,6 +229,7 @@ impl KvStore {
         match self {
             KvStore::F32(rows) => rows.len(),
             KvStore::Int4 { rows, .. } => rows.len(),
+            KvStore::Int8 { rows, .. } => rows.len(),
         }
     }
 
@@ -228,11 +237,14 @@ impl KvStore {
         self.len() == 0
     }
 
-    /// Materialize all rows as fp32 (INT4 dequantizes on read).
+    /// Materialize all rows as fp32 (quantized rows dequantize on read).
     pub fn dequantize_all(&self) -> Vec<Vec<f32>> {
         match self {
             KvStore::F32(rows) => rows.clone(),
             KvStore::Int4 { rows, .. } => {
+                rows.iter().map(|q| q.dequantize()).collect()
+            }
+            KvStore::Int8 { rows, .. } => {
                 rows.iter().map(|q| q.dequantize()).collect()
             }
         }
@@ -246,6 +258,10 @@ impl KvStore {
         match self {
             KvStore::F32(rows) => KvStore::F32(rows[..n.min(rows.len())].to_vec()),
             KvStore::Int4 { rows, group } => KvStore::Int4 {
+                rows: rows[..n.min(rows.len())].to_vec(),
+                group: *group,
+            },
+            KvStore::Int8 { rows, group } => KvStore::Int8 {
                 rows: rows[..n.min(rows.len())].to_vec(),
                 group: *group,
             },
@@ -263,11 +279,15 @@ impl KvStore {
                 out.resize(rows[i].len, 0.0);
                 rows[i].dequantize_into(out);
             }
+            KvStore::Int8 { rows, .. } => {
+                out.resize(rows[i].len(), 0.0);
+                rows[i].dequantize_into(out);
+            }
         }
     }
 
-    /// Borrow fp32 rows directly, or dequantize INT4 into reusable
-    /// scratch (the decode hot path: no per-step allocation).
+    /// Borrow fp32 rows directly, or dequantize quantized rows into
+    /// reusable scratch (the decode hot path: no per-step allocation).
     pub fn view<'a>(&'a self, scratch: &'a mut Vec<Vec<f32>>) -> &'a [Vec<f32>] {
         match self {
             KvStore::F32(rows) => rows,
@@ -281,6 +301,16 @@ impl KvStore {
                 }
                 &scratch[..rows.len()]
             }
+            KvStore::Int8 { rows, .. } => {
+                while scratch.len() < rows.len() {
+                    scratch.push(Vec::new());
+                }
+                for (s, q) in scratch.iter_mut().zip(rows) {
+                    s.resize(q.len(), 0.0);
+                    q.dequantize_into(s);
+                }
+                &scratch[..rows.len()]
+            }
         }
     }
 
@@ -288,6 +318,7 @@ impl KvStore {
         match self {
             KvStore::F32(rows) => rows.iter().map(|r| r.len() * 4).sum(),
             KvStore::Int4 { rows, .. } => rows.iter().map(|q| q.bytes()).sum(),
+            KvStore::Int8 { rows, .. } => rows.iter().map(|q| q.bytes()).sum(),
         }
     }
 }
@@ -303,13 +334,14 @@ pub struct KvCache {
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig, ecfg: &EngineConfig) -> KvCache {
-        let group = ecfg.kv_group.min(cfg.head_dim().max(1));
+        let recipe = ecfg.resolved();
+        let group = recipe.kv_group.min(cfg.head_dim().max(1));
         KvCache {
             layers: (0..cfg.n_layers)
                 .map(|_| {
                     (
-                        KvStore::new(ecfg.scheme.kv_bits, group),
-                        KvStore::new(ecfg.scheme.kv_bits, group),
+                        KvStore::new(recipe.kv_bits, group),
+                        KvStore::new(recipe.kv_bits, group),
                     )
                 })
                 .collect(),
@@ -436,6 +468,9 @@ impl KvSeqBatch for DiscardKv {
 pub struct QuantModel {
     pub mcfg: ModelConfig,
     pub ecfg: EngineConfig,
+    /// The resolved strategy every layer was prepared under
+    /// (`ecfg.resolved()`, frozen at prepare time).
+    pub recipe: QuantRecipe,
     pub embed: Mat,
     pub head: Mat,
     pub final_norm: Vec<f32>,
@@ -445,8 +480,11 @@ pub struct QuantModel {
 
 impl QuantModel {
     /// Offline preparation.  `calib_tokens` drives SmoothQuant scales and
-    /// GPTQ (required for SmoothQuant and whenever `ecfg.gptq`);
-    /// `spin_rotations` supplies (R_dim, R_ffn) for Method::SpinQuant.
+    /// GPTQ (required for calibrated smoothing and whenever the recipe
+    /// says `gptq`); `spin_rotations` supplies (R_dim, R_ffn) for dense
+    /// rotations.  With an explicit `ecfg.recipe` a missing dense
+    /// rotation is synthesized closed-form (QuaRot-style); the legacy
+    /// SpinQuant method keeps requiring learned rotations.
     pub fn prepare(
         w: &Weights,
         mcfg: &ModelConfig,
@@ -458,9 +496,10 @@ impl QuantModel {
         // one-shot tile autotuner run at model-prep time, never inside a
         // serving request
         let _kernels = crate::kernels::registry();
-        let method = ecfg.method;
-        let need_calib = method == Method::SmoothQuant
-            || (ecfg.gptq && ecfg.scheme.w_bits == 4 && method != Method::Fp);
+        let recipe = ecfg.resolved();
+        recipe.validate()?;
+        let need_calib = recipe.smoothing == Smoothing::Calibrated
+            || (recipe.gptq && recipe.w_bits == 4);
         let acts = match (need_calib, calib_tokens) {
             (true, Some(toks)) => {
                 // match the python calibration protocol: independent
@@ -476,17 +515,39 @@ impl QuantModel {
                 }
                 Some(CapturedActs::merge(runs))
             }
-            (true, None) => bail!("{:?} requires calibration tokens", method),
+            (true, None) => {
+                bail!("{:?} requires calibration tokens", ecfg.method)
+            }
             _ => None,
         };
-        let (rot_dim, rot_ffn): (Rotation, Rotation) = match method {
-            Method::SpinQuant => {
-                let (rd, rf) = spin_rotations
-                    .ok_or_else(|| anyhow::anyhow!("SpinQuant needs rotations"))?;
-                (Rotation::Dense(rd), Rotation::Dense(rf))
-            }
-            _ => (Rotation::Hadamard, Rotation::Hadamard),
-        };
+        // rotations are resolved once per width, never per layer, so
+        // gptq calibration and weight preparation agree exactly; every
+        // width is validated here — non-power-of-two dims get the
+        // block-Hadamard fallback instead of the historical fwht panic
+        let (rot_dim, rot_ffn): (Option<Rotation>, Option<Rotation>) =
+            match recipe.rotation {
+                RotationKind::None => (None, None),
+                RotationKind::Hadamard => (
+                    Some(Rotation::hadamard_for(mcfg.dim)),
+                    Some(Rotation::hadamard_for(mcfg.ffn)),
+                ),
+                RotationKind::Dense => match spin_rotations {
+                    Some((rd, rf)) => {
+                        (Some(Rotation::Dense(rd)), Some(Rotation::Dense(rf)))
+                    }
+                    None if ecfg.recipe.is_some() => (
+                        Some(Rotation::closed_form_dense(mcfg.dim, 11)),
+                        Some(Rotation::closed_form_dense(mcfg.ffn, 13)),
+                    ),
+                    None => bail!("SpinQuant needs rotations"),
+                },
+            };
+        if let Some(r) = &rot_dim {
+            r.validate(mcfg.dim)?;
+        }
+        if let Some(r) = &rot_ffn {
+            r.validate(mcfg.ffn)?;
+        }
 
         let mut layers = Vec::with_capacity(mcfg.n_layers);
         for (i, lw) in w.layers.iter().enumerate() {
@@ -501,14 +562,14 @@ impl QuantModel {
             let prep = |wmat: &Mat,
                         name: &str,
                         kind: usize,
-                        rot: &Rotation|
+                        rot: Option<&Rotation>|
              -> Result<QLinear> {
                 let x = act_for(kind);
-                // calibration for SmoothQuant
+                // calibration for calibrated (SmoothQuant-style) scales
                 let calib = x.map(|xm| {
                     Calibration::from_batches([xm].into_iter(), xm.cols)
                 });
-                // GPTQ calibration in the method's space (capped at 256
+                // GPTQ calibration in the recipe's space (capped at 256
                 // rows, matching python aot.py's `x_calib[:256]`)
                 let cap_rows = |m: Mat| -> Mat {
                     if m.rows <= 256 {
@@ -518,37 +579,41 @@ impl QuantModel {
                         Mat::from_vec(256, cols, m.data[..256 * cols].to_vec())
                     }
                 };
-                let gptq_x: Option<Mat> = if ecfg.gptq && ecfg.scheme.w_bits == 4 {
-                    x.map(|xm| match method {
-                        m if m.rotated() => rot.apply(xm),
-                        Method::SmoothQuant => {
-                            // x / s with s from this layer's calibration
+                let gptq_x: Option<Mat> = if recipe.gptq && recipe.w_bits == 4
+                {
+                    x.map(|xm| {
+                        // mirror the forward pipeline: divide by the
+                        // calibrated scales, then rotate
+                        let mut m = xm.clone();
+                        if recipe.smoothing == Smoothing::Calibrated {
                             let c = calib.as_ref().unwrap();
                             let s = crate::quant::smoothquant::smoothing_scales(
-                                c, wmat, ecfg.alpha,
+                                c,
+                                wmat,
+                                recipe.alpha,
                             );
-                            crate::quant::smoothquant::smooth_activation(xm, &s)
+                            m = crate::quant::smoothquant::smooth_activation(
+                                &m, &s,
+                            );
                         }
-                        _ => xm.clone(),
+                        if let Some(r) = rot {
+                            m = r.apply(&m);
+                        }
+                        m
                     })
                     .map(cap_rows)
                 } else {
                     None
                 };
-                let opts = PrepareOpts {
-                    method: if method == Method::GptqOnly {
-                        Method::Rtn // GPTQ row = RTN activations
-                    } else {
-                        method
+                let mut lin = QLinear::prepare_recipe(
+                    wmat,
+                    &recipe,
+                    PrepareAux {
+                        calib: calib.as_ref(),
+                        gptq_calib: gptq_x.as_ref(),
+                        rotation: rot.cloned(),
                     },
-                    scheme: ecfg.scheme,
-                    group: ecfg.group,
-                    alpha: ecfg.alpha,
-                    calib: calib.as_ref(),
-                    gptq_calib: gptq_x.as_ref(),
-                    rotation: Some(rot.clone()),
-                };
-                let mut lin = QLinear::prepare(wmat, &opts)?;
+                )?;
                 // per-layer quant-health label (sampled probes key on it)
                 lin.probe = Some(format!("l{i}.{name}"));
                 Ok(lin)
@@ -556,18 +621,19 @@ impl QuantModel {
             layers.push(QLayer {
                 attn_norm: lw.attn_norm.clone(),
                 mlp_norm: lw.mlp_norm.clone(),
-                wq: prep(&lw.wq, "wq", 0, &rot_dim)?,
-                wk: prep(&lw.wk, "wk", 0, &rot_dim)?,
-                wv: prep(&lw.wv, "wv", 0, &rot_dim)?,
-                wo: prep(&lw.wo, "wo", 1, &rot_dim)?,
-                w_gate: prep(&lw.w_gate, "w_gate", 2, &rot_dim)?,
-                w_up: prep(&lw.w_up, "w_up", 2, &rot_dim)?,
-                w_down: prep(&lw.w_down, "w_down", 3, &rot_ffn)?,
+                wq: prep(&lw.wq, "wq", 0, rot_dim.as_ref())?,
+                wk: prep(&lw.wk, "wk", 0, rot_dim.as_ref())?,
+                wv: prep(&lw.wv, "wv", 0, rot_dim.as_ref())?,
+                wo: prep(&lw.wo, "wo", 1, rot_dim.as_ref())?,
+                w_gate: prep(&lw.w_gate, "w_gate", 2, rot_dim.as_ref())?,
+                w_up: prep(&lw.w_up, "w_up", 2, rot_dim.as_ref())?,
+                w_down: prep(&lw.w_down, "w_down", 3, rot_ffn.as_ref())?,
             });
         }
         Ok(QuantModel {
             mcfg: *mcfg,
             ecfg: *ecfg,
+            recipe,
             embed: w.embed.clone(),
             head: w.head.clone(),
             final_norm: w.final_norm.clone(),
@@ -577,7 +643,7 @@ impl QuantModel {
     }
 
     pub fn kv_group(&self) -> usize {
-        self.ecfg.kv_group.min(self.mcfg.head_dim().max(1))
+        self.recipe.kv_group.min(self.mcfg.head_dim().max(1))
     }
 
     /// Full-sequence forward (prefill / evaluation path).  Returns logits
@@ -635,11 +701,12 @@ impl QuantModel {
             let mut v = layer.wv.forward(&h);
             apply_rope_rows(&mut q, &self.rope, cfg.n_heads, cfg.head_dim(), p0);
             apply_rope_rows(&mut k, &self.rope, cfg.n_kv_heads, cfg.head_dim(), p0);
-            if self.ecfg.scheme.kv_bits == 4 {
+            if self.recipe.kv_bits < 16 {
                 let g = self.kv_group();
+                let bits = self.recipe.kv_bits;
                 for i in 0..t {
-                    crate::quant::kv::fake_quant_inplace(k.row_mut(i), g);
-                    crate::quant::kv::fake_quant_inplace(v.row_mut(i), g);
+                    crate::quant::kv::fake_quant_bits_inplace(k.row_mut(i), g, bits);
+                    crate::quant::kv::fake_quant_bits_inplace(v.row_mut(i), g, bits);
                 }
             }
             for i in 0..t {
@@ -737,11 +804,12 @@ impl QuantModel {
                     );
                 }
             }
-            if self.ecfg.scheme.kv_bits == 4 {
+            if self.recipe.kv_bits < 16 {
                 let g = self.kv_group();
+                let bits = self.recipe.kv_bits;
                 for i in 0..b {
-                    crate::quant::kv::fake_quant_inplace(k.row_mut(i), g);
-                    crate::quant::kv::fake_quant_inplace(v.row_mut(i), g);
+                    crate::quant::kv::fake_quant_bits_inplace(k.row_mut(i), g, bits);
+                    crate::quant::kv::fake_quant_bits_inplace(v.row_mut(i), g, bits);
                 }
             }
             let mut att_out = Mat::zeros(b, cfg.dim);
@@ -930,6 +998,62 @@ mod tests {
             c4.bytes(),
             c16.bytes()
         );
+    }
+
+    #[test]
+    fn recipe_config_matches_legacy_config_bitwise() {
+        // an explicit recipe equal to the legacy knobs' mapping must
+        // produce identical logits (the tentpole equivalence guarantee)
+        let (w, cfg) = tiny();
+        let legacy = EngineConfig {
+            method: Method::Rrs,
+            scheme: Scheme::A4W4KV4,
+            group: 32,
+            gptq: false,
+            ..Default::default()
+        };
+        let via_recipe = EngineConfig::from_recipe(legacy.resolved());
+        let m1 = QuantModel::prepare(&w, &cfg, &legacy, None, None).unwrap();
+        let m2 = QuantModel::prepare(&w, &cfg, &via_recipe, None, None).unwrap();
+        let toks: Vec<u32> = vec![3, 1, 4, 1, 5];
+        let l1 = m1.forward_full(&toks, None);
+        let l2 = m2.forward_full(&toks, None);
+        assert_eq!(l1.data, l2.data);
+    }
+
+    #[test]
+    fn kv8_cache_sits_between_int4_and_fp32() {
+        let (w, cfg) = tiny();
+        let base = EngineConfig {
+            method: Method::Rtn,
+            scheme: Scheme::A4W4KV4,
+            gptq: false,
+            kv_group: 32,
+            ..Default::default()
+        };
+        let mk = |spec: &str| {
+            EngineConfig::from_recipe(
+                crate::quant::QuantRecipe::parse(spec).unwrap(),
+            )
+        };
+        let e8 = mk("rtn:a4w4kv8:g128:kvg32:nogptq");
+        let e16 = EngineConfig { scheme: Scheme::A4W4KV16, ..base };
+        let m4 = QuantModel::prepare(&w, &cfg, &base, None, None).unwrap();
+        let m8 = QuantModel::prepare(&w, &cfg, &e8, None, None).unwrap();
+        let m16 = QuantModel::prepare(&w, &cfg, &e16, None, None).unwrap();
+        let toks: Vec<u32> = (0..32).collect();
+        let mut c4 = KvCache::new(&cfg, &base);
+        let mut c8 = KvCache::new(&cfg, &e8);
+        let mut c16 = KvCache::new(&cfg, &e16);
+        m4.forward_full(&toks, Some(&mut c4));
+        m8.forward_full(&toks, Some(&mut c8));
+        m16.forward_full(&toks, Some(&mut c16));
+        assert!(c4.bytes() < c8.bytes(), "{} vs {}", c4.bytes(), c8.bytes());
+        assert!(c8.bytes() < c16.bytes(), "{} vs {}", c8.bytes(), c16.bytes());
+        // int8 KV decode still produces finite logits
+        let mut batch = [(&mut c8, 7u32)];
+        let lg = m8.decode_batch(&mut batch);
+        assert!(lg.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -75,6 +75,14 @@ pub struct LayerHealth {
 /// is two passes over `x` plus one over `q` (O(rows·cols), no
 /// allocation beyond the channel-scale vector).
 pub fn probe_quant(layer: &str, x: &Mat, q: &MatI8) {
+    probe_quant_q(layer, x, q, crate::quant::QMAX);
+}
+
+/// [`probe_quant`] with the quantizer's symmetric max code made explicit
+/// (7 for INT4, 127 for W4A8 activations), so the clip-rate statistic
+/// counts saturation against the range the codes were actually clamped
+/// to instead of assuming INT4.
+pub fn probe_quant_q(layer: &str, x: &Mat, q: &MatI8, qmax: f32) {
     if x.data.is_empty() || q.data.is_empty() {
         return;
     }
@@ -95,7 +103,9 @@ pub fn probe_quant(layer: &str, x: &Mat, q: &MatI8) {
     m2 /= n;
     m4 /= n;
     let kurtosis = if m2 > 1e-24 { (m4 / (m2 * m2)) as f32 } else { 0.0 };
-    let clipped = q.data.iter().filter(|c| c.unsigned_abs() >= 7).count();
+    let qmax_code = qmax as u32;
+    let clipped =
+        q.data.iter().filter(|c| c.unsigned_abs() as u32 >= qmax_code).count();
     let clip_rate = clipped as f32 / q.data.len() as f32;
     record(layer, channel_max, spike_ratio, kurtosis, clip_rate);
 }
@@ -225,6 +235,21 @@ mod tests {
         let lj = j.get("obs-health-agg").unwrap();
         assert_eq!(lj.get("probes").unwrap().as_usize(), Some(2));
         assert!(lj.get("clip_rate").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn clip_rate_respects_qmax() {
+        // codes pinned at ±7 are saturated for an INT4 quantizer but
+        // mid-range for INT8 — the probe must use the caller's range
+        let x = Mat::from_vec(1, 8, vec![1.0; 8]);
+        let q = MatI8::from_vec(1, 8, vec![7i8; 8]);
+        probe_quant_q("obs-health-clip4", &x, &q, 7.0);
+        probe_quant_q("obs-health-clip8", &x, &q, 127.0);
+        let snap = snapshot();
+        let h4 = &snap.iter().find(|(k, _)| k == "obs-health-clip4").unwrap().1;
+        let h8 = &snap.iter().find(|(k, _)| k == "obs-health-clip8").unwrap().1;
+        assert_eq!(h4.clip_rate, 1.0);
+        assert_eq!(h8.clip_rate, 0.0);
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! INT4 KV-cache quantization (paper 4.1: sub-channel symmetric, group
-//! size 128, RTN).  Values are stored nibble-packed with per-group f32
-//! scales — the format the coordinator's KV manager holds per sequence
-//! slot, giving a true 4-bit-per-value cache (+ scale overhead).
+//! INT4/INT8 KV-cache quantization (paper 4.1: sub-channel symmetric,
+//! group size 128, RTN).  INT4 values are stored nibble-packed with
+//! per-group f32 scales — the format the coordinator's KV manager holds
+//! per sequence slot, giving a true 4-bit-per-value cache (+ scale
+//! overhead).  [`QuantVec8`] is the INT8 ablation point of the recipe
+//! matrix: same grouping, one byte per value, no packing pass.
 
-use super::{pack4, rtn};
+use super::{pack4, rtn, QMAX8};
 
 /// One quantized vector (e.g. a K or V head row at one position).
 #[derive(Clone, Debug)]
@@ -56,10 +58,78 @@ impl QuantVec {
     }
 }
 
+/// One INT8-quantized vector: same sub-channel grouping as [`QuantVec`],
+/// codes stored directly (one byte per value, no nibble packing).
+#[derive(Clone, Debug)]
+pub struct QuantVec8 {
+    pub codes: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub group: usize,
+}
+
+impl QuantVec8 {
+    /// Quantize `x` with sub-channel groups of `group` (clamped to len).
+    pub fn quantize(x: &[f32], group: usize) -> QuantVec8 {
+        let g = group.min(x.len()).max(1);
+        let mut codes = Vec::with_capacity(x.len());
+        let mut scales = Vec::with_capacity(x.len().div_ceil(g));
+        for seg in x.chunks(g) {
+            let s = rtn::scale_for_q(
+                seg.iter().fold(0.0f32, |a, &v| a.max(v.abs())),
+                QMAX8,
+            );
+            scales.push(s);
+            for &v in seg {
+                codes.push(rtn::quantize_one_q(v, s, QMAX8));
+            }
+        }
+        QuantVec8 { codes, scales, group: g }
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Dequantize into `out` (len must match).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.codes.len());
+        for (i, (&c, o)) in self.codes.iter().zip(out.iter_mut()).enumerate() {
+            *o = c as f32 * self.scales[i / self.group];
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.codes.len()];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Bytes used (payload + scales), for memory accounting/metrics.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
 /// Fake-quantize in place (quantize + dequantize), the model-graph analog.
 pub fn fake_quant_inplace(x: &mut [f32], group: usize) {
     let q = QuantVec::quantize(x, group);
     q.dequantize_into(x);
+}
+
+/// INT8 fake-quantization (the KV ablation's model-graph analog).
+pub fn fake_quant8_inplace(x: &mut [f32], group: usize) {
+    let q = QuantVec8::quantize(x, group);
+    q.dequantize_into(x);
+}
+
+/// Fake-quantize at the recipe's KV precision: 4 and 8 quantize, any
+/// other width is full-precision passthrough.
+pub fn fake_quant_bits_inplace(x: &mut [f32], group: usize, bits: u8) {
+    match bits {
+        4 => fake_quant_inplace(x, group),
+        8 => fake_quant8_inplace(x, group),
+        _ => {}
+    }
 }
 
 #[cfg(test)]
@@ -184,5 +254,95 @@ mod tests {
         for (a, b) in once.iter().zip(&x) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn int8_roundtrip_bound_and_edge_groups() {
+        // mirrors the INT4 edge-case suite: half-step error bound, group
+        // clamping, ragged tail, and a tighter step than INT4
+        check("kv8-roundtrip", Config::default(), |rng, _| {
+            let group = 2 + rng.below(31);
+            let n = 1 + rng.below(200);
+            let x = rng.normal_vec(n);
+            let q = QuantVec8::quantize(&x, group);
+            if q.group != group.min(n).max(1) {
+                return Err(format!("group {} for n={n}", q.group));
+            }
+            if q.scales.len() != n.div_ceil(q.group) {
+                return Err(format!("{} scales", q.scales.len()));
+            }
+            let y = q.dequantize();
+            for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                let s = q.scales[i / q.group];
+                if (a - b).abs() > s / 2.0 + 1e-6 {
+                    return Err(format!("at {i}: {a} vs {b} (s={s})"));
+                }
+            }
+            // INT8 groups step ~18x finer than INT4 on the same data
+            let q4 = QuantVec::quantize(&x, group);
+            for (s8, s4) in q.scales.iter().zip(&q4.scales) {
+                if *s8 > *s4 {
+                    return Err(format!("int8 step {s8} > int4 step {s4}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_memory_is_1byte_plus_scales() {
+        let x = vec![1.0f32; 128];
+        let q = QuantVec8::quantize(&x, 128);
+        assert_eq!(q.len(), 128);
+        assert_eq!(q.scales.len(), 1);
+        assert_eq!(q.bytes(), 132); // vs 512 bytes fp32 => ~3.9x smaller
+    }
+
+    #[test]
+    fn int8_zero_segments_roundtrip_exactly() {
+        let mut x = vec![0.0f32; 48];
+        for v in x.iter_mut().skip(32) {
+            *v = 1.5;
+        }
+        let q = QuantVec8::quantize(&x, 16);
+        assert_eq!(q.scales.len(), 3);
+        let y = q.dequantize();
+        for (i, &v) in y.iter().enumerate().take(32) {
+            assert_eq!(v, 0.0, "zero segment decoded to {v} at {i}");
+        }
+        for (i, &v) in y.iter().enumerate().skip(32) {
+            assert!((v - 1.5).abs() < 0.01, "at {i}: {v}");
+        }
+        let z = QuantVec8::quantize(&[0.0; 7], 64);
+        assert!(z.dequantize().iter().all(|&v| v == 0.0));
+        assert!(z.scales[0] > 0.0);
+    }
+
+    #[test]
+    fn fake_quant_bits_dispatch() {
+        let mut rng = crate::util::rng::Pcg::new(7);
+        let base = rng.normal_vec(64);
+
+        let mut x4 = base.clone();
+        fake_quant_bits_inplace(&mut x4, 16, 4);
+        let mut want4 = base.clone();
+        fake_quant_inplace(&mut want4, 16);
+        assert_eq!(x4, want4);
+
+        let mut x8 = base.clone();
+        fake_quant_bits_inplace(&mut x8, 16, 8);
+        let mut want8 = base.clone();
+        fake_quant8_inplace(&mut want8, 16);
+        assert_eq!(x8, want8);
+        // int8 is strictly closer on this data than int4
+        let e8: f32 =
+            x8.iter().zip(&base).map(|(a, b)| (a - b).abs()).sum();
+        let e4: f32 =
+            x4.iter().zip(&base).map(|(a, b)| (a - b).abs()).sum();
+        assert!(e8 < e4);
+
+        let mut x16 = base.clone();
+        fake_quant_bits_inplace(&mut x16, 16, 16);
+        assert_eq!(x16, base);
     }
 }

@@ -15,18 +15,27 @@
 //! * [`qlinear`] — fused quantized-linear ops assembled from the above:
 //!   per-channel A4W4, sub-channel A4W4, RS-fused A4W4 (the Figure-6
 //!   kernel trio), plus QuaRot and RRS paths; one enum dispatch per call.
+//! * [`recipe`] — the composable strategy matrix: smoothing × rotation ×
+//!   activation/weight/KV precision as one [`QuantRecipe`] descriptor
+//!   that drives `qlinear`, the engine, and the KV pool.
 
 pub mod gptq;
 pub mod kv;
 pub mod pack4;
 pub mod qlinear;
+pub mod recipe;
 pub mod rotation;
 pub mod rtn;
 pub mod runtime_smooth;
 pub mod smoothquant;
 
+pub use recipe::{QuantRecipe, RotationKind, Smoothing};
+
 /// INT4 symmetric max code: 2^{4-1} - 1 (the paper leaves -8 unused).
 pub const QMAX: f32 = 7.0;
+
+/// INT8 symmetric max code (W4A8 activations, INT8 KV).
+pub const QMAX8: f32 = 127.0;
 
 /// Methods evaluated in the paper's tables (plus fp reference).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -3,16 +3,25 @@
 //! of the fused CUDA kernel pipeline (Fig. 4) and the basis of the
 //! Figure-6 efficiency comparison:
 //!
-//! * `forward_per_channel_a4w4`  — plain per-token x per-channel INT4 GEMM
-//!   (the QuaRot/SpinQuant kernel setting).
+//! * `forward_per_channel_q`     — plain per-token x per-channel INT4/INT8
+//!   GEMM (the QuaRot/SpinQuant kernel setting; `qmax` selects A4 or A8).
 //! * `forward_sub_channel_a4w4`  — group-wise scales on both operands
 //!   (the paper's costly baseline: scale *matrices* move through the
 //!   epilogue).
 //! * `forward_rs_fused`          — Runtime-Smooth fused GEMM: one scalar
 //!   group scale per K-block in the epilogue (negligible overhead claim).
 //!
-//! [`QLinear`] bundles a prepared weight with a method and dispatches.
-//! Its INT4 runtime paths go through the [`crate::kernels`] registry:
+//! [`QLinear`] bundles a prepared weight with a [`QuantRecipe`] and
+//! dispatches on the recipe's independent axes — smoothing (none /
+//! runtime / calibrated), rotation (none / Hadamard / dense), activation
+//! precision (INT4 / INT8 / fp) — instead of a closed method enum, so
+//! combinations the named methods never paired (SmoothQuant + Hadamard,
+//! runtime smooth at INT8, ...) run through the same code paths.  The
+//! legacy [`Method`]-driven [`QLinear::prepare`] is a thin wrapper that
+//! maps the method to its recipe; every legacy route stays bit-identical
+//! (asserted by `rust/tests/golden.rs`).
+//!
+//! INT4/INT8 runtime paths go through the [`crate::kernels`] registry:
 //! weights are nibble-packed offline ([`PackedI4`]) and the dispatched
 //! microkernel consumes them directly.  The free `forward_*` functions
 //! below are the *staged scalar references* those kernels are diffed
@@ -29,10 +38,11 @@ use crate::linalg::igemm::{idot, MatI8};
 use crate::quant::pack4::PackedI4;
 use crate::util::threadpool;
 
-use super::runtime_smooth::{self, SmoothedAct};
+use super::recipe::{QuantRecipe, RotationKind, Smoothing};
 use super::rotation::Rotation;
 use super::rtn;
-use super::{gptq, smoothquant, Method, Scheme};
+use super::runtime_smooth::{self, SmoothedAct};
+use super::{gptq, smoothquant, Method, Scheme, QMAX, QMAX8};
 
 /// Offline-prepared weight.
 #[derive(Clone, Debug)]
@@ -42,8 +52,8 @@ pub enum PreparedWeight {
     /// Per-output-channel INT4 (RTN or GPTQ).  `packed` is the
     /// nibble-packed mirror of `q` the [`crate::kernels`] GEMMs consume
     /// directly (half the weight traffic of the i8 codes).  It is only
-    /// materialized for methods that serve the per-channel path; the
-    /// Runtime-Smooth methods instead pack the *permuted* weight into
+    /// materialized for recipes that serve the per-channel path; the
+    /// runtime-smoothed recipes instead pack the *permuted* weight into
     /// the sticky perm cache, so a second copy here would be dead
     /// memory.
     Int4 { q: MatI8, packed: Option<PackedI4>, scales: Vec<f32> },
@@ -74,7 +84,8 @@ impl PreparedWeight {
     }
 }
 
-/// Options for offline preparation.
+/// Options for offline preparation (legacy [`Method`]-keyed surface;
+/// mapped onto a [`QuantRecipe`] internally).
 pub struct PrepareOpts<'a> {
     pub method: Method,
     pub scheme: Scheme,
@@ -105,13 +116,34 @@ impl<'a> Default for PrepareOpts<'a> {
     }
 }
 
+/// Calibration side-inputs for [`QLinear::prepare_recipe`] — everything
+/// a recipe may need that is not derivable from the weight itself.
+#[derive(Default)]
+pub struct PrepareAux<'a> {
+    /// Activation calibration for [`Smoothing::Calibrated`].
+    pub calib: Option<&'a smoothquant::Calibration>,
+    /// GPTQ calibration activations in the recipe's space (already
+    /// rotated for rotated recipes); None -> RTN weights.
+    pub gptq_calib: Option<&'a Mat>,
+    /// Explicit rotation override; None synthesizes one from the
+    /// recipe's [`RotationKind`] and the weight's K dimension.
+    pub rotation: Option<Rotation>,
+}
+
+/// Deterministic seed for closed-form dense rotation synthesis (QuaRot
+/// eq. 2 style: block Hadamard with random sign flips).  Keyed on K so
+/// different widths get different sign patterns while every prepare of
+/// the same width agrees.
+fn dense_rotation_seed(k: usize) -> u64 {
+    0xC0DE ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// A linear layer prepared for quantized inference.
 pub struct QLinear {
-    pub method: Method,
-    pub scheme: Scheme,
-    pub group: usize,
+    /// The composed strategy this layer was prepared under.
+    pub recipe: QuantRecipe,
     pub weight: PreparedWeight,
-    /// SmoothQuant activation divisors.
+    /// Calibrated (SmoothQuant-style) activation divisors.
     pub smooth: Option<Vec<f32>>,
     /// Activation-side rotation (weight was rotated offline).
     pub rotation: Option<Rotation>,
@@ -128,35 +160,79 @@ pub struct QLinear {
 }
 
 impl QLinear {
-    /// Offline preparation: rotate / merge / quantize the weight per the
-    /// method, matching python `prepare_weights` + GPTQ.
+    /// Offline preparation from the legacy method surface: maps the
+    /// method onto its [`QuantRecipe`] and delegates to
+    /// [`QLinear::prepare_recipe`].  Bit-identical to the historical
+    /// method-keyed preparation on every route.
     pub fn prepare(w: &Mat, opts: &PrepareOpts) -> Result<QLinear> {
-        let method = opts.method;
-        let mut smooth = None;
-        let rotation = if method.rotated() {
-            Some(opts.rotation.clone().unwrap_or(Rotation::Hadamard))
-        } else {
-            None
+        let recipe = QuantRecipe::from_method(
+            opts.method,
+            opts.scheme,
+            opts.group.max(1),
+            128,
+            opts.alpha,
+            opts.gptq_calib.is_some(),
+        );
+        Self::prepare_recipe(
+            w,
+            &recipe,
+            PrepareAux {
+                calib: opts.calib,
+                gptq_calib: opts.gptq_calib,
+                rotation: opts.rotation.clone(),
+            },
+        )
+    }
+
+    /// Offline preparation from a composed [`QuantRecipe`]: validate,
+    /// resolve the rotation against the weight's K dimension (never a
+    /// runtime panic — non-power-of-two K gets the block-Hadamard
+    /// fallback or a prepare-time error), merge calibrated smoothing,
+    /// rotate, quantize.
+    pub fn prepare_recipe(
+        w: &Mat,
+        recipe: &QuantRecipe,
+        aux: PrepareAux,
+    ) -> Result<QLinear> {
+        recipe.validate()?;
+        let k = w.cols;
+        let rotation = match recipe.rotation {
+            RotationKind::None => None,
+            RotationKind::Hadamard => Some(
+                aux.rotation
+                    .clone()
+                    .unwrap_or_else(|| Rotation::hadamard_for(k)),
+            ),
+            RotationKind::Dense => Some(aux.rotation.clone().unwrap_or_else(
+                || Rotation::closed_form_dense(k, dense_rotation_seed(k)),
+            )),
         };
-        let w_eff = match method {
-            Method::SmoothQuant => {
-                let calib = opts
-                    .calib
-                    .ok_or_else(|| anyhow::anyhow!("SmoothQuant needs calibration"))?;
-                let s = smoothquant::smoothing_scales(calib, w, opts.alpha);
+        if let Some(r) = &rotation {
+            r.validate(k)?;
+        }
+        let mut smooth = None;
+        // calibrated smoothing merges in the ORIGINAL channel basis; the
+        // rotation is then applied to the merged weight (activations are
+        // divided, then rotated, in the same order at runtime)
+        let mut w_eff = match recipe.smoothing {
+            Smoothing::Calibrated => {
+                let calib = aux.calib.ok_or_else(|| {
+                    anyhow::anyhow!("calibrated smoothing needs calibration")
+                })?;
+                let s = smoothquant::smoothing_scales(calib, w, recipe.alpha);
                 let merged = smoothquant::merge_into_weight(w, &s);
                 smooth = Some(s);
                 merged
             }
-            m if m.rotated() => rotation.as_ref().unwrap().apply(w),
             _ => w.clone(),
         };
-        if method == Method::RsMigrated {
+        if let Some(r) = &rotation {
+            w_eff = r.apply(&w_eff);
+        }
+        if recipe.migrate {
             // keep the fp weight: it is re-merged + re-quantized per call
             return Ok(QLinear {
-                method,
-                scheme: opts.scheme,
-                group: opts.group.max(1),
+                recipe: *recipe,
                 weight: PreparedWeight::Fp(w_eff),
                 smooth: None,
                 rotation: None,
@@ -164,20 +240,23 @@ impl QLinear {
                 probe: None,
             });
         }
-        let weight = if opts.scheme.w_bits == 4 && method != Method::Fp {
-            let (q, scales) = match opts.gptq_calib {
+        let weight = if recipe.w_bits == 4 {
+            let (q, scales) = match aux.gptq_calib {
                 Some(x) => gptq::gptq_quantize(&w_eff, x, 0.01, 64)?,
                 None => rtn::quant_per_channel_w(&w_eff),
             };
-            // RS/RRS serve through the permuted perm-cache packing
-            PreparedWeight::int4(q, scales, !method.runtime_smoothed())
+            // runtime-smoothed recipes serve through the permuted
+            // perm-cache packing
+            PreparedWeight::int4(
+                q,
+                scales,
+                recipe.smoothing != Smoothing::Runtime,
+            )
         } else {
             PreparedWeight::Fp(w_eff)
         };
         Ok(QLinear {
-            method,
-            scheme: opts.scheme,
-            group: opts.group.max(1),
+            recipe: *recipe,
             weight,
             smooth,
             rotation,
@@ -186,31 +265,53 @@ impl QLinear {
         })
     }
 
-    /// Runtime forward: `y = method(x) @ W^T` with the method's
-    /// quantization pipeline applied.
+    /// Assemble a layer from already-prepared parts (golden tests /
+    /// checkpoint loaders; `perm_cache` starts cold).
+    pub fn from_parts(
+        recipe: QuantRecipe,
+        weight: PreparedWeight,
+        smooth: Option<Vec<f32>>,
+        rotation: Option<Rotation>,
+    ) -> QLinear {
+        QLinear {
+            recipe,
+            weight,
+            smooth,
+            rotation,
+            perm_cache: std::sync::Mutex::new(None),
+            probe: None,
+        }
+    }
+
+    /// Closest legacy [`Method`] for this layer's recipe.
+    pub fn method(&self) -> Method {
+        self.recipe.method()
+    }
+
+    /// Runtime forward: `y = recipe(x) @ W^T` with the recipe's
+    /// smoothing, rotation and activation quantization applied in
+    /// pipeline order (divide by calibrated scales, rotate, then either
+    /// the runtime-smooth fused path or the per-channel path).
     pub fn forward(&self, x: &Mat) -> Mat {
         let _layer = crate::obs::layer_scope(self.probe.as_deref());
-        match self.method {
-            Method::Fp => match &self.weight {
-                PreparedWeight::Fp(w) => gemm_f32_bt(x, w),
-                PreparedWeight::Int4 { .. } => self.act_quant_gemm(x),
-            },
-            Method::Rtn | Method::GptqOnly => self.act_quant_gemm(x),
-            Method::SmoothQuant => {
-                let s = self.smooth.as_ref().expect("sq scales");
-                let xs = smoothquant::smooth_activation(x, s);
-                self.act_quant_gemm(&xs)
-            }
-            Method::QuaRot | Method::SpinQuant => {
-                let xr = self.rotation.as_ref().unwrap().apply(x);
-                self.act_quant_gemm(&xr)
-            }
-            Method::Rs => self.rs_forward(x),
-            Method::Rrs => {
-                let xr = self.rotation.as_ref().unwrap().apply(x);
-                self.rs_forward_rotated(&xr)
-            }
-            Method::RsMigrated => self.rs_migrated_forward(x),
+        if self.recipe.migrate {
+            return self.rs_migrated_forward(x);
+        }
+        let smoothed;
+        let mut cur = x;
+        if let Some(s) = &self.smooth {
+            smoothed = smoothquant::smooth_activation(cur, s);
+            cur = &smoothed;
+        }
+        let rotated;
+        if let Some(r) = &self.rotation {
+            rotated = r.apply(cur);
+            cur = &rotated;
+        }
+        if self.recipe.smoothing == Smoothing::Runtime {
+            self.rs_forward(cur)
+        } else {
+            self.act_quant_gemm(cur)
         }
     }
 
@@ -219,31 +320,30 @@ impl QLinear {
     /// outliers make W·diag(s) hard to quantize).
     fn rs_migrated_forward(&self, x: &Mat) -> Mat {
         let PreparedWeight::Fp(w) = &self.weight else {
-            panic!("RsMigrated keeps fp weights");
+            panic!("migrated recipes keep fp weights");
         };
         let s = runtime_smooth::channel_scales(x);
         let xs = smoothquant::smooth_activation(x, &s);
         let wm = smoothquant::merge_into_weight(w, &s);
-        if self.scheme.w_bits == 4 {
+        if self.recipe.w_bits == 4 {
             let (wq, sw) = rtn::quant_per_channel_w(&wm);
-            forward_per_channel_a4w4(&xs, &wq, &sw)
+            forward_per_channel_q(&xs, &wq, &sw, self.recipe.a_qmax())
         } else {
-            let xdq = rtn::fake_quant_per_token(&xs);
+            let xdq = rtn::fake_quant_per_token_q(&xs, self.recipe.a_qmax());
             gemm_f32_bt(&xdq, &wm)
         }
     }
 
+    /// Runtime-Smooth path at the recipe's activation precision: fused
+    /// prologue + fused GEMM on the dispatched kernel backend —
+    /// bit-identical to the staged reference path (asserted by
+    /// `rust/tests/kernel_diff.rs`).
     fn rs_forward(&self, x: &Mat) -> Mat {
-        self.rs_forward_rotated(x)
-    }
-
-    fn rs_forward_rotated(&self, x: &Mat) -> Mat {
-        let group = effective_group(self.group, x.cols);
+        let group = effective_group(self.recipe.group, x.cols);
+        let qmax = self.recipe.a_qmax();
         match &self.weight {
             PreparedWeight::Int4 { q, scales, .. } => {
-                // fused prologue + fused GEMM on the dispatched kernel
-                // backend — bit-identical to the staged reference path
-                let sa = runtime_smooth::prepare(x, group);
+                let sa = runtime_smooth::prepare_q(x, group, qmax);
                 let wqp = {
                     let mut cache = crate::obs::lock_recover(&self.perm_cache);
                     match cache.as_ref() {
@@ -266,31 +366,45 @@ impl QLinear {
                 )
             }
             PreparedWeight::Fp(w) => {
-                // A4W16: activation-only quantization
-                let xdq = runtime_smooth::fake_quant_a4w16(x, group);
+                // AxW16: activation-only quantization
+                let xdq = runtime_smooth::fake_quant_rs_q(x, group, qmax);
                 gemm_f32_bt(&xdq, w)
             }
         }
     }
 
+    /// Per-channel path at the recipe's activation precision: INT8
+    /// activations route to the W4A8 kernel entry, INT4 to the classic
+    /// per-channel GEMM, full-precision recipes skip activation
+    /// quantization entirely.
     fn act_quant_gemm(&self, x: &Mat) -> Mat {
+        let qmax = self.recipe.a_qmax();
         match &self.weight {
             PreparedWeight::Int4 { q, packed, scales } => match packed {
                 Some(p) => {
-                    let (xq, sx) = rtn::quant_per_token(x);
+                    let (xq, sx) = rtn::quant_per_token_q(x, qmax);
                     if crate::obs::health::sampled() {
                         let layer = crate::obs::current_layer_or("act_quant");
-                        crate::obs::health::probe_quant(&layer, x, &xq);
+                        crate::obs::health::probe_quant_q(&layer, x, &xq, qmax);
                     }
-                    kernels::gemm_per_channel_packed(&xq, &sx, p, scales)
+                    if self.recipe.a_bits == 8 {
+                        kernels::gemm_w4a8_packed(&xq, &sx, p, scales)
+                    } else {
+                        kernels::gemm_per_channel_packed(&xq, &sx, p, scales)
+                    }
                 }
-                // RS-method weights skip the packed mirror; this path is
-                // unreachable from their dispatch but stays correct
-                None => forward_per_channel_a4w4(x, q, scales),
+                // runtime-smoothed weights skip the packed mirror; this
+                // path is unreachable from their dispatch but stays
+                // correct
+                None => forward_per_channel_q(x, q, scales, qmax),
             },
             PreparedWeight::Fp(w) => {
-                let xdq = rtn::fake_quant_per_token(x);
-                gemm_f32_bt(&xdq, w)
+                if self.recipe.quantizes_acts() {
+                    let xdq = rtn::fake_quant_per_token_q(x, qmax);
+                    gemm_f32_bt(&xdq, w)
+                } else {
+                    gemm_f32_bt(x, w)
+                }
             }
         }
     }
@@ -309,12 +423,19 @@ pub fn effective_group(group: usize, k: usize) -> usize {
     g
 }
 
-/// Per-channel A4W4: per-token INT4 activation x per-channel INT4 weight.
-/// Staged scalar reference — [`QLinear`] serves this path through
-/// [`crate::kernels::gemm_per_channel_packed`], which must match this
+/// Per-channel AxW4 at an explicit symmetric max activation code
+/// (7 = A4, 127 = A8): per-token integer activation x per-channel INT4
+/// weight.  Staged scalar reference — [`QLinear`] serves this path
+/// through [`crate::kernels::gemm_per_channel_packed`] /
+/// [`crate::kernels::gemm_w4a8_packed`], which must match this
 /// bit-for-bit.
-pub fn forward_per_channel_a4w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
-    let (xq, sx) = rtn::quant_per_token(x);
+pub fn forward_per_channel_q(
+    x: &Mat,
+    wq: &MatI8,
+    sw: &[f32],
+    qmax: f32,
+) -> Mat {
+    let (xq, sx) = rtn::quant_per_token_q(x, qmax);
     let (n, k, m) = (xq.rows, xq.cols, wq.rows);
     let mut out = Mat::zeros(n, m);
     let threads = threadpool::default_threads();
@@ -327,6 +448,18 @@ pub fn forward_per_channel_a4w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
         }
     });
     out
+}
+
+/// Per-channel A4W4 (the QuaRot/SpinQuant kernel setting).
+pub fn forward_per_channel_a4w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
+    forward_per_channel_q(x, wq, sw, QMAX)
+}
+
+/// Per-channel A8W4 — the staged oracle for the W4A8 microkernel entry
+/// ([`crate::kernels::gemm_w4a8_packed`], diffed in
+/// `rust/tests/kernel_diff.rs`).
+pub fn forward_per_channel_a8w4(x: &Mat, wq: &MatI8, sw: &[f32]) -> Mat {
+    forward_per_channel_q(x, wq, sw, QMAX8)
 }
 
 /// Sub-channel A4W4: per-group scales for both operands — the expensive
@@ -490,6 +623,103 @@ mod tests {
     }
 
     #[test]
+    fn recipe_prepare_matches_method_prepare_bitwise() {
+        // the method surface is a wrapper over prepare_recipe; every
+        // legacy route must stay bit-identical through the recipe layer
+        let x = llm_like_act(8, 128, 11);
+        let w = randmat(16, 128, 12);
+        let calib = smoothquant::Calibration::from_batches([&x].into_iter(), 128);
+        for method in Method::ALL {
+            let scheme = if method == Method::Fp {
+                Scheme::FP
+            } else {
+                Scheme::A4W4KV16
+            };
+            let opts = PrepareOpts {
+                method,
+                scheme,
+                group: 32,
+                calib: Some(&calib),
+                ..Default::default()
+            };
+            let via_method = QLinear::prepare(&w, &opts).unwrap();
+            let recipe =
+                QuantRecipe::from_method(method, scheme, 32, 128, 0.5, false);
+            let via_recipe = QLinear::prepare_recipe(
+                &w,
+                &recipe,
+                PrepareAux { calib: Some(&calib), ..Default::default() },
+            )
+            .unwrap();
+            let ya = via_method.forward(&x);
+            let yb = via_recipe.forward(&x);
+            assert_eq!(ya.data, yb.data, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn w4a8_recipe_cuts_activation_error() {
+        // same INT4 weights, INT8 activations: the extra activation bits
+        // must pay off on outlier-heavy inputs
+        let x = llm_like_act(16, 128, 13);
+        let w = randmat(32, 128, 14);
+        let y_fp = gemm_f32_bt(&x, &w);
+        let err = |spec: &str| {
+            let r = QuantRecipe::parse(spec).unwrap();
+            let lin =
+                QLinear::prepare_recipe(&w, &r, PrepareAux::default()).unwrap();
+            let y = lin.forward(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{spec}");
+            y.data
+                .iter()
+                .zip(&y_fp.data)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / y.data.len() as f32
+        };
+        let e4 = err("rtn:a4w4kv16");
+        let e8 = err("rtn:a8w4kv16");
+        assert!(e8 < e4, "a8 {e8} must beat a4 {e4}");
+    }
+
+    #[test]
+    fn composed_recipes_run_finite_and_correlated() {
+        // combinations the legacy method enum never paired
+        let x = llm_like_act(8, 128, 15);
+        let w = randmat(16, 128, 16);
+        let y_fp = gemm_f32_bt(&x, &w);
+        let calib = smoothquant::Calibration::from_batches([&x].into_iter(), 128);
+        for spec in ["sq:had", "rs:a8w4kv8", "sq:a8w4kv8:had", "dense:g32"] {
+            let r = QuantRecipe::parse(spec).unwrap();
+            let lin = QLinear::prepare_recipe(
+                &w,
+                &r,
+                PrepareAux { calib: Some(&calib), ..Default::default() },
+            )
+            .unwrap();
+            let y = lin.forward(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{spec}");
+            let corr = correlation(&y.data, &y_fp.data);
+            assert!(corr > 0.85, "{spec} corr={corr}");
+        }
+    }
+
+    #[test]
+    fn non_pow2_k_prepares_without_panicking() {
+        // k=96 is not a power of two: legacy Hadamard asserted; the
+        // recipe path must fall back to the block decomposition
+        let x = llm_like_act(4, 96, 17);
+        let w = randmat(8, 96, 18);
+        for spec in ["rrs:g32", "quarot:g32", "dense:g32"] {
+            let r = QuantRecipe::parse(spec).unwrap();
+            let lin =
+                QLinear::prepare_recipe(&w, &r, PrepareAux::default()).unwrap();
+            let y = lin.forward(&x);
+            assert!(y.data.iter().all(|v| v.is_finite()), "{spec}");
+        }
+    }
+
+    #[test]
     fn rrs_beats_rtn_on_llm_like() {
         let x = llm_like_act(16, 128, 3);
         let w = randmat(32, 128, 4);
@@ -531,6 +761,30 @@ mod tests {
             let y = lin.forward(&x);
             assert!(y.data.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn a8_staged_reference_bounds() {
+        // forward_per_channel_a8w4 is the W4A8 oracle: its codes come
+        // from the INT8 per-token quantizer and its output must sit
+        // closer to fp than the A4 reference on outlier-heavy input
+        let x = llm_like_act(6, 64, 19);
+        let w = randmat(12, 64, 20);
+        let (wq, sw) = rtn::quant_per_channel_w(&w);
+        let y4 = forward_per_channel_a4w4(&x, &wq, &sw);
+        let y8 = forward_per_channel_a8w4(&x, &wq, &sw);
+        // both must agree with a dequantized-weight fp GEMM of their own
+        // fake-quantized activation
+        let mut wdq = Mat::zeros(12, 64);
+        for r in 0..12 {
+            for c in 0..64 {
+                wdq.data[r * 64 + c] = wq.data[r * 64 + c] as f32 * sw[r];
+            }
+        }
+        let want8 = gemm_f32_bt(&rtn::fake_quant_per_token_q(&x, QMAX8), &wdq);
+        assert_close(&y8.data, &want8.data, 1e-3, 1e-4).unwrap();
+        let want4 = gemm_f32_bt(&rtn::fake_quant_per_token(&x), &wdq);
+        assert_close(&y4.data, &want4.data, 1e-3, 1e-4).unwrap();
     }
 
     #[test]

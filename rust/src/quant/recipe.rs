@@ -1,0 +1,515 @@
+//! Composable quantization recipes: the strategy matrix behind every
+//! quantized path in the engine.
+//!
+//! The paper's argument is comparative — Runtime Smooth vs calibrated
+//! migration vs rotation — so the quant layer must be able to compose
+//! those strategies freely instead of hardcoding one recipe per
+//! [`Method`].  A [`QuantRecipe`] picks each axis independently:
+//!
+//! * **smoothing** — none / Runtime Smooth (runtime channel maxima,
+//!   never merged into weights) / SmoothQuant (calibrated, merged
+//!   offline);
+//! * **rotation** — none / Hadamard (FWHT, with an automatic
+//!   block-diagonal fallback on non-power-of-two widths) / dense
+//!   QuaRot-style closed-form (or learned SpinQuant matrices when
+//!   provided);
+//! * **activation precision** — INT4 / INT8 / f32;
+//! * **weight precision** — INT4 (RTN or GPTQ) / f32;
+//! * **KV-cache precision** — INT4 / INT8 / f32.
+//!
+//! Every legacy [`Method`] maps onto a recipe via
+//! [`QuantRecipe::from_method`], and the recipe-driven
+//! [`crate::quant::qlinear::QLinear`] pipeline takes the *same* code
+//! routes the method dispatch did, so the presets stay bit-identical to
+//! the pre-refactor paths (locked in by `rust/tests/golden.rs` and
+//! `rust/tests/recipes.rs`).  New combinations — W4A8 SmoothQuant,
+//! SmoothRot-style calibrated-smoothing-plus-rotation, INT8 KV — come
+//! for free and are swept by `harness::matrix`.
+
+use anyhow::{bail, Result};
+
+use super::{Method, Scheme};
+
+/// Activation-smoothing strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Smoothing {
+    /// No smoothing (RTN / rotation-only recipes).
+    None,
+    /// Runtime Smooth: channel maxima from the live batch (paper 3.1).
+    Runtime,
+    /// SmoothQuant: calibrated scales merged into the weight offline.
+    Calibrated,
+}
+
+/// Rotation strategy applied to (activation, weight) pairs along K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RotationKind {
+    /// No rotation.
+    None,
+    /// Sylvester-Hadamard via FWHT; non-power-of-two widths fall back
+    /// to an orthogonal block-diagonal Hadamard at prepare time.
+    Hadamard,
+    /// Dense orthogonal rotation: learned SpinQuant matrices when
+    /// supplied, otherwise a QuaRot-style closed-form sign-randomized
+    /// Hadamard built per width.
+    Dense,
+}
+
+impl Smoothing {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Smoothing::None => "none",
+            Smoothing::Runtime => "rs",
+            Smoothing::Calibrated => "sq",
+        }
+    }
+}
+
+impl RotationKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RotationKind::None => "",
+            RotationKind::Hadamard => "+had",
+            RotationKind::Dense => "+rot",
+        }
+    }
+}
+
+/// One point of the quantization strategy matrix.  `Copy` on purpose:
+/// this is a plain descriptor, resolved once per engine and threaded by
+/// value everywhere a method/scheme pair used to travel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantRecipe {
+    pub smoothing: Smoothing,
+    pub rotation: RotationKind,
+    /// Activation precision: 4, 8, or 16 (=f32 passthrough).
+    pub a_bits: u8,
+    /// Weight precision: 4 or 16 (=f32).
+    pub w_bits: u8,
+    /// KV-cache precision: 4, 8, or 16 (=f32 rows).
+    pub kv_bits: u8,
+    /// Runtime-Smooth group size (Table 4 knob; 1 = exact per-channel).
+    pub group: usize,
+    /// KV-cache quant group (clamped to head_dim at use).
+    pub kv_group: usize,
+    /// SmoothQuant alpha.
+    pub alpha: f32,
+    /// GPTQ (vs RTN) for INT4 weights when calibration is available.
+    pub gptq: bool,
+    /// Fig. 3 ablation: migrate the runtime scale into the weight per
+    /// call (requires `smoothing == Runtime`, no rotation).
+    pub migrate: bool,
+}
+
+impl Default for QuantRecipe {
+    fn default() -> Self {
+        QuantRecipe::from_method(
+            Method::Rrs,
+            Scheme::A4W4KV4,
+            128,
+            128,
+            0.5,
+            true,
+        )
+    }
+}
+
+impl QuantRecipe {
+    /// The recipe a legacy `(method, scheme, ...)` engine config denotes.
+    /// The recipe-driven pipeline takes the same code routes as the
+    /// method dispatch, so this mapping is bit-exact.
+    pub fn from_method(
+        method: Method,
+        scheme: Scheme,
+        group: usize,
+        kv_group: usize,
+        alpha: f32,
+        gptq: bool,
+    ) -> QuantRecipe {
+        let (smoothing, rotation, migrate) = match method {
+            Method::Fp | Method::Rtn | Method::GptqOnly => {
+                (Smoothing::None, RotationKind::None, false)
+            }
+            Method::SmoothQuant => {
+                (Smoothing::Calibrated, RotationKind::None, false)
+            }
+            Method::Rs => (Smoothing::Runtime, RotationKind::None, false),
+            Method::QuaRot => (Smoothing::None, RotationKind::Hadamard, false),
+            Method::Rrs => (Smoothing::Runtime, RotationKind::Hadamard, false),
+            Method::SpinQuant => (Smoothing::None, RotationKind::Dense, false),
+            Method::RsMigrated => {
+                (Smoothing::Runtime, RotationKind::None, true)
+            }
+        };
+        // legacy Fp dispatch bypasses activation/weight quantization
+        // entirely whatever the scheme says (only kv_bits is honored),
+        // so its recipe pins a/w to full precision
+        let (a_bits, w_bits) = if method == Method::Fp {
+            (16, 16)
+        } else {
+            (scheme.a_bits, scheme.w_bits)
+        };
+        QuantRecipe {
+            smoothing,
+            rotation,
+            a_bits,
+            w_bits,
+            kv_bits: scheme.kv_bits,
+            group: group.max(1),
+            kv_group: kv_group.max(1),
+            alpha,
+            gptq,
+            migrate,
+        }
+    }
+
+    /// The precision triple as a legacy [`Scheme`].
+    pub fn scheme(&self) -> Scheme {
+        Scheme {
+            a_bits: self.a_bits,
+            w_bits: self.w_bits,
+            kv_bits: self.kv_bits,
+        }
+    }
+
+    /// Closest legacy [`Method`] preset (labels / back-compat only —
+    /// dispatch runs off the recipe axes, not this).
+    pub fn method(&self) -> Method {
+        if self.migrate {
+            return Method::RsMigrated;
+        }
+        match (self.smoothing, self.rotation) {
+            (Smoothing::Runtime, RotationKind::None) => Method::Rs,
+            (Smoothing::Runtime, _) => Method::Rrs,
+            (Smoothing::Calibrated, _) => Method::SmoothQuant,
+            (Smoothing::None, RotationKind::Hadamard) => Method::QuaRot,
+            (Smoothing::None, RotationKind::Dense) => Method::SpinQuant,
+            (Smoothing::None, RotationKind::None) => {
+                if self.is_fp() {
+                    Method::Fp
+                } else if self.gptq {
+                    Method::GptqOnly
+                } else {
+                    Method::Rtn
+                }
+            }
+        }
+    }
+
+    /// Fully full-precision (no weight or activation quantization)?
+    pub fn is_fp(&self) -> bool {
+        self.a_bits >= 16 && self.w_bits >= 16
+    }
+
+    /// Does this recipe quantize activations at all?
+    pub fn quantizes_acts(&self) -> bool {
+        self.a_bits < 16
+    }
+
+    /// Symmetric max code for the activation precision (7 for INT4,
+    /// 127 for INT8; INT4 for the degenerate a16-with-int4-weight path,
+    /// matching the legacy dispatch).
+    pub fn a_qmax(&self) -> f32 {
+        if self.a_bits == 8 {
+            super::QMAX8
+        } else {
+            super::QMAX
+        }
+    }
+
+    /// Strategy tag, e.g. `rs+had`, `sq`, `none+rot`, `rs-mig`, `fp`.
+    pub fn tag(&self) -> String {
+        if self.is_fp()
+            && self.smoothing == Smoothing::None
+            && self.rotation == RotationKind::None
+        {
+            return "fp".to_string();
+        }
+        let s = if self.migrate { "rs-mig" } else { self.smoothing.tag() };
+        format!("{}{}", s, self.rotation.tag())
+    }
+
+    /// Stable human/machine label, e.g. `rs+had-A4W4KV4-g128`.
+    pub fn label(&self) -> String {
+        format!("{}-{}-g{}", self.tag(), self.scheme().label(), self.group)
+    }
+
+    /// Reject descriptors no engine path supports, with a clear error
+    /// (this is what turns would-be runtime panics into load-time
+    /// failures).
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.a_bits, 4 | 8 | 16) {
+            bail!("unsupported activation bits {} (want 4, 8 or 16)", self.a_bits);
+        }
+        if !matches!(self.w_bits, 4 | 16) {
+            bail!("unsupported weight bits {} (want 4 or 16)", self.w_bits);
+        }
+        if !matches!(self.kv_bits, 4 | 8 | 16) {
+            bail!("unsupported KV bits {} (want 4, 8 or 16)", self.kv_bits);
+        }
+        if self.group == 0 || self.kv_group == 0 {
+            bail!("group sizes must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.alpha) || !self.alpha.is_finite() {
+            bail!("alpha {} outside [0, 1]", self.alpha);
+        }
+        if self.migrate {
+            if self.smoothing != Smoothing::Runtime {
+                bail!("migrate requires runtime smoothing");
+            }
+            if self.rotation != RotationKind::None {
+                bail!("migrate composes with no rotation (Fig. 3 ablation)");
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a recipe string: either a legacy method preset (`rrs`,
+    /// `sq`, `quarot`, ...) or colon-separated tokens overriding
+    /// individual axes, applied left to right over the default RRS
+    /// recipe.  Examples:
+    ///
+    /// * `rrs` — the paper's RRS W4A4KV4 preset
+    /// * `sq:a8w4kv8` — SmoothQuant W4A8 with INT8 KV
+    /// * `rs:dense:a4w4kv4:g32` — runtime smoothing + dense rotation
+    /// * `rtn:a4w4kv16:nogptq` — plain RTN, fp KV, RTN weights
+    ///
+    /// Token kinds: method names, `nosmooth|rs|sq`, `norot|had|dense`,
+    /// `aXwYkvZ`, `gN`, `kvgN`, `alphaF`, `gptq|nogptq`, `migrate`.
+    pub fn parse(s: &str) -> Result<QuantRecipe> {
+        let mut r = QuantRecipe::default();
+        for raw in s.split([':', ',']) {
+            let tok = raw.trim().to_lowercase();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some(m) = Method::parse(&tok) {
+                let scheme = if m == Method::Fp { Scheme::FP } else { r.scheme() };
+                r = QuantRecipe::from_method(
+                    m, scheme, r.group, r.kv_group, r.alpha, r.gptq,
+                );
+                continue;
+            }
+            if let Some(scheme) = parse_scheme_token(&tok) {
+                r.a_bits = scheme.a_bits;
+                r.w_bits = scheme.w_bits;
+                r.kv_bits = scheme.kv_bits;
+                continue;
+            }
+            match tok.as_str() {
+                "nosmooth" => r.smoothing = Smoothing::None,
+                "norot" => r.rotation = RotationKind::None,
+                "had" | "hadamard" => r.rotation = RotationKind::Hadamard,
+                "dense" | "rot" => r.rotation = RotationKind::Dense,
+                "gptq" => r.gptq = true,
+                "nogptq" | "rtn-w" => r.gptq = false,
+                "migrate" => {
+                    r.smoothing = Smoothing::Runtime;
+                    r.rotation = RotationKind::None;
+                    r.migrate = true;
+                }
+                _ => {
+                    if let Some(g) = tok.strip_prefix("kvg") {
+                        r.kv_group = g
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad kv group '{tok}'"))?;
+                    } else if let Some(g) = tok.strip_prefix('g') {
+                        r.group = g
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad group '{tok}'"))?;
+                    } else if let Some(a) = tok.strip_prefix("alpha") {
+                        r.alpha = a
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad alpha '{tok}'"))?;
+                    } else {
+                        bail!("unknown recipe token '{tok}' in '{s}'");
+                    }
+                }
+            }
+        }
+        r.validate()?;
+        Ok(r)
+    }
+
+    /// Recipe override from the `RRS_RECIPE` environment variable.
+    pub fn from_env() -> Option<Result<QuantRecipe>> {
+        match std::env::var("RRS_RECIPE") {
+            Ok(s) if !s.trim().is_empty() => Some(QuantRecipe::parse(&s)),
+            _ => None,
+        }
+    }
+
+    /// The ablation matrix the harness sweeps (`rrs harness matrix`):
+    /// every smoothing x rotation x precision point the paper's
+    /// comparisons need, including the W4A8 hybrids and the KV ablation.
+    pub fn matrix() -> Vec<QuantRecipe> {
+        let base = QuantRecipe {
+            smoothing: Smoothing::None,
+            rotation: RotationKind::None,
+            a_bits: 4,
+            w_bits: 4,
+            kv_bits: 4,
+            group: 32,
+            kv_group: 32,
+            alpha: 0.5,
+            gptq: false,
+            migrate: false,
+        };
+        vec![
+            // the paper's headline recipe: RRS W4A4 + INT4 KV
+            QuantRecipe {
+                smoothing: Smoothing::Runtime,
+                rotation: RotationKind::Hadamard,
+                ..base
+            },
+            // runtime smoothing alone (Table 1 "RS")
+            QuantRecipe { smoothing: Smoothing::Runtime, ..base },
+            // rotation alone (QuaRot-style, FWHT)
+            QuantRecipe { rotation: RotationKind::Hadamard, ..base },
+            // rotation alone, dense closed-form (QuaRot-style dense)
+            QuantRecipe { rotation: RotationKind::Dense, ..base },
+            // plain RTN floor
+            base,
+            // SmoothQuant W4A8 with INT8 KV (the hybrid SNIPPETS names)
+            QuantRecipe {
+                smoothing: Smoothing::Calibrated,
+                a_bits: 8,
+                kv_bits: 8,
+                ..base
+            },
+            // RRS at W4A8 + INT8 KV: does extra activation headroom help?
+            QuantRecipe {
+                smoothing: Smoothing::Runtime,
+                rotation: RotationKind::Hadamard,
+                a_bits: 8,
+                kv_bits: 8,
+                ..base
+            },
+            // SmoothRot-style: calibrated smoothing composed with rotation
+            QuantRecipe {
+                smoothing: Smoothing::Calibrated,
+                rotation: RotationKind::Hadamard,
+                ..base
+            },
+        ]
+    }
+}
+
+/// Parse `aXwYkvZ` (e.g. `a4w4kv4`, `a8w4kv16`) or `fp`.
+fn parse_scheme_token(t: &str) -> Option<Scheme> {
+    if t == "fp" || t == "fp16" {
+        return Some(Scheme::FP);
+    }
+    let rest = t.strip_prefix('a')?;
+    let wpos = rest.find('w')?;
+    let a: u8 = rest[..wpos].parse().ok()?;
+    let rest = &rest[wpos + 1..];
+    let kpos = rest.find("kv")?;
+    let w: u8 = rest[..kpos].parse().ok()?;
+    let kv: u8 = rest[kpos + 2..].parse().ok()?;
+    Some(Scheme { a_bits: a, w_bits: w, kv_bits: kv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_round_trip_through_method() {
+        for m in Method::ALL {
+            let scheme =
+                if m == Method::Fp { Scheme::FP } else { Scheme::A4W4KV4 };
+            let r = QuantRecipe::from_method(m, scheme, 64, 64, 0.5, false);
+            r.validate().unwrap();
+            assert_eq!(r.scheme(), scheme, "{m:?}");
+            // GptqOnly folds into the Rtn/GptqOnly pair by the gptq flag
+            let back = r.method();
+            match m {
+                Method::GptqOnly => assert_eq!(back, Method::Rtn),
+                other => assert_eq!(back, other),
+            }
+        }
+        let mig = QuantRecipe::from_method(
+            Method::RsMigrated,
+            Scheme::A4W4KV16,
+            128,
+            128,
+            0.5,
+            false,
+        );
+        assert!(mig.migrate);
+        assert_eq!(mig.method(), Method::RsMigrated);
+    }
+
+    #[test]
+    fn parse_presets_and_tokens() {
+        let rrs = QuantRecipe::parse("rrs").unwrap();
+        assert_eq!(rrs.smoothing, Smoothing::Runtime);
+        assert_eq!(rrs.rotation, RotationKind::Hadamard);
+        assert_eq!(rrs.scheme(), Scheme::A4W4KV4);
+
+        let sq8 = QuantRecipe::parse("sq:a8w4kv8:g64:alpha0.8").unwrap();
+        assert_eq!(sq8.smoothing, Smoothing::Calibrated);
+        assert_eq!(sq8.rotation, RotationKind::None);
+        assert_eq!((sq8.a_bits, sq8.w_bits, sq8.kv_bits), (8, 4, 8));
+        assert_eq!(sq8.group, 64);
+        assert!((sq8.alpha - 0.8).abs() < 1e-6);
+
+        let hyb = QuantRecipe::parse("rs:dense:a4w4kv16:kvg16").unwrap();
+        assert_eq!(hyb.smoothing, Smoothing::Runtime);
+        assert_eq!(hyb.rotation, RotationKind::Dense);
+        assert_eq!(hyb.kv_group, 16);
+
+        let fp = QuantRecipe::parse("fp").unwrap();
+        assert!(fp.is_fp());
+        assert_eq!(fp.tag(), "fp");
+
+        assert!(QuantRecipe::parse("rrs:a3w4kv4").is_err());
+        assert!(QuantRecipe::parse("bogus-token").is_err());
+        assert!(QuantRecipe::parse("rrs:alpha2.0").is_err());
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(QuantRecipe::default().label(), "rs+had-A4W4KV4-g128");
+        let q = QuantRecipe::parse("quarot:a4w4kv16:g32").unwrap();
+        assert_eq!(q.label(), "none+had-A4W4KV16-g32");
+    }
+
+    #[test]
+    fn matrix_covers_required_cells() {
+        let m = QuantRecipe::matrix();
+        assert!(m.len() >= 6, "matrix has {} cells", m.len());
+        for r in &m {
+            r.validate().unwrap();
+        }
+        // RRS W4A4
+        assert!(m.iter().any(|r| r.smoothing == Smoothing::Runtime
+            && r.rotation == RotationKind::Hadamard
+            && r.a_bits == 4
+            && r.w_bits == 4));
+        // SmoothQuant W4A8
+        assert!(m.iter().any(|r| r.smoothing == Smoothing::Calibrated
+            && r.a_bits == 8
+            && r.w_bits == 4));
+        // rotation-only (QuaRot-style)
+        assert!(m.iter().any(|r| r.smoothing == Smoothing::None
+            && r.rotation != RotationKind::None));
+        // labels are unique (the report keys on them)
+        let mut labels: Vec<String> = m.iter().map(|r| r.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), m.len());
+    }
+
+    #[test]
+    fn validate_rejects_bad_axes() {
+        let r = QuantRecipe { a_bits: 3, ..QuantRecipe::default() };
+        assert!(r.validate().is_err());
+        let r = QuantRecipe { w_bits: 8, ..QuantRecipe::default() };
+        assert!(r.validate().is_err());
+        // rrs default has a rotation -> migrate is invalid on top of it
+        let r = QuantRecipe { migrate: true, ..QuantRecipe::default() };
+        assert!(r.validate().is_err());
+    }
+}

@@ -4,8 +4,16 @@
 //! `X @ H` with H the normalized Sylvester-Hadamard is applied via FWHT in
 //! O(K log K); learned rotations are dense [K,K] matmuls.  Pairing
 //! `(X R)(R^T W^T)^T` keeps the layer output exact (Fig. 2a).
+//!
+//! Widths that are not a power of two cannot take the plain FWHT (its
+//! butterfly network assumes one) — [`Rotation::hadamard_for`] falls back
+//! to an orthogonal block-diagonal Hadamard over the width's binary
+//! decomposition, and [`Rotation::validate`] turns what used to be a
+//! mid-inference assert into a prepare-time error.
 
-use crate::linalg::fwht::fwht_rows;
+use anyhow::{bail, Result};
+
+use crate::linalg::fwht::{fwht_inplace, fwht_rows, hadamard_dense};
 use crate::linalg::gemm::{gemm_f32, Mat};
 
 /// Rotation operator applied to activation/weight rows along K.
@@ -13,11 +21,100 @@ use crate::linalg::gemm::{gemm_f32, Mat};
 pub enum Rotation {
     /// Normalized Sylvester-Hadamard (K must be a power of two).
     Hadamard,
+    /// Block-diagonal Hadamard over power-of-two segments that tile K —
+    /// the non-power-of-two fallback.  Orthogonal (each block is), so
+    /// pairing still cancels exactly.
+    BlockHadamard(Vec<usize>),
     /// Dense learned rotation (SpinQuant): row-major [K,K].
     Dense(Mat),
 }
 
+/// Binary decomposition of `k` into descending power-of-two segments
+/// (e.g. `12 -> [8, 4]`), the tiling [`Rotation::BlockHadamard`] uses.
+pub fn block_decomposition(k: usize) -> Vec<usize> {
+    assert!(k > 0, "cannot decompose width 0");
+    (0..usize::BITS)
+        .rev()
+        .filter(|b| k & (1usize << b) != 0)
+        .map(|b| 1usize << b)
+        .collect()
+}
+
 impl Rotation {
+    /// The FWHT-based rotation for width `k`: plain Hadamard when `k` is
+    /// a power of two, the block-diagonal fallback otherwise.
+    pub fn hadamard_for(k: usize) -> Rotation {
+        if k.is_power_of_two() {
+            Rotation::Hadamard
+        } else {
+            Rotation::BlockHadamard(block_decomposition(k))
+        }
+    }
+
+    /// QuaRot-style closed-form dense rotation for width `k`: the
+    /// (block-)Hadamard with rows sign-randomized by a seeded ±1
+    /// diagonal.  Orthogonal by construction, needs no training — the
+    /// recipe layer's `RotationKind::Dense` default when no learned
+    /// SpinQuant matrices are supplied.
+    pub fn closed_form_dense(k: usize, seed: u64) -> Rotation {
+        let mut h = vec![0.0f32; k * k];
+        let mut off = 0;
+        for len in block_decomposition(k) {
+            let hb = hadamard_dense(len);
+            for i in 0..len {
+                for j in 0..len {
+                    h[(off + i) * k + (off + j)] = hb[i * len + j];
+                }
+            }
+            off += len;
+        }
+        let mut rng = crate::util::rng::Pcg::new(seed);
+        for i in 0..k {
+            if rng.below(2) == 1 {
+                for v in h[i * k..(i + 1) * k].iter_mut() {
+                    *v = -*v;
+                }
+            }
+        }
+        Rotation::Dense(Mat::from_vec(k, k, h))
+    }
+
+    /// Check this rotation can be applied along width `k`, returning a
+    /// clear error instead of letting `apply` hit a runtime assert.
+    pub fn validate(&self, k: usize) -> Result<()> {
+        match self {
+            Rotation::Hadamard => {
+                if !k.is_power_of_two() {
+                    bail!(
+                        "Hadamard rotation needs a power-of-two width, got {k} \
+                         (use Rotation::hadamard_for for the block-diagonal \
+                         fallback)"
+                    );
+                }
+            }
+            Rotation::BlockHadamard(segs) => {
+                if segs.iter().sum::<usize>() != k
+                    || !segs.iter().all(|s| s.is_power_of_two())
+                {
+                    bail!(
+                        "block-Hadamard segments {segs:?} do not tile width {k} \
+                         with powers of two"
+                    );
+                }
+            }
+            Rotation::Dense(r) => {
+                if r.rows != k || r.cols != k {
+                    bail!(
+                        "dense rotation is [{}x{}], want [{k}x{k}]",
+                        r.rows,
+                        r.cols
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// `X <- X @ R`, rotating every row in place (Hadamard) or via a
     /// dense GEMM (learned).
     pub fn apply(&self, x: &Mat) -> Mat {
@@ -27,6 +124,20 @@ impl Rotation {
                 let mut out = x.clone();
                 let k = out.cols;
                 fwht_rows(&mut out.data, k);
+                out
+            }
+            Rotation::BlockHadamard(segs) => {
+                let mut out = x.clone();
+                let k = out.cols;
+                debug_assert_eq!(segs.iter().sum::<usize>(), k);
+                for r in 0..out.rows {
+                    let row = &mut out.data[r * k..(r + 1) * k];
+                    let mut off = 0;
+                    for &len in segs {
+                        fwht_inplace(&mut row[off..off + len]);
+                        off += len;
+                    }
+                }
                 out
             }
             Rotation::Dense(r) => {
@@ -39,7 +150,7 @@ impl Rotation {
     /// Orthogonality residual `max |R R^T - I|` (0 for Hadamard).
     pub fn orthogonality_error(&self, k: usize) -> f32 {
         match self {
-            Rotation::Hadamard => 0.0,
+            Rotation::Hadamard | Rotation::BlockHadamard(_) => 0.0,
             Rotation::Dense(r) => {
                 assert_eq!(r.rows, k);
                 let mut worst = 0.0f32;
@@ -113,5 +224,73 @@ mod tests {
         let a = Rotation::Hadamard.apply(&x);
         let b = hd.apply(&x);
         assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn block_decomposition_tiles_width() {
+        assert_eq!(block_decomposition(12), vec![8, 4]);
+        assert_eq!(block_decomposition(64), vec![64]);
+        assert_eq!(block_decomposition(1), vec![1]);
+        for k in [3usize, 7, 12, 100, 257] {
+            let segs = block_decomposition(k);
+            assert_eq!(segs.iter().sum::<usize>(), k);
+            assert!(segs.iter().all(|s| s.is_power_of_two()));
+        }
+    }
+
+    #[test]
+    fn non_pow2_falls_back_without_panicking() {
+        // width 12 used to hit the fwht assert mid-inference; the
+        // fallback must rotate, stay orthogonal, and keep pairing exact
+        let k = 12;
+        let rot = Rotation::hadamard_for(k);
+        assert!(matches!(rot, Rotation::BlockHadamard(_)));
+        rot.validate(k).unwrap();
+        let x = randmat(5, k, 6);
+        let w = randmat(7, k, 7);
+        let y0 = gemm_f32_bt(&x, &w);
+        let y1 = gemm_f32_bt(&rot.apply(&x), &rot.apply(&w));
+        assert!(y0.max_abs_diff(&y1) < 1e-3);
+        // involution: block Hadamard is symmetric orthogonal like H
+        let twice = rot.apply(&rot.apply(&x));
+        assert!(twice.max_abs_diff(&x) < 1e-4);
+        // and it actually mixes channels (not the identity)
+        assert!(rot.apply(&x).max_abs_diff(&x) > 1e-3);
+    }
+
+    #[test]
+    fn validate_catches_mismatches_instead_of_panicking() {
+        assert!(Rotation::Hadamard.validate(64).is_ok());
+        assert!(Rotation::Hadamard.validate(12).is_err());
+        assert!(Rotation::hadamard_for(12).validate(12).is_ok());
+        assert!(Rotation::BlockHadamard(vec![8, 2]).validate(12).is_err());
+        let d = Rotation::Dense(Mat::zeros(8, 8));
+        assert!(d.validate(8).is_ok());
+        assert!(d.validate(12).is_err());
+    }
+
+    #[test]
+    fn closed_form_dense_is_orthogonal_and_pairs() {
+        for k in [32usize, 12, 96] {
+            let rot = Rotation::closed_form_dense(k, 0xDECAF + k as u64);
+            rot.validate(k).unwrap();
+            assert!(rot.orthogonality_error(k) < 1e-4, "k={k}");
+            let x = randmat(4, k, 8);
+            let w = randmat(6, k, 9);
+            let y0 = gemm_f32_bt(&x, &w);
+            let y1 = gemm_f32_bt(&rot.apply(&x), &rot.apply(&w));
+            assert!(y0.max_abs_diff(&y1) < 1e-3, "k={k}");
+        }
+        // seeded: same seed, same matrix; different seed, different signs
+        let a = Rotation::closed_form_dense(64, 1);
+        let b = Rotation::closed_form_dense(64, 1);
+        let c = Rotation::closed_form_dense(64, 2);
+        let (Rotation::Dense(ma), Rotation::Dense(mb), Rotation::Dense(mc)) =
+            (&a, &b, &c)
+        else {
+            unreachable!()
+        };
+        assert_eq!(ma.data, mb.data);
+        assert!(ma.max_abs_diff(mc) > 1e-3);
     }
 }

@@ -24,39 +24,67 @@ pub fn round_half_even(x: f32) -> f32 {
     (x + MAGIC) - MAGIC
 }
 
+/// Quantization scale for a group with absolute maximum `absmax`, at an
+/// arbitrary symmetric max code (7 = INT4, 127 = INT8).
+#[inline]
+pub fn scale_for_q(absmax: f32, qmax: f32) -> f32 {
+    absmax.max(1e-8) / qmax
+}
+
 /// Quantization scale for a group with absolute maximum `absmax`.
 #[inline]
 pub fn scale_for(absmax: f32) -> f32 {
-    absmax.max(1e-8) / QMAX
+    scale_for_q(absmax, QMAX)
+}
+
+/// Quantize one value against a scale at an arbitrary max code.
+#[inline]
+pub fn quantize_one_q(x: f32, scale: f32, qmax: f32) -> i8 {
+    round_half_even(x / scale).clamp(-qmax, qmax) as i8
 }
 
 /// Quantize one value against a scale.
 #[inline]
 pub fn quantize_one(x: f32, scale: f32) -> i8 {
-    round_half_even(x / scale).clamp(-QMAX, QMAX) as i8
+    quantize_one_q(x, scale, QMAX)
 }
 
-/// Quantize a row against one scale (hot path; true division keeps
-/// bit-parity with the python oracle, and still autovectorizes).
+/// Quantize a row against one scale at an arbitrary max code (hot path;
+/// true division keeps bit-parity with the python oracle, and still
+/// autovectorizes).
 #[inline]
-pub fn quantize_row(src: &[f32], scale: f32, dst: &mut [i8]) {
+pub fn quantize_row_q(src: &[f32], scale: f32, qmax: f32, dst: &mut [i8]) {
     for (d, &x) in dst.iter_mut().zip(src) {
-        *d = round_half_even(x / scale).clamp(-QMAX, QMAX) as i8;
+        *d = round_half_even(x / scale).clamp(-qmax, qmax) as i8;
     }
 }
 
-/// Per-token (row) symmetric INT4: returns (codes, per-row scales).
-pub fn quant_per_token(x: &Mat) -> (MatI8, Vec<f32>) {
+/// Quantize a row against one scale (INT4).
+#[inline]
+pub fn quantize_row(src: &[f32], scale: f32, dst: &mut [i8]) {
+    quantize_row_q(src, scale, QMAX, dst);
+}
+
+/// Per-token (row) symmetric quantization at an arbitrary max code:
+/// returns (codes, per-row scales).  `qmax = 7` is the INT4 path the
+/// goldens lock; `qmax = 127` is the W4A8 activation path.
+pub fn quant_per_token_q(x: &Mat, qmax: f32) -> (MatI8, Vec<f32>) {
     let mut q = MatI8::zeros(x.rows, x.cols);
     let mut scales = vec![0.0f32; x.rows];
     for i in 0..x.rows {
         let row = x.row(i);
-        let s = scale_for(row.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+        let s =
+            scale_for_q(row.iter().fold(0.0f32, |a, &v| a.max(v.abs())), qmax);
         scales[i] = s;
         let qrow = &mut q.data[i * x.cols..(i + 1) * x.cols];
-        quantize_row(row, s, qrow);
+        quantize_row_q(row, s, qmax, qrow);
     }
     (q, scales)
+}
+
+/// Per-token (row) symmetric INT4: returns (codes, per-row scales).
+pub fn quant_per_token(x: &Mat) -> (MatI8, Vec<f32>) {
+    quant_per_token_q(x, QMAX)
 }
 
 /// Per-output-channel weight quantization = per-row on a [M,K] weight.
@@ -100,10 +128,15 @@ pub fn dequant_per_token(q: &MatI8, scales: &[f32]) -> Mat {
     out
 }
 
+/// Fake-quantize (quantize+dequantize) per-token at an arbitrary max code.
+pub fn fake_quant_per_token_q(x: &Mat, qmax: f32) -> Mat {
+    let (q, s) = quant_per_token_q(x, qmax);
+    dequant_per_token(&q, &s)
+}
+
 /// Fake-quantize (quantize+dequantize) per-token — used for A4W16 paths.
 pub fn fake_quant_per_token(x: &Mat) -> Mat {
-    let (q, s) = quant_per_token(x);
-    dequant_per_token(&q, &s)
+    fake_quant_per_token_q(x, QMAX)
 }
 
 #[cfg(test)]
@@ -197,5 +230,49 @@ mod tests {
         let (q, s) = quant_per_token(&x);
         assert!(q.data.iter().all(|&c| c == 0));
         assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn int8_codes_bounded_and_no_worse_than_int4() {
+        check("rtn-int8", Config::default(), |rng, _| {
+            let x = Mat::from_vec(4, 32, rng.normal_vec(128));
+            let (q8, s8) = quant_per_token_q(&x, crate::quant::QMAX8);
+            let (q4, s4) = quant_per_token(&x);
+            for i in 0..4 {
+                let row = q8.row(i);
+                if row.iter().any(|&c| (c as i32).abs() > 127) {
+                    return Err("int8 code out of range".into());
+                }
+                if row.iter().map(|&c| (c as i32).abs()).max().unwrap() != 127 {
+                    return Err("absmax code must be 127".into());
+                }
+                let mut sum8 = 0.0f32;
+                let mut sum4 = 0.0f32;
+                for j in 0..32 {
+                    let e8 = (x.at(i, j) - q8.row(i)[j] as f32 * s8[i]).abs();
+                    let e4 = (x.at(i, j) - q4.row(i)[j] as f32 * s4[i]).abs();
+                    if e8 > s8[i] / 2.0 + 1e-6 {
+                        return Err(format!("int8 err {e8} > half-step"));
+                    }
+                    sum8 += e8;
+                    sum4 += e4;
+                }
+                if sum8 > sum4 + 1e-6 {
+                    return Err(format!("int8 row err {sum8} > int4 {sum4}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn qmax7_variants_are_the_legacy_functions() {
+        let x = Mat::from_vec(2, 16, (0..32).map(|i| (i as f32).sin()).collect());
+        let (qa, sa) = quant_per_token(&x);
+        let (qb, sb) = quant_per_token_q(&x, QMAX);
+        assert_eq!(qa.data, qb.data);
+        assert_eq!(sa, sb);
+        assert_eq!(scale_for(3.2), scale_for_q(3.2, QMAX));
+        assert_eq!(quantize_one(1.7, 0.3), quantize_one_q(1.7, 0.3, QMAX));
     }
 }

@@ -16,7 +16,7 @@
 use crate::linalg::gemm::Mat;
 use crate::linalg::igemm::MatI8;
 
-use super::rtn;
+use super::{rtn, QMAX};
 
 /// Runtime channel-wise absolute maxima (eq. 1), floored at 1e-8.
 pub fn channel_scales(x: &Mat) -> Vec<f32> {
@@ -74,11 +74,22 @@ pub fn prepare(x: &Mat, group: usize) -> SmoothedAct {
     crate::kernels::rrs_prologue(x, group)
 }
 
+/// [`prepare`] at an arbitrary symmetric max code (7 = INT4 — the
+/// golden path — 127 = the W4A8 activation recipe).
+pub fn prepare_q(x: &Mat, group: usize, qmax: f32) -> SmoothedAct {
+    crate::kernels::rrs_prologue_q(x, group, qmax)
+}
+
 /// The staged reference pipeline: separate channel-max, gather/smooth,
 /// absmax and quantize passes — the oracle the fused kernel prologue
 /// (every backend of [`crate::kernels::rrs_prologue`]) is diffed
 /// against.
 pub fn prepare_staged(x: &Mat, group: usize) -> SmoothedAct {
+    prepare_staged_q(x, group, QMAX)
+}
+
+/// [`prepare_staged`] at an arbitrary max code — the W4A8 oracle.
+pub fn prepare_staged_q(x: &Mat, group: usize, qmax: f32) -> SmoothedAct {
     let s = channel_scales(x);
     let perm = reorder_perm(&s);
     let sg = group_scales(&s, &perm, group);
@@ -91,11 +102,13 @@ pub fn prepare_staged(x: &Mat, group: usize) -> SmoothedAct {
         for (j, &p) in perm.iter().enumerate() {
             smooth_row[j] = row[p] / sg[j / group];
         }
-        let sx =
-            rtn::scale_for(smooth_row.iter().fold(0.0f32, |a, &v| a.max(v.abs())));
+        let sx = rtn::scale_for_q(
+            smooth_row.iter().fold(0.0f32, |a, &v| a.max(v.abs())),
+            qmax,
+        );
         token_scales[i] = sx;
         let qrow = &mut q.data[i * x.cols..(i + 1) * x.cols];
-        rtn::quantize_row(&smooth_row, sx, qrow);
+        rtn::quantize_row_q(&smooth_row, sx, qmax, qrow);
     }
     SmoothedAct { q, token_scales, perm, group_scales: sg, group }
 }
@@ -103,7 +116,13 @@ pub fn prepare_staged(x: &Mat, group: usize) -> SmoothedAct {
 /// A4W16 fake-quant path: smooth, quantize, de-quantize, un-permute.
 /// Returns the effective activation the fp GEMM should consume.
 pub fn fake_quant_a4w16(x: &Mat, group: usize) -> Mat {
-    let sa = prepare(x, group);
+    fake_quant_rs_q(x, group, QMAX)
+}
+
+/// [`fake_quant_a4w16`] at an arbitrary symmetric max code (127 = the
+/// A8W16 runtime-smoothed recipe).
+pub fn fake_quant_rs_q(x: &Mat, group: usize, qmax: f32) -> Mat {
+    let sa = prepare_q(x, group, qmax);
     let mut out = Mat::zeros(x.rows, x.cols);
     for i in 0..x.rows {
         let sx = sa.token_scales[i];
@@ -192,6 +211,23 @@ mod tests {
             assert!(rel < 0.08, "row {i} rel {rel}");
         }
         assert_close(&y.data, &x.data, 0.5, 0.12).unwrap();
+    }
+
+    #[test]
+    fn int8_prepare_matches_staged_and_bounds_codes() {
+        let x = randmat(6, 64, 9);
+        let fused = prepare_q(&x, 16, crate::quant::QMAX8);
+        let staged = prepare_staged_q(&x, 16, crate::quant::QMAX8);
+        assert_eq!(fused.q.data, staged.q.data);
+        assert_eq!(fused.token_scales, staged.token_scales);
+        assert_eq!(fused.perm, staged.perm);
+        assert_eq!(fused.group_scales, staged.group_scales);
+        assert!(fused.q.data.iter().all(|&c| (c as i32).abs() <= 127));
+        // qmax=7 variant is exactly the legacy pipeline
+        let legacy = prepare_staged(&x, 16);
+        let at7 = prepare_staged_q(&x, 16, QMAX);
+        assert_eq!(legacy.q.data, at7.q.data);
+        assert_eq!(legacy.token_scales, at7.token_scales);
     }
 
     #[test]

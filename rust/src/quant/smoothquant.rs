@@ -30,7 +30,17 @@ impl Calibration {
     }
 }
 
-/// Smoothing scales (paper 2.2), floored for numeric safety.
+/// Clamp range for smoothing scales.  At the 1e-8 calibration floor with
+/// extreme alpha the raw ratio reaches 1e±8 — dividing activations by a
+/// ~1e-8 scale amplifies them by 1e8 and the downstream quantizer
+/// saturates (or the ratio degenerates to inf/inf = NaN).  Healthy
+/// calibrations produce scales near 1, so the clamp is a no-op there.
+pub const SCALE_MIN: f32 = 1e-4;
+pub const SCALE_MAX: f32 = 1e4;
+
+/// Smoothing scales (paper 2.2), floored for numeric safety and clamped
+/// to `[SCALE_MIN, SCALE_MAX]`; non-finite ratios fall back to 1 (no
+/// migration for that channel).
 pub fn smoothing_scales(calib: &Calibration, w: &Mat, alpha: f32) -> Vec<f32> {
     let mut wmax = vec![0.0f32; w.cols];
     for i in 0..w.rows {
@@ -43,7 +53,12 @@ pub fn smoothing_scales(calib: &Calibration, w: &Mat, alpha: f32) -> Vec<f32> {
         .iter()
         .zip(&wmax)
         .map(|(&a, &m)| {
-            (a.max(1e-8).powf(alpha) / m.max(1e-8).powf(1.0 - alpha)).max(1e-8)
+            let raw = a.max(1e-8).powf(alpha) / m.max(1e-8).powf(1.0 - alpha);
+            if raw.is_finite() {
+                raw.clamp(SCALE_MIN, SCALE_MAX)
+            } else {
+                1.0
+            }
         })
         .collect()
 }
@@ -121,5 +136,79 @@ mod tests {
         let b = Mat::from_vec(1, 2, vec![-2.0, 0.5]);
         let c = Calibration::from_batches([&a, &b].into_iter(), 2);
         assert_eq!(c.act_absmax, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn scales_stay_finite_and_clamped_on_degenerate_calibration() {
+        use crate::util::proptest::{check, Config};
+        check("sq-scale-edges", Config::default(), |rng, _| {
+            let k = 4 + rng.below(12);
+            // hostile channel maxima: zeros (floor), huge outliers,
+            // denormal-scale values
+            let mut am = vec![0.0f32; k];
+            let mut wdata = vec![0.0f32; 2 * k];
+            for j in 0..k {
+                am[j] = match rng.below(4) {
+                    0 => 0.0,
+                    1 => 1e30,
+                    2 => 1e-30,
+                    _ => rng.normal_vec(1)[0].abs(),
+                };
+                let wv = match rng.below(4) {
+                    0 => 0.0,
+                    1 => 1e30,
+                    2 => 1e-30,
+                    _ => rng.normal_vec(1)[0],
+                };
+                wdata[j] = wv;
+                wdata[k + j] = -wv * 0.5;
+            }
+            let w = Mat::from_vec(2, k, wdata);
+            let calib = Calibration { act_absmax: am };
+            for &alpha in &[0.0f32, 0.25, 0.5, 0.85, 1.0] {
+                let s = smoothing_scales(&calib, &w, alpha);
+                for (j, &sj) in s.iter().enumerate() {
+                    if !sj.is_finite() {
+                        return Err(format!("non-finite scale {sj} at {j}"));
+                    }
+                    if !(SCALE_MIN..=SCALE_MAX).contains(&sj) {
+                        return Err(format!("scale {sj} escapes clamp at {j}"));
+                    }
+                }
+                // smoothing with these scales must never mint non-finite
+                // activations from finite (if large) inputs
+                let x = Mat::from_vec(
+                    1,
+                    k,
+                    (0..k).map(|j| calib.act_absmax[j]).collect(),
+                );
+                let xs = smooth_activation(&x, &s);
+                if xs.data.iter().any(|v| !v.is_finite()) {
+                    return Err("smoothed activation went non-finite".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn clamp_is_noop_for_healthy_scales() {
+        // the fix must not perturb in-range calibrations: same inputs as
+        // the fp-preservation test, raw ratio recomputed by hand
+        let x = randmat(4, 32, 11);
+        let w = randmat(8, 32, 12);
+        let calib = Calibration::from_batches([&x].into_iter(), 32);
+        let s = smoothing_scales(&calib, &w, 0.5);
+        let mut wmax = vec![0.0f32; 32];
+        for i in 0..8 {
+            for (m, &v) in wmax.iter_mut().zip(w.row(i)) {
+                *m = m.max(v.abs());
+            }
+        }
+        for j in 0..32 {
+            let raw = calib.act_absmax[j].max(1e-8).powf(0.5)
+                / wmax[j].max(1e-8).powf(0.5);
+            assert_eq!(s[j], raw, "clamp changed an in-range scale");
+        }
     }
 }

@@ -92,6 +92,27 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Where `BENCH_*.json` artifacts go: the repository root (the directory
+/// holding ROADMAP.md), found by walking up from the crate dir — so
+/// `cargo bench` run from `rust/` and CI steps run from the checkout
+/// root write and diff the same files.  Falls back to the bare name
+/// (current directory) when no marker is found.
+pub fn bench_output_path(name: &str) -> std::path::PathBuf {
+    let start = std::env::var_os("CARGO_MANIFEST_DIR")
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::current_dir().ok())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let mut dir = start;
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir.join(name);
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(name);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,11 @@ use std::collections::BTreeMap;
 
 use rrs::linalg::gemm::Mat;
 use rrs::linalg::igemm::MatI8;
-use rrs::quant::{gptq, kv, qlinear, rotation::Rotation, rtn, runtime_smooth, smoothquant};
+use rrs::quant::qlinear::{PrepareAux, PrepareOpts, PreparedWeight, QLinear};
+use rrs::quant::{
+    gptq, kv, qlinear, rotation::Rotation, rtn, runtime_smooth, smoothquant,
+    Method, QuantRecipe, Scheme,
+};
 use rrs::util::io::{read_rrsw, Tensor};
 use rrs::util::stats;
 
@@ -189,6 +193,75 @@ fn smoothquant_matches() {
     let (wq, sw) = rtn::quant_per_channel_w(&wm);
     let got = qlinear::forward_per_channel_a4w4(&xs, &wq, &sw);
     assert_close(&got.data, g["gemm_sq"].as_f32().unwrap(), 0.5, 5e-3, "gemm_sq");
+}
+
+/// Strategy equivalence on golden weights: a [`QLinear`] assembled from
+/// a parsed recipe descriptor and the python-quantized golden codes must
+/// reproduce both the staged pre-refactor RRS pipeline (bit-for-bit)
+/// and the python oracle output (within golden tolerance).
+#[test]
+fn recipe_layer_matches_hardcoded_rrs_on_goldens() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let (wq, sw) = (mati8(&g["wq_rot"]), g["sw_rot"].as_f32().unwrap().to_vec());
+    // pre-refactor hardcoded RRS serving path: Hadamard rotate, runtime
+    // smooth at group 32, fused INT4 GEMM over the permuted weight
+    let xr = Rotation::Hadamard.apply(&x);
+    let sa = runtime_smooth::prepare(&xr, 32);
+    let want = qlinear::forward_rs_fused(&sa, &wq, &sw);
+    // composable pipeline: same codes behind a parsed recipe descriptor
+    let recipe = QuantRecipe::parse("rrs:a4w4kv16:g32:nogptq").unwrap();
+    let layer = QLinear::from_parts(
+        recipe,
+        PreparedWeight::Int4 { q: wq, packed: None, scales: sw },
+        None,
+        Some(Rotation::Hadamard),
+    );
+    let got = layer.forward(&x);
+    assert_eq!(
+        got.data, want.data,
+        "recipe pipeline diverged from the hardcoded RRS path"
+    );
+    assert_close(
+        &got.data,
+        g["gemm_rrs_g32"].as_f32().unwrap(),
+        0.5,
+        5e-3,
+        "recipe vs golden gemm_rrs_g32",
+    );
+}
+
+/// Full-prepare equivalence on golden weights: preparing the fp golden
+/// weight through the legacy [`Method`] surface and through
+/// [`QLinear::prepare_recipe`] yields bit-identical forwards for the
+/// headline RRS W4A4 recipe.
+#[test]
+fn recipe_prepare_matches_method_prepare_on_goldens() {
+    let g = need_goldens!();
+    let x = mat(&g["x"]);
+    let w = mat(&g["w"]);
+    let legacy = QLinear::prepare(
+        &w,
+        &PrepareOpts {
+            method: Method::Rrs,
+            scheme: Scheme::A4W4KV16,
+            group: 32,
+            alpha: 0.5,
+            calib: None,
+            gptq_calib: None,
+            rotation: Some(Rotation::Hadamard),
+        },
+    )
+    .unwrap();
+    let recipe = QuantRecipe::parse("rrs:a4w4kv16:g32:nogptq").unwrap();
+    let composed = QLinear::prepare_recipe(
+        &w,
+        &recipe,
+        PrepareAux { rotation: Some(Rotation::Hadamard), ..Default::default() },
+    )
+    .unwrap();
+    let (a, b) = (legacy.forward(&x), composed.forward(&x));
+    assert_eq!(a.data, b.data, "method-prepared vs recipe-prepared RRS forward");
 }
 
 #[test]

@@ -20,9 +20,10 @@ use rrs::linalg::fwht::fwht_inplace_scalar;
 use rrs::linalg::igemm::{igemm_i8_bt, MatI8};
 use rrs::quant::pack4::PackedI4;
 use rrs::quant::qlinear::{
-    effective_group, forward_per_channel_a4w4, forward_rs_fused_prepermuted,
+    effective_group, forward_per_channel_a4w4, forward_per_channel_a8w4,
+    forward_rs_fused_prepermuted,
 };
-use rrs::quant::{rtn, runtime_smooth};
+use rrs::quant::{rtn, runtime_smooth, QMAX8};
 use rrs::util::proptest::{check, Config};
 use rrs::util::rng::Pcg;
 
@@ -165,6 +166,115 @@ fn per_channel_matches_staged_bitwise() {
                     &format!("{} tiles {} per-channel", bk.name(), tiles.label()),
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+/// W4A8 oracle: the registered microkernel entry
+/// (`kernels::gemm_w4a8_packed`) must reproduce the staged INT8
+/// reference (`forward_per_channel_a8w4`) bit-for-bit on every backend
+/// and tile shape.  Activations are quantized at qmax 127, so the codes
+/// span the full INT8 range — this is the case an i16-multiply kernel
+/// path would silently overflow on.
+#[test]
+fn w4a8_matches_staged_reference_bitwise() {
+    check("kdiff-w4a8", Config { cases: 32, ..Config::default() }, |rng, case| {
+        let n = 1 + rng.below(6);
+        let k = [8, 16, 33, 64, 100, 128][case % 6];
+        let m = 1 + rng.below(10);
+        let x = rand_mat(rng, n, k);
+        let w = rand_mat(rng, m, k);
+        let (wq, sw) = rtn::quant_per_channel_w(&w);
+        let want = forward_per_channel_a8w4(&x, &wq, &sw);
+        let (xq, sx) = rtn::quant_per_token_q(&x, QMAX8);
+        // sanity: quantizing a continuous row at 127 actually exercises
+        // codes beyond the INT4 range
+        assert!(
+            xq.data.iter().any(|&c| c.abs() > 7),
+            "INT8 quantization produced only INT4-range codes (k={k})"
+        );
+        let bp = PackedI4::pack(&wq);
+        for bk in kernels::all_backends() {
+            for tiles in tile_grid() {
+                let got = kernels::gemm_w4a8_packed_with(bk, tiles, &xq, &sx, &bp, &sw);
+                assert_bits(
+                    &got.data,
+                    &want.data,
+                    &format!("{} tiles {} w4a8", bk.name(), tiles.label()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Extreme-magnitude W4A8 codes: saturated ±127 activations against
+/// saturated ±7 weights — the worst case for any widening multiply.
+#[test]
+fn w4a8_saturated_codes_stay_exact() {
+    let (n, k, m) = (3usize, 96usize, 5usize);
+    let xq = MatI8::from_vec(
+        n,
+        k,
+        (0..n * k).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect(),
+    );
+    let wq = MatI8::from_vec(
+        m,
+        k,
+        (0..m * k).map(|i| if i % 3 == 0 { 7 } else { -7 }).collect(),
+    );
+    let sx = vec![0.013f32; n];
+    let sw: Vec<f32> = (0..m).map(|j| 0.05 + j as f32 * 0.01).collect();
+    let bp = PackedI4::pack(&wq);
+    // exact i32 reference from the unpacked igemm
+    let acc = igemm_i8_bt(&xq, &wq);
+    for bk in kernels::all_backends() {
+        for tiles in tile_grid() {
+            let got = kernels::gemm_w4a8_packed_with(bk, tiles, &xq, &sx, &bp, &sw);
+            for i in 0..n {
+                for j in 0..m {
+                    let want = acc[i * m + j] as f32 * sx[i] * sw[j];
+                    let g = got.data[i * m + j];
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "{} tiles {} saturated w4a8 at ({i},{j}): {g} vs {want}",
+                        bk.name(),
+                        tiles.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The INT8 (qmax 127) RRS prologue must match the staged reference on
+/// every backend, exactly like the INT4 one — codes, permutation and
+/// both scale vectors.
+#[test]
+fn int8_prologue_matches_staged_bitwise() {
+    check("kdiff-prologue8", Config { cases: 24, ..Config::default() }, |rng, case| {
+        let n = 1 + rng.below(5);
+        let k = [32, 64, 96, 128][case % 4];
+        let group = effective_group([1, 8, 32, k][case % 4], k);
+        let x = rand_mat(rng, n, k);
+        let want = runtime_smooth::prepare_staged_q(&x, group, QMAX8);
+        for bk in kernels::all_backends() {
+            let got = kernels::rrs_prologue_with_q(bk, &x, group, QMAX8);
+            if got.q.data != want.q.data || got.perm != want.perm {
+                return Err(format!("{}: int8 prologue codes/perm diverged", bk.name()));
+            }
+            assert_bits(
+                &got.token_scales,
+                &want.token_scales,
+                &format!("{} int8 token scales", bk.name()),
+            )?;
+            assert_bits(
+                &got.group_scales,
+                &want.group_scales,
+                &format!("{} int8 group scales", bk.name()),
+            )?;
         }
         Ok(())
     });

@@ -1,0 +1,189 @@
+//! Scenario-matrix smoke suite: every composable recipe combination
+//! ([`QuantRecipe::matrix`]) drives a tiny model through one prefill +
+//! decode step, the W4A8 serving path is diffed against its staged
+//! oracle at the layer level, rotated recipes are pushed through
+//! non-power-of-two engine dims (the fwht-panic regression), and the
+//! parse grammar round-trips.  The final test writes the smoke-scale
+//! `BENCH_matrix.json` ablation report at the repo root (CI uploads it
+//! and diffs it against the committed baseline).
+
+use rrs::harness::matrix::{to_json, MatrixCell};
+use rrs::linalg::gemm::Mat;
+use rrs::model::{EngineConfig, KvCache, ModelConfig, QuantModel, Weights};
+use rrs::quant::qlinear::{self, PrepareAux, QLinear};
+use rrs::quant::{rtn, QuantRecipe, RotationKind, Smoothing};
+use rrs::util::bench::bench_output_path;
+use rrs::util::rng::Pcg;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { n_layers: 1, max_seq: 64, ..Default::default() }
+}
+
+fn calib_tokens(mcfg: &ModelConfig) -> Vec<u32> {
+    (0..256u32).map(|i| (i * 53 + 7) % mcfg.vocab as u32).collect()
+}
+
+/// Prefill + one decode step under a recipe; returns the decode logits.
+fn prefill_and_decode(
+    mcfg: &ModelConfig,
+    w: &Weights,
+    recipe: QuantRecipe,
+    calib: &[u32],
+) -> anyhow::Result<Mat> {
+    let ecfg = EngineConfig::from_recipe(recipe);
+    let model = QuantModel::prepare(w, mcfg, &ecfg, Some(calib), None)?;
+    let prompt: Vec<u32> = (1u32..9).collect();
+    let mut cache = KvCache::new(mcfg, &ecfg);
+    let logits = model.forward_full(&prompt, Some(&mut cache));
+    assert!(
+        logits.data.iter().all(|v| v.is_finite()),
+        "{}: non-finite prefill logits",
+        recipe.label()
+    );
+    let mut batch = [(&mut cache, 3u32)];
+    let step = model.decode_batch(&mut batch);
+    assert!(
+        step.data.iter().all(|v| v.is_finite()),
+        "{}: non-finite decode logits",
+        recipe.label()
+    );
+    Ok(step)
+}
+
+/// Every ablation-grid recipe survives one prefill + decode step on the
+/// tiny model — the CI scenario-matrix gate.
+#[test]
+fn every_matrix_recipe_runs_prefill_and_decode() {
+    let mcfg = tiny_cfg();
+    let w = Weights::random(&mcfg, 11);
+    let calib = calib_tokens(&mcfg);
+    let cells = QuantRecipe::matrix();
+    assert!(cells.len() >= 6, "ablation grid shrank to {} cells", cells.len());
+    for recipe in cells {
+        prefill_and_decode(&mcfg, &w, recipe, &calib)
+            .unwrap_or_else(|e| panic!("{}: {e}", recipe.label()));
+    }
+}
+
+/// The grid must keep the three headline combos the report is built
+/// around: RRS W4A4, SmoothQuant W4A8, and a rotation-only variant.
+#[test]
+fn matrix_covers_required_combos() {
+    let cells = QuantRecipe::matrix();
+    assert!(cells.iter().any(|r| r.smoothing == Smoothing::Runtime
+        && r.rotation == RotationKind::Hadamard
+        && r.a_bits == 4
+        && r.w_bits == 4
+        && r.kv_bits == 4));
+    assert!(cells
+        .iter()
+        .any(|r| r.smoothing == Smoothing::Calibrated && r.a_bits == 8 && r.w_bits == 4));
+    assert!(cells
+        .iter()
+        .any(|r| r.smoothing == Smoothing::None && r.rotation != RotationKind::None));
+    // every cell is valid and distinct
+    for (i, a) in cells.iter().enumerate() {
+        a.validate().unwrap();
+        for b in &cells[i + 1..] {
+            assert_ne!(a, b, "duplicate matrix cell {}", a.label());
+        }
+    }
+}
+
+/// Rotated recipes on non-power-of-two engine dims must prepare and run
+/// via the block-Hadamard fallback — never hit the fwht power-of-two
+/// assert at runtime.
+#[test]
+fn non_pow2_dims_never_panic() {
+    let mcfg = ModelConfig {
+        dim: 96,
+        ffn: 144,
+        n_heads: 4,
+        n_kv_heads: 2,
+        n_layers: 1,
+        max_seq: 64,
+        ..Default::default()
+    };
+    let w = Weights::random(&mcfg, 23);
+    let calib = calib_tokens(&mcfg);
+    for spec in ["rrs:g32:nogptq", "quarot:g32:nogptq", "dense:g32:nogptq", "sq:had:g32:nogptq"]
+    {
+        let recipe = QuantRecipe::parse(spec).unwrap();
+        prefill_and_decode(&mcfg, &w, recipe, &calib)
+            .unwrap_or_else(|e| panic!("{spec} on 96/144 dims: {e}"));
+    }
+}
+
+/// Layer-level W4A8 bit-identity: a QLinear prepared under an INT8
+/// activation recipe serves the registered W4A8 microkernel, which must
+/// reproduce the staged reference exactly.
+#[test]
+fn w4a8_layer_matches_staged_oracle_bitwise() {
+    let mut rng = Pcg::new(0xA8);
+    let (n, k, m) = (5usize, 64usize, 24usize);
+    let x = Mat::from_vec(n, k, rng.normal_vec(n * k));
+    let w = Mat::from_vec(m, k, rng.normal_vec(m * k));
+    let recipe = QuantRecipe::parse("rtn:a8w4kv16:nogptq").unwrap();
+    let layer = QLinear::prepare_recipe(&w, &recipe, PrepareAux::default()).unwrap();
+    let got = layer.forward(&x);
+    let (wq, sw) = rtn::quant_per_channel_w(&w);
+    let want = qlinear::forward_per_channel_a8w4(&x, &wq, &sw);
+    assert_eq!(got.data, want.data, "W4A8 layer diverged from staged oracle");
+}
+
+/// Parse grammar: axis tokens compose over the defaults and the derived
+/// legacy label stays in sync with the engine config.
+#[test]
+fn recipe_parse_and_labels_round_trip() {
+    let r = QuantRecipe::parse("sq:a8w4kv8:had:g64:kvg16:alpha0.7:nogptq").unwrap();
+    assert_eq!(r.smoothing, Smoothing::Calibrated);
+    assert_eq!(r.rotation, RotationKind::Hadamard);
+    assert_eq!((r.a_bits, r.w_bits, r.kv_bits), (8, 4, 8));
+    assert_eq!((r.group, r.kv_group), (64, 16));
+    assert!((r.alpha - 0.7).abs() < 1e-6);
+    assert!(!r.gptq);
+    for recipe in QuantRecipe::matrix() {
+        let ecfg = EngineConfig::from_recipe(recipe);
+        assert_eq!(ecfg.label(), recipe.label());
+        assert_eq!(ecfg.resolved(), recipe);
+    }
+    assert!(QuantRecipe::parse("a7w4kv4").is_err());
+    assert!(QuantRecipe::parse("bogus-token").is_err());
+}
+
+/// Smoke-scale ablation report: sweep the grid on the tiny model,
+/// measure perplexity + decode throughput, and write `BENCH_matrix.json`
+/// at the repo root for CI to diff and upload.
+#[test]
+fn matrix_smoke_writes_ablation_report() {
+    let mcfg = tiny_cfg();
+    let w = Weights::random(&mcfg, 31);
+    let calib = calib_tokens(&mcfg);
+    let text = "the quick brown fox jumps over the lazy dog. ".repeat(16);
+    let mut cells = Vec::new();
+    for recipe in QuantRecipe::matrix() {
+        let ecfg = EngineConfig::from_recipe(recipe);
+        let model = QuantModel::prepare(&w, &mcfg, &ecfg, Some(&calib), None).unwrap();
+        let ppl = rrs::eval::perplexity(&model, &text, 32, 2);
+        assert!(ppl.is_finite(), "{}: non-finite smoke ppl", recipe.label());
+        let prompt: Vec<u32> = (1u32..9).collect();
+        let mut cache = KvCache::new(&mcfg, &ecfg);
+        model.forward_full(&prompt, Some(&mut cache));
+        let steps = 16usize;
+        let t0 = std::time::Instant::now();
+        let mut tok = 3u32;
+        for _ in 0..steps {
+            let mut batch = [(&mut cache, tok)];
+            let logits = model.decode_batch(&mut batch);
+            tok = (logits.row(0)[0].abs() as u32 % 250) + 1;
+        }
+        let tps = steps as f32 / t0.elapsed().as_secs_f32().max(1e-9);
+        // QA accuracy is meaningless on a random model; the smoke report
+        // carries 0.0 and the `smoke` flag so consumers know not to
+        // compare it against the trained-artifact sweep
+        cells.push(MatrixCell { recipe, ppl, qa_avg: 0.0, decode_tps: tps });
+    }
+    let path = bench_output_path("BENCH_matrix.json");
+    std::fs::write(&path, to_json(&cells, true).dump()).unwrap();
+    eprintln!("wrote {} ({} cells)", path.display(), cells.len());
+}
