@@ -12,7 +12,11 @@ failures are structural only:
 
 Baselines carrying ``"pending": true`` are placeholders committed before
 any provisioned run recorded real numbers; they auto-accept the fresh
-results, which should then be committed to replace them.
+results, which should then be committed to replace them — loudly, so a
+placeholder cannot linger unnoticed.  ``--forbid-pending`` upgrades a
+pending baseline whose bench *did* run from a warning to a hard failure
+(CI uses it: once a runner produced real numbers there is no excuse for
+keeping the placeholder).
 """
 
 import json
@@ -51,7 +55,7 @@ def numeric_leaves(prefix, obj, out):
         out[prefix] = float(obj)
 
 
-def diff_one(path, failures):
+def diff_one(path, failures, forbid_pending=False):
     try:
         with open(path) as f:
             fresh = json.load(f)
@@ -66,7 +70,15 @@ def diff_one(path, failures):
         print(f"{path}: no committed baseline; accepting fresh results")
         return
     if base.get("pending"):
-        print(f"{path}: baseline pending; accepting fresh results as the first real run")
+        msg = (
+            f"{path}: baseline is a PENDING placeholder but the bench ran — "
+            "commit the fresh results to replace it"
+        )
+        if forbid_pending:
+            failures.append(msg)
+        else:
+            print(f"::warning::{msg}")
+            print(f"{path}: baseline pending; accepting fresh results as the first real run")
         return
     b_nums, f_nums = {}, {}
     numeric_leaves("", base, b_nums)
@@ -91,10 +103,11 @@ def diff_one(path, failures):
 
 
 def main(argv):
-    paths = argv or DEFAULT_FILES
+    forbid_pending = "--forbid-pending" in argv
+    paths = [a for a in argv if not a.startswith("--")] or DEFAULT_FILES
     failures = []
     for path in paths:
-        diff_one(path, failures)
+        diff_one(path, failures, forbid_pending=forbid_pending)
     for f in failures:
         print(f"FAIL {f}", file=sys.stderr)
     return 1 if failures else 0

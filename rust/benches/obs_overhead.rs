@@ -2,11 +2,13 @@
 //! quant-health sampler off vs on, locking in the "obs-off is within
 //! run-to-run noise" budget from `docs/ARCHITECTURE.md`.
 //!
-//! Measures decode tokens/s four ways — sampler off twice (the noise
+//! Measures decode tokens/s five ways — sampler off twice (the noise
 //! baseline), then period 16 (the recommended production rate), then
-//! period 1 (every call, the worst case) — and writes `BENCH_obs.json`
-//! (CI uploads `BENCH_*.json` and asserts the off/off ratio and the
-//! period-16 overhead).
+//! period 1 (every call, the worst case), then with the continuous
+//! sampling profiler running at 99 Hz — and writes `BENCH_obs.json`
+//! plus a sample folded-stack artifact `BENCH_obs_folded.txt` (CI
+//! uploads both and asserts the off/off ratio, the period-16 overhead,
+//! and < 3% profiler overhead).
 //!
 //! Run: `cargo bench --bench obs_overhead`
 
@@ -76,6 +78,14 @@ fn main() {
     rrs::obs::set_sample_every(1);
     let sampled1 = decode_tps(&model, &mcfg, &ecfg);
     rrs::obs::set_sample_every(0);
+    // continuous profiler at 99 Hz, quant sampler off: isolates the
+    // sweep-thread + live-stack cost from the probe cost above
+    rrs::obs::profile::reset();
+    rrs::obs::profile::start_at(99.0);
+    let prof_tps = decode_tps(&model, &mcfg, &ecfg);
+    rrs::obs::profile::pause();
+    let prof_samples = rrs::obs::profile::samples_total();
+    let folded = rrs::obs::profile::folded();
 
     let probes: u64 = rrs::obs::health::snapshot()
         .iter()
@@ -93,6 +103,10 @@ fn main() {
         "  period 1  : {sampled1:>8.0} tok/s ({:+.1}% vs off, {probes} probes)",
         pct(sampled1)
     );
+    println!(
+        "  prof 99Hz : {prof_tps:>8.0} tok/s ({:+.1}% vs off, {prof_samples} samples)",
+        pct(prof_tps)
+    );
 
     let j = obj(vec![
         ("bench", "obs_overhead".into()),
@@ -105,11 +119,21 @@ fn main() {
         ("sampled16_overhead_pct", (pct(sampled16) as f64).into()),
         ("sampled1_tps", (sampled1 as f64).into()),
         ("sampled1_overhead_pct", (pct(sampled1) as f64).into()),
+        ("prof_hz", 99.0f64.into()),
+        ("prof_tps", (prof_tps as f64).into()),
+        ("prof_overhead_pct", (pct(prof_tps) as f64).into()),
+        ("prof_samples", (prof_samples as usize).into()),
         ("probes_recorded", (probes as usize).into()),
     ]);
     let path = rrs::util::bench::bench_output_path("BENCH_obs.json");
     match std::fs::write(&path, j.dump()) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => println!("could not write {}: {e}", path.display()),
+    }
+    // a ready-to-render flamegraph collapse sample per run (CI artifact)
+    let fpath = rrs::util::bench::bench_output_path("BENCH_obs_folded.txt");
+    match std::fs::write(&fpath, &folded) {
+        Ok(()) => println!("wrote {} ({} stacks)", fpath.display(), folded.lines().count()),
+        Err(e) => println!("could not write {}: {e}", fpath.display()),
     }
 }

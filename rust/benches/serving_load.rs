@@ -162,6 +162,10 @@ fn main() {
         },
     ));
     let (port, accept_handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
+    // continuous profiler on for the whole load run: the `profile`
+    // command below must return real folded stacks under traffic
+    rrs::obs::profile::reset();
+    rrs::obs::profile::start_at(99.0);
 
     let stats: Arc<Mutex<Vec<ConnStats>>> = Arc::new(Mutex::new(Vec::new()));
     let t0 = Instant::now();
@@ -213,6 +217,40 @@ fn main() {
         }
         std::thread::sleep(Duration::from_millis(25));
     };
+
+    // active-observability surfaces under load: `attrib` and `profile`
+    // must both answer with non-empty, schema-valid bodies
+    let query = |cmd: &str| -> Json {
+        let mut c = TcpStream::connect(("127.0.0.1", port)).expect("query connect");
+        c.write_all(format!("{{\"cmd\": \"{cmd}\"}}\n").as_bytes())
+            .expect("query write");
+        let mut line = String::new();
+        BufReader::new(c).read_line(&mut line).expect("query read");
+        Json::parse(line.trim()).expect("query parse")
+    };
+    let attrib = query("attrib");
+    let attrib_rows = attrib
+        .get("requests")
+        .and_then(Json::as_arr)
+        .map(|a| a.len())
+        .unwrap_or(0);
+    assert!(attrib_rows > 0, "attrib returned no requests: {}", attrib.dump());
+    let slowest = &attrib.get("requests").unwrap().as_arr().unwrap()[0];
+    for key in ["id", "total_ms", "tokens", "finish", "attributed_ms", "phases_ms"] {
+        assert!(slowest.get(key).is_some(), "attrib row missing {key}");
+    }
+    let profile = query("profile");
+    let prof_samples = profile
+        .get("samples")
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    assert!(prof_samples > 0, "profiler took no samples: {}", profile.dump());
+    assert!(
+        profile.get("folded").and_then(Json::as_str).map(str::len).unwrap_or(0) > 0,
+        "profile returned no folded stacks"
+    );
+    rrs::obs::profile::pause();
+    println!("  attrib: {attrib_rows} slowest rows; profiler: {prof_samples} samples");
 
     let all = stats.lock().unwrap();
     let ttfts: Vec<f32> = all.iter().filter(|c| c.tokens > 0).map(|c| c.ttft_ms).collect();

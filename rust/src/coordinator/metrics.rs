@@ -107,14 +107,18 @@ impl Metrics {
     }
 
     /// Record time-to-first-token: submission to the first sampled token.
+    /// Every observation also feeds the SLO watchdog's burn-rate window.
     pub fn observe_ttft(&self, ttft_ms: f32) {
         self.lat_ttft.observe(ttft_ms);
+        obs::watchdog::observe_ttft(ttft_ms);
     }
 
     /// Record one inter-token latency (gap between consecutive tokens of
-    /// one request, measured across batched decode steps).
+    /// one request, measured across batched decode steps).  Every
+    /// observation also feeds the SLO watchdog's burn-rate window.
     pub fn observe_itl(&self, itl_ms: f32) {
         self.lat_itl.observe(itl_ms);
+        obs::watchdog::observe_itl(itl_ms);
     }
 
     pub fn total_summary(&self) -> Summary {
@@ -386,6 +390,13 @@ impl Metrics {
                 ]),
             ),
             ("quant_health", obs::health::snapshot_json()),
+            ("alerts", obs::watchdog::alerts_json()),
+            (
+                "attrib",
+                obj(vec![
+                    ("window", obs::attrib::finished_len().into()),
+                ]),
+            ),
             (
                 "trace",
                 obj(vec![

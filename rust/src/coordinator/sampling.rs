@@ -468,6 +468,7 @@ impl<'a> Lane<'a> {
 /// the result is identical to sampling the lanes serially — the
 /// parallelism is free of ordering effects by construction.
 pub fn sample_lanes(lanes: &mut [Lane<'_>]) {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Sampling);
     let threads = threadpool::default_threads().min(lanes.len().max(1));
     threadpool::parallel_rows(lanes, 1, threads, |_, row| {
         let lane = &mut row[0];

@@ -43,7 +43,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::model::sampler::Sampling;
+use crate::obs::attrib::{self, Breakdown, Phase};
 use crate::obs::trace::SpanKind;
+use crate::obs::{profile, watchdog};
 
 use super::engine_iface::ServeEngine;
 use super::metrics::Metrics;
@@ -97,6 +99,9 @@ struct Active<S> {
     last_token_at: Instant,
     queue_ms: f32,
     prefill_ms: f32,
+    /// Per-phase wall-time attribution accumulated across decode rounds
+    /// (preserved over preemption; finalized at retire).
+    attrib: Breakdown,
     reply: mpsc::Sender<Event>,
 }
 
@@ -120,6 +125,8 @@ struct Pending {
     /// Preserved sampler state: a resumed request continues the exact
     /// RNG stream and penalty counts it was preempted with.
     sampler: Option<SamplerState>,
+    /// Attribution carried across preemption.
+    attrib: Breakdown,
 }
 
 impl Pending {
@@ -132,6 +139,7 @@ impl Pending {
             queue_ms: None,
             prior_prefill_ms: 0.0,
             sampler: None,
+            attrib: Breakdown::default(),
         }
     }
 
@@ -155,13 +163,16 @@ impl Pending {
             queue_ms: Some(a.queue_ms),
             prior_prefill_ms: a.prefill_ms,
             sampler: Some(a.sampler),
+            attrib: a.attrib,
         }
     }
 
-    fn dead_reason(&self) -> Option<FinishReason> {
+    /// `now` is the scheduler round's hoisted timestamp, so deadline
+    /// drops, TTFT, and ITL stamps stay mutually consistent.
+    fn dead_reason(&self, now: Instant) -> Option<FinishReason> {
         if self.req.cancel.load(Ordering::Relaxed) {
             Some(FinishReason::Cancelled)
-        } else if self.req.deadline.map(|d| Instant::now() >= d).unwrap_or(false) {
+        } else if self.req.deadline.map(|d| now >= d).unwrap_or(false) {
             Some(FinishReason::Deadline)
         } else {
             None
@@ -186,6 +197,9 @@ impl Coordinator {
     ) -> Coordinator {
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
+        // continuous profiler: spawns its sweep thread iff RRS_PROF_HZ
+        // is set to a positive rate (no-op otherwise)
+        profile::ensure_env_started();
         let max_seq = engine.max_seq();
         let q2 = queue.clone();
         let m2 = metrics.clone();
@@ -310,10 +324,20 @@ fn run_loop<E: ServeEngine>(
     let mut active: Vec<Active<E::Seq>> = Vec::new();
     let mut preempted: VecDeque<Pending> = VecDeque::new();
     loop {
+        // one timestamp per round: deadline checks, victim slack, and
+        // the pre-step retire all read the same clock
+        let round_now = Instant::now();
+        // export watchdog raise/clear edges as instant trace events so
+        // alerts land on the same timeline as the requests they affected
+        for (tid, raised) in watchdog::drain_transitions() {
+            let kind =
+                if raised { SpanKind::AlertRaise } else { SpanKind::AlertClear };
+            metrics.trace.instant(tid, kind, 0);
+        }
         // drop dead work at the head of the resume queue (client gone or
         // deadline passed) before spending any capacity on it
         while let Some(p) = preempted.front() {
-            match p.dead_reason() {
+            match p.dead_reason(round_now) {
                 Some(r) => finish_waiting(preempted.pop_front().unwrap(), r, &metrics),
                 None => break,
             }
@@ -376,7 +400,7 @@ fn run_loop<E: ServeEngine>(
 
         // prefill admitted requests
         for p in incoming {
-            if let Some(r) = p.dead_reason() {
+            if let Some(r) = p.dead_reason(round_now) {
                 finish_waiting(p, r, &metrics);
                 continue;
             }
@@ -387,6 +411,7 @@ fn run_loop<E: ServeEngine>(
                 queue_ms,
                 prior_prefill_ms,
                 sampler,
+                attrib: carried_attrib,
             } = p;
             let measured_queue_ms = queue_ms
                 .unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f32() * 1e3);
@@ -398,7 +423,11 @@ fn run_loop<E: ServeEngine>(
             // request may no longer fit — try_prefill reserves (or
             // refuses) atomically under the pool lock, and a refused
             // request is deferred instead of hitting an exhaustion panic
-            let Some(logits) = engine.try_prefill(&mut seq, &full_prompt) else {
+            let prefilled = {
+                let _phase = attrib::phase_scope(Phase::Prefill);
+                engine.try_prefill(&mut seq, &full_prompt)
+            };
+            let Some(logits) = prefilled else {
                 preempted.push_back(Pending {
                     req,
                     generated,
@@ -406,6 +435,7 @@ fn run_loop<E: ServeEngine>(
                     queue_ms,
                     prior_prefill_ms,
                     sampler,
+                    attrib: carried_attrib,
                 });
                 continue;
             };
@@ -413,7 +443,11 @@ fn run_loop<E: ServeEngine>(
             metrics
                 .prefill_tokens
                 .fetch_add(full_prompt.len() as u64, Ordering::Relaxed);
-            let round_prefill_ms = t0.elapsed().as_secs_f32() * 1e3;
+            // one post-prefill timestamp covers the prefill span, TTFT,
+            // and this lane's ITL base, so the stamps agree exactly
+            let t1 = Instant::now();
+            let round_prefill_ms =
+                t1.saturating_duration_since(t0).as_secs_f32() * 1e3;
             let prefill_ms = prior_prefill_ms + round_prefill_ms;
             metrics.observe_prefill(round_prefill_ms);
             metrics
@@ -435,7 +469,9 @@ fn run_loop<E: ServeEngine>(
             // TTFT only on first admission: a re-prefilled (preempted)
             // request already delivered its first token long ago
             if generated.is_empty() {
-                metrics.observe_ttft(req.submitted_at.elapsed().as_secs_f32() * 1e3);
+                let ttft_ms =
+                    t1.saturating_duration_since(req.submitted_at).as_secs_f32() * 1e3;
+                metrics.observe_ttft(ttft_ms);
             }
             let index = generated.len();
             generated.push(next);
@@ -453,9 +489,10 @@ fn run_loop<E: ServeEngine>(
                 cancel: req.cancel,
                 disconnected,
                 submitted_at: req.submitted_at,
-                last_token_at: Instant::now(),
+                last_token_at: t1,
                 queue_ms,
                 prefill_ms,
+                attrib: carried_attrib,
                 reply: req.reply,
             });
         }
@@ -471,7 +508,7 @@ fn run_loop<E: ServeEngine>(
         }
 
         // 2. retire finished BEFORE stepping (first token may already stop)
-        retire(&engine, &mut active, &metrics);
+        retire(&engine, &mut active, &metrics, round_now);
         if active.is_empty() {
             refresh_gauges(&engine, &metrics);
             continue;
@@ -492,7 +529,7 @@ fn run_loop<E: ServeEngine>(
             if !short || active.is_empty() {
                 break;
             }
-            let mut victim = active.remove(victim_index(&active));
+            let mut victim = active.remove(victim_index(&active, round_now));
             engine.release_seq(&mut victim.seq);
             metrics.preemptions.fetch_add(1, Ordering::Relaxed);
             metrics
@@ -504,7 +541,11 @@ fn run_loop<E: ServeEngine>(
             continue;
         }
 
-        // 3. one batched decode step
+        // 3. one batched decode step.  Drain the thread's phase
+        // accumulator first: scopes fired during this round's prefills
+        // are already counted per-request via prefill_ms and must not
+        // leak into the decode-step attribution below.
+        let _ = attrib::step_take();
         let mut pairs: Vec<(&mut E::Seq, u32)> = active
             .iter_mut()
             .map(|a| {
@@ -528,6 +569,10 @@ fn run_loop<E: ServeEngine>(
             sampling::sample_lanes(&mut lanes);
             lanes.iter().map(|l| l.token()).collect()
         };
+        // this round's instrumented step phases (kv gather/scatter,
+        // gemm, sampling): each participating lane waited the whole
+        // batched step, so each lane is attributed the full step totals
+        let step_us = attrib::step_take();
         // sampled once per batched step, not per row: one step = one span
         // per participating request when the sampler fires
         let step_traced = metrics.step_trace.hit();
@@ -539,10 +584,24 @@ fn run_loop<E: ServeEngine>(
             if !a.disconnected {
                 a.disconnected = send_token(&metrics, &a.reply, a.id, index, tok);
             }
-            let itl_ms =
-                step_done.duration_since(a.last_token_at).as_secs_f32() * 1e3;
+            let itl_ms = step_done
+                .saturating_duration_since(a.last_token_at)
+                .as_secs_f32()
+                * 1e3;
             a.last_token_at = step_done;
             metrics.observe_itl(itl_ms);
+            let mut measured_us = 0u64;
+            for p in [Phase::KvGather, Phase::KvScatter, Phase::Gemm, Phase::Sampling]
+            {
+                let us = step_us[p as usize];
+                a.attrib.add(p, us);
+                measured_us += us;
+            }
+            // the remainder of this lane's inter-token interval was
+            // spent outside any instrumented phase (attention
+            // bookkeeping, other lanes' admissions, loop overhead)
+            a.attrib
+                .add(Phase::DecodeOther, ms_us(itl_ms).saturating_sub(measured_us));
             if step_traced {
                 metrics.trace.span(
                     a.id,
@@ -553,7 +612,7 @@ fn run_loop<E: ServeEngine>(
             }
         }
         refresh_gauges(&engine, &metrics);
-        retire(&engine, &mut active, &metrics);
+        retire(&engine, &mut active, &metrics, step_done);
     }
 }
 
@@ -587,8 +646,7 @@ fn refresh_gauges<E: ServeEngine>(engine: &E, metrics: &Metrics) {
 /// class the lane with the most deadline slack (deadline-less =
 /// infinite) is safest to pause; ties fall to the youngest lane, which
 /// has the least progress to recompute.
-fn victim_index<S>(active: &[Active<S>]) -> usize {
-    let now = Instant::now();
+fn victim_index<S>(active: &[Active<S>], now: Instant) -> usize {
     let slack = |x: &Active<S>| {
         x.deadline
             .map(|d| d.saturating_duration_since(now).as_micros() as u64)
@@ -619,10 +677,24 @@ fn finish_waiting(p: Pending, reason: FinishReason, metrics: &Metrics) {
         .trace
         .instant(p.req.id, SpanKind::Abort, p.generated.len() as u64);
     let total_ms = p.req.submitted_at.elapsed().as_secs_f32() * 1e3;
+    let queue_ms = p.queue_ms.unwrap_or(total_ms);
+    // attribution for a request that died waiting: whatever it
+    // accumulated before preemption, queue/prefill finalized here
+    let mut b = p.attrib;
+    b.set(Phase::Queue, ms_us(queue_ms));
+    b.set(Phase::Prefill, ms_us(p.prior_prefill_ms));
+    b.add(Phase::StreamWrite, attrib::take_stream_write(p.req.id));
+    attrib::finish_request(attrib::RequestAttrib {
+        id: p.req.id,
+        total_us: ms_us(total_ms),
+        tokens: p.generated.len() as u64,
+        finish: reason.as_str(),
+        breakdown: b,
+    });
     let _ = p.req.reply.send(Event::Done(Response {
         id: p.req.id,
         tokens: p.generated,
-        queue_ms: p.queue_ms.unwrap_or(total_ms),
+        queue_ms,
         prefill_ms: p.prior_prefill_ms,
         decode_ms: 0.0,
         total_ms,
@@ -656,8 +728,8 @@ fn retire<E: ServeEngine>(
     engine: &E,
     active: &mut Vec<Active<E::Seq>>,
     metrics: &Metrics,
+    now: Instant,
 ) {
-    let now = Instant::now();
     let mut i = 0;
     while i < active.len() {
         let Some(reason) = finishes(engine, &active[i], now) else {
@@ -668,8 +740,29 @@ fn retire<E: ServeEngine>(
         // preemption pass relies on for its youngest-lane tie-break
         let mut a = active.remove(i);
         engine.release_seq(&mut a.seq);
-        let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
+        let total_ms =
+            now.saturating_duration_since(a.submitted_at).as_secs_f32() * 1e3;
         let decode_ms = (total_ms - a.queue_ms - a.prefill_ms).max(0.0);
+        // finalize the attribution: queue/prefill are measured
+        // per-request (overwrite), stream writes drain from the server's
+        // ledger, decode phases accumulated across the rounds above
+        a.attrib.set(Phase::Queue, ms_us(a.queue_ms));
+        a.attrib.set(Phase::Prefill, ms_us(a.prefill_ms));
+        a.attrib
+            .add(Phase::StreamWrite, attrib::take_stream_write(a.id));
+        for p in attrib::ALL_PHASES {
+            let us = a.attrib.get(p);
+            if us > 0 {
+                metrics.trace.span(a.id, SpanKind::Phase(p), us, 0);
+            }
+        }
+        attrib::finish_request(attrib::RequestAttrib {
+            id: a.id,
+            total_us: ms_us(total_ms),
+            tokens: a.generated.len() as u64,
+            finish: reason.as_str(),
+            breakdown: a.attrib,
+        });
         match reason {
             FinishReason::Cancelled => {
                 metrics.cancelled.fetch_add(1, Ordering::Relaxed);

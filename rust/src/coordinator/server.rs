@@ -16,12 +16,19 @@
 //!      {"id": 1, "done": true, "text": " red.", "tokens": 5,
 //!       "finish": "stop_seq", "queue_ms": ..., "total_ms": ...}
 //!      (with `"n" > 1` every frame also carries `"choice"`)
-//!   -> {"cmd": "metrics"}            <- metrics snapshot
+//!   -> {"cmd": "metrics"}            <- metrics snapshot (includes the
+//!                                       watchdog "alerts" section)
 //!   -> {"cmd": "metrics_prom"}       <- Prometheus text exposition 0.0.4
-//!                                       (wrapped as {"content_type", "body"})
+//!                                       (wrapped as {"content_type", "body",
+//!                                       "malformed_lines"})
 //!   -> {"cmd": "trace"}              <- Chrome trace_event document; add
 //!                                       {"format": "jsonl"} for one event
 //!                                       per line in "body"
+//!   -> {"cmd": "attrib", "n": 10}    <- top-n slowest finished requests
+//!                                       with per-phase latency breakdowns
+//!   -> {"cmd": "profile"}            <- continuous-profiler state + folded
+//!                                       stacks (flamegraph collapse format;
+//!                                       enable sampling with RRS_PROF_HZ)
 //!   -> {"cmd": "shutdown"}           <- {"ok": true} and server exits
 //!
 //! Malformed sampling params (wrong type, out of range) get an
@@ -45,6 +52,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::model::tokenizer;
+use crate::obs::attrib::{self, Phase};
+use crate::obs::{profile, prom};
 use crate::util::json::{obj, Json};
 
 use super::request::{Event, RequestOptions, Response, StreamHandle, SubmitError};
@@ -164,10 +173,17 @@ fn handle_command(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Json {
         // Prometheus exposition rides the JSON protocol as a wrapped
         // body; an HTTP shim only needs to echo body with the given
         // content type
-        "metrics_prom" => obj(vec![
-            ("content_type", "text/plain; version=0.0.4".into()),
-            ("body", Json::Str(crate::obs::prom::render(&coord.metrics))),
-        ]),
+        "metrics_prom" => {
+            let body = prom::render(&coord.metrics);
+            // self-check the exposition with the graceful parser: a
+            // malformed line is counted in the reply, never a panic
+            let (_, malformed) = prom::parse_exposition(&body);
+            obj(vec![
+                ("content_type", "text/plain; version=0.0.4".into()),
+                ("malformed_lines", malformed.into()),
+                ("body", Json::Str(body)),
+            ])
+        }
         "trace" => {
             let jsonl = req.get("format").and_then(Json::as_str) == Some("jsonl");
             if jsonl {
@@ -176,6 +192,17 @@ fn handle_command(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 coord.metrics.trace.chrome_trace_json()
             }
         }
+        // top-n slowest finished requests with phase decompositions
+        "attrib" => {
+            let n = req
+                .get("n")
+                .and_then(Json::as_usize)
+                .unwrap_or(10)
+                .clamp(1, 256);
+            attrib::slowest_json(n)
+        }
+        // continuous-profiler state + folded stacks
+        "profile" => profile::profile_json(),
         "ping" => obj(vec![("ok", true.into())]),
         "shutdown" => {
             stop.store(true, Ordering::Relaxed);
@@ -379,7 +406,19 @@ fn stream_generation(
                             ("token", (token as usize).into()),
                             ("text", tokenizer::decode(&[token]).as_str().into()),
                         ]);
-                        if let Err(e) = write_line(w, &obj(kvs)) {
+                        // socket write time is attributed to the request
+                        // (drained by the scheduler at retire) and made
+                        // visible to the profiler while in flight
+                        let t0 = std::time::Instant::now();
+                        let wrote = {
+                            let _phase = attrib::phase_scope(Phase::StreamWrite);
+                            write_line(w, &obj(kvs))
+                        };
+                        attrib::add_stream_write(
+                            id,
+                            t0.elapsed().as_micros() as u64,
+                        );
+                        if let Err(e) = wrote {
                             write_err = Some(e);
                             break 'serve;
                         }

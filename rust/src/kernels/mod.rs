@@ -394,6 +394,7 @@ pub fn igemm_packed_with(
 /// counterpart of [`crate::linalg::igemm::igemm_i8_bt`], bit-identical
 /// to it by the backend contract.
 pub fn igemm_packed(a: &MatI8, b: &PackedI4) -> Vec<i32> {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Gemm);
     IGEMM_CALLS.fetch_add(1, Ordering::Relaxed);
     let r = registry();
     igemm_packed_with(r.backend, r.tiles, a, b)
@@ -438,6 +439,7 @@ pub fn gemm_rs_fused_packed(
     b: &PackedI4,
     sw: &[f32],
 ) -> Mat {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Gemm);
     FUSED_GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
     FUSED_GEMM_ROWS.fetch_add(q.rows as u64, Ordering::Relaxed);
     let r = registry();
@@ -449,6 +451,7 @@ pub fn gemm_rs_fused_packed(
 /// the fused kernel, bit-identical to the staged
 /// [`crate::quant::qlinear::forward_per_channel_a4w4`] epilogue.
 pub fn gemm_per_channel_packed(xq: &MatI8, sx: &[f32], b: &PackedI4, sw: &[f32]) -> Mat {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Gemm);
     PER_CHANNEL_CALLS.fetch_add(1, Ordering::Relaxed);
     let r = registry();
     gemm_per_channel_packed_with(r.backend, r.tiles, xq, sx, b, sw)
@@ -476,6 +479,7 @@ pub fn gemm_per_channel_packed_with(
 /// W4A8 hot path separately.  Bit-identity vs the staged INT8 reference
 /// is locked by `rust/tests/kernel_diff.rs`.
 pub fn gemm_w4a8_packed(xq: &MatI8, sx: &[f32], b: &PackedI4, sw: &[f32]) -> Mat {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Gemm);
     W4A8_CALLS.fetch_add(1, Ordering::Relaxed);
     let r = registry();
     gemm_w4a8_packed_with(r.backend, r.tiles, xq, sx, b, sw)
@@ -545,6 +549,7 @@ pub fn rrs_prologue(x: &Mat, group: usize) -> SmoothedAct {
 /// [`rrs_prologue`] at an arbitrary max code (the recipe layer's entry;
 /// the health probe clips against the same code range it quantized to).
 pub fn rrs_prologue_q(x: &Mat, group: usize, qmax: f32) -> SmoothedAct {
+    let _phase = crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::Gemm);
     PROLOGUE_ROWS.fetch_add(x.rows as u64, Ordering::Relaxed);
     let r = registry();
     let sa = rrs_prologue_with_q(r.backend, x, group, qmax);

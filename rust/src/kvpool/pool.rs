@@ -395,6 +395,8 @@ impl KvPool {
         k: &[f32],
         v: &[f32],
     ) {
+        let _phase =
+            crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::KvScatter);
         let bs = self.cfg.block_size;
         let bi = pos / bs;
         debug_assert!(bi <= table.len(), "non-sequential KV append");
@@ -442,6 +444,8 @@ impl KvPool {
         k_scratch: &'a mut Vec<Vec<f32>>,
         v_scratch: &'a mut Vec<Vec<f32>>,
     ) -> (&'a [Vec<f32>], &'a [Vec<f32>]) {
+        let _phase =
+            crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::KvGather);
         let mut n = 0usize;
         for &id in table {
             let (ks, vs) = &self.slots[id as usize].block.layers[layer];

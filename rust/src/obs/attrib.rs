@@ -1,0 +1,494 @@
+//! Per-request phase attribution: decompose every request's wall time
+//! into the serving phases that actually consumed it.
+//!
+//! The passive layer ([`super::hist`], [`super::trace`]) can say *that*
+//! a request was slow; this module says *where the time went*.  Hot
+//! paths install RAII [`phase_scope`] guards (the same pattern as
+//! [`crate::obs::layer_scope`]): the scheduler step loop, the engine
+//! KV gather/scatter, the kernel-registry GEMM dispatch, the vectorized
+//! sampling pass, and the server stream-write path.  Each guard, on
+//! drop, records its **self time** (elapsed minus time spent in nested
+//! scopes, so phases never double-count) three ways:
+//!
+//! * a per-phase process-wide [`LogHistogram`] family, rendered by the
+//!   Prometheus exposition as `rrs_phase_ms{phase=...}` (the GEMM phase
+//!   additionally carries the live kernel backend label);
+//! * the calling thread's **step accumulator**, which the scheduler
+//!   drains once per decode round ([`step_take`]) and spreads onto every
+//!   lane that took part in the step — per-request attribution;
+//! * the thread's live **phase stack** (lock-free, fixed depth),
+//!   readable cross-thread by the sampling profiler
+//!   ([`super::profile`]).
+//!
+//! Completed requests land in a bounded registry with their full
+//! [`Breakdown`]; the coordinator's `attrib` TCP command returns the
+//! top-N slowest with their decompositions ([`slowest_json`]).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+use super::hist::LogHistogram;
+use super::lock_recover;
+
+/// Serving phases a request's wall time decomposes into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Waiting in the public queue before first admission.
+    Queue = 0,
+    /// Prompt prefill compute (all admission rounds).
+    Prefill = 1,
+    /// Paged-pool KV rows gathered into dense lanes / attention reads.
+    KvGather = 2,
+    /// New KV rows scattered back into the paged pool.
+    KvScatter = 3,
+    /// Quantized GEMM dispatch (fused RRS / per-channel / W4A8 / INT8),
+    /// including the fused activation prologue.
+    Gemm = 4,
+    /// Vectorized per-lane sampling pass over the batch's logit rows.
+    Sampling = 5,
+    /// Token frames written to the client socket.
+    StreamWrite = 6,
+    /// Decode-step wall time not covered by an instrumented phase
+    /// (attention bookkeeping, scheduler overhead, ...).
+    DecodeOther = 7,
+}
+
+/// Number of phases (array-index bound; phase discriminants are dense).
+pub const NPHASES: usize = 8;
+
+/// Every phase, in discriminant order.
+pub const ALL_PHASES: [Phase; NPHASES] = [
+    Phase::Queue,
+    Phase::Prefill,
+    Phase::KvGather,
+    Phase::KvScatter,
+    Phase::Gemm,
+    Phase::Sampling,
+    Phase::StreamWrite,
+    Phase::DecodeOther,
+];
+
+impl Phase {
+    /// Stable snake_case name (JSON keys, Prometheus labels, folded
+    /// profiler stacks).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::Prefill => "prefill",
+            Phase::KvGather => "kv_gather",
+            Phase::KvScatter => "kv_scatter",
+            Phase::Gemm => "gemm",
+            Phase::Sampling => "sampling",
+            Phase::StreamWrite => "stream_write",
+            Phase::DecodeOther => "decode_other",
+        }
+    }
+
+    /// Trace-span name (`phase_*` so lifecycle and phase spans stay
+    /// distinguishable on one request track).
+    pub fn span_name(self) -> &'static str {
+        match self {
+            Phase::Queue => "phase_queue",
+            Phase::Prefill => "phase_prefill",
+            Phase::KvGather => "phase_kv_gather",
+            Phase::KvScatter => "phase_kv_scatter",
+            Phase::Gemm => "phase_gemm",
+            Phase::Sampling => "phase_sampling",
+            Phase::StreamWrite => "phase_stream_write",
+            Phase::DecodeOther => "phase_decode_other",
+        }
+    }
+
+    /// Inverse of the discriminant (profiler samples store raw `u8`s).
+    pub fn from_u8(v: u8) -> Option<Phase> {
+        ALL_PHASES.get(v as usize).copied()
+    }
+}
+
+/// Max nesting depth of live phase scopes per thread (deeper scopes
+/// still time correctly; they just vanish from profiler samples).
+pub const MAX_DEPTH: usize = 8;
+
+/// One thread's live phase stack, readable cross-thread: the frames are
+/// relaxed atomics, so the profiler reads a *torn but valid* snapshot
+/// at worst (a frame from a neighbouring instant), never UB.
+pub struct ThreadStack {
+    depth: AtomicUsize,
+    frames: [AtomicU8; MAX_DEPTH],
+}
+
+impl ThreadStack {
+    fn new() -> ThreadStack {
+        ThreadStack {
+            depth: AtomicUsize::new(0),
+            frames: [const { AtomicU8::new(0) }; MAX_DEPTH],
+        }
+    }
+
+    /// Snapshot the live frames (phase discriminants, outermost first).
+    pub fn snapshot(&self) -> ([u8; MAX_DEPTH], usize) {
+        let depth = self.depth.load(Ordering::Relaxed).min(MAX_DEPTH);
+        let mut out = [0u8; MAX_DEPTH];
+        for (i, f) in self.frames.iter().take(depth).enumerate() {
+            out[i] = f.load(Ordering::Relaxed);
+        }
+        (out, depth)
+    }
+}
+
+/// Cap on registered thread stacks (server spawns a thread per
+/// connection; dead threads are pruned on registration and by the
+/// profiler sweep, the cap bounds the worst case in between).
+const MAX_STACKS: usize = 4096;
+
+fn stack_registry() -> &'static Mutex<Vec<Weak<ThreadStack>>> {
+    static REG: OnceLock<Mutex<Vec<Weak<ThreadStack>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Snapshot every live registered thread stack (profiler sweep).
+pub fn live_stacks() -> Vec<Arc<ThreadStack>> {
+    let mut reg = lock_recover(stack_registry());
+    reg.retain(|w| w.strong_count() > 0);
+    reg.iter().filter_map(Weak::upgrade).collect()
+}
+
+struct LocalFrame {
+    phase: Phase,
+    start: Instant,
+    /// Time consumed by nested scopes (subtracted for self time).
+    child_us: u64,
+}
+
+struct ThreadState {
+    stack: Arc<ThreadStack>,
+    frames: Vec<LocalFrame>,
+    /// Per-phase self-time since the last [`step_take`], microseconds.
+    step_us: [u64; NPHASES],
+}
+
+impl ThreadState {
+    fn new() -> ThreadState {
+        let stack = Arc::new(ThreadStack::new());
+        let mut reg = lock_recover(stack_registry());
+        reg.retain(|w| w.strong_count() > 0);
+        if reg.len() < MAX_STACKS {
+            reg.push(Arc::downgrade(&stack));
+        }
+        ThreadState { stack, frames: Vec::with_capacity(MAX_DEPTH), step_us: [0; NPHASES] }
+    }
+}
+
+thread_local! {
+    static STATE: RefCell<ThreadState> = RefCell::new(ThreadState::new());
+}
+
+fn phase_hists() -> &'static [LogHistogram; NPHASES] {
+    static H: OnceLock<[LogHistogram; NPHASES]> = OnceLock::new();
+    H.get_or_init(|| std::array::from_fn(|_| LogHistogram::new()))
+}
+
+/// The process-wide per-phase self-time histograms (milliseconds), in
+/// [`ALL_PHASES`] order — the Prometheus renderer iterates this.
+pub fn histograms() -> impl Iterator<Item = (Phase, &'static LogHistogram)> {
+    ALL_PHASES.iter().copied().zip(phase_hists().iter())
+}
+
+/// RAII guard: the calling thread is in `phase` until drop.  On drop
+/// the scope's *self time* (elapsed minus nested scopes) feeds the
+/// phase histogram and the thread's step accumulator; while live, the
+/// phase is visible to the sampling profiler.
+pub struct PhaseScope {
+    phase: Phase,
+}
+
+/// Enter `phase` on the current thread.  Scopes nest; each level
+/// accounts only its self time, so a GEMM inside a decode step never
+/// counts twice.
+pub fn phase_scope(phase: Phase) -> PhaseScope {
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        let depth = st.frames.len();
+        if depth < MAX_DEPTH {
+            st.stack.frames[depth].store(phase as u8, Ordering::Relaxed);
+            st.stack.depth.store(depth + 1, Ordering::Relaxed);
+        }
+        st.frames.push(LocalFrame { phase, start: Instant::now(), child_us: 0 });
+    });
+    PhaseScope { phase }
+}
+
+impl Drop for PhaseScope {
+    fn drop(&mut self) {
+        STATE.with(|s| {
+            let mut st = s.borrow_mut();
+            let Some(f) = st.frames.pop() else { return };
+            debug_assert_eq!(f.phase, self.phase);
+            let depth = st.frames.len();
+            if depth < MAX_DEPTH {
+                st.stack.depth.store(depth, Ordering::Relaxed);
+            }
+            let total_us = f.start.elapsed().as_micros() as u64;
+            let self_us = total_us.saturating_sub(f.child_us);
+            if let Some(parent) = st.frames.last_mut() {
+                parent.child_us += total_us;
+            }
+            st.step_us[f.phase as usize] += self_us;
+            phase_hists()[f.phase as usize].observe(self_us as f32 / 1e3);
+        });
+    }
+}
+
+/// Drain the calling thread's per-phase step accumulator (microseconds,
+/// [`ALL_PHASES`] order).  The scheduler calls this once per decode
+/// round and spreads the totals over every participating lane.
+pub fn step_take() -> [u64; NPHASES] {
+    STATE.with(|s| std::mem::replace(&mut s.borrow_mut().step_us, [0; NPHASES]))
+}
+
+/// One request's wall-time decomposition, microseconds per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown(pub [u64; NPHASES]);
+
+impl Breakdown {
+    /// Add `us` microseconds to `phase`.
+    pub fn add(&mut self, phase: Phase, us: u64) {
+        self.0[phase as usize] = self.0[phase as usize].saturating_add(us);
+    }
+
+    /// Overwrite `phase` with `us` microseconds.
+    pub fn set(&mut self, phase: Phase, us: u64) {
+        self.0[phase as usize] = us;
+    }
+
+    /// Microseconds attributed to `phase`.
+    pub fn get(&self, phase: Phase) -> u64 {
+        self.0[phase as usize]
+    }
+
+    /// Sum over all phases, microseconds.
+    pub fn total_us(&self) -> u64 {
+        self.0.iter().sum()
+    }
+
+    /// JSON object keyed by phase name, values in milliseconds.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            ALL_PHASES
+                .iter()
+                .map(|p| (p.name().to_string(), Json::Num(self.get(*p) as f64 / 1e3)))
+                .collect(),
+        )
+    }
+}
+
+/// A completed request with its attribution (the `attrib` command's
+/// row shape).
+#[derive(Clone, Debug)]
+pub struct RequestAttrib {
+    /// Request id (the trace `tid`).
+    pub id: u64,
+    /// End-to-end wall time, microseconds.
+    pub total_us: u64,
+    /// Generated tokens.
+    pub tokens: u64,
+    /// Terminal finish reason (`stop`, `length`, `cancelled`, ...).
+    pub finish: &'static str,
+    /// Per-phase decomposition.
+    pub breakdown: Breakdown,
+}
+
+/// Completed-request ring capacity (top-N queries scan this window).
+const MAX_FINISHED: usize = 512;
+
+fn finished() -> &'static Mutex<VecDeque<RequestAttrib>> {
+    static F: OnceLock<Mutex<VecDeque<RequestAttrib>>> = OnceLock::new();
+    F.get_or_init(|| Mutex::new(VecDeque::with_capacity(64)))
+}
+
+/// Record a finished request's attribution (scheduler retire path).
+pub fn finish_request(r: RequestAttrib) {
+    let mut f = lock_recover(finished());
+    if f.len() >= MAX_FINISHED {
+        f.pop_front();
+    }
+    f.push_back(r);
+}
+
+/// The `n` slowest requests in the completed window, slowest first.
+pub fn slowest(n: usize) -> Vec<RequestAttrib> {
+    let f = lock_recover(finished());
+    let mut v: Vec<RequestAttrib> = f.iter().cloned().collect();
+    v.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+    v.truncate(n);
+    v
+}
+
+/// Completed requests currently held in the attribution window.
+pub fn finished_len() -> usize {
+    lock_recover(finished()).len()
+}
+
+/// Clear the completed-request window (tests / benches).
+pub fn reset() {
+    lock_recover(finished()).clear();
+}
+
+/// The `attrib` TCP command body: window counters plus the top-`n`
+/// slowest requests with per-phase decompositions (milliseconds).
+pub fn slowest_json(n: usize) -> Json {
+    let rows: Vec<Json> = slowest(n)
+        .into_iter()
+        .map(|r| {
+            obj(vec![
+                ("id", (r.id as usize).into()),
+                ("total_ms", (r.total_us as f64 / 1e3).into()),
+                ("tokens", (r.tokens as usize).into()),
+                ("finish", r.finish.into()),
+                ("attributed_ms", (r.breakdown.total_us() as f64 / 1e3).into()),
+                ("phases_ms", r.breakdown.to_json()),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("window", finished_len().into()),
+        ("window_capacity", MAX_FINISHED.into()),
+        ("requests", Json::Arr(rows)),
+    ])
+}
+
+/// Cap on concurrently tracked stream-write accumulators.
+const MAX_STREAMING: usize = 1024;
+
+struct StreamWrites {
+    us: HashMap<u64, u64>,
+    order: VecDeque<u64>,
+}
+
+fn stream_writes() -> &'static Mutex<StreamWrites> {
+    static S: OnceLock<Mutex<StreamWrites>> = OnceLock::new();
+    S.get_or_init(|| {
+        Mutex::new(StreamWrites { us: HashMap::new(), order: VecDeque::new() })
+    })
+}
+
+/// Credit `us` microseconds of socket write time to request `id`
+/// (server stream path; drained by the scheduler at retire).
+pub fn add_stream_write(id: u64, us: u64) {
+    let mut s = lock_recover(stream_writes());
+    if let Some(v) = s.us.get_mut(&id) {
+        *v += us;
+        return;
+    }
+    while s.us.len() >= MAX_STREAMING {
+        // evict the oldest live accumulator (stale ids already taken
+        // are skipped); bounded by the order queue length
+        match s.order.pop_front() {
+            Some(old) => {
+                if s.us.remove(&old).is_some() {
+                    break;
+                }
+            }
+            None => break,
+        }
+    }
+    s.us.insert(id, us);
+    s.order.push_back(id);
+}
+
+/// Take (and clear) the accumulated stream-write time for `id`.
+pub fn take_stream_write(id: u64) -> u64 {
+    lock_recover(stream_writes()).us.remove(&id).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_scopes_account_self_time() {
+        let _ = step_take(); // drain anything a prior test left behind
+        {
+            let _outer = phase_scope(Phase::DecodeOther);
+            std::thread::sleep(std::time::Duration::from_millis(4));
+            {
+                let _inner = phase_scope(Phase::Gemm);
+                std::thread::sleep(std::time::Duration::from_millis(4));
+            }
+        }
+        let us = step_take();
+        let gemm = us[Phase::Gemm as usize];
+        let other = us[Phase::DecodeOther as usize];
+        assert!(gemm >= 3_000, "gemm self {gemm}us");
+        assert!(other >= 3_000, "other self {other}us");
+        // self-time: the outer scope must not re-count the inner 4ms
+        assert!(other < 20_000, "outer did not subtract child: {other}us");
+        // drained: a second take is empty
+        assert_eq!(step_take(), [0u64; NPHASES]);
+    }
+
+    #[test]
+    fn live_stack_visible_while_scoped() {
+        let _g = phase_scope(Phase::Sampling);
+        let found = live_stacks().iter().any(|s| {
+            let (frames, depth) = s.snapshot();
+            depth >= 1 && frames[..depth].contains(&(Phase::Sampling as u8))
+        });
+        assert!(found, "live scope not visible in any registered stack");
+    }
+
+    #[test]
+    fn breakdown_json_and_ranking() {
+        reset();
+        for i in 0..5u64 {
+            let mut b = Breakdown::default();
+            b.add(Phase::Queue, 100 * (i + 1));
+            b.add(Phase::Gemm, 50);
+            finish_request(RequestAttrib {
+                id: i,
+                total_us: 1_000 * (i + 1),
+                tokens: i,
+                finish: "stop",
+                breakdown: b,
+            });
+        }
+        let top = slowest(2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].id, 4);
+        assert_eq!(top[1].id, 3);
+        let j = slowest_json(2);
+        assert!(j.get("window").unwrap().as_usize().unwrap() >= 5);
+        let rows = j.get("requests").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let r0 = &rows[0];
+        assert_eq!(r0.get("id").unwrap().as_usize(), Some(4));
+        let ph = r0.get("phases_ms").unwrap();
+        assert!(ph.get("queue").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(ph.get("kv_gather").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn stream_write_accumulates_and_drains() {
+        add_stream_write(900_001, 10);
+        add_stream_write(900_001, 5);
+        assert_eq!(take_stream_write(900_001), 15);
+        assert_eq!(take_stream_write(900_001), 0);
+    }
+
+    #[test]
+    fn phase_names_round_trip() {
+        for (i, p) in ALL_PHASES.iter().enumerate() {
+            assert_eq!(*p as usize, i);
+            assert_eq!(Phase::from_u8(i as u8), Some(*p));
+            assert!(p.span_name().starts_with("phase_"));
+        }
+        assert_eq!(Phase::from_u8(NPHASES as u8), None);
+    }
+}

@@ -111,6 +111,8 @@ pub fn probe_quant_q(layer: &str, x: &Mat, q: &MatI8, qmax: f32) {
 }
 
 fn record(layer: &str, channel_max: f32, spike: f32, kurt: f32, clip: f32) {
+    // every sampled probe also feeds the drift watchdog's EWMAs
+    super::watchdog::observe_quant(layer, spike, kurt, clip);
     let mut map = lock_recover(registry());
     if !map.contains_key(layer) && map.len() >= MAX_LAYERS {
         return;

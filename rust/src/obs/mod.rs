@@ -9,7 +9,17 @@
 //! * [`prom`] — Prometheus text exposition 0.0.4 renderer
 //!   (`metrics_prom` TCP command);
 //! * [`health`] — sampled per-layer quantization-health probes
-//!   (channel-max, spike ratio, kurtosis, INT4 clip rate).
+//!   (channel-max, spike ratio, kurtosis, INT4 clip rate);
+//! * [`attrib`] — per-request phase attribution: thread-local phase
+//!   scopes decompose each request's wall time into
+//!   queue / prefill / kv-gather / gemm / sampling / stream-write
+//!   (`attrib` TCP command);
+//! * [`profile`] — continuous sampling profiler over the live phase
+//!   stacks, folded-stack export (`RRS_PROF_HZ`, `profile` TCP
+//!   command);
+//! * [`watchdog`] — SLO burn-rate alerts over TTFT/ITL plus EWMA drift
+//!   detection on the per-layer quant-health probes (`rrs_alerts_*`
+//!   Prometheus families, `alerts` snapshot section).
 //!
 //! # Sampling (`RRS_OBS_SAMPLE`)
 //!
@@ -26,10 +36,13 @@
 //! histogram observations are per-request, not per-step, and are always
 //! on.
 
+pub mod attrib;
 pub mod health;
 pub mod hist;
+pub mod profile;
 pub mod prom;
 pub mod trace;
+pub mod watchdog;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -12,8 +12,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::coordinator::Metrics;
 use crate::kernels;
 
+use super::attrib;
 use super::health;
 use super::hist::LogHistogram;
+use super::watchdog;
 
 /// Render the full exposition document for one metrics snapshot.
 pub fn render(m: &Metrics) -> String {
@@ -264,8 +266,14 @@ pub fn render(m: &Metrics) -> String {
         histogram(&mut out, name, help, h);
     }
 
+    // per-phase attribution histograms (present once scopes have fired)
+    render_attrib(&mut out);
+
     // per-layer quant health (present once sampling has fired)
     render_health(&mut out);
+
+    // watchdog alerts + SLO burn rates
+    render_watchdog(&mut out);
 
     // trace ring
     counter(
@@ -287,6 +295,81 @@ pub fn render(m: &Metrics) -> String {
         m.trace.capacity() as f64,
     );
     out
+}
+
+/// The per-phase attribution histogram family: one `rrs_phase_ms`
+/// histogram per phase that has fired, `phase`-labeled; the GEMM series
+/// additionally carries the live kernel backend (one backend per
+/// process), giving the gemm-per-backend decomposition.
+fn render_attrib(out: &mut String) {
+    let backend =
+        kernels::stats_peek().map(|k| k.backend).unwrap_or("unresolved");
+    let name = "rrs_phase_ms";
+    let mut wrote_head = false;
+    for (phase, h) in attrib::histograms() {
+        if h.count() == 0 {
+            continue;
+        }
+        if !wrote_head {
+            head(
+                out,
+                name,
+                "histogram",
+                "Attributed per-scope self time by phase (ms).",
+            );
+            wrote_head = true;
+        }
+        let mut labels: Vec<(&str, &str)> = vec![("phase", phase.name())];
+        if phase == attrib::Phase::Gemm {
+            labels.push(("backend", backend));
+        }
+        histogram_series(out, name, &labels, h);
+    }
+    if attrib::finished_len() > 0 {
+        gauge(
+            out,
+            "rrs_attrib_window",
+            "Finished requests held in the attribution window.",
+            attrib::finished_len() as f64,
+        );
+    }
+}
+
+/// Watchdog families: burn-rate gauges plus per-alert state/counters.
+fn render_watchdog(out: &mut String) {
+    let (ttft_burn, itl_burn) = watchdog::burn_rates();
+    head(
+        out,
+        "rrs_slo_burn_rate",
+        "gauge",
+        "SLO error-budget burn rate over the rolling window (1 = at budget).",
+    );
+    sample(out, "rrs_slo_burn_rate", &[("slo", "ttft")], ttft_burn);
+    sample(out, "rrs_slo_burn_rate", &[("slo", "itl")], itl_burn);
+    let alerts = watchdog::alerts();
+    if alerts.is_empty() {
+        return;
+    }
+    head(
+        out,
+        "rrs_alerts_active",
+        "gauge",
+        "Watchdog alert state (1 = firing).",
+    );
+    for (k, a) in &alerts {
+        let v = if a.active { 1.0 } else { 0.0 };
+        sample(out, "rrs_alerts_active", &[("alert", k.as_str())], v);
+    }
+    head(
+        out,
+        "rrs_alerts_raised_total",
+        "counter",
+        "Raise edges per watchdog alert since process start.",
+    );
+    for (k, a) in &alerts {
+        let v = a.raised_total as f64;
+        sample(out, "rrs_alerts_raised_total", &[("alert", k.as_str())], v);
+    }
 }
 
 /// The per-layer quant-health gauge families.
@@ -402,15 +485,71 @@ pub fn escape_label(s: &str) -> String {
 /// 4th native bucket edge), `+Inf`, `_sum`, `_count`.
 fn histogram(out: &mut String, name: &str, help: &str, h: &LogHistogram) {
     head(out, name, "histogram", help);
+    histogram_series(out, name, &[], h);
+}
+
+/// One labeled series of a histogram family (the head is the caller's:
+/// multi-series families write it once, then one series per label set).
+fn histogram_series(
+    out: &mut String,
+    name: &str,
+    labels: &[(&str, &str)],
+    h: &LogHistogram,
+) {
     let bucket = format!("{name}_bucket");
+    let mut with_le = |le: &str, v: f64| {
+        let mut labs: Vec<(&str, &str)> = labels.to_vec();
+        labs.push(("le", le));
+        sample(out, &bucket, &labs, v);
+    };
     for (edge, cum) in h.cumulative(4) {
         // round the geometric edge so the le label stays compact
         let le = (edge * 1e6).round() / 1e6;
-        sample(out, &bucket, &[("le", &fmt_value(le))], cum as f64);
+        with_le(&fmt_value(le), cum as f64);
     }
-    sample(out, &bucket, &[("le", "+Inf")], h.count() as f64);
-    sample(out, &format!("{name}_sum"), &[], h.sum_ms());
-    sample(out, &format!("{name}_count"), &[], h.count() as f64);
+    with_le("+Inf", h.count() as f64);
+    sample(out, &format!("{name}_sum"), labels, h.sum_ms());
+    sample(out, &format!("{name}_count"), labels, h.count() as f64);
+}
+
+/// Parse an exposition body into `(samples, malformed)`.
+///
+/// Each sample is `(series, value)` where `series` is the metric name
+/// with its label set attached verbatim.  Comment (`#`) and blank lines
+/// are skipped; lines that do not parse — missing value, non-numeric
+/// value, empty or invalid metric name, unterminated label set — are
+/// **counted** rather than panicking the consumer, so a scrape-side
+/// check survives one corrupt line with an accurate tally instead of
+/// dying on it.
+pub fn parse_exposition(text: &str) -> (Vec<(String, f64)>, usize) {
+    let mut samples = Vec::new();
+    let mut malformed = 0usize;
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else {
+            malformed += 1;
+            continue;
+        };
+        let Ok(v) = value.parse::<f64>() else {
+            malformed += 1;
+            continue;
+        };
+        let name = series.split('{').next().unwrap_or("");
+        let name_ok = !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+        let labels_ok = !series.contains('{') || series.ends_with('}');
+        if !name_ok || !labels_ok {
+            malformed += 1;
+            continue;
+        }
+        samples.push((series.to_string(), v));
+    }
+    (samples, malformed)
 }
 
 #[cfg(test)]
@@ -456,20 +595,33 @@ mod tests {
         }
         assert!(text.contains("le=\"+Inf\""));
         // every non-comment line is `name[{labels}] value`
-        for line in text.lines() {
-            if line.starts_with('#') || line.is_empty() {
-                continue;
-            }
-            let (metric, value) = line.rsplit_once(' ').expect("two fields");
-            assert!(value.parse::<f64>().is_ok(), "bad value in {line}");
-            let name = metric.split('{').next().unwrap();
-            assert!(
-                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
-                "bad metric name {name}"
-            );
-            if metric.contains('{') {
-                assert!(metric.ends_with('}'), "unterminated labels: {line}");
-            }
-        }
+        let (samples, malformed) = parse_exposition(&text);
+        assert_eq!(malformed, 0, "renderer emitted malformed lines:\n{text}");
+        assert!(!samples.is_empty());
+        assert!(samples
+            .iter()
+            .any(|(s, _)| s.starts_with("rrs_slo_burn_rate{slo=\"ttft\"}")));
+    }
+
+    #[test]
+    fn parse_exposition_skips_and_counts_malformed() {
+        let body = "# HELP x y\n\
+                    # TYPE x counter\n\
+                    x 3\n\
+                    x{a=\"b\"} 4.5\n\
+                    \n\
+                    garbage-line\n\
+                    bad name 1\n\
+                    x{unterminated=\"b\" 2\n\
+                    x notanumber\n";
+        let (samples, malformed) = parse_exposition(body);
+        assert_eq!(
+            samples,
+            vec![("x".to_string(), 3.0), ("x{a=\"b\"}".to_string(), 4.5)]
+        );
+        // garbage-line (no space-separated value), "bad name" (space in
+        // the metric name), unterminated labels, non-numeric value:
+        // counted, not fatal
+        assert_eq!(malformed, 4);
     }
 }

@@ -39,6 +39,13 @@ pub enum SpanKind {
     Preempt,
     /// Aborted (capacity can never fit the request).
     Abort,
+    /// Per-request attributed phase time ([`crate::obs::attrib`]); the
+    /// scheduler emits one per nonzero phase at request finish.
+    Phase(super::attrib::Phase),
+    /// A watchdog alert raised (`req` = the alert's stable trace id).
+    AlertRaise,
+    /// A watchdog alert cleared (`req` = the alert's stable trace id).
+    AlertClear,
 }
 
 impl SpanKind {
@@ -52,6 +59,9 @@ impl SpanKind {
             SpanKind::Finish => "finish",
             SpanKind::Preempt => "preempt",
             SpanKind::Abort => "abort",
+            SpanKind::Phase(p) => p.span_name(),
+            SpanKind::AlertRaise => "alert_raise",
+            SpanKind::AlertClear => "alert_clear",
         }
     }
 }

@@ -1,0 +1,593 @@
+//! SLO + quant-health watchdog: the layer that turns passive metrics
+//! into actionable alerts.
+//!
+//! Two detector families share one alert registry:
+//!
+//! * **SLO burn rate** — every TTFT / ITL observation is classified
+//!   good/bad against a configurable threshold (`RRS_SLO_TTFT_MS`,
+//!   `RRS_SLO_ITL_MS`) into a rolling window of one-second buckets
+//!   (`RRS_SLO_WINDOW_S`).  The burn rate is the windowed bad fraction
+//!   divided by the error budget (`1 - RRS_SLO_TARGET`): `1.0` means
+//!   the budget burns exactly as fast as the SLO allows, above it the
+//!   service is failing its objective.  Alerts raise at burn ≥ 1 and
+//!   clear at burn ≤ 0.5 (hysteresis), with a minimum sample floor so
+//!   an idle server never alarms off one slow request.
+//! * **Quant-health drift** — every sampled per-layer probe
+//!   ([`crate::obs::health`]) feeds a fast EWMA (α = 0.2) and a slow
+//!   EWMA (α = 0.02) per statistic (clip rate, spike ratio, kurtosis).
+//!   After a warmup of [`QUANT_WARMUP`] probes, a layer alerts when its
+//!   fast average exceeds the slow one by **both** a relative factor
+//!   and an absolute floor — the paper's failure mode (activation
+//!   spikes blowing INT4 clip rates) shows up as exactly this fast/slow
+//!   divergence, while the double margin keeps quiet layers (slow ≈ 0)
+//!   and noisy-but-stationary layers from flapping.  Alerts clear at
+//!   half margin.
+//!
+//! Alert state surfaces three ways: `rrs_alerts_*` Prometheus families
+//! ([`crate::obs::prom`]), an `alerts` section in the metrics snapshot
+//! ([`alerts_json`]), and instant trace events — the scheduler drains
+//! [`drain_transitions`] into the trace ring each round, so raise/clear
+//! edges land on the same timeline as the requests they affected.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+use super::lock_recover;
+
+/// Probes before a layer's EWMAs are trusted for drift detection.
+pub const QUANT_WARMUP: u64 = 8;
+
+/// Fast EWMA coefficient (reacts within ~5 probes).
+const ALPHA_FAST: f64 = 0.2;
+/// Slow EWMA coefficient (the ~50-probe baseline).
+const ALPHA_SLOW: f64 = 0.02;
+
+/// Relative factor the fast EWMA must exceed the slow one by.
+const QUANT_REL: f64 = 3.0;
+/// Absolute floors per statistic: (clip_rate, spike_ratio, kurtosis).
+const QUANT_ABS: [f64; 3] = [0.05, 4.0, 5.0];
+
+/// Quant statistics the drift detector tracks, in [`QUANT_ABS`] order.
+pub const QUANT_STATS: [&str; 3] = ["clip_rate", "spike_ratio", "kurtosis"];
+
+/// SLO thresholds and window, resolved once from the environment (or
+/// injected by tests via [`configure`]).
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// TTFT above this is an SLO violation (ms).
+    pub ttft_ms: f64,
+    /// ITL above this is an SLO violation (ms).
+    pub itl_ms: f64,
+    /// Good-fraction objective in `(0, 1)` (0.99 = 1% error budget).
+    pub target: f64,
+    /// Rolling window length in seconds.
+    pub window_s: usize,
+    /// Minimum windowed samples before a burn-rate alert can raise.
+    pub min_samples: u64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            ttft_ms: 2_000.0,
+            itl_ms: 500.0,
+            target: 0.99,
+            window_s: 60,
+            min_samples: 20,
+        }
+    }
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|v| v.is_finite() && *v > 0.0)
+        .unwrap_or(default)
+}
+
+impl WatchdogConfig {
+    /// Resolve from `RRS_SLO_TTFT_MS` / `RRS_SLO_ITL_MS` /
+    /// `RRS_SLO_TARGET` / `RRS_SLO_WINDOW_S`, defaults where unset.
+    pub fn from_env() -> WatchdogConfig {
+        let d = WatchdogConfig::default();
+        WatchdogConfig {
+            ttft_ms: env_f64("RRS_SLO_TTFT_MS", d.ttft_ms),
+            itl_ms: env_f64("RRS_SLO_ITL_MS", d.itl_ms),
+            target: env_f64("RRS_SLO_TARGET", d.target).clamp(0.5, 0.9999),
+            window_s: env_f64("RRS_SLO_WINDOW_S", d.window_s as f64) as usize,
+            min_samples: d.min_samples,
+        }
+    }
+}
+
+/// Rolling good/bad window over one-second buckets.  Time is an
+/// explicit bucket index (seconds) so tests drive it deterministically;
+/// production feeds it seconds since process start.
+pub struct BurnWindow {
+    buckets: Vec<(u64, u64)>,
+    /// Bucket timestamp (seconds) each slot currently holds.
+    stamps: Vec<u64>,
+}
+
+impl BurnWindow {
+    /// A window of `window_s` one-second buckets.
+    pub fn new(window_s: usize) -> BurnWindow {
+        let n = window_s.max(1);
+        BurnWindow { buckets: vec![(0, 0); n], stamps: vec![u64::MAX; n] }
+    }
+
+    /// Record one observation at second `now_s`: `good` iff the latency
+    /// met the SLO threshold.
+    pub fn observe_at(&mut self, now_s: u64, good: bool) {
+        let i = (now_s as usize) % self.buckets.len();
+        if self.stamps[i] != now_s {
+            self.stamps[i] = now_s;
+            self.buckets[i] = (0, 0);
+        }
+        if good {
+            self.buckets[i].0 += 1;
+        } else {
+            self.buckets[i].1 += 1;
+        }
+    }
+
+    /// `(good, bad)` totals over buckets no older than the window as of
+    /// second `now_s`.
+    pub fn totals_at(&self, now_s: u64) -> (u64, u64) {
+        let horizon = now_s.saturating_sub(self.buckets.len() as u64 - 1);
+        let mut good = 0;
+        let mut bad = 0;
+        for (i, &(g, b)) in self.buckets.iter().enumerate() {
+            let s = self.stamps[i];
+            if s != u64::MAX && s >= horizon && s <= now_s {
+                good += g;
+                bad += b;
+            }
+        }
+        (good, bad)
+    }
+
+    /// Burn rate at second `now_s`: windowed bad fraction over the
+    /// error budget `1 - target` (0 when the window is empty).
+    pub fn burn_rate_at(&self, now_s: u64, target: f64) -> f64 {
+        let (good, bad) = self.totals_at(now_s);
+        let n = good + bad;
+        if n == 0 {
+            return 0.0;
+        }
+        let budget = (1.0 - target).max(1e-9);
+        (bad as f64 / n as f64) / budget
+    }
+}
+
+/// Per-layer, per-statistic EWMA pair.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ewma {
+    fast: f64,
+    slow: f64,
+}
+
+impl Ewma {
+    fn update(&mut self, v: f64, first: bool) {
+        if first {
+            self.fast = v;
+            self.slow = v;
+        } else {
+            self.fast += ALPHA_FAST * (v - self.fast);
+            self.slow += ALPHA_SLOW * (v - self.slow);
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct LayerDrift {
+    probes: u64,
+    stats: [Ewma; 3],
+}
+
+/// One alert's registry entry.
+#[derive(Clone, Debug)]
+pub struct AlertState {
+    /// Currently firing.
+    pub active: bool,
+    /// Raise edges since process start.
+    pub raised_total: u64,
+    /// Small stable id used as the `req` field of the alert's instant
+    /// trace events (trace events carry no strings).
+    pub trace_id: u64,
+    /// Last observed detector value (burn rate or fast EWMA).
+    pub value: f64,
+    /// The threshold the value is compared against when raising.
+    pub threshold: f64,
+}
+
+struct Watchdog {
+    cfg: WatchdogConfig,
+    epoch: Instant,
+    ttft: BurnWindow,
+    itl: BurnWindow,
+    layers: BTreeMap<String, LayerDrift>,
+    alerts: BTreeMap<String, AlertState>,
+    next_trace_id: u64,
+    /// Raise/clear edges not yet exported as trace events:
+    /// `(trace_id, raised)`.
+    transitions: Vec<(u64, bool)>,
+}
+
+/// Cap on tracked layers (mirrors the health registry bound).
+const MAX_LAYERS: usize = 512;
+/// Cap on queued, un-drained transitions.
+const MAX_TRANSITIONS: usize = 1024;
+
+impl Watchdog {
+    fn new(cfg: WatchdogConfig) -> Watchdog {
+        Watchdog {
+            cfg,
+            epoch: Instant::now(),
+            ttft: BurnWindow::new(cfg.window_s),
+            itl: BurnWindow::new(cfg.window_s),
+            layers: BTreeMap::new(),
+            alerts: BTreeMap::new(),
+            next_trace_id: 1,
+            transitions: Vec::new(),
+        }
+    }
+
+    fn now_s(&self) -> u64 {
+        self.epoch.elapsed().as_secs()
+    }
+
+    /// Flip alert `key` to `active`, recording the edge.
+    fn set_alert(&mut self, key: &str, active: bool, value: f64, threshold: f64) {
+        if !self.alerts.contains_key(key) {
+            if self.alerts.len() >= 4 * MAX_LAYERS {
+                return;
+            }
+            let id = self.next_trace_id;
+            self.next_trace_id += 1;
+            self.alerts.insert(
+                key.to_string(),
+                AlertState {
+                    active: false,
+                    raised_total: 0,
+                    trace_id: id,
+                    value,
+                    threshold,
+                },
+            );
+        }
+        let a = self.alerts.get_mut(key).expect("alert just ensured");
+        a.value = value;
+        a.threshold = threshold;
+        if active != a.active {
+            a.active = active;
+            if active {
+                a.raised_total += 1;
+            }
+            if self.transitions.len() < MAX_TRANSITIONS {
+                self.transitions.push((a.trace_id, active));
+            }
+        }
+    }
+
+    fn slo_check(&mut self, which: &str) {
+        let now = self.now_s();
+        let (w, threshold) = match which {
+            "ttft" => (&self.ttft, self.cfg.ttft_ms),
+            _ => (&self.itl, self.cfg.itl_ms),
+        };
+        let (good, bad) = w.totals_at(now);
+        let burn = w.burn_rate_at(now, self.cfg.target);
+        let key = format!("slo.{which}");
+        let was = self.alerts.get(&key).map(|a| a.active).unwrap_or(false);
+        let active = if was {
+            burn > 0.5 // clear below half budget-burn (hysteresis)
+        } else {
+            good + bad >= self.cfg.min_samples && burn >= 1.0
+        };
+        self.set_alert(&key, active, burn, threshold);
+    }
+
+    fn quant_observe(&mut self, layer: &str, spike: f64, kurt: f64, clip: f64) {
+        if !self.layers.contains_key(layer) && self.layers.len() >= MAX_LAYERS {
+            return;
+        }
+        let d = self.layers.entry(layer.to_string()).or_default();
+        let first = d.probes == 0;
+        d.probes += 1;
+        let values = [clip, spike, kurt];
+        for (e, v) in d.stats.iter_mut().zip(values) {
+            e.update(v, first);
+        }
+        if d.probes < QUANT_WARMUP {
+            return;
+        }
+        let snapshot = *d;
+        for (i, stat) in QUANT_STATS.iter().enumerate() {
+            let e = snapshot.stats[i];
+            let abs = QUANT_ABS[i];
+            let key = format!("quant.{layer}.{stat}");
+            let was = self.alerts.get(&key).map(|a| a.active).unwrap_or(false);
+            // raise on both margins; clear at half margin (hysteresis)
+            let (rel, floor) = if was {
+                (1.0 + (QUANT_REL - 1.0) * 0.5, abs * 0.5)
+            } else {
+                (QUANT_REL, abs)
+            };
+            let threshold = e.slow * rel + floor;
+            let active = e.fast > threshold;
+            if active || was || self.alerts.contains_key(&key) {
+                self.set_alert(&key, active, e.fast, threshold);
+            }
+        }
+    }
+}
+
+fn watchdog() -> &'static Mutex<Watchdog> {
+    static W: OnceLock<Mutex<Watchdog>> = OnceLock::new();
+    W.get_or_init(|| Mutex::new(Watchdog::new(WatchdogConfig::from_env())))
+}
+
+/// Replace the live configuration and reset all windows and alert
+/// state (tests / benches; windows restart empty).
+pub fn configure(cfg: WatchdogConfig) {
+    *lock_recover(watchdog()) = Watchdog::new(cfg);
+}
+
+/// The live configuration.
+pub fn config() -> WatchdogConfig {
+    lock_recover(watchdog()).cfg
+}
+
+/// Record one TTFT observation (fed by
+/// [`crate::coordinator::Metrics::observe_ttft`]).
+pub fn observe_ttft(ms: f32) {
+    let mut w = lock_recover(watchdog());
+    let now = w.now_s();
+    let good = (ms as f64) <= w.cfg.ttft_ms;
+    w.ttft.observe_at(now, good);
+    w.slo_check("ttft");
+}
+
+/// Record one ITL observation (fed by
+/// [`crate::coordinator::Metrics::observe_itl`]).
+pub fn observe_itl(ms: f32) {
+    let mut w = lock_recover(watchdog());
+    let now = w.now_s();
+    let good = (ms as f64) <= w.cfg.itl_ms;
+    w.itl.observe_at(now, good);
+    w.slo_check("itl");
+}
+
+/// Record one per-layer quant-health probe (fed by
+/// [`crate::obs::health`] on every sampled probe).
+pub fn observe_quant(layer: &str, spike: f32, kurt: f32, clip: f32) {
+    lock_recover(watchdog()).quant_observe(layer, spike as f64, kurt as f64, clip as f64);
+}
+
+/// Current burn rates `(ttft, itl)` against the live windows.
+pub fn burn_rates() -> (f64, f64) {
+    let w = lock_recover(watchdog());
+    let now = w.now_s();
+    (
+        w.ttft.burn_rate_at(now, w.cfg.target),
+        w.itl.burn_rate_at(now, w.cfg.target),
+    )
+}
+
+/// All alerts ever registered, keyed by alert name.
+pub fn alerts() -> Vec<(String, AlertState)> {
+    let w = lock_recover(watchdog());
+    w.alerts.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+}
+
+/// Names of currently-firing alerts.
+pub fn active_alerts() -> Vec<String> {
+    alerts().into_iter().filter(|(_, a)| a.active).map(|(k, _)| k).collect()
+}
+
+/// Drain raise/clear edges recorded since the last drain:
+/// `(trace_id, raised)`.  The scheduler turns these into instant trace
+/// events each round.
+pub fn drain_transitions() -> Vec<(u64, bool)> {
+    std::mem::take(&mut lock_recover(watchdog()).transitions)
+}
+
+/// The `alerts` section of the metrics snapshot.
+pub fn alerts_json() -> Json {
+    let w = lock_recover(watchdog());
+    let now = w.now_s();
+    let active: Vec<Json> = w
+        .alerts
+        .iter()
+        .filter(|(_, a)| a.active)
+        .map(|(k, _)| Json::Str(k.clone()))
+        .collect();
+    let all: Vec<(String, Json)> = w
+        .alerts
+        .iter()
+        .map(|(k, a)| {
+            (
+                k.clone(),
+                obj(vec![
+                    ("active", a.active.into()),
+                    ("raised_total", (a.raised_total as usize).into()),
+                    ("trace_id", (a.trace_id as usize).into()),
+                    ("value", a.value.into()),
+                    ("threshold", a.threshold.into()),
+                ]),
+            )
+        })
+        .collect();
+    let slo = |name: &str, win: &BurnWindow, th: f64| {
+        let (good, bad) = win.totals_at(now);
+        (
+            name.to_string(),
+            obj(vec![
+                ("threshold_ms", th.into()),
+                ("target", w.cfg.target.into()),
+                ("window_s", w.cfg.window_s.into()),
+                ("good", (good as usize).into()),
+                ("bad", (bad as usize).into()),
+                ("burn_rate", win.burn_rate_at(now, w.cfg.target).into()),
+            ]),
+        )
+    };
+    obj(vec![
+        ("active", Json::Arr(active)),
+        (
+            "slo",
+            Json::Obj(vec![
+                slo("ttft", &w.ttft, w.cfg.ttft_ms),
+                slo("itl", &w.itl, w.cfg.itl_ms),
+            ]),
+        ),
+        ("alerts", Json::Obj(all)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burn_window_rolls_and_rates() {
+        let mut w = BurnWindow::new(10);
+        for s in 0..10u64 {
+            w.observe_at(s, true);
+        }
+        assert_eq!(w.totals_at(9), (10, 0));
+        assert_eq!(w.burn_rate_at(9, 0.99), 0.0);
+        // 5 bad seconds push the bad fraction to 5/15; with a 1% budget
+        // the burn rate is ~33x
+        for s in 10..15u64 {
+            w.observe_at(s, false);
+        }
+        let (good, bad) = w.totals_at(14);
+        assert_eq!(bad, 5);
+        assert!(good < 10, "old buckets must roll out, good={good}");
+        assert!(w.burn_rate_at(14, 0.99) > 10.0);
+        // 20 quiet seconds later the window is empty again
+        assert_eq!(w.totals_at(40), (0, 0));
+        assert_eq!(w.burn_rate_at(40, 0.99), 0.0);
+    }
+
+    #[test]
+    fn bucket_reuse_resets_stale_counts() {
+        let mut w = BurnWindow::new(4);
+        w.observe_at(0, false);
+        w.observe_at(0, false);
+        // second 4 maps to the same slot as second 0: stale counts gone
+        w.observe_at(4, true);
+        assert_eq!(w.totals_at(4), (1, 0));
+    }
+
+    #[test]
+    fn quant_drift_raises_and_clears_per_layer() {
+        let mut wd = Watchdog::new(WatchdogConfig::default());
+        // clean baseline: Gaussian-ish stats, enough to exit warmup
+        for _ in 0..20 {
+            wd.quant_observe("wd-l0", 1.2, 3.0, 0.001);
+        }
+        assert!(
+            wd.alerts.values().all(|a| !a.active),
+            "clean workload must not alert"
+        );
+        // outlier-spike regime: clip rate and spike ratio jump
+        for _ in 0..20 {
+            wd.quant_observe("wd-l0", 30.0, 40.0, 0.4);
+        }
+        let fired: Vec<&String> = wd
+            .alerts
+            .iter()
+            .filter(|(_, a)| a.active)
+            .map(|(k, _)| k)
+            .collect();
+        assert!(
+            fired.iter().any(|k| k.as_str() == "quant.wd-l0.clip_rate"),
+            "clip alert missing, fired: {fired:?}"
+        );
+        assert!(
+            fired.iter().any(|k| k.as_str() == "quant.wd-l0.spike_ratio"),
+            "spike alert missing, fired: {fired:?}"
+        );
+        let edges = wd.transitions.len();
+        assert!(edges >= 2, "raise edges queued");
+        // recovery: long clean run pulls the fast EWMA back under the
+        // clear threshold
+        for _ in 0..60 {
+            wd.quant_observe("wd-l0", 1.2, 3.0, 0.001);
+        }
+        assert!(
+            wd.alerts.values().all(|a| !a.active),
+            "alerts must clear after recovery"
+        );
+        assert!(wd.transitions.len() > edges, "clear edges queued");
+        // raised_total survives the clear
+        let clip = &wd.alerts["quant.wd-l0.clip_rate"];
+        assert!(clip.raised_total >= 1);
+    }
+
+    #[test]
+    fn stationary_noisy_layer_does_not_flap() {
+        let mut wd = Watchdog::new(WatchdogConfig::default());
+        // alternating but stationary stats: fast tracks slow closely
+        for i in 0..200 {
+            let jitter = if i % 2 == 0 { 1.0 } else { 1.5 };
+            wd.quant_observe("wd-noisy", jitter, 3.0 + jitter, 0.01 * jitter);
+        }
+        assert!(wd.alerts.values().all(|a| !a.active), "stationary layer alerted");
+    }
+
+    #[test]
+    fn slo_burn_raises_with_min_samples() {
+        let mut wd = Watchdog::new(WatchdogConfig {
+            min_samples: 10,
+            ..WatchdogConfig::default()
+        });
+        // 5 bad observations: under the sample floor, no alert
+        for _ in 0..5 {
+            wd.itl.observe_at(0, false);
+            wd.slo_check("itl");
+        }
+        assert!(!wd.alerts.get("slo.itl").map(|a| a.active).unwrap_or(false));
+        for _ in 0..10 {
+            wd.itl.observe_at(0, false);
+            wd.slo_check("itl");
+        }
+        assert!(wd.alerts["slo.itl"].active, "burn alert must raise");
+        assert_eq!(wd.alerts["slo.itl"].raised_total, 1);
+    }
+
+    #[test]
+    fn alerts_json_shape() {
+        let mut wd = Watchdog::new(WatchdogConfig::default());
+        for _ in 0..QUANT_WARMUP + 4 {
+            wd.quant_observe("wd-json", 1.0, 3.0, 0.0);
+        }
+        for _ in 0..12 {
+            wd.quant_observe("wd-json", 50.0, 60.0, 0.9);
+        }
+        // move the global-free state into a JSON shape via the same
+        // code path the snapshot uses
+        let w = wd;
+        let json = {
+            // inline mirror of alerts_json over a local instance
+            let active: Vec<Json> = w
+                .alerts
+                .iter()
+                .filter(|(_, a)| a.active)
+                .map(|(k, _)| Json::Str(k.clone()))
+                .collect();
+            Json::Arr(active)
+        };
+        match json {
+            Json::Arr(a) => assert!(!a.is_empty(), "active alert list empty"),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -175,6 +175,8 @@ impl PagedPjrtEngine {
         vc: &mut [f32],
         zero_tail: bool,
     ) {
+        let _phase =
+            crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::KvGather);
         let mut ks: Vec<Vec<f32>> = Vec::new();
         let mut vs: Vec<Vec<f32>> = Vec::new();
         for layer in 0..self.n_layers {
@@ -204,6 +206,8 @@ impl PagedPjrtEngine {
         lane: usize,
         pos: usize,
     ) {
+        let _phase =
+            crate::obs::attrib::phase_scope(crate::obs::attrib::Phase::KvScatter);
         for layer in 0..self.n_layers {
             let off = self.row_off(layer, lane, pos);
             pool.append_row(

@@ -1,0 +1,202 @@
+//! Active-observability integration: per-request phase attribution under
+//! multi-threaded churn (the components must sum to the attributed total
+//! and never exceed wall time), the `attrib`/`profile` TCP command
+//! schemas over `server::handle_line`, and the quant-drift watchdog
+//! raising and clearing per-layer alerts on an injected outlier-spike
+//! workload while staying silent on a clean one.
+//!
+//! Attribution, profiler, and watchdog state are process-global; every
+//! layer label here is unique to this binary and the invariants checked
+//! hold for *all* scheduler-produced rows, so the tests stay safe under
+//! the default parallel test runner.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rrs::coordinator::{server, Coordinator, RustServeEngine, SchedulerConfig};
+use rrs::linalg::gemm::Mat;
+use rrs::model::sampler::Sampling;
+use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
+use rrs::obs::{attrib, health, profile, watchdog};
+use rrs::quant::{Method, Scheme};
+use rrs::util::rng::Pcg;
+
+const CHURN_THREADS: usize = 16;
+const REQS_PER_THREAD: usize = 3;
+
+fn tiny_coord() -> Arc<Coordinator> {
+    let cfg = ModelConfig { n_layers: 2, max_seq: 96, ..Default::default() };
+    let w = Weights::random(&cfg, 42);
+    let ecfg = EngineConfig {
+        method: Method::Rrs,
+        scheme: Scheme::A4W4KV16,
+        group: 32,
+        gptq: false,
+        ..Default::default()
+    };
+    let model = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
+    Arc::new(Coordinator::start(
+        RustServeEngine::new(model),
+        SchedulerConfig { max_batch: 4, ..Default::default() },
+    ))
+}
+
+/// Quantize `x` per-token and feed it through the sampled-probe path
+/// (the same route production GEMMs take into the watchdog).
+fn probe(layer: &str, x: &Mat) {
+    let (q, _s) = rrs::quant::rtn::quant_per_token(x);
+    health::probe_quant(layer, x, &q);
+}
+
+/// 8×256 Gaussian activations: flat channels, kurtosis ≈ 3.
+fn clean_mat(rng: &mut Pcg) -> Mat {
+    Mat::from_vec(8, 256, rng.normal_vec(8 * 256))
+}
+
+/// Same, with one channel spiking to 300: the paper's outlier taxonomy,
+/// far past the watchdog's relative *and* absolute margins.
+fn spiky_mat(rng: &mut Pcg) -> Mat {
+    let mut x = clean_mat(rng);
+    for i in 0..8 {
+        x.data[i * 256 + 5] = 300.0;
+    }
+    x
+}
+
+#[test]
+fn attribution_components_sum_under_churn() {
+    // profiler on for the whole churn so the `profile` command below
+    // has live stacks to sample
+    profile::start_at(500.0);
+    let coord = tiny_coord();
+    let mut joins = Vec::new();
+    for t in 0..CHURN_THREADS as u32 {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            for r in 0..REQS_PER_THREAD as u32 {
+                c.generate(vec![3 + t, 7 + r, 11], 4, Sampling::Greedy, None)
+                    .unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // the Done frame can race the retire bookkeeping by a scheduler
+    // round; wait for every row to land in the attribution window
+    let want = CHURN_THREADS * REQS_PER_THREAD;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while attrib::finished_len() < want && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let stop = AtomicBool::new(false);
+    let reply = server::handle_line(r#"{"cmd": "attrib", "n": 256}"#, &coord, &stop);
+    assert!(reply.get("window").unwrap().as_usize().unwrap() >= want);
+    let rows = reply.get("requests").unwrap().as_arr().unwrap();
+    assert!(rows.len() >= want, "attrib window has {} rows", rows.len());
+    for row in rows {
+        let total = row.get("total_ms").unwrap().as_f64().unwrap();
+        let attributed = row.get("attributed_ms").unwrap().as_f64().unwrap();
+        assert!(row.get("tokens").unwrap().as_usize().unwrap() >= 1);
+        assert!(row.get("finish").unwrap().as_str().is_some());
+        let phases = row.get("phases_ms").unwrap();
+        let mut sum = 0.0;
+        for p in attrib::ALL_PHASES {
+            let v = phases.get(p.name()).unwrap().as_f64().unwrap();
+            assert!(v >= 0.0, "{} negative: {v}", p.name());
+            sum += v;
+        }
+        // components are exactly the attributed total...
+        assert!(
+            (sum - attributed).abs() < 0.5,
+            "phase sum {sum} != attributed {attributed}"
+        );
+        // ...and attribution never invents time the request didn't
+        // spend (queue/prefill/decode intervals are disjoint; the slack
+        // covers clock jitter and double-counted socket writes)
+        assert!(
+            attributed <= total * 1.15 + 10.0,
+            "over-attribution: {attributed}ms of {total}ms in {}",
+            row.dump()
+        );
+    }
+
+    // the profiler saw the run: schema-valid body with folded stacks
+    let prof = server::handle_line(r#"{"cmd": "profile"}"#, &coord, &stop);
+    profile::pause();
+    assert!(prof.get("hz").unwrap().as_f64().unwrap() > 0.0);
+    assert!(prof.get("samples").unwrap().as_usize().unwrap() > 0);
+    assert!(prof.get("held").unwrap().as_usize().is_some());
+    assert!(prof.get("dropped").unwrap().as_usize().is_some());
+    let folded = prof.get("folded").unwrap().as_str().unwrap();
+    assert!(!folded.is_empty(), "no folded stacks");
+    for line in folded.lines() {
+        let (stack, count) = line.rsplit_once(' ').expect("stack and count");
+        assert!(stack.starts_with("rrs"), "bad stack root: {line}");
+        assert!(count.parse::<u64>().is_ok(), "bad count: {line}");
+    }
+    drop(coord); // Drop joins the worker; shutdown(self) can't move out of the Arc
+}
+
+#[test]
+fn watchdog_raises_and_clears_on_outlier_spike_workload() {
+    let mut rng = Pcg::new(321);
+    let layer = "attrib-wd-spiky";
+    let key = format!("quant.{layer}.spike_ratio");
+
+    // clean baseline: EWMAs converge, nothing fires
+    for _ in 0..20 {
+        probe(layer, &clean_mat(&mut rng));
+    }
+    assert!(
+        !watchdog::active_alerts().iter().any(|k| k.contains(layer)),
+        "clean baseline must not alert"
+    );
+
+    // outlier spike: fast EWMA blows through slow·rel + abs
+    for _ in 0..20 {
+        probe(layer, &spiky_mat(&mut rng));
+    }
+    let active = watchdog::active_alerts();
+    assert!(active.iter().any(|k| k == &key), "no spike alert in {active:?}");
+    let j = watchdog::alerts_json();
+    let listed = j.get("active").unwrap().as_arr().unwrap();
+    assert!(listed.iter().any(|k| k.as_str() == Some(key.as_str())), "{}", j.dump());
+    let entry = j.get("alerts").unwrap().get(&key).unwrap();
+    assert_eq!(entry.get("active").unwrap().as_bool(), Some(true));
+    assert!(
+        entry.get("value").unwrap().as_f64().unwrap()
+            > entry.get("threshold").unwrap().as_f64().unwrap()
+    );
+
+    // recovery: fast decays back under the (halved) clear margin
+    for _ in 0..200 {
+        probe(layer, &clean_mat(&mut rng));
+    }
+    let active = watchdog::active_alerts();
+    assert!(
+        !active.iter().any(|k| k.contains(layer)),
+        "alert failed to clear: {active:?}"
+    );
+    // the registry remembers the raise edge after the clear
+    let alerts = watchdog::alerts();
+    let (_, st) = alerts.iter().find(|(k, _)| k == &key).expect("alert entry");
+    assert!(st.raised_total >= 1 && !st.active);
+}
+
+#[test]
+fn watchdog_quiet_on_clean_workload() {
+    let mut rng = Pcg::new(654);
+    let layer = "attrib-wd-clean";
+    for _ in 0..40 {
+        probe(layer, &clean_mat(&mut rng));
+    }
+    let fired: Vec<String> = watchdog::alerts()
+        .into_iter()
+        .map(|(k, _)| k)
+        .filter(|k| k.contains(layer))
+        .collect();
+    assert!(fired.is_empty(), "clean workload created alert entries: {fired:?}");
+}

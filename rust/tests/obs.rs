@@ -16,6 +16,7 @@ use rrs::model::{EngineConfig, ModelConfig, QuantModel, Weights};
 use rrs::obs::hist::LogHistogram;
 use rrs::obs::trace::{SpanKind, TraceRing};
 use rrs::quant::{Method, Scheme};
+use rrs::util::json::Json;
 use rrs::util::rng::Pcg;
 use rrs::util::stats;
 
@@ -120,6 +121,13 @@ fn prom_exposition_grammar_from_live_server() {
     );
     let text = reply.get("body").unwrap().as_str().unwrap().to_string();
 
+    // every sample line must satisfy the shared exposition parser (same
+    // grammar scrapers apply), and the reply reports the malformed count
+    let (samples, malformed) = rrs::obs::prom::parse_exposition(&text);
+    assert_eq!(malformed, 0, "malformed exposition lines in:\n{text}");
+    assert!(!samples.is_empty(), "exposition rendered no samples");
+    assert_eq!(reply.get("malformed_lines").and_then(Json::as_usize), Some(0));
+
     // every family used by a sample line must carry a # TYPE header
     let mut declared = std::collections::HashSet::new();
     for line in text.lines() {
@@ -127,12 +135,7 @@ fn prom_exposition_grammar_from_live_server() {
             declared.insert(rest.split(' ').next().unwrap().to_string());
         }
     }
-    for line in text.lines() {
-        if line.starts_with('#') || line.is_empty() {
-            continue;
-        }
-        let (metric, value) = line.rsplit_once(' ').expect("metric and value");
-        assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+    for (metric, _value) in &samples {
         let name = metric.split('{').next().unwrap();
         let base = name
             .strip_suffix("_bucket")
@@ -140,10 +143,7 @@ fn prom_exposition_grammar_from_live_server() {
             .or_else(|| name.strip_suffix("_count"))
             .filter(|b| declared.contains(*b))
             .unwrap_or(name);
-        assert!(declared.contains(base), "sample without TYPE header: {line}");
-        if let Some(rest) = metric.strip_prefix(&format!("{name}{{")) {
-            assert!(rest.ends_with('}'), "unterminated label set: {line}");
-        }
+        assert!(declared.contains(base), "sample without TYPE header: {metric}");
     }
     // served requests put real data behind the new families
     for needle in [
@@ -152,6 +152,8 @@ fn prom_exposition_grammar_from_live_server() {
         "rrs_requests_completed_total 3",
         "rrs_quant_channel_max",
         "layer=\"weird\\\"layer\\\\n\"",
+        "rrs_phase_ms_bucket",
+        "rrs_slo_burn_rate{slo=\"ttft\"}",
     ] {
         assert!(text.contains(needle), "missing {needle} in:\n{text}");
     }
@@ -221,6 +223,16 @@ fn e2e_serve_records_spans_and_quant_health() {
     for line in body.lines() {
         rrs::util::json::Json::parse(line).unwrap();
     }
+
+    // watchdog + attribution sections ride along in the snapshot
+    let alerts = snap.get("alerts").unwrap();
+    assert!(alerts.get("active").unwrap().as_arr().is_some());
+    for k in ["ttft", "itl"] {
+        let slo = alerts.get("slo").unwrap().get(k).unwrap();
+        assert!(slo.get("burn_rate").is_some(), "missing slo.{k}.burn_rate");
+        assert!(slo.get("threshold_ms").is_some(), "missing slo.{k}.threshold_ms");
+    }
+    assert!(snap.get("attrib").unwrap().get("window").unwrap().as_usize().is_some());
 
     // snapshot carries the new latency sections with data
     assert!(snap.get("ttft_ms").unwrap().get("n").unwrap().as_usize().unwrap() >= 1);
