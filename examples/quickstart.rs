@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. serve a request through the coordinator
     let coord = Coordinator::start(
-        RustServeEngine::new(model), SchedulerConfig::default());
+        RustServeEngine::new(model), SchedulerConfig::default())?;
     for prompt in ["arlo is", "count: 1 2 3 4", "senna likes"] {
         let resp = coord
             .generate(tokenizer::encode(prompt), 24, Sampling::Greedy,

@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     let coord = Arc::new(Coordinator::start(
         RustServeEngine::new(model),
         SchedulerConfig { max_batch: 8, queue_capacity: 128, ..Default::default() },
-    ));
+    )?);
 
     // bind the TCP server on an ephemeral port in a background thread
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -163,7 +163,7 @@ fn main() -> anyhow::Result<()> {
     let paged = Coordinator::start(
         PagedEngine::new(model2, 256, 16),
         SchedulerConfig { max_batch: 8, queue_capacity: 128, ..Default::default() },
-    );
+    )?;
     let paged = Arc::new(paged);
     let systems = [
         "rules for the lake house: be kind to arlo and senna. ",

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use rrs::coordinator::{Coordinator, SchedulerConfig, ServeEngine};
+use rrs::coordinator::{Coordinator, EngineError, SchedulerConfig, ServeEngine};
 use rrs::linalg::gemm::Mat;
 use rrs::model::sampler::Sampling;
 use rrs::util::bench::{black_box, Bencher};
@@ -36,16 +36,16 @@ impl ServeEngine for NullEngine {
         NullSeq { len: 0 }
     }
 
-    fn prefill(&self, seq: &mut NullSeq, tokens: &[u32]) -> Vec<f32> {
+    fn try_prefill(&self, seq: &mut NullSeq, tokens: &[u32]) -> Option<Vec<f32>> {
         seq.len += tokens.len();
-        vec![0.0; self.vocab]
+        Some(vec![0.0; self.vocab])
     }
 
-    fn decode(&self, batch: &mut [(&mut NullSeq, u32)]) -> Mat {
+    fn decode(&self, batch: &mut [(&mut NullSeq, u32)]) -> Result<Mat, EngineError> {
         for (seq, _) in batch.iter_mut() {
             seq.len += 1;
         }
-        Mat::zeros(batch.len(), self.vocab)
+        Ok(Mat::zeros(batch.len(), self.vocab))
     }
 
     fn seq_len(&self, seq: &NullSeq) -> usize {
@@ -84,7 +84,7 @@ fn main() {
         let coord = Arc::new(Coordinator::start(
             NullEngine { vocab: 256 },
             SchedulerConfig { max_batch, queue_capacity: 4096, ..Default::default() },
-        ));
+        ).expect("start coordinator"));
         let n_req = 256;
         let toks_per = 16;
         let t0 = Instant::now();

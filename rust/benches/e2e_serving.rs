@@ -55,7 +55,7 @@ fn bench_config(
     let coord = Arc::new(Coordinator::start(
         RustServeEngine::new(model),
         SchedulerConfig { max_batch: 8, queue_capacity: 256, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let prompts = ["arlo is", "count: 1 2 3", "the fox named", "senna likes"];
     let t0 = Instant::now();
     let mut handles = Vec::new();

@@ -74,7 +74,7 @@ fn bench_workload(label: &str, prompts: &[Vec<u32>]) -> f32 {
     let t0 = Instant::now();
     for p in prompts {
         let mut seq = eng.new_seq();
-        let _ = eng.prefill(&mut seq, p);
+        let _ = eng.try_prefill(&mut seq, p).expect("prefill");
         // release immediately: sealed blocks stay in the prefix cache
         // (this is how retired requests feed later arrivals), and the
         // pool can never exhaust on the fully-distinct workload
@@ -135,7 +135,7 @@ fn bench_decode(label: &str, n_seqs: usize, len: usize, shared: usize, steps: us
         .iter()
         .map(|p| {
             let mut s = eng.new_seq();
-            let _ = eng.prefill(&mut s, p);
+            let _ = eng.try_prefill(&mut s, p).expect("prefill");
             s
         })
         .collect();

@@ -160,7 +160,7 @@ fn main() {
             queue_capacity: conns.max(64) * 2,
             ..Default::default()
         },
-    ));
+    ).expect("start coordinator"));
     let (port, accept_handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
     // continuous profiler on for the whole load run: the `profile`
     // command below must return real folded stacks under traffic

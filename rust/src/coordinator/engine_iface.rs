@@ -6,10 +6,29 @@
 //! decode graphs over the *same* paged pool — so admission, prefix
 //! sharing and preemption behave identically on every serving path.
 
+use std::fmt;
+
 use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
 use crate::model::engine::{KvCache, QuantModel};
 use crate::runtime::residency::ResidencyStats;
+
+/// Typed engine failure: a backend step that could not run (compiled
+/// graph execution failed, device lost).  Distinct from a capacity
+/// refusal, which is the `None` arm of
+/// [`try_prefill`](ServeEngine::try_prefill) and is retryable; an
+/// `EngineError` aborts the affected lanes with strict protocol replies
+/// instead of panicking the scheduler thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineError(pub String);
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine error: {}", self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Opaque per-sequence state owned by the backend.
 pub trait ServeEngine: Send + Sync {
@@ -22,23 +41,27 @@ pub trait ServeEngine: Send + Sync {
     fn new_seq(&self) -> Self::Seq;
 
     /// Prefill `tokens` into the sequence; returns logits of the LAST
-    /// position, `[vocab]`-shaped.
-    fn prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Vec<f32>;
+    /// position, `[vocab]`-shaped.  `None` means the backend could not
+    /// reserve KV memory for this prompt *right now* — a request that
+    /// passed [`can_admit`](ServeEngine::can_admit) can still lose its
+    /// blocks to an earlier admission in the same scheduler round, and
+    /// paged backends re-check jointly at reservation time.  On `None`
+    /// the sequence is left released and the scheduler re-queues the
+    /// request.  Backends without a capacity gate never return `None`.
+    ///
+    /// This is the only prefill entry point: an infallible `prefill`
+    /// used to be the required method, but every serving caller has to
+    /// handle the capacity refusal anyway, and the infallible wrapper
+    /// invited `.expect()` on the serving path (rrs-audit rule R2).
+    fn try_prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Option<Vec<f32>>;
 
-    /// Fallible prefill for capacity-gated backends.  `None` means the
-    /// backend could not reserve KV memory for this prompt *right now* —
-    /// a request that passed [`can_admit`](ServeEngine::can_admit) can
-    /// still lose its blocks to an earlier admission in the same
-    /// scheduler round, and paged backends re-check jointly at
-    /// reservation time.  On `None` the sequence is left released and
-    /// the scheduler re-queues the request.  Backends without a capacity
-    /// gate never fail.
-    fn try_prefill(&self, seq: &mut Self::Seq, tokens: &[u32]) -> Option<Vec<f32>> {
-        Some(self.prefill(seq, tokens))
-    }
-
-    /// Advance every sequence by one token; returns logits [B, vocab].
-    fn decode(&self, batch: &mut [(&mut Self::Seq, u32)]) -> Mat;
+    /// Advance every sequence by one token; returns logits [B, vocab],
+    /// or a typed error when the backend could not run the step at all
+    /// (the scheduler aborts the affected lanes with terminal replies).
+    fn decode(
+        &self,
+        batch: &mut [(&mut Self::Seq, u32)],
+    ) -> Result<Mat, EngineError>;
 
     /// Current length of a sequence.
     fn seq_len(&self, seq: &Self::Seq) -> usize;
@@ -107,13 +130,17 @@ impl ServeEngine for RustServeEngine {
         KvCache::new(&self.model.mcfg, &self.model.ecfg)
     }
 
-    fn prefill(&self, seq: &mut KvCache, tokens: &[u32]) -> Vec<f32> {
+    fn try_prefill(&self, seq: &mut KvCache, tokens: &[u32]) -> Option<Vec<f32>> {
+        // flat caches have no capacity gate: prefill always succeeds
         let logits = self.model.forward_full(tokens, Some(seq));
-        logits.row(logits.rows - 1).to_vec()
+        Some(logits.row(logits.rows - 1).to_vec())
     }
 
-    fn decode(&self, batch: &mut [(&mut KvCache, u32)]) -> Mat {
-        self.model.decode_batch(batch)
+    fn decode(
+        &self,
+        batch: &mut [(&mut KvCache, u32)],
+    ) -> Result<Mat, EngineError> {
+        Ok(self.model.decode_batch(batch))
     }
 
     fn seq_len(&self, seq: &KvCache) -> usize {
@@ -140,16 +167,15 @@ impl ServeEngine for PagedEngine {
         PagedEngine::new_seq(self)
     }
 
-    fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
-        PagedEngine::prefill(self, seq, tokens)
-    }
-
     fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
         PagedEngine::try_prefill(self, seq, tokens)
     }
 
-    fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
-        PagedEngine::decode(self, batch)
+    fn decode(
+        &self,
+        batch: &mut [(&mut PagedSeq, u32)],
+    ) -> Result<Mat, EngineError> {
+        Ok(PagedEngine::decode(self, batch))
     }
 
     fn seq_len(&self, seq: &PagedSeq) -> usize {

@@ -87,6 +87,10 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    // ORDERING: every atomic in this impl is an independent monotonic
+    // counter or last-write-wins gauge; snapshot readers tolerate a
+    // torn view across fields (the stats endpoint is advisory, not a
+    // synchronization point), so all accesses are intentionally Relaxed.
     pub fn new() -> Metrics {
         Metrics::default()
     }

@@ -34,7 +34,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use crate::kvpool::{PagedEngine, PagedSeq, PoolStats};
-pub use engine_iface::{RustServeEngine, ServeEngine};
+pub use engine_iface::{EngineError, RustServeEngine, ServeEngine};
 pub use metrics::Metrics;
 pub use queue::RequestQueue;
 pub use request::{

@@ -1,10 +1,32 @@
 //! Bounded request queue with admission control (the backpressure point).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use super::request::{Request, SubmitError};
+
+/// Poison-recovering lock/wait helpers.  The queue pairs its Mutex with
+/// a Condvar, so it stays on `std::sync` directly (loom does not model
+/// `wait_timeout`) instead of the `util::sync` shim; recovery semantics
+/// match [`crate::obs::lock_recover`]: a producer that panicked between
+/// `insert` and `notify` leaves at worst one already-counted request,
+/// which the scheduler's drain loop still retires — strictly better
+/// than poisoning every subsequent submit.
+fn lock_inner(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn wait_on<'a>(
+    cv: &Condvar,
+    g: MutexGuard<'a, Inner>,
+    wait: Duration,
+) -> MutexGuard<'a, Inner> {
+    let (g2, _timeout) = cv
+        .wait_timeout(g, wait)
+        .unwrap_or_else(PoisonError::into_inner);
+    g2
+}
 
 /// MPMC bounded priority queue; producers fail fast when full (shed
 /// load rather than queue unboundedly — the serving-side backpressure
@@ -47,7 +69,7 @@ impl RequestQueue {
 
     /// Non-blocking submit; `Err(QueueFull)` = backpressure.
     pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_inner(&self.inner);
         if g.closed {
             return Err(SubmitError::Closed);
         }
@@ -69,10 +91,9 @@ impl RequestQueue {
     /// Pop up to `max` requests; blocks up to `wait` for the first one.
     /// Returns an empty vec on timeout or closure-with-empty-queue.
     pub fn pop_batch(&self, max: usize, wait: Duration) -> Vec<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_inner(&self.inner);
         if g.items.is_empty() && !g.closed {
-            let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
-            g = g2;
+            g = wait_on(&self.cv, g, wait);
         }
         let take = g.items.len().min(max);
         g.items.drain(..take).collect()
@@ -89,34 +110,32 @@ impl RequestQueue {
         wait: Duration,
         mut admit: F,
     ) -> Vec<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_inner(&self.inner);
         if g.items.is_empty() && !g.closed && !wait.is_zero() {
-            let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
-            g = g2;
+            g = wait_on(&self.cv, g, wait);
         }
         let mut out = Vec::new();
         while out.len() < max {
-            let ok = match g.items.front() {
-                Some(r) => admit(r),
-                None => false,
-            };
-            if !ok {
-                break;
+            match g.items.front() {
+                Some(r) if admit(r) => {}
+                _ => break,
             }
-            out.push(g.items.pop_front().unwrap());
+            if let Some(r) = g.items.pop_front() {
+                out.push(r);
+            }
         }
         out
     }
 
     /// Pop everything available without blocking.
     pub fn drain_now(&self, max: usize) -> Vec<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_inner(&self.inner);
         let take = g.items.len().min(max);
         g.items.drain(..take).collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_inner(&self.inner).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -124,13 +143,13 @@ impl RequestQueue {
     }
 
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_inner(&self.inner);
         g.closed = true;
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_inner(&self.inner).closed
     }
 }
 

@@ -97,6 +97,9 @@ impl StreamHandle {
     /// Ask the scheduler to stop this request at the next step; it
     /// finishes as [`FinishReason::Cancelled`] and frees its lane.
     pub fn abort(&self) {
+        // ORDERING: the cancel flag is a lone latch with no payload
+        // published alongside it; the scheduler polls it once per step,
+        // so Relaxed only delays the stop by at most one step.
         self.cancel.store(true, Ordering::Relaxed);
     }
 

@@ -47,7 +47,7 @@ use crate::obs::attrib::{self, Breakdown, Phase};
 use crate::obs::trace::SpanKind;
 use crate::obs::{profile, watchdog};
 
-use super::engine_iface::ServeEngine;
+use super::engine_iface::{EngineError, ServeEngine};
 use super::metrics::Metrics;
 use super::queue::RequestQueue;
 use super::request::{
@@ -127,7 +127,16 @@ struct Pending {
     sampler: Option<SamplerState>,
     /// Attribution carried across preemption.
     attrib: Breakdown,
+    /// `try_prefill` refusals observed while nothing else was resident.
+    /// With an empty active set a refusal cannot be capacity pressure
+    /// from other lanes, so repeated ones mean the engine can never
+    /// prefill this request; the admission loop aborts it instead of
+    /// spinning on it forever.
+    empty_refusals: u32,
 }
+
+/// Empty-pool `try_prefill` refusals tolerated before aborting.
+const MAX_EMPTY_REFUSALS: u32 = 3;
 
 impl Pending {
     fn fresh(req: Request) -> Pending {
@@ -140,6 +149,7 @@ impl Pending {
             prior_prefill_ms: 0.0,
             sampler: None,
             attrib: Breakdown::default(),
+            empty_refusals: 0,
         }
     }
 
@@ -164,12 +174,17 @@ impl Pending {
             prior_prefill_ms: a.prefill_ms,
             sampler: Some(a.sampler),
             attrib: a.attrib,
+            // it prefilled successfully before, so refusal counting
+            // restarts on resume
+            empty_refusals: 0,
         }
     }
 
     /// `now` is the scheduler round's hoisted timestamp, so deadline
     /// drops, TTFT, and ITL stamps stay mutually consistent.
     fn dead_reason(&self, now: Instant) -> Option<FinishReason> {
+        // ORDERING: cancel is a monotonic one-way flag; a stale Relaxed
+        // read only delays the cancellation by one scheduler round
         if self.req.cancel.load(Ordering::Relaxed) {
             Some(FinishReason::Cancelled)
         } else if self.req.deadline.map(|d| now >= d).unwrap_or(false) {
@@ -190,11 +205,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker thread over an engine backend.
+    /// Start the worker thread over an engine backend.  Thread-spawn
+    /// failure (fd/thread exhaustion) surfaces as a typed error rather
+    /// than a panic so callers embedding the coordinator can shed load.
     pub fn start<E: ServeEngine + 'static>(
         engine: E,
         cfg: SchedulerConfig,
-    ) -> Coordinator {
+    ) -> std::io::Result<Coordinator> {
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
         // continuous profiler: spawns its sweep thread iff RRS_PROF_HZ
@@ -205,15 +222,14 @@ impl Coordinator {
         let m2 = metrics.clone();
         let worker = std::thread::Builder::new()
             .name("rrs-scheduler".into())
-            .spawn(move || run_loop(engine, cfg, q2, m2))
-            .expect("spawn scheduler");
-        Coordinator {
+            .spawn(move || run_loop(engine, cfg, q2, m2))?;
+        Ok(Coordinator {
             queue,
             metrics,
             next_id: AtomicU64::new(1),
             worker: Some(worker),
             max_seq,
-        }
+        })
     }
 
     /// Submit with the full option set; returns a streaming handle
@@ -336,10 +352,11 @@ fn run_loop<E: ServeEngine>(
         }
         // drop dead work at the head of the resume queue (client gone or
         // deadline passed) before spending any capacity on it
-        while let Some(p) = preempted.front() {
-            match p.dead_reason(round_now) {
-                Some(r) => finish_waiting(preempted.pop_front().unwrap(), r, &metrics),
-                None => break,
+        while let Some(r) =
+            preempted.front().and_then(|p| p.dead_reason(round_now))
+        {
+            if let Some(p) = preempted.pop_front() {
+                finish_waiting(p, r, &metrics);
             }
         }
         // 1. admit — preempted requests first (they hold progress), then
@@ -347,15 +364,16 @@ fn run_loop<E: ServeEngine>(
         let mut room = cfg.max_batch.saturating_sub(active.len());
         let mut incoming: Vec<Pending> = Vec::new();
         while room > 0 {
-            let admissible = match preempted.front() {
-                Some(p) => engine.can_admit(&p.full_prompt),
-                None => false,
-            };
+            let admissible = preempted
+                .front()
+                .is_some_and(|p| engine.can_admit(&p.full_prompt));
             if !admissible {
                 break;
             }
-            incoming.push(preempted.pop_front().unwrap());
-            room -= 1;
+            if let Some(p) = preempted.pop_front() {
+                incoming.push(p);
+                room -= 1;
+            }
         }
         if room > 0 && preempted.is_empty() {
             let take = room.min(cfg.admit_per_step);
@@ -375,15 +393,14 @@ fn run_loop<E: ServeEngine>(
         // so a capacity refusal here means the request can never fit —
         // abort it rather than wedging the queue behind it
         if active.is_empty() && incoming.is_empty() {
-            if let Some(p) = preempted.front() {
-                if !engine.can_admit(&p.full_prompt) {
-                    finish_waiting(
-                        preempted.pop_front().unwrap(),
-                        FinishReason::Aborted,
-                        &metrics,
-                    );
+            let head_stuck = preempted
+                .front()
+                .is_some_and(|p| !engine.can_admit(&p.full_prompt));
+            if head_stuck {
+                if let Some(p) = preempted.pop_front() {
+                    finish_waiting(p, FinishReason::Aborted, &metrics);
                 }
-            } else {
+            } else if preempted.is_empty() {
                 for req in queue.pop_batch(1, cfg.idle_wait) {
                     if engine.can_admit(&req.prompt) {
                         incoming.push(Pending::fresh(req));
@@ -412,6 +429,7 @@ fn run_loop<E: ServeEngine>(
                 prior_prefill_ms,
                 sampler,
                 attrib: carried_attrib,
+                empty_refusals,
             } = p;
             let measured_queue_ms = queue_ms
                 .unwrap_or_else(|| req.submitted_at.elapsed().as_secs_f32() * 1e3);
@@ -428,7 +446,7 @@ fn run_loop<E: ServeEngine>(
                 engine.try_prefill(&mut seq, &full_prompt)
             };
             let Some(logits) = prefilled else {
-                preempted.push_back(Pending {
+                let again = Pending {
                     req,
                     generated,
                     full_prompt,
@@ -436,7 +454,18 @@ fn run_loop<E: ServeEngine>(
                     prior_prefill_ms,
                     sampler,
                     attrib: carried_attrib,
-                });
+                    empty_refusals: empty_refusals
+                        + u32::from(active.is_empty()),
+                };
+                // refusals with an empty active set mean the engine can
+                // never take this request (a capacity refusal would have
+                // failed can_admit instead): abort it after a few rounds
+                // rather than bouncing it through admission forever
+                if again.empty_refusals >= MAX_EMPTY_REFUSALS {
+                    finish_waiting(again, FinishReason::Aborted, &metrics);
+                } else {
+                    preempted.push_back(again);
+                }
                 continue;
             };
             let queue_ms = measured_queue_ms;
@@ -553,7 +582,18 @@ fn run_loop<E: ServeEngine>(
                 (&mut a.seq, t)
             })
             .collect();
-        let logits = engine.decode(&mut pairs);
+        let logits = match engine.decode(&mut pairs) {
+            Ok(l) => l,
+            Err(e) => {
+                // strict protocol reply on a failed batched step: every
+                // lane is released and its client gets a terminal
+                // `Aborted` response instead of a silently dead stream
+                drop(pairs);
+                abort_active(&engine, &mut active, &metrics, &e);
+                refresh_gauges(&engine, &metrics);
+                continue;
+            }
+        };
         drop(pairs);
         metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
         let step_done = Instant::now();
@@ -702,11 +742,57 @@ fn finish_waiting(p: Pending, reason: FinishReason, metrics: &Metrics) {
     }));
 }
 
+/// Abort every active lane after the engine reported a typed decode
+/// error (e.g. a PJRT graph failure): release the sequences, account
+/// the aborts, and send each client its terminal response.
+fn abort_active<E: ServeEngine>(
+    engine: &E,
+    active: &mut Vec<Active<E::Seq>>,
+    metrics: &Metrics,
+    err: &EngineError,
+) {
+    eprintln!(
+        "rrs-scheduler: decode step failed ({err}); aborting {} lane(s)",
+        active.len()
+    );
+    for mut a in active.drain(..) {
+        engine.release_seq(&mut a.seq);
+        metrics.aborted.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .trace
+            .instant(a.id, SpanKind::Abort, a.generated.len() as u64);
+        let total_ms = a.submitted_at.elapsed().as_secs_f32() * 1e3;
+        let decode_ms = (total_ms - a.queue_ms - a.prefill_ms).max(0.0);
+        a.attrib.set(Phase::Queue, ms_us(a.queue_ms));
+        a.attrib.set(Phase::Prefill, ms_us(a.prefill_ms));
+        a.attrib
+            .add(Phase::StreamWrite, attrib::take_stream_write(a.id));
+        attrib::finish_request(attrib::RequestAttrib {
+            id: a.id,
+            total_us: ms_us(total_ms),
+            tokens: a.generated.len() as u64,
+            finish: FinishReason::Aborted.as_str(),
+            breakdown: a.attrib,
+        });
+        let _ = a.reply.send(Event::Done(Response {
+            id: a.id,
+            tokens: a.generated,
+            queue_ms: a.queue_ms,
+            prefill_ms: a.prefill_ms,
+            decode_ms,
+            total_ms,
+            finish_reason: FinishReason::Aborted,
+        }));
+    }
+}
+
 fn finishes<E: ServeEngine>(
     engine: &E,
     a: &Active<E::Seq>,
     now: Instant,
 ) -> Option<FinishReason> {
+    // ORDERING: cancel is a monotonic one-way flag; a stale Relaxed
+    // read only delays retirement by one decode step
     if a.disconnected || a.cancel.load(Ordering::Relaxed) {
         Some(FinishReason::Cancelled)
     } else if a.deadline.map(|d| now >= d).unwrap_or(false) {

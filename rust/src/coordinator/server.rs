@@ -86,6 +86,9 @@ pub fn spawn(
 }
 
 fn accept_loop(listener: TcpListener, coordinator: Arc<Coordinator>) {
+    // ORDERING: the stop flag is a lone latch polled between
+    // connections/requests; nothing is published with it, so Relaxed
+    // costs at most one extra accepted connection before shutdown.
     let stop = Arc::new(AtomicBool::new(false));
     for stream in listener.incoming() {
         if stop.load(Ordering::Relaxed) {
@@ -135,6 +138,7 @@ fn handle_conn(
         } else {
             write_line(&mut writer, &handle_request(&req, &coord))?;
         }
+        // ORDERING: lone shutdown latch; Relaxed poll per request.
         if stop.load(Ordering::Relaxed) {
             break;
         }
@@ -205,6 +209,7 @@ fn handle_command(req: &Json, coord: &Coordinator, stop: &AtomicBool) -> Json {
         "profile" => profile::profile_json(),
         "ping" => obj(vec![("ok", true.into())]),
         "shutdown" => {
+            // ORDERING: lone shutdown latch (see accept_loop).
             stop.store(true, Ordering::Relaxed);
             obj(vec![("ok", true.into())])
         }
@@ -338,9 +343,11 @@ fn handle_request(req: &Json, coord: &Coordinator) -> Json {
         }
     }
     if responses.len() == 1 {
+        // BOUNDS: guarded by the len() == 1 check above
         response_json(&responses[0], None)
     } else {
         obj(vec![
+            // BOUNDS: non-empty — one response per choice, spec.n >= 1
             ("id", (responses[0].id as usize).into()),
             (
                 "choices",

@@ -41,8 +41,9 @@ mod imp {
             tiles: TileConfig,
             acc: &mut [i32],
         ) {
-            // sound: this backend is only registered after runtime AVX2
-            // detection (see kernels::select_backend)
+            // SAFETY: this backend is only registered after runtime AVX2
+            // detection (see kernels::select_backend), satisfying the
+            // target-feature contract of every callee below.
             unsafe { igemm_block_avx2(a, n, k, b, j0, j1, tiles, acc) }
         }
 
@@ -62,10 +63,12 @@ mod imp {
             tiles: TileConfig,
             out: &mut [f32],
         ) {
+            // SAFETY: AVX2 presence checked at backend registration.
             unsafe { gemm_scaled_block_avx2(a, n, k, group, sg, sx, b, sw, j0, j1, tiles, out) }
         }
 
         fn colmax_abs(&self, x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
+            // SAFETY: AVX2 presence checked at backend registration.
             unsafe { colmax_abs_avx2(x, rows, k, s) }
         }
 
@@ -77,14 +80,17 @@ mod imp {
             sg: &[f32],
             out: &mut [f32],
         ) -> f32 {
+            // SAFETY: AVX2 presence checked at backend registration.
             unsafe { smooth_row_avx2(row, perm, group, sg, out) }
         }
 
         fn fwht(&self, x: &mut [f32]) {
+            // SAFETY: AVX2 presence checked at backend registration.
             unsafe { fwht_avx2(x) }
         }
 
         fn dot_f32(&self, a: &[f32], b: &[f32]) -> f32 {
+            // SAFETY: AVX2 presence checked at backend registration.
             unsafe { dot4_sse(a, b) }
         }
     }
@@ -127,6 +133,9 @@ mod imp {
 
     /// Exact i32 dot over one packed byte range (`bp.len() % 16 == 0`):
     /// nibble mask + sign-extend + widen + `pmaddwd` per 16-byte chunk.
+    // SAFETY: unsafe only for the target-feature contract — the caller
+    // must have verified AVX2; all loads stay inside the slices (the
+    // debug_asserts state the length preconditions the callers uphold).
     #[target_feature(enable = "avx2")]
     unsafe fn dot_chunks(ae: &[i8], ao: &[i8], bp: &[u8]) -> i32 {
         debug_assert_eq!(bp.len() % 16, 0);
@@ -157,6 +166,8 @@ mod imp {
         hsum_epi32(acc)
     }
 
+    // SAFETY: unsafe only for the target-feature contract (register-only
+    // lane shuffles, no memory access).
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
         let lo = _mm256_castsi256_si128(v);
@@ -167,6 +178,9 @@ mod imp {
         _mm_cvtsi128_si32(s)
     }
 
+    // SAFETY: unsafe only for the target-feature contract; every access
+    // is through checked slice ops, and the `dot_chunks` ranges end at
+    // `stride`, the deinterleave scratch row length.
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn igemm_block_avx2(
@@ -212,6 +226,9 @@ mod imp {
         }
     }
 
+    // SAFETY: unsafe only for the target-feature contract; all accesses
+    // are checked slice ops over the same ranges the scalar reference
+    // uses.
     #[target_feature(enable = "avx2")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn gemm_scaled_block_avx2(
@@ -289,6 +306,9 @@ mod imp {
         }
     }
 
+    // SAFETY: unsafe only for the target-feature contract; the vector
+    // loop reads/writes `[j, j+8)` only while `j + 8 <= k`, within the
+    // row and `s` slices (callers pass `s.len() == k`).
     #[target_feature(enable = "avx2")]
     unsafe fn colmax_abs_avx2(x: &[f32], rows: usize, k: usize, s: &mut [f32]) {
         let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
@@ -308,6 +328,9 @@ mod imp {
         }
     }
 
+    // SAFETY: unsafe only for the target-feature contract; the vector
+    // loop touches `[j, j+8)` only while `j + 8 <= hi <= k == perm.len()
+    // <= out.len()` (the prologue writes `out[..k]`).
     #[target_feature(enable = "avx2")]
     unsafe fn smooth_row_avx2(
         row: &[f32],
@@ -349,6 +372,9 @@ mod imp {
         smax
     }
 
+    // SAFETY: unsafe only for the target-feature contract; butterfly
+    // loads/stores at `i` and `i + h` stay below `base + step <= k`
+    // (power-of-two length asserted on entry).
     #[target_feature(enable = "avx2")]
     unsafe fn fwht_avx2(x: &mut [f32]) {
         let k = x.len();
@@ -401,6 +427,8 @@ mod imp {
     /// f32 dot with the exact 4-lane pattern of
     /// [`crate::linalg::gemm::dot`]: lane `l` accumulates elements
     /// `4c + l`, lanes reduce left-to-right — bit-identical to scalar.
+    // SAFETY: unsafe only for the target-feature contract; 4-lane loads
+    // stop at `chunks * 4 <= a.len() == b.len()`, the tail is scalar.
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_sse(a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());

@@ -307,6 +307,9 @@ pub fn stats_peek() -> Option<KernelStats> {
 }
 
 fn snapshot(r: &Registry) -> KernelStats {
+    // ORDERING: each cell is an independent monotonic call/row counter
+    // bumped by fetch_add; a stats poll tolerates a torn view across
+    // cells, so Relaxed loads.
     KernelStats {
         backend: r.backend.name(),
         tiles: r.tiles,
@@ -328,6 +331,10 @@ fn snapshot(r: &Registry) -> KernelStats {
 /// task writes a disjoint column range `[j0, j1)` of the `[n, m]`
 /// buffer, so the pointer writes never alias.
 struct SendPtr<T>(*mut T);
+// SAFETY: the pointer is only dereferenced inside `parallel_col_blocks`,
+// where every scoped task writes the disjoint column range `[j0, j1)` it
+// was handed — no two tasks touch the same element, and the scope joins
+// before `out` is used again.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -360,7 +367,10 @@ where
             let mut tile = vec![zero; n * w];
             body(j0, j1, &mut tile);
             for i in 0..n {
-                // sound: tasks own disjoint column ranges of each row
+                // SAFETY: src is row i of the `[n, w]` tile (in bounds by
+                // construction); dst is columns `[j0, j1)` of row i of the
+                // `[n, m]` out buffer with `j1 <= m`, and tasks own
+                // disjoint column ranges, so the regions never overlap.
                 unsafe {
                     std::ptr::copy_nonoverlapping(
                         tile.as_ptr().add(i * w),

@@ -9,7 +9,8 @@
 //! rust/tests/kvpool_paged.rs).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+
+use crate::util::sync::{lock_recover, Mutex};
 
 use crate::linalg::gemm::Mat;
 use crate::model::engine::{KvSeqBatch, QuantModel};
@@ -172,16 +173,6 @@ impl PagedEngine {
         PagedSeq::new()
     }
 
-    /// Prefill a fresh sequence: pin whatever prompt prefix the pool has
-    /// cached, forward only the suffix, then seal the new full blocks.
-    /// Returns the logits of the last position.  Panics when the pool
-    /// cannot hold the prompt — admission must gate capacity; use
-    /// [`try_prefill`](PagedEngine::try_prefill) for the fallible form.
-    pub fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
-        self.try_prefill(seq, tokens)
-            .expect("kvpool exhausted during prefill (admission must gate on capacity)")
-    }
-
     /// Fallible prefill: under one pool lock, pin the cached prompt
     /// prefix (full blocks zero-copy, a mid-block tail by copy), reserve
     /// the unshared suffix plus one decode-headroom block, and forward
@@ -191,7 +182,7 @@ impl PagedEngine {
     /// by the gate can still lose its blocks to an earlier admission in
     /// the same scheduler round.
     pub fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         let matched = begin_paged_prefill(&mut pool, seq, tokens)?;
         let suffix = &tokens[matched..];
         let logits = {
@@ -206,7 +197,7 @@ impl PagedEngine {
     /// One batched decode step; mirrors
     /// [`QuantModel::decode_batch`] over block tables.
     pub fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         let tokens: Vec<u32> = batch.iter().map(|(_, t)| *t).collect();
         for (seq, tok) in batch.iter_mut() {
             seq.tokens.push(*tok);
@@ -230,7 +221,7 @@ impl PagedEngine {
     /// Release the sequence's blocks back to the pool (retire or
     /// preemption); sealed blocks stay cached for prefix reuse.
     pub fn release(&self, seq: &mut PagedSeq) {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         pool.release_seq(&mut seq.table);
         *seq = PagedSeq::new();
     }
@@ -242,24 +233,24 @@ impl PagedEngine {
     /// just its tail.  [`try_prefill`](PagedEngine::try_prefill) re-checks
     /// at reservation time, keeping same-round admission races safe.
     pub fn can_admit(&self, prompt: &[u32]) -> bool {
-        self.pool.lock().unwrap().can_fit_prompt(prompt)
+        lock_recover(&self.pool).can_fit_prompt(prompt)
     }
 
     /// Ensure `seq` can grow by one token; `false` = preempt first.
     pub fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
-        self.pool.lock().unwrap().reserve(&mut seq.table, seq.len + 1)
+        lock_recover(&self.pool).reserve(&mut seq.table, seq.len + 1)
     }
 
     /// Longest prompt prefix currently resident in the prefix cache.
     pub fn prefix_match_len(&self, prompt: &[u32]) -> usize {
-        self.pool.lock().unwrap().probe_prefix(prompt)
+        lock_recover(&self.pool).probe_prefix(prompt)
     }
 
     pub fn stats(&self) -> PoolStats {
-        self.pool.lock().unwrap().stats()
+        lock_recover(&self.pool).stats()
     }
 
     pub fn seq_bytes(&self, seq: &PagedSeq) -> usize {
-        self.pool.lock().unwrap().table_bytes(&seq.table)
+        lock_recover(&self.pool).table_bytes(&seq.table)
     }
 }

@@ -81,6 +81,12 @@ pub struct PoolStats {
     /// Sealed tail blocks shared read-only at match time (the lazy
     /// partial-tail path: no rows copied yet).
     pub lazy_tail_shares: u64,
+    /// Broken internal invariants survived at runtime (a KV row dropped
+    /// because a reserve-gated alloc failed anyway).  Always 0 in a
+    /// healthy pool; nonzero means the affected sequences' caches are
+    /// incomplete and their outputs untrustworthy — surfaced so the
+    /// watchdog/stats layers can scream instead of the process dying.
+    pub integrity_errors: u64,
     /// Lazily-shared tails actually materialized by a first append.
     /// `lazy_tail_shares - lazy_tail_copies` = copies the lazy scheme
     /// avoided outright (sequences released before ever appending).
@@ -157,6 +163,7 @@ pub struct KvPool {
     cow_copies: u64,
     lazy_tail_shares: u64,
     lazy_tail_copies: u64,
+    integrity_errors: u64,
 }
 
 impl KvPool {
@@ -190,6 +197,7 @@ impl KvPool {
             cow_copies: 0,
             lazy_tail_shares: 0,
             lazy_tail_copies: 0,
+            integrity_errors: 0,
         }
     }
 
@@ -241,7 +249,15 @@ impl KvPool {
             .min_by_key(|(_, s)| s.last_use)
             .map(|(i, _)| i as BlockId)?;
         let slot = &mut self.slots[id as usize];
-        let h = slot.hash.take().expect("cached block has a hash");
+        // the filter above admits only hash-carrying slots; a slot that
+        // lost its hash between filter and take would mean map/slot
+        // desync, so fail loudly in debug and report no evictable block
+        // in release rather than panicking the serving thread
+        let Some(h) = slot.hash.take() else {
+            debug_assert!(false, "cached block lost its hash");
+            self.integrity_errors += 1;
+            return None;
+        };
         let parent = slot.parent;
         self.prefix_map.remove(&h);
         if let Some(kids) = self.children.get_mut(&parent) {
@@ -401,9 +417,17 @@ impl KvPool {
         let bi = pos / bs;
         debug_assert!(bi <= table.len(), "non-sequential KV append");
         if bi == table.len() {
-            let id = self
-                .alloc()
-                .expect("kvpool exhausted: admission/reserve must gate capacity");
+            // reserve()/can_fit_prompt gate capacity before any forward
+            // touches the pool, so an empty allocator here is a protocol
+            // violation upstream.  Dropping the row (and counting it)
+            // keeps the server alive: this sequence's cache is now
+            // incomplete, which integrity_errors surfaces loudly, while
+            // a panic here would take every lane down with it.
+            let Some(id) = self.alloc() else {
+                debug_assert!(false, "kvpool exhausted: reserve must gate capacity");
+                self.integrity_errors += 1;
+                return;
+            };
             table.push(id);
         }
         let id = table[bi];
@@ -420,9 +444,15 @@ impl KvPool {
             // trims the foreign rows past the shared prefix and
             // materializes the deferred copy
             let owned = pos - bi * bs;
-            let copy = self
-                .alloc()
-                .expect("kvpool exhausted during copy-on-write");
+            // same protocol contract as above: can_fit_prompt charges
+            // one headroom block for a pending CoW, so exhaustion here
+            // is an upstream accounting bug — skip the write (dropping
+            // the row) instead of killing the serving thread
+            let Some(copy) = self.alloc() else {
+                debug_assert!(false, "kvpool exhausted during copy-on-write");
+                self.integrity_errors += 1;
+                return;
+            };
             let data = self.slots[id as usize].block.clone_prefix(owned);
             self.slots[copy as usize].block = data;
             if sealed {
@@ -551,6 +581,7 @@ impl KvPool {
             cow_copies: self.cow_copies,
             lazy_tail_shares: self.lazy_tail_shares,
             lazy_tail_copies: self.lazy_tail_copies,
+            integrity_errors: self.integrity_errors,
         }
     }
 }

@@ -126,7 +126,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let model = build_model(args)?;
     let ecfg = model.ecfg;
     let engine = RustServeEngine::new(model);
-    let coord = Coordinator::start(engine, SchedulerConfig::default());
+    let coord = Coordinator::start(engine, SchedulerConfig::default())?;
     let seed = args.get_usize("seed", 0);
     let params = SamplingParams {
         temperature: args.get_f32("temperature", 0.0),
@@ -163,7 +163,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_capacity: args.get_usize("queue", 64),
         ..Default::default()
     };
-    let coord = Arc::new(Coordinator::start(engine, cfg));
+    let coord = Arc::new(Coordinator::start(engine, cfg)?);
     let port = args.get_usize("port", 0);
     server::serve(coord, &format!("127.0.0.1:{port}"))?;
     Ok(())

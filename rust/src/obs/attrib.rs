@@ -27,9 +27,10 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::sync::{Arc, OnceLock, Weak};
 use std::time::Instant;
+
+use crate::util::sync::{AtomicU8, AtomicUsize, Mutex, Ordering};
 
 use crate::util::json::{obj, Json};
 
@@ -116,15 +117,18 @@ impl Phase {
 /// still time correctly; they just vanish from profiler samples).
 pub const MAX_DEPTH: usize = 8;
 
-/// One thread's live phase stack, readable cross-thread: the frames are
-/// relaxed atomics, so the profiler reads a *torn but valid* snapshot
-/// at worst (a frame from a neighbouring instant), never UB.
+/// One thread's live phase stack, readable cross-thread.  The depth is
+/// the publication point: frames below the published depth are always
+/// fully written (Release/Acquire pairing on `depth`), so the profiler
+/// reads a snapshot that is *torn in time* at worst (a frame from a
+/// neighbouring instant), never an unwritten byte.
 pub struct ThreadStack {
     depth: AtomicUsize,
     frames: [AtomicU8; MAX_DEPTH],
 }
 
 impl ThreadStack {
+    #[cfg(not(loom))]
     fn new() -> ThreadStack {
         ThreadStack {
             depth: AtomicUsize::new(0),
@@ -132,9 +136,45 @@ impl ThreadStack {
         }
     }
 
+    // loom's atomics are not const-constructible; the models build their
+    // stacks at runtime inside the model closure
+    #[cfg(loom)]
+    fn new() -> ThreadStack {
+        ThreadStack {
+            depth: AtomicUsize::new(0),
+            frames: std::array::from_fn(|_| AtomicU8::new(0)),
+        }
+    }
+
+    /// Publish `phase` as the new innermost frame at `depth`.
+    ///
+    /// ORDERING: the frame byte must be visible before the deeper depth
+    /// is: depth is stored Release here and loaded Acquire in
+    /// [`snapshot`], so a sweep that observes `depth + 1` also observes
+    /// this frame.  (A Relaxed pair let the profiler read a stale frame
+    /// byte under the new depth — the mis-attribution the
+    /// `snapshot_never_sees_unpublished_frame` loom model locks out.)
+    fn push(&self, depth: usize, phase: u8) {
+        self.frames[depth].store(phase, Ordering::Relaxed);
+        self.depth.store(depth + 1, Ordering::Release);
+    }
+
+    /// Retract the stack to `depth` live frames (scope exit).
+    ///
+    /// ORDERING: shrinking publishes no new frame, but Release keeps
+    /// this store ordered after the dying scope's writes so a sweep
+    /// never resurrects them under a later push.
+    fn set_depth(&self, depth: usize) {
+        self.depth.store(depth, Ordering::Release);
+    }
+
     /// Snapshot the live frames (phase discriminants, outermost first).
     pub fn snapshot(&self) -> ([u8; MAX_DEPTH], usize) {
-        let depth = self.depth.load(Ordering::Relaxed).min(MAX_DEPTH);
+        // ORDERING: Acquire pairs with the Release in `push`: every
+        // frame below the loaded depth was fully written before that
+        // depth was published, so the Relaxed frame reads below are
+        // covered by this edge.
+        let depth = self.depth.load(Ordering::Acquire).min(MAX_DEPTH);
         let mut out = [0u8; MAX_DEPTH];
         for (i, f) in self.frames.iter().take(depth).enumerate() {
             out[i] = f.load(Ordering::Relaxed);
@@ -217,8 +257,7 @@ pub fn phase_scope(phase: Phase) -> PhaseScope {
         let mut st = s.borrow_mut();
         let depth = st.frames.len();
         if depth < MAX_DEPTH {
-            st.stack.frames[depth].store(phase as u8, Ordering::Relaxed);
-            st.stack.depth.store(depth + 1, Ordering::Relaxed);
+            st.stack.push(depth, phase as u8);
         }
         st.frames.push(LocalFrame { phase, start: Instant::now(), child_us: 0 });
     });
@@ -233,7 +272,7 @@ impl Drop for PhaseScope {
             debug_assert_eq!(f.phase, self.phase);
             let depth = st.frames.len();
             if depth < MAX_DEPTH {
-                st.stack.depth.store(depth, Ordering::Relaxed);
+                st.stack.set_depth(depth);
             }
             let total_us = f.start.elapsed().as_micros() as u64;
             let self_us = total_us.saturating_sub(f.child_us);
@@ -490,5 +529,62 @@ mod tests {
             assert!(p.span_name().starts_with("phase_"));
         }
         assert_eq!(Phase::from_u8(NPHASES as u8), None);
+    }
+}
+
+/// Loom regression model for the frame-publish race fixed in
+/// [`ThreadStack::push`]: with Relaxed/Relaxed the profiler sweep could
+/// observe the incremented depth *before* the frame byte, attributing
+/// the sample to whatever stale phase the slot last held.  Run with
+/// `RUSTFLAGS="--cfg loom" cargo test -p rrs --lib -- loom_ --nocapture`.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::{Phase, ThreadStack};
+    use loom::thread;
+    use std::sync::Arc;
+
+    #[test]
+    fn snapshot_never_sees_unpublished_frame() {
+        loom::model(|| {
+            let st = Arc::new(ThreadStack::new());
+            let w = Arc::clone(&st);
+            let writer = thread::spawn(move || {
+                // Gemm (4) is distinguishable from the zero-initialised
+                // slot, which decodes as Queue (0).
+                w.push(0, Phase::Gemm as u8);
+            });
+            let (frames, depth) = st.snapshot();
+            if depth >= 1 {
+                assert_eq!(
+                    frames[0],
+                    Phase::Gemm as u8,
+                    "depth published before its frame byte"
+                );
+            }
+            writer.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn pop_never_resurrects_deeper_frame() {
+        loom::model(|| {
+            let st = Arc::new(ThreadStack::new());
+            st.push(0, Phase::DecodeOther as u8);
+            let w = Arc::clone(&st);
+            let writer = thread::spawn(move || {
+                // nested scope enters and exits
+                w.push(1, Phase::Gemm as u8);
+                w.set_depth(1);
+            });
+            let (frames, depth) = st.snapshot();
+            assert!(depth <= 2);
+            if depth >= 1 {
+                assert_eq!(frames[0], Phase::DecodeOther as u8);
+            }
+            if depth == 2 {
+                assert_eq!(frames[1], Phase::Gemm as u8);
+            }
+            writer.join().unwrap();
+        });
     }
 }

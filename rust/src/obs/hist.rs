@@ -15,9 +15,10 @@
 //! error bound is locked in by `rust/tests/obs.rs` against the exact
 //! sort-based [`crate::util::stats::percentile`].
 
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-
 use crate::util::stats::Summary;
+use crate::util::sync::{
+    fetch_max_u32, fetch_min_u32, AtomicU32, AtomicU64, Ordering,
+};
 
 /// Lower edge of bucket 0 in milliseconds (1 µs).
 pub const LO_MS: f64 = 1e-3;
@@ -62,6 +63,11 @@ impl Default for LogHistogram {
     }
 }
 
+// ORDERING: every cell in a histogram is an independent monotone
+// statistic (bucket counters, count, sum, min/max bits); snapshot
+// readers tolerate a view torn across cells (quantiles are already
+// bucket-approximate), so all accesses are Relaxed — there is no
+// cross-cell invariant to publish.
 impl LogHistogram {
     pub fn new() -> LogHistogram {
         LogHistogram {
@@ -101,8 +107,8 @@ impl LogHistogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us
             .fetch_add((v as f64 * 1000.0).round() as u64, Ordering::Relaxed);
-        self.min_bits.fetch_min(v.to_bits(), Ordering::Relaxed);
-        self.max_bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+        fetch_min_u32(&self.min_bits, v.to_bits());
+        fetch_max_u32(&self.max_bits, v.to_bits());
     }
 
     pub fn count(&self) -> u64 {
@@ -282,5 +288,35 @@ mod tests {
         assert_eq!(h.count(), 3);
         assert_eq!(h.min(), 0.0);
         assert_eq!(h.max(), 0.0);
+    }
+}
+
+/// Loom model: two concurrent observers must lose no update, and the
+/// min/max bit cells — maintained by the CAS loops in
+/// [`crate::util::sync::fetch_min_u32`]/[`fetch_max_u32`] under loom —
+/// must converge to the true extrema in every interleaving.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::LogHistogram;
+    use loom::thread;
+    use std::sync::Arc;
+
+    #[test]
+    fn concurrent_observe_loses_nothing() {
+        loom::model(|| {
+            let h = Arc::new(LogHistogram::new());
+            let a = Arc::clone(&h);
+            let b = Arc::clone(&h);
+            let t1 = thread::spawn(move || a.observe(1.0));
+            let t2 = thread::spawn(move || b.observe(100.0));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(h.count(), 2);
+            assert_eq!(h.min(), 1.0);
+            assert_eq!(h.max(), 100.0);
+            let cum = h.cumulative(1);
+            let total = cum.last().map(|&(_, c)| c).unwrap_or(0);
+            assert_eq!(total, 2);
+        });
     }
 }

@@ -45,16 +45,16 @@ pub mod trace;
 pub mod watchdog;
 
 use std::cell::RefCell;
+// ORDERING: the process-wide sampling PERIOD is a config cell, not a
+// synchronization point — readers only need *some* recent value (a
+// stale period mis-samples a handful of calls, nothing more), so every
+// access in this module is intentionally Relaxed.
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
 
-/// Lock a mutex, recovering from poisoning: observability consumers
-/// (stats endpoint, trace export) must keep working after a worker
-/// panicked mid-update — for these read-mostly aggregates a torn update
-/// is strictly better than a dead metrics endpoint.
-pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
+// Poison-recovering lock helper; lives in `util::sync` so it follows
+// the std/loom primitive switch, re-exported here because obs was its
+// historical home and every serving module already imports it from obs.
+pub use crate::util::sync::lock_recover;
 
 /// Sentinel: `RRS_OBS_SAMPLE` not parsed yet.
 const UNRESOLVED: u64 = u64::MAX;

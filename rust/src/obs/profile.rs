@@ -16,8 +16,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::OnceLock;
 use std::time::Duration;
+
+use crate::util::sync::Mutex;
 
 use crate::util::json::{obj, Json};
 
@@ -43,13 +45,74 @@ struct RingInner {
     total: u64,
 }
 
-fn ring() -> &'static Mutex<RingInner> {
-    static R: OnceLock<Mutex<RingInner>> = OnceLock::new();
-    R.get_or_init(|| {
-        Mutex::new(RingInner { buf: Vec::new(), head: 0, total: 0 })
-    })
+/// Bounded overwrite-oldest sample ring.  Factored out of the process
+/// global so the wraparound accounting is loom-checkable on an owned
+/// instance (the global stays the only one in production).
+struct SampleRing {
+    cap: usize,
+    inner: Mutex<RingInner>,
 }
 
+impl SampleRing {
+    fn new(cap: usize) -> SampleRing {
+        SampleRing {
+            cap: cap.max(1),
+            inner: Mutex::new(RingInner { buf: Vec::new(), head: 0, total: 0 }),
+        }
+    }
+
+    fn push(&self, s: Sample) {
+        let mut g = lock_recover(&self.inner);
+        if g.buf.len() < self.cap {
+            g.buf.push(s);
+        } else {
+            let h = g.head;
+            g.buf[h] = s;
+            g.head = (h + 1) % self.cap;
+        }
+        g.total += 1;
+    }
+
+    fn total(&self) -> u64 {
+        lock_recover(&self.inner).total
+    }
+
+    fn len(&self) -> usize {
+        lock_recover(&self.inner).buf.len()
+    }
+
+    fn dropped(&self) -> u64 {
+        let g = lock_recover(&self.inner);
+        g.total - g.buf.len() as u64
+    }
+
+    fn clear(&self) {
+        let mut g = lock_recover(&self.inner);
+        g.buf.clear();
+        g.head = 0;
+        g.total = 0;
+    }
+
+    /// Fold the held samples into `stack → count` collapse counts.
+    fn fold_counts(&self) -> BTreeMap<String, u64> {
+        let g = lock_recover(&self.inner);
+        let mut m = BTreeMap::new();
+        for s in &g.buf {
+            *m.entry(fold_key(s)).or_insert(0u64) += 1;
+        }
+        m
+    }
+}
+
+fn ring() -> &'static SampleRing {
+    static R: OnceLock<SampleRing> = OnceLock::new();
+    R.get_or_init(|| SampleRing::new(RING_CAPACITY))
+}
+
+// ORDERING: RATE_MHZ is a lone config cell (sampling rate in mHz) with
+// no other state published alongside it — a torn-free u64 load is all a
+// reader needs, so its accesses are Relaxed.  STARTED elects the single
+// sweep-thread spawner via SeqCst swap.
 /// Sampling rate in millihertz (atomic f64 substitute: 99 Hz = 99_000).
 static RATE_MHZ: AtomicU64 = AtomicU64::new(0);
 static STARTED: AtomicBool = AtomicBool::new(false);
@@ -114,40 +177,27 @@ fn sweep_once() {
 /// Append one sample to the ring (the sweep path; exposed so the
 /// wraparound behaviour is testable without timing dependence).
 pub fn record_sample(frames: [u8; MAX_DEPTH], depth: usize) {
-    let s = Sample { frames, depth: depth.min(MAX_DEPTH) as u8 };
-    let mut g = lock_recover(ring());
-    if g.buf.len() < RING_CAPACITY {
-        g.buf.push(s);
-    } else {
-        let h = g.head;
-        g.buf[h] = s;
-        g.head = (h + 1) % RING_CAPACITY;
-    }
-    g.total += 1;
+    ring().push(Sample { frames, depth: depth.min(MAX_DEPTH) as u8 });
 }
 
 /// Samples ever recorded (including overwritten ones).
 pub fn samples_total() -> u64 {
-    lock_recover(ring()).total
+    ring().total()
 }
 
 /// Samples currently held in the ring.
 pub fn samples_len() -> usize {
-    lock_recover(ring()).buf.len()
+    ring().len()
 }
 
 /// Samples lost to ring wraparound.
 pub fn samples_dropped() -> u64 {
-    let g = lock_recover(ring());
-    g.total - g.buf.len() as u64
+    ring().dropped()
 }
 
 /// Clear the sample ring (tests / benches).
 pub fn reset() {
-    let mut g = lock_recover(ring());
-    g.buf.clear();
-    g.head = 0;
-    g.total = 0;
+    ring().clear();
 }
 
 fn fold_key(s: &Sample) -> String {
@@ -167,14 +217,7 @@ fn fold_key(s: &Sample) -> String {
 /// (`rrs` is the synthetic root; idle threads fold to `rrs;idle`).
 /// Feed straight to `inferno-flamegraph` / `flamegraph.pl`.
 pub fn folded() -> String {
-    let counts: BTreeMap<String, u64> = {
-        let g = lock_recover(ring());
-        let mut m = BTreeMap::new();
-        for s in &g.buf {
-            *m.entry(fold_key(s)).or_insert(0u64) += 1;
-        }
-        m
-    };
+    let counts = ring().fold_counts();
     let mut out = String::new();
     for (k, n) in counts {
         out.push_str(&k);
@@ -272,5 +315,42 @@ mod tests {
         RATE_MHZ.store((99.0f64 * 1e3) as u64, Ordering::Relaxed);
         assert!((rate_hz() - 99.0).abs() < 1e-9);
         RATE_MHZ.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Loom model: concurrent sweeps pushing into a full ring must keep the
+/// `total`/`len`/`dropped` accounting coherent and never grow the
+/// buffer past capacity, in every interleaving.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::{Sample, SampleRing, MAX_DEPTH};
+    use loom::thread;
+    use std::sync::Arc;
+
+    fn sample(phase: u8) -> Sample {
+        let mut frames = [0u8; MAX_DEPTH];
+        frames[0] = phase;
+        Sample { frames, depth: 1 }
+    }
+
+    #[test]
+    fn concurrent_record_accounting_is_coherent() {
+        loom::model(|| {
+            let r = Arc::new(SampleRing::new(2));
+            let a = Arc::clone(&r);
+            let b = Arc::clone(&r);
+            let t1 = thread::spawn(move || {
+                a.push(sample(1));
+                a.push(sample(2));
+            });
+            let t2 = thread::spawn(move || b.push(sample(3)));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(r.total(), 3);
+            assert_eq!(r.len(), 2);
+            assert_eq!(r.dropped(), 1);
+            let held: u64 = r.fold_counts().values().sum();
+            assert_eq!(held, 2);
+        });
     }
 }

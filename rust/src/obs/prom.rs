@@ -20,6 +20,8 @@ use super::watchdog;
 /// Render the full exposition document for one metrics snapshot.
 pub fn render(m: &Metrics) -> String {
     let mut out = String::with_capacity(16 * 1024);
+    // ORDERING: metrics cells are independent counters/gauges; one
+    // scrape tolerates a view torn across cells, so Relaxed loads.
     let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
 
     // request lifecycle counters

@@ -12,8 +12,9 @@
 //! decode hot loop stays within the observability overhead budget
 //! (`RRS_OBS_SAMPLE`, see [`crate::obs`]).
 
-use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::sync::Mutex;
 
 use crate::util::json::{obj, Json};
 
@@ -290,5 +291,36 @@ mod tests {
         r.span(1, SpanKind::Admit, 1_000_000, 0); // 1 s span
         let e = r.events()[0];
         assert!(e.ts_us + e.dur_us <= r.now_us() + 1_000);
+    }
+}
+
+/// Loom model: concurrent pushes into a full ring must keep the
+/// `total`/`len`/`dropped` accounting coherent in every interleaving —
+/// the `dropped()` subtraction must never underflow and the buffer must
+/// never exceed capacity.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::{SpanKind, TraceRing};
+    use loom::thread;
+    use std::sync::Arc;
+
+    #[test]
+    fn concurrent_push_accounting_is_coherent() {
+        loom::model(|| {
+            let r = Arc::new(TraceRing::new(2));
+            let a = Arc::clone(&r);
+            let b = Arc::clone(&r);
+            let t1 = thread::spawn(move || {
+                a.instant(1, SpanKind::Enqueue, 0);
+                a.instant(1, SpanKind::Finish, 0);
+            });
+            let t2 = thread::spawn(move || b.instant(2, SpanKind::Enqueue, 0));
+            t1.join().unwrap();
+            t2.join().unwrap();
+            assert_eq!(r.total(), 3);
+            assert_eq!(r.len(), 2);
+            assert_eq!(r.dropped(), 1);
+            assert_eq!(r.events().len(), 2);
+        });
     }
 }

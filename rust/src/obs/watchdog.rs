@@ -243,24 +243,21 @@ impl Watchdog {
 
     /// Flip alert `key` to `active`, recording the edge.
     fn set_alert(&mut self, key: &str, active: bool, value: f64, threshold: f64) {
-        if !self.alerts.contains_key(key) {
-            if self.alerts.len() >= 4 * MAX_LAYERS {
-                return;
-            }
-            let id = self.next_trace_id;
-            self.next_trace_id += 1;
-            self.alerts.insert(
-                key.to_string(),
-                AlertState {
-                    active: false,
-                    raised_total: 0,
-                    trace_id: id,
-                    value,
-                    threshold,
-                },
-            );
+        if !self.alerts.contains_key(key) && self.alerts.len() >= 4 * MAX_LAYERS {
+            return;
         }
-        let a = self.alerts.get_mut(key).expect("alert just ensured");
+        let next_id = &mut self.next_trace_id;
+        let a = self.alerts.entry(key.to_string()).or_insert_with(|| {
+            let id = *next_id;
+            *next_id += 1;
+            AlertState {
+                active: false,
+                raised_total: 0,
+                trace_id: id,
+                value,
+                threshold,
+            }
+        });
         a.value = value;
         a.threshold = threshold;
         if active != a.active {

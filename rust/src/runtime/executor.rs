@@ -142,7 +142,7 @@ impl GraphRunner {
 pub struct PjrtEngine {
     pub artifacts: Artifacts,
     client: xla::PjRtClient,
-    runners: std::sync::Mutex<HashMap<String, std::sync::Arc<GraphRunner>>>,
+    runners: crate::util::sync::Mutex<HashMap<String, std::sync::Arc<GraphRunner>>>,
 }
 
 /// Decode-side session state held by rust (caches live in host memory and
@@ -162,7 +162,7 @@ impl PjrtEngine {
         Ok(PjrtEngine {
             artifacts,
             client,
-            runners: std::sync::Mutex::new(HashMap::new()),
+            runners: crate::util::sync::Mutex::new(HashMap::new()),
         })
     }
 
@@ -173,16 +173,14 @@ impl PjrtEngine {
     /// Get (or load+compile) a graph by name.
     pub fn runner(&self, name: &str) -> Result<std::sync::Arc<GraphRunner>> {
         {
-            let map = self.runners.lock().unwrap();
+            let map = crate::util::sync::lock_recover(&self.runners);
             if let Some(r) = map.get(name) {
                 return Ok(r.clone());
             }
         }
         let info = self.artifacts.graph(name)?.clone();
         let runner = std::sync::Arc::new(GraphRunner::load(&self.client, &info)?);
-        self.runners
-            .lock()
-            .unwrap()
+        crate::util::sync::lock_recover(&self.runners)
             .insert(name.to_string(), runner.clone());
         Ok(runner)
     }

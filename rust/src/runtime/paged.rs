@@ -25,14 +25,14 @@
 //! [`PjrtKvState`]: super::executor::PjrtKvState
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::coordinator::engine_iface::ServeEngine;
+use crate::coordinator::engine_iface::{EngineError, ServeEngine};
 use crate::kvpool::engine::{begin_paged_prefill, seal_paged_seq};
 use crate::kvpool::{BlockId, KvPool, KvPoolConfig, PagedSeq, PoolStats};
 use crate::linalg::gemm::Mat;
+use crate::util::sync::{lock_recover, Mutex};
 
 use super::executor::PjrtEngine;
 use super::residency::{LaneResidency, ResidencyStats};
@@ -142,7 +142,7 @@ impl PagedPjrtEngine {
     /// Cumulative gather/scatter/refresh counters of the resident-lane
     /// subsystem (both paths count their gathers).
     pub fn residency_stats(&self) -> ResidencyStats {
-        self.resident.lock().unwrap().stats()
+        lock_recover(&self.resident).stats()
     }
 
     /// Create an empty paged sequence (same state type as the
@@ -232,7 +232,7 @@ impl PagedPjrtEngine {
         seq: &mut PagedSeq,
         tokens: &[u32],
     ) -> Result<Option<Vec<f32>>> {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         let Some(matched) = begin_paged_prefill(&mut pool, seq, tokens) else {
             return Ok(None);
         };
@@ -240,7 +240,7 @@ impl PagedPjrtEngine {
         let mut vc = vec![0.0f32; self.dense_len()];
         self.pack_lane(&pool, &seq.table, matched, 0, &mut kc, &mut vc, false);
         {
-            let mut res = self.resident.lock().unwrap();
+            let mut res = lock_recover(&self.resident);
             res.note_gather();
         }
         let mut logits = Vec::new();
@@ -263,7 +263,7 @@ impl PagedPjrtEngine {
             vc = vc2;
             self.harvest_row(&mut pool, &mut seq.table, &kc, &vc, 0, pos);
             seq.len += 1;
-            let mut res = self.resident.lock().unwrap();
+            let mut res = lock_recover(&self.resident);
             res.note_graph_call();
             res.note_scatter(self.n_layers as u64);
         }
@@ -285,7 +285,7 @@ impl PagedPjrtEngine {
     /// state; the caller still owns every sequence and releases as
     /// usual.
     pub fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Result<Mat> {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         let mut out = Mat::zeros(batch.len(), self.vocab);
         for (seq, tok) in batch.iter_mut() {
             seq.tokens.push(*tok);
@@ -294,7 +294,7 @@ impl PagedPjrtEngine {
                 "kvpool exhausted during decode (reserve_decode must gate)"
             );
         }
-        let mut res = self.resident.lock().unwrap();
+        let mut res = lock_recover(&self.resident);
         let stepped = if self.use_residency {
             self.decode_resident(&mut pool, &mut res, batch, &mut out)
         } else {
@@ -431,36 +431,36 @@ impl PagedPjrtEngine {
     /// banks freed), and the fresh state carries a new identity, so a
     /// stale tag can never alias it.
     pub fn release(&self, seq: &mut PagedSeq) {
-        let mut pool = self.pool.lock().unwrap();
+        let mut pool = lock_recover(&self.pool);
         pool.release_seq(&mut seq.table);
-        self.resident.lock().unwrap().invalidate_seq(seq.id);
+        lock_recover(&self.resident).invalidate_seq(seq.id);
         *seq = PagedSeq::new();
     }
 
     /// Prefix-aware admission gate — same accounting as the interpreted
     /// paged backend ([`KvPool::can_fit_prompt`]).
     pub fn can_admit(&self, prompt: &[u32]) -> bool {
-        self.pool.lock().unwrap().can_fit_prompt(prompt)
+        lock_recover(&self.pool).can_fit_prompt(prompt)
     }
 
     /// Ensure `seq` can grow by one token; `false` = preempt first.
     pub fn reserve_decode(&self, seq: &mut PagedSeq) -> bool {
-        self.pool.lock().unwrap().reserve(&mut seq.table, seq.len + 1)
+        lock_recover(&self.pool).reserve(&mut seq.table, seq.len + 1)
     }
 
     /// Longest prompt prefix currently resident in the prefix cache.
     pub fn prefix_match_len(&self, prompt: &[u32]) -> usize {
-        self.pool.lock().unwrap().probe_prefix(prompt)
+        lock_recover(&self.pool).probe_prefix(prompt)
     }
 
     /// Pool occupancy / prefix-cache counters.
     pub fn stats(&self) -> PoolStats {
-        self.pool.lock().unwrap().stats()
+        lock_recover(&self.pool).stats()
     }
 
     /// KV bytes held by one sequence's blocks.
     pub fn seq_bytes(&self, seq: &PagedSeq) -> usize {
-        self.pool.lock().unwrap().table_bytes(&seq.table)
+        lock_recover(&self.pool).table_bytes(&seq.table)
     }
 }
 
@@ -479,19 +479,27 @@ impl ServeEngine for PagedPjrtEngine {
         PagedSeq::new()
     }
 
-    fn prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Vec<f32> {
-        PagedPjrtEngine::try_prefill(self, seq, tokens)
-            .expect("pjrt decode graph failed")
-            .expect("kvpool exhausted during prefill (admission must gate capacity)")
-    }
-
     fn try_prefill(&self, seq: &mut PagedSeq, tokens: &[u32]) -> Option<Vec<f32>> {
-        PagedPjrtEngine::try_prefill(self, seq, tokens)
-            .expect("pjrt decode graph failed")
+        match PagedPjrtEngine::try_prefill(self, seq, tokens) {
+            Ok(r) => r,
+            Err(e) => {
+                // a graph failure is not a capacity refusal, but the
+                // trait's `None` keeps the request queued; the inherent
+                // try_prefill already released the sequence, and the
+                // scheduler's empty-refusal counter aborts the request
+                // if the failure persists
+                eprintln!("rrs-runtime: pjrt prefill graph failed: {e:#}");
+                None
+            }
+        }
     }
 
-    fn decode(&self, batch: &mut [(&mut PagedSeq, u32)]) -> Mat {
-        PagedPjrtEngine::decode(self, batch).expect("pjrt decode graph failed")
+    fn decode(
+        &self,
+        batch: &mut [(&mut PagedSeq, u32)],
+    ) -> Result<Mat, EngineError> {
+        PagedPjrtEngine::decode(self, batch)
+            .map_err(|e| EngineError(format!("pjrt decode graph failed: {e:#}")))
     }
 
     fn seq_len(&self, seq: &PagedSeq) -> usize {

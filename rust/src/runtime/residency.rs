@@ -199,9 +199,13 @@ impl LaneResidency {
         // pass 1: occupants already holding a lane
         for (i, &(id, epoch, len)) in occupants.iter().enumerate() {
             if let Some((b, l)) = self.find_seq(id) {
-                let slot = self.banks[b].slots[l]
-                    .as_mut()
-                    .expect("find_seq returned an occupied lane");
+                // find_seq only returns occupied lanes; if the slot were
+                // somehow vacated the occupant simply falls through to
+                // pass 2 and re-gathers (correct, just slower)
+                let Some(slot) = self.banks[b].slots[l].as_mut() else {
+                    debug_assert!(false, "find_seq returned a vacant lane");
+                    continue;
+                };
                 let fresh = slot.epoch != epoch || slot.rows != len;
                 slot.epoch = epoch;
                 slot.rows = len;
@@ -237,7 +241,18 @@ impl LaneResidency {
             claimed.push((b, l));
         }
         self.reclaim_trailing_banks();
-        out.into_iter().map(|a| a.expect("every occupant placed")).collect()
+        // pass 2 places every unassigned occupant (grow_bank cannot
+        // fail), so the fallback lane is unreachable; refresh=true keeps
+        // even that impossible case correct (a full re-gather never
+        // serves stale rows, it is only slower)
+        out.into_iter()
+            .map(|a| {
+                a.unwrap_or_else(|| {
+                    debug_assert!(false, "occupant left unplaced");
+                    LaneAssignment { bank: 0, lane: 0, refresh: true }
+                })
+            })
+            .collect()
     }
 
     /// Burst memory does not outlive the burst: trailing banks left

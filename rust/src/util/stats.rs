@@ -49,7 +49,10 @@ pub fn percentile(xs: &[f32], p: f32) -> f32 {
         return 0.0;
     }
     let mut v: Vec<f32> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    // total_cmp: a total order even with NaNs present (NaNs sort to the
+    // ends) — the old partial_cmp-or-Equal comparator was not transitive
+    // on NaN inputs, which sort_by is allowed to punish.
+    v.sort_by(f32::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f32;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

@@ -1,0 +1,108 @@
+//! Concurrency primitives behind a std/loom switch.
+//!
+//! Every lock-free or lock-protected structure that has (or may grow) a
+//! `cfg(loom)` model imports its primitives from here instead of
+//! `std::sync`.  In a normal build the re-exports are zero-cost aliases
+//! of the std types; under `RUSTFLAGS="--cfg loom"` they resolve to the
+//! `loom` model-checker's instrumented doubles, so the same source is
+//! exercised under exhaustive interleaving in the
+//! `#[cfg(all(loom, test))]` models (see ARCHITECTURE.md, "Static
+//! analysis & concurrency checking").
+//!
+//! Process-global statics (samplers, registries) intentionally stay on
+//! `std::sync` even under loom: loom primitives may only live inside a
+//! `loom::model` run, and the models only ever exercise per-instance
+//! state.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Lock a mutex, recovering from poisoning: serving-path consumers
+/// (scheduler, engines, stats endpoint, trace export) must keep working
+/// after some thread panicked mid-update — for these structures a torn
+/// update is strictly better than a dead serving loop.  The rrs-audit
+/// lint (rule R2) rejects `.lock().unwrap()` on the serving path; this
+/// is the sanctioned replacement.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// `fetch_min` over an `AtomicU32`.  Loom does not model the min/max
+/// RMW intrinsics, so under `cfg(loom)` this degrades to a CAS loop —
+/// semantically identical, and still fully interleaving-checked.
+#[inline]
+pub fn fetch_min_u32(a: &AtomicU32, v: u32, order: Ordering) -> u32 {
+    #[cfg(not(loom))]
+    {
+        a.fetch_min(v, order)
+    }
+    #[cfg(loom)]
+    {
+        let mut cur = a.load(Ordering::Relaxed);
+        while v < cur {
+            match a.compare_exchange_weak(cur, v, order, Ordering::Relaxed) {
+                Ok(prev) => return prev,
+                Err(next) => cur = next,
+            }
+        }
+        cur
+    }
+}
+
+/// `fetch_max` over an `AtomicU32`; see [`fetch_min_u32`].
+#[inline]
+pub fn fetch_max_u32(a: &AtomicU32, v: u32, order: Ordering) -> u32 {
+    #[cfg(not(loom))]
+    {
+        a.fetch_max(v, order)
+    }
+    #[cfg(loom)]
+    {
+        let mut cur = a.load(Ordering::Relaxed);
+        while v > cur {
+            match a.compare_exchange_weak(cur, v, order, Ordering::Relaxed) {
+                Ok(prev) => return prev,
+                Err(next) => cur = next,
+            }
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recover_returns_inner_after_poison() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn fetch_min_max_track_extremes() {
+        let a = AtomicU32::new(100);
+        fetch_min_u32(&a, 40, Ordering::Relaxed);
+        fetch_min_u32(&a, 70, Ordering::Relaxed);
+        assert_eq!(a.load(Ordering::Relaxed), 40);
+        let b = AtomicU32::new(0);
+        fetch_max_u32(&b, 9, Ordering::Relaxed);
+        fetch_max_u32(&b, 3, Ordering::Relaxed);
+        assert_eq!(b.load(Ordering::Relaxed), 9);
+    }
+}

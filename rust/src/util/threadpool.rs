@@ -15,27 +15,42 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Split `[0, n)` into at most `threads` contiguous non-empty ranges that
+/// cover it disjointly.  Pure — the piece of the pool the loom model and
+/// the partition tests exercise without spawning OS threads.
+pub fn partition(n: usize, threads: usize) -> Vec<std::ops::Range<usize>> {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        return vec![0..n];
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        out.push(lo..hi);
+    }
+    out
+}
+
 /// Run `body(range)` over a partition of `[0, n)` across `threads` workers.
 /// `body` must be `Sync` (called concurrently on disjoint ranges).
 pub fn parallel_for<F>(n: usize, threads: usize, body: F)
 where
     F: Fn(std::ops::Range<usize>) + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
-    if threads <= 1 || n == 0 {
+    let ranges = partition(n, threads);
+    if ranges.len() <= 1 {
         body(0..n);
         return;
     }
-    let chunk = n.div_ceil(threads);
     std::thread::scope(|s| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
+        for r in ranges {
             let body = &body;
-            s.spawn(move || body(lo..hi));
+            s.spawn(move || body(r));
         }
     });
 }
@@ -117,5 +132,54 @@ mod tests {
     #[test]
     fn zero_n_ok() {
         parallel_for(0, 4, |r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn partition_covers_disjointly() {
+        for n in [0usize, 1, 7, 64, 1000, 1001] {
+            for threads in [1usize, 2, 3, 8, 2000] {
+                let ranges = partition(n, threads);
+                assert!(ranges.len() <= threads.max(1));
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next, "gap/overlap at n={n} t={threads}");
+                    assert!(r.end >= r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "partition must cover [0, {n})");
+            }
+        }
+    }
+}
+
+/// Loom smoke model: workers consuming a [`partition`] concurrently
+/// account for every index exactly once (the pool's disjoint-coverage
+/// contract, checked across interleavings with the shim atomics).
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::partition;
+    use crate::util::sync::{AtomicUsize, Ordering};
+    use loom::thread;
+    use std::sync::Arc;
+
+    #[test]
+    fn workers_cover_all_indices_once() {
+        loom::model(|| {
+            let n = 5usize;
+            let covered = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = partition(n, 2)
+                .into_iter()
+                .map(|r| {
+                    let covered = Arc::clone(&covered);
+                    thread::spawn(move || {
+                        covered.fetch_add(r.len(), Ordering::Relaxed);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(covered.load(Ordering::Relaxed), n);
+        });
     }
 }

@@ -43,7 +43,7 @@ fn shared_prompt_admitted_into_suffix_sized_gap() {
     let mut prompt_a = shared_prefix(36);
     prompt_a.extend([1, 2, 3]);
     let mut seq_a = eng.new_seq();
-    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    let _ = eng.try_prefill(&mut seq_a, &prompt_a).expect("prefill");
     let s = eng.stats();
     assert_eq!(s.blocks_active, 10);
     assert_eq!(s.blocks_free, 2);
@@ -74,7 +74,7 @@ fn shared_prompt_refused_when_suffix_does_not_fit() {
     let mut prompt_a = shared_prefix(36);
     prompt_a.extend([1, 2, 3]);
     let mut seq_a = eng.new_seq();
-    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    let _ = eng.try_prefill(&mut seq_a, &prompt_a).expect("prefill");
     assert_eq!(eng.stats().blocks_free, 1);
 
     let mut prompt_b = shared_prefix(36);
@@ -97,7 +97,7 @@ fn evictable_hits_are_not_double_counted() {
     let mut prompt_a = shared_prefix(36);
     prompt_a.extend([1, 2, 3]);
     let mut seq_a = eng.new_seq();
-    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    let _ = eng.try_prefill(&mut seq_a, &prompt_a).expect("prefill");
     eng.release(&mut seq_a);
     // 9 sealed blocks cached (evictable), 1 free
     let s = eng.stats();
@@ -114,7 +114,7 @@ fn evictable_hits_are_not_double_counted() {
     // with one more block of headroom the same prompt fits exactly
     let eng2 = engine(11, 4);
     let mut seq_c = eng2.new_seq();
-    let _ = eng2.prefill(&mut seq_c, &prompt_a);
+    let _ = eng2.try_prefill(&mut seq_c, &prompt_a).expect("prefill");
     eng2.release(&mut seq_c);
     assert!(eng2.can_admit(&prompt_b));
     let mut seq_d = eng2.new_seq();
@@ -134,7 +134,7 @@ fn lazy_tail_cow_block_is_budgeted_and_deferred() {
     let mut prompt_a = shared_prefix(6);
     prompt_a.extend([1, 2]); // 8 tokens = exactly 2 sealed blocks
     let mut seq_a = eng.new_seq();
-    let _ = eng.prefill(&mut seq_a, &prompt_a);
+    let _ = eng.try_prefill(&mut seq_a, &prompt_a).expect("prefill");
     eng.release(&mut seq_a);
     let s = eng.stats();
     assert_eq!((s.blocks_cached, s.blocks_free), (2, 1));
@@ -190,7 +190,7 @@ fn coordinator_admits_shared_prefix_fleet_concurrently() {
     let coord = Arc::new(Coordinator::start(
         PagedEngine::new(model, 20, 4),
         SchedulerConfig { max_batch: 6, queue_capacity: 16, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let mut handles = Vec::new();
     for i in 0..6u32 {
         let c = coord.clone();

@@ -39,7 +39,7 @@ fn tiny_coord() -> Arc<Coordinator> {
     Arc::new(Coordinator::start(
         RustServeEngine::new(model),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ))
+    ).expect("start coordinator"))
 }
 
 /// Quantize `x` per-token and feed it through the sampled-probe path

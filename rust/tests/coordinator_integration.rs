@@ -35,7 +35,7 @@ fn single_request_roundtrip() {
     let coord = Coordinator::start(
         tiny_engine(Method::Rrs, Scheme::A4W4KV4),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let resp = coord
         .generate(vec![10, 20, 30], 8, Sampling::Greedy, None)
         .unwrap();
@@ -50,7 +50,7 @@ fn concurrent_requests_all_complete() {
     let coord = Arc::new(Coordinator::start(
         tiny_engine(Method::Rtn, Scheme::A4W4KV4),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let mut handles = Vec::new();
     for i in 0..12u32 {
         let c = coord.clone();
@@ -88,7 +88,7 @@ fn stop_token_terminates_early() {
     let coord = Coordinator::start(
         tiny_engine(Method::Fp, Scheme::FP),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     // stop on whatever token greedy emits first: run once to find it
     let probe = coord
         .generate(vec![5, 6], 4, Sampling::Greedy, None)
@@ -110,7 +110,7 @@ fn prompt_too_long_rejected() {
     let coord = Coordinator::start(
         tiny_engine(Method::Fp, Scheme::FP),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let long: Vec<u32> = vec![1; 200];
     let err = coord.generate(long, 8, Sampling::Greedy, None).unwrap_err();
     assert!(matches!(
@@ -127,7 +127,7 @@ fn greedy_generation_is_deterministic_across_batching() {
     let coord = Arc::new(Coordinator::start(
         tiny_engine(Method::Rtn, Scheme::A4W4KV16),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let solo = coord
         .generate(vec![7, 8, 9], 6, Sampling::Greedy, None)
         .unwrap();
@@ -152,7 +152,7 @@ fn server_protocol_lines() {
     let coord = Coordinator::start(
         tiny_engine(Method::Rrs, Scheme::A4W4KV4),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let stop = AtomicBool::new(false);
     // generation
     let resp = server::handle_line(
@@ -189,7 +189,7 @@ fn paged_pool_oversubscribed_completes_with_prefix_sharing() {
     let coord = Arc::new(Coordinator::start(
         paged,
         SchedulerConfig { max_batch: 4, queue_capacity: 64, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let prompt_a: Vec<u32> = (0..24u32).map(|i| (i * 7 + 3) % 256).collect();
     let prompt_b: Vec<u32> = (0..24u32).map(|i| (i * 11 + 90) % 256).collect();
     let mut handles = Vec::new();
@@ -227,7 +227,7 @@ fn paged_pool_exhaustion_preempts_and_recovers() {
     let coord = Arc::new(Coordinator::start(
         paged,
         SchedulerConfig { max_batch: 2, queue_capacity: 16, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let mut handles = Vec::new();
     for i in 0..2u32 {
         let c = coord.clone();
@@ -255,11 +255,11 @@ fn paged_greedy_matches_flat_engine_output() {
     let flat = Coordinator::start(
         tiny_engine(Method::Rtn, Scheme::A4W4KV4),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let paged = Coordinator::start(
         PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let prompt: Vec<u32> = vec![9, 77, 140, 3, 52];
     let a = flat.generate(prompt.clone(), 10, Sampling::Greedy, None).unwrap();
     let b = paged.generate(prompt, 10, Sampling::Greedy, None).unwrap();
@@ -278,7 +278,7 @@ fn backpressure_rejects_when_saturated() {
             queue_capacity: 1,
             ..Default::default()
         },
-    ));
+    ).expect("start coordinator"));
     let mut rejected = 0;
     let mut receivers = Vec::new();
     for i in 0..16u32 {

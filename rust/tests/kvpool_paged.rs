@@ -50,7 +50,8 @@ fn paged_attention_bit_identical_to_flat_cache() {
     let (model2, ..) = tiny_model(7);
     let paged = PagedEngine::new(model2, 64, 4);
     let mut seq = paged.new_seq();
-    let mut paged_logits: Vec<Vec<f32>> = vec![paged.prefill(&mut seq, &prompt)];
+    let mut paged_logits: Vec<Vec<f32>> =
+        vec![paged.try_prefill(&mut seq, &prompt).expect("prefill")];
     let mut paged_tokens = Vec::new();
     for _ in 0..steps {
         let tok = argmax_u32(paged_logits.last().unwrap());
@@ -90,15 +91,15 @@ fn prefix_hit_prefill_matches_cold_prefill() {
     let (model_cold, ..) = tiny_model(11);
     let cold = PagedEngine::new(model_cold, 64, 4);
     let mut seq_cold = cold.new_seq();
-    let cold_logits = cold.prefill(&mut seq_cold, &prompt_b);
+    let cold_logits = cold.try_prefill(&mut seq_cold, &prompt_b).expect("prefill");
 
     // warm engine: run prompt_a first, then prompt_b hits the shared
     // prefix blocks
     let mut seq_a = paged.new_seq();
-    let _ = paged.prefill(&mut seq_a, &prompt_a);
+    let _ = paged.try_prefill(&mut seq_a, &prompt_a).expect("prefill");
     let before = paged.stats();
     let mut seq_b = paged.new_seq();
-    let warm_logits = paged.prefill(&mut seq_b, &prompt_b);
+    let warm_logits = paged.try_prefill(&mut seq_b, &prompt_b).expect("prefill");
     let after = paged.stats();
 
     assert!(
@@ -124,7 +125,7 @@ fn partial_block_tail_prefix_hits_mid_block() {
     let paged = PagedEngine::new(model, 64, 4);
     let base: Vec<u32> = (0..10u32).map(|i| (i * 7 + 2) % 256).collect();
     let mut seq_a = paged.new_seq();
-    let _ = paged.prefill(&mut seq_a, &base);
+    let _ = paged.try_prefill(&mut seq_a, &base).expect("prefill");
     paged.release(&mut seq_a);
 
     // shares 6 tokens: block 0 fully + 2 rows into block 1
@@ -136,11 +137,11 @@ fn partial_block_tail_prefix_hits_mid_block() {
     let (model_cold, ..) = tiny_model(5);
     let cold = PagedEngine::new(model_cold, 64, 4);
     let mut seq_cold = cold.new_seq();
-    let cold_logits = cold.prefill(&mut seq_cold, &prompt_b);
+    let cold_logits = cold.try_prefill(&mut seq_cold, &prompt_b).expect("prefill");
 
     let before = paged.stats();
     let mut seq_b = paged.new_seq();
-    let warm_logits = paged.prefill(&mut seq_b, &prompt_b);
+    let warm_logits = paged.try_prefill(&mut seq_b, &prompt_b).expect("prefill");
     let after = paged.stats();
     assert_eq!(after.prefix_hit_tokens - before.prefix_hit_tokens, 6);
     assert_eq!(after.prefix_partial_hits, 1);
@@ -161,7 +162,7 @@ fn paged_engine_reports_capacity_and_releases() {
     let prompt: Vec<u32> = (0..20).collect();
     assert!(paged.can_admit(&prompt));
     let mut seq = paged.new_seq();
-    let _ = paged.prefill(&mut seq, &prompt);
+    let _ = paged.try_prefill(&mut seq, &prompt).expect("prefill");
     let s = paged.stats();
     assert_eq!(s.blocks_active, 3);
     assert!(paged.seq_bytes(&seq) > 0);

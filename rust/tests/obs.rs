@@ -32,6 +32,7 @@ fn tiny_coord(method: Method) -> Coordinator {
     };
     let model = QuantModel::prepare(&w, &cfg, &ecfg, None, None).unwrap();
     Coordinator::start(RustServeEngine::new(model), SchedulerConfig::default())
+        .expect("start coordinator")
 }
 
 #[test]

@@ -139,7 +139,7 @@ fn coordinator_serves_pjrt_paged_backend() {
     let coord = Arc::new(Coordinator::start(
         engine,
         SchedulerConfig { max_batch: 4, queue_capacity: 16, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let shared: Vec<u32> = (0..12u32).map(|i| 40 + (i * 5) % 80).collect();
     let mut handles = Vec::new();
     for i in 0..6u32 {

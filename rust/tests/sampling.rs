@@ -287,11 +287,11 @@ fn seeded_stream_identical_flat_vs_paged() {
     let flat = Coordinator::start(
         RustServeEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4)),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let paged = Coordinator::start(
         PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let prompt: Vec<u32> = vec![9, 77, 140, 3, 52];
     let a = flat.generate_opts(prompt.clone(), seeded_opts(1234, 12)).unwrap();
     let a2 = flat.generate_opts(prompt.clone(), seeded_opts(1234, 12)).unwrap();
@@ -310,7 +310,7 @@ fn seeded_stream_identical_solo_vs_batched() {
     let coord = Arc::new(Coordinator::start(
         RustServeEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV16)),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let solo = coord
         .generate_opts(vec![7, 8, 9], seeded_opts(777, 10))
         .unwrap();
@@ -343,7 +343,7 @@ fn seeded_stream_survives_preemption() {
     let reference = Coordinator::start(
         PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 32, 8),
         SchedulerConfig::default(),
-    );
+    ).expect("start coordinator");
     let prompts: Vec<Vec<u32>> = (0..2u32)
         .map(|i| (0..16u32).map(|j| (j * 17 + i * 101 + 1) % 256).collect())
         .collect();
@@ -362,7 +362,7 @@ fn seeded_stream_survives_preemption() {
     let coord = Arc::new(Coordinator::start(
         PagedEngine::new(tiny_model(Method::Rtn, Scheme::A4W4KV4), 7, 8),
         SchedulerConfig { max_batch: 2, queue_capacity: 16, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let mut handles = Vec::new();
     for (i, p) in prompts.iter().enumerate() {
         let c = coord.clone();
@@ -409,7 +409,7 @@ fn pjrt_paged_seeded_stream_replays() {
         let coord = Coordinator::start(
             engine,
             SchedulerConfig { max_batch: 2, ..Default::default() },
-        );
+        ).expect("start coordinator");
         let resp = coord
             .generate_opts(prompt.clone(), seeded_opts(4242, 8))
             .unwrap();

@@ -40,7 +40,7 @@ fn flat_server() -> (u16, JoinHandle<()>, Arc<Coordinator>) {
     let coord = Arc::new(Coordinator::start(
         RustServeEngine::new(tiny_model()),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let (port, handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
     (port, handle, coord)
 }
@@ -49,7 +49,7 @@ fn paged_server(blocks: usize) -> (u16, JoinHandle<()>, Arc<Coordinator>) {
     let coord = Arc::new(Coordinator::start(
         PagedEngine::new(tiny_model(), blocks, 8),
         SchedulerConfig { max_batch: 4, ..Default::default() },
-    ));
+    ).expect("start coordinator"));
     let (port, handle) = server::spawn(coord.clone(), "127.0.0.1:0").unwrap();
     (port, handle, coord)
 }

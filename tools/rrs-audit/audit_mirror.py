@@ -1,0 +1,384 @@
+#!/usr/bin/env python3
+"""Dependency-free mirror of the `rrs-audit` lint pass.
+
+CI runs the Rust binary (`tools/rrs-audit`); this mirror implements the
+*same rules over the same lexer model* so environments without a Rust
+toolchain (hermetic containers, pre-commit hooks on minimal images) can
+still run the gate.  Rule numbers, messages, and exit codes match the
+Rust implementation — `tools/rrs-audit/tests/audit_fixtures.rs` pins the
+two against the shared fixture corpus.
+
+Rules (error level, exit 1 on any hit):
+  R1 safety-comment      every `unsafe` fn/impl/block carries a
+                         `// SAFETY:` justification (same line, or in
+                         the comment/attribute block directly above).
+  R2 panic-free-serving  no `.unwrap()` / `.expect(` / `panic!` /
+                         `unreachable!` / `todo!` / `unimplemented!` in
+                         the serving-path allowlist (coordinator/,
+                         kvpool/, runtime/, obs/), outside test code.
+  R3 ordering-note       every `Ordering::Relaxed` is either a pure
+                         counter RMW (fetch_add/sub/max/min) or covered
+                         by an `// ORDERING:` note in the enclosing
+                         brace scope.
+  R4 lock-order          the Mutex acquisition graph (guard held while
+                         taking another lock) is acyclic.
+
+Warnings (reported, non-fatal):
+  W1 untrusted-indexing  `x[...]` indexing inside protocol-boundary
+                         functions (*parse* / *from_json*) in the
+                         allowlist without a `// BOUNDS:` note.
+
+Usage: audit_mirror.py [ROOT] [--json]
+ROOT defaults to the repo root found by walking up from this file.
+"""
+
+import json
+import os
+import re
+import sys
+
+ALLOWLIST = ("coordinator/", "kvpool/", "runtime/", "obs/")
+
+PANIC_PATTERNS = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+]
+
+COUNTER_RMW = ("fetch_add", "fetch_sub", "fetch_max", "fetch_min")
+
+
+class Line:
+    __slots__ = ("code", "comment", "open_delta")
+
+    def __init__(self):
+        self.code = ""
+        self.comment = ""
+        self.open_delta = 0
+
+
+def lex(text):
+    """Split each line into code and comment text, stripping string and
+    char literals (replaced by `\"\"`) so tokens inside literals never
+    match rules.  Tracks block comments and raw strings across lines."""
+    lines = []
+    state = "code"  # code | block_comment | string | raw_string
+    raw_hashes = 0
+    for raw in text.split("\n"):
+        ln = Line()
+        i, n = 0, len(raw)
+        while i < n:
+            c = raw[i]
+            nxt = raw[i + 1] if i + 1 < n else ""
+            if state == "block_comment":
+                j = raw.find("*/", i)
+                if j < 0:
+                    ln.comment += raw[i:]
+                    i = n
+                else:
+                    ln.comment += raw[i:j]
+                    i = j + 2
+                    state = "code"
+                continue
+            if state == "string":
+                if c == "\\":
+                    i += 2
+                    continue
+                if c == '"':
+                    state = "code"
+                    ln.code += '""'
+                i += 1
+                continue
+            if state == "raw_string":
+                if c == '"' and raw[i + 1 : i + 1 + raw_hashes] == "#" * raw_hashes:
+                    state = "code"
+                    ln.code += '""'
+                    i += 1 + raw_hashes
+                else:
+                    i += 1
+                continue
+            # state == code
+            if c == "/" and nxt == "/":
+                ln.comment += raw[i + 2 :]
+                i = n
+                continue
+            if c == "/" and nxt == "*":
+                state = "block_comment"
+                i += 2
+                continue
+            if c == "r" and (nxt == '"' or nxt == "#"):
+                j = i + 1
+                h = 0
+                while j < n and raw[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and raw[j] == '"':
+                    state = "raw_string"
+                    raw_hashes = h
+                    i = j + 1
+                    continue
+            if c == "b" and nxt == '"':
+                state = "string"
+                i += 2
+                continue
+            if c == '"':
+                state = "string"
+                i += 1
+                continue
+            if c == "'":
+                # char literal vs lifetime: 'a' is a char, 'a (no closing
+                # quote right after one item) is a lifetime
+                if nxt == "\\":
+                    j = raw.find("'", i + 2)
+                    i = (j + 1) if j >= 0 else n
+                    ln.code += '""'
+                    continue
+                if i + 2 < n and raw[i + 2] == "'":
+                    i += 3
+                    ln.code += '""'
+                    continue
+                ln.code += c
+                i += 1
+                continue
+            ln.code += c
+            if c == "{":
+                ln.open_delta += 1
+            elif c == "}":
+                ln.open_delta -= 1
+            i += 1
+        if state == "string":
+            state = "code"  # unterminated; tolerate
+        lines.append(ln)
+    return lines
+
+
+def test_regions(lines):
+    """Line-index set covered by #[cfg(test)] / #[cfg(loom)]-style items
+    (the attribute plus the brace range of the item that follows)."""
+    covered = set()
+    depth = 0
+    depths = []
+    for ln in lines:
+        depths.append(depth)
+        depth += ln.open_delta
+    i = 0
+    cfg = re.compile(r"#\s*\[\s*cfg\s*\(\s*(all\s*\(\s*)?(test|loom|any\s*\(\s*(test|loom))")
+    while i < len(lines):
+        if cfg.search(lines[i].code):
+            covered.add(i)
+            d0 = depths[i]
+            j = i
+            opened = False
+            while j < len(lines):
+                covered.add(j)
+                if lines[j].open_delta > 0:
+                    opened = True
+                if opened and depths[j] + lines[j].open_delta <= d0:
+                    break
+                if not opened and lines[j].code.strip().endswith(";"):
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return covered
+
+
+def check_file(relpath, text, graph):
+    lines = lex(text)
+    tests = test_regions(lines)
+    in_allow = any(s in relpath for s in ALLOWLIST)
+    errors, warnings = [], []
+
+    depths = []
+    d = 0
+    for ln in lines:
+        depths.append(d)
+        d += ln.open_delta
+
+    # R1: unsafe sites need SAFETY:
+    unsafe_re = re.compile(r"\bunsafe\b\s*(fn|impl|trait|\{|extern)")
+    attr_or_pass = re.compile(
+        r"^\s*(#\[|#!\[|$|\}?\s*$|unsafe impl|pub unsafe|pub\(crate\) unsafe)"
+    )
+    for i, ln in enumerate(lines):
+        if i in tests or not unsafe_re.search(ln.code):
+            continue
+        ok = "SAFETY:" in ln.comment
+        j = i - 1
+        hops = 0
+        while not ok and j >= 0 and hops < 10:
+            cj = lines[j]
+            if "SAFETY:" in cj.comment:
+                ok = True
+                break
+            stripped = cj.code.strip()
+            # allowed pass-through lines: blank/comment-only, attributes,
+            # sibling unsafe items (one note may cover a Send+Sync pair),
+            # multi-line fn signatures
+            if stripped and not attr_or_pass.match(cj.code) and not unsafe_re.search(cj.code):
+                break
+            j -= 1
+            hops += 1
+        if not ok:
+            errors.append((relpath, i + 1, "R1", "unsafe site without a `// SAFETY:` justification"))
+
+    # R2: no panicking APIs in the serving allowlist
+    if in_allow:
+        for i, ln in enumerate(lines):
+            if i in tests:
+                continue
+            for pat in PANIC_PATTERNS:
+                for m in re.finditer(re.escape(pat), ln.code):
+                    if pat == ".expect(" and ln.code[m.start():m.start() + 12] == ".expect_err(":
+                        continue
+                    errors.append(
+                        (relpath, i + 1, "R2", f"panicking `{pat.strip('.')}` on the serving path")
+                    )
+
+    # R3: Ordering::Relaxed requires counter RMW or an ORDERING: note.
+    # A `// ORDERING:` comment covers the remainder of its brace scope.
+    note_stack = []  # depths at which a note is active
+    for i, ln in enumerate(lines):
+        note_stack = [nd for nd in note_stack if nd <= depths[i]]
+        if "ORDERING:" in ln.comment:
+            note_stack.append(depths[i])
+        if i in tests or "Ordering::Relaxed" not in ln.code:
+            continue
+        if any(k in ln.code for k in COUNTER_RMW):
+            continue
+        if "ORDERING:" in ln.comment or note_stack:
+            continue
+        errors.append(
+            (relpath, i + 1, "R3",
+             "`Ordering::Relaxed` load/store without an `// ORDERING:` note "
+             "(or use a counter RMW)")
+        )
+
+    # R4 extraction: lock acquisitions with a guard still held
+    lock_re = re.compile(
+        r"(?:lock_recover\s*\(\s*&?(?P<a>[A-Za-z_][\w\.]*(?:\(\))?)\s*\)"
+        r"|(?P<b>[A-Za-z_][\w\.]*?)\.lock\s*\(\))"
+    )
+    stem = os.path.basename(relpath).rsplit(".", 1)[0]
+    held = []  # (depth, lockname, is_stmt_guard)
+    for i, ln in enumerate(lines):
+        if i in tests:
+            continue
+        held = [h for h in held if h[0] <= depths[i]]
+        for m in lock_re.finditer(ln.code):
+            name = m.group("a") or m.group("b")
+            if name.endswith(".lock"):
+                name = name[: -len(".lock")]
+            canon = f"{stem}.{name}"
+            code = ln.code
+            stmt_guard = bool(re.search(r"\blet\s+(mut\s+)?\w+\s*=", code))
+            for (_, src, sg) in held:
+                if sg and src != canon:
+                    graph.setdefault(src, set()).add((canon, relpath, i + 1))
+            if stmt_guard:
+                held.append((depths[i], canon, True))
+            # temporaries (`x.lock()...` in one expression) drop at the
+            # end of the statement — they never hold across another lock
+        # end-of-statement: temporaries die; statement guards persist to
+        # end of scope (approximation: `drop(g)` also releases)
+        if "drop(" in ln.code:
+            dropped = re.findall(r"drop\s*\(\s*(\w+)\s*\)", ln.code)
+            if dropped:
+                held = [h for h in held if not h[2]] or []
+    # W1: indexing in protocol-boundary fns
+    if in_allow:
+        fn_re = re.compile(r"\bfn\s+(\w*(?:parse|from_json)\w*)")
+        idx_re = re.compile(r"\b[a-z_][\w\.]*\[")
+        cur_fn_depth = None
+        for i, ln in enumerate(lines):
+            if i in tests:
+                continue
+            if cur_fn_depth is not None and depths[i] <= cur_fn_depth and i > 0 and lines[i].code.strip().startswith("}"):
+                cur_fn_depth = None
+            m = fn_re.search(ln.code)
+            if m:
+                cur_fn_depth = depths[i]
+                continue
+            if cur_fn_depth is not None and idx_re.search(ln.code):
+                if "BOUNDS:" not in ln.comment and (i == 0 or "BOUNDS:" not in lines[i - 1].comment):
+                    warnings.append(
+                        (relpath, i + 1, "W1",
+                         "indexing in a protocol-boundary fn without a `// BOUNDS:` note")
+                    )
+    return errors, warnings
+
+
+def find_cycles(graph):
+    cycles = []
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {k: WHITE for k in graph}
+    stack = []
+
+    def dfs(u):
+        color[u] = GRAY
+        stack.append(u)
+        for (v, f, l) in sorted(graph.get(u, ())):
+            if color.get(v, WHITE) == GRAY:
+                k = stack.index(v)
+                cycles.append(stack[k:] + [v])
+            elif color.get(v, WHITE) == WHITE:
+                color.setdefault(v, WHITE)
+                dfs(v)
+        stack.pop()
+        color[u] = BLACK
+
+    for k in sorted(graph):
+        if color[k] == WHITE:
+            dfs(k)
+    return cycles
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    as_json = "--json" in argv
+    root = args[0] if args else None
+    if root is None:
+        root = os.path.dirname(os.path.abspath(__file__))
+        while not os.path.exists(os.path.join(root, "ROADMAP.md")):
+            parent = os.path.dirname(root)
+            if parent == root:
+                print("audit: cannot locate repo root (no ROADMAP.md)", file=sys.stderr)
+                return 2
+            root = parent
+    src = os.path.join(root, "rust", "src")
+    if not os.path.isdir(src):
+        src = root  # allow pointing straight at a source dir (fixtures)
+    errors, warnings = [], []
+    graph = {}
+    for dirpath, _, files in sorted(os.walk(src)):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            p = os.path.join(dirpath, f)
+            rel = os.path.relpath(p, root)
+            with open(p, encoding="utf-8") as fh:
+                e, w = check_file(rel.replace(os.sep, "/"), fh.read(), graph)
+            errors.extend(e)
+            warnings.extend(w)
+    for cyc in find_cycles(graph):
+        errors.append(("<global>", 0, "R4", "lock acquisition cycle: " + " -> ".join(cyc)))
+    if as_json:
+        print(json.dumps({
+            "errors": [{"file": f, "line": l, "rule": r, "msg": m} for f, l, r, m in errors],
+            "warnings": [{"file": f, "line": l, "rule": r, "msg": m} for f, l, r, m in warnings],
+        }, indent=2))
+    else:
+        for f, l, r, m in errors:
+            print(f"error[{r}] {f}:{l}: {m}")
+        for f, l, r, m in warnings:
+            print(f"warn[{r}] {f}:{l}: {m}")
+        print(f"rrs-audit(mirror): {len(errors)} error(s), {len(warnings)} warning(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,319 @@
+//! Line lexer: splits Rust source into per-line (code, comment) halves
+//! with string/char literals stripped (replaced by `""`) so tokens inside
+//! literals never match lint rules.  Tracks block comments and raw
+//! strings across lines, and per-line brace deltas for scope depth.
+//!
+//! This is the same lexical model as `audit_mirror.py::lex` — the two
+//! implementations are pinned against shared fixtures.
+
+/// One source line after lexing.
+pub struct Line {
+    /// Code text with literals replaced by `""` and comments removed.
+    pub code: String,
+    /// Concatenated comment text (line + block comment bodies).
+    pub comment: String,
+    /// Net `{`/`}` delta contributed by code on this line.
+    pub open_delta: i32,
+}
+
+pub(crate) fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+pub(crate) fn is_word_or_dot(b: u8) -> bool {
+    is_word(b) || b == b'.'
+}
+
+pub(crate) fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+pub(crate) fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Byte-substring search starting at `from`.
+pub(crate) fn find_from(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    if from > hay.len() || needle.is_empty() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+enum State {
+    Code,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+pub fn lex(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    let mut raw_hashes = 0usize;
+    for raw_line in text.split('\n') {
+        let raw = raw_line.as_bytes();
+        let n = raw.len();
+        let mut code: Vec<u8> = Vec::new();
+        let mut comment: Vec<u8> = Vec::new();
+        let mut open_delta = 0i32;
+        let mut i = 0usize;
+        while i < n {
+            let c = raw[i];
+            let nxt = if i + 1 < n { raw[i + 1] } else { 0 };
+            match state {
+                State::BlockComment => {
+                    match find_from(raw, i, b"*/") {
+                        None => {
+                            comment.extend_from_slice(&raw[i..]);
+                            i = n;
+                        }
+                        Some(j) => {
+                            comment.extend_from_slice(&raw[i..j]);
+                            i = j + 2;
+                            state = State::Code;
+                        }
+                    }
+                    continue;
+                }
+                State::Str => {
+                    if c == b'\\' {
+                        i += 2;
+                        continue;
+                    }
+                    if c == b'"' {
+                        state = State::Code;
+                        code.extend_from_slice(b"\"\"");
+                    }
+                    i += 1;
+                    continue;
+                }
+                State::RawStr => {
+                    let close = i + 1 + raw_hashes <= n
+                        && raw[i + 1..i + 1 + raw_hashes].iter().all(|&h| h == b'#');
+                    if c == b'"' && close {
+                        state = State::Code;
+                        code.extend_from_slice(b"\"\"");
+                        i += 1 + raw_hashes;
+                    } else {
+                        i += 1;
+                    }
+                    continue;
+                }
+                State::Code => {}
+            }
+            // state == Code
+            if c == b'/' && nxt == b'/' {
+                comment.extend_from_slice(&raw[i + 2..]);
+                i = n;
+                continue;
+            }
+            if c == b'/' && nxt == b'*' {
+                state = State::BlockComment;
+                i += 2;
+                continue;
+            }
+            if c == b'r' && (nxt == b'"' || nxt == b'#') {
+                let mut j = i + 1;
+                let mut h = 0usize;
+                while j < n && raw[j] == b'#' {
+                    h += 1;
+                    j += 1;
+                }
+                if j < n && raw[j] == b'"' {
+                    state = State::RawStr;
+                    raw_hashes = h;
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if c == b'b' && nxt == b'"' {
+                state = State::Str;
+                i += 2;
+                continue;
+            }
+            if c == b'"' {
+                state = State::Str;
+                i += 1;
+                continue;
+            }
+            if c == b'\'' {
+                // char literal vs lifetime: 'a' is a char, 'a (no closing
+                // quote right after one item) is a lifetime
+                if nxt == b'\\' {
+                    i = match find_from(raw, i + 2, b"'") {
+                        Some(j) => j + 1,
+                        None => n,
+                    };
+                    code.extend_from_slice(b"\"\"");
+                    continue;
+                }
+                if i + 2 < n && raw[i + 2] == b'\'' {
+                    i += 3;
+                    code.extend_from_slice(b"\"\"");
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            code.push(c);
+            if c == b'{' {
+                open_delta += 1;
+            } else if c == b'}' {
+                open_delta -= 1;
+            }
+            i += 1;
+        }
+        if matches!(state, State::Str) {
+            state = State::Code; // unterminated; tolerate
+        }
+        out.push(Line {
+            code: String::from_utf8_lossy(&code).into_owned(),
+            comment: String::from_utf8_lossy(&comment).into_owned(),
+            open_delta,
+        });
+    }
+    out
+}
+
+/// Match one literal token at `i` after optional whitespace.
+fn tok(b: &[u8], i: usize, t: &[u8]) -> Option<usize> {
+    let i = skip_ws(b, i);
+    if b[i..].starts_with(t) {
+        Some(i + t.len())
+    } else {
+        None
+    }
+}
+
+/// True when the code text carries a `#[cfg(test)]`/`#[cfg(loom)]`-style
+/// attribute (including `all(...)` / `any(...)` combinations).
+pub(crate) fn cfg_test_attr(code: &str) -> bool {
+    let b = code.as_bytes();
+    for start in 0..b.len() {
+        if b[start] != b'#' {
+            continue;
+        }
+        let Some(j) = tok(b, start + 1, b"[") else { continue };
+        let Some(j) = tok(b, j, b"cfg") else { continue };
+        let Some(j) = tok(b, j, b"(") else { continue };
+        let j = tok(b, j, b"all")
+            .and_then(|k| tok(b, k, b"("))
+            .unwrap_or(j);
+        if tok(b, j, b"test").is_some() || tok(b, j, b"loom").is_some() {
+            return true;
+        }
+        if let Some(k) = tok(b, j, b"any").and_then(|k| tok(b, k, b"(")) {
+            if tok(b, k, b"test").is_some() || tok(b, k, b"loom").is_some() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Line-index set covered by `#[cfg(test)]` / `#[cfg(loom)]`-style items
+/// (the attribute plus the brace range of the item that follows).
+pub fn test_regions(lines: &[Line]) -> std::collections::HashSet<usize> {
+    let mut covered = std::collections::HashSet::new();
+    let mut depths = Vec::with_capacity(lines.len());
+    let mut depth = 0i32;
+    for ln in lines {
+        depths.push(depth);
+        depth += ln.open_delta;
+    }
+    let mut i = 0usize;
+    while i < lines.len() {
+        if cfg_test_attr(&lines[i].code) {
+            covered.insert(i);
+            let d0 = depths[i];
+            let mut j = i;
+            let mut opened = false;
+            while j < lines.len() {
+                covered.insert(j);
+                if lines[j].open_delta > 0 {
+                    opened = true;
+                }
+                if opened && depths[j] + lines[j].open_delta <= d0 {
+                    break;
+                }
+                if !opened && lines[j].code.trim().ends_with(';') {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    covered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_stripped_from_code() {
+        let lines = lex("let s = \"unsafe { panic!() }\";");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(lines[0].code.contains("\"\""));
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings_are_stripped() {
+        let lines = lex("let a = r#\"panic!(\"x\")\"#; let b = b\".unwrap()\";");
+        assert!(!lines[0].code.contains("panic!"));
+        assert!(!lines[0].code.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let lines = lex("fn f<'a>(x: &'a u32) -> char { 'x' }");
+        assert!(lines[0].code.contains("'a"));
+        assert!(!lines[0].code.contains("'x'"));
+    }
+
+    #[test]
+    fn line_and_block_comments_split_out() {
+        let lines = lex("let x = 1; // SAFETY: tail\n/* ORDERING:\nspans */ let y = 2;");
+        assert!(lines[0].comment.contains("SAFETY:"));
+        assert!(!lines[0].code.contains("SAFETY"));
+        assert!(lines[1].comment.contains("ORDERING:"));
+        assert!(lines[2].code.contains("let y"));
+    }
+
+    #[test]
+    fn open_delta_counts_code_braces_only() {
+        let lines = lex("fn f() { // {{{\n    let s = \"}}\";\n}");
+        assert_eq!(lines[0].open_delta, 1);
+        assert_eq!(lines[1].open_delta, 0);
+        assert_eq!(lines[2].open_delta, -1);
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_and_loom_items() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n\
+                   #[cfg(all(loom, test))]\nmod loom_tests {\n    fn m() {}\n}\nfn live2() {}";
+        let lines = lex(src);
+        let covered = test_regions(&lines);
+        assert!(!covered.contains(&0));
+        for i in 1..=4 {
+            assert!(covered.contains(&i), "line {i} should be covered");
+        }
+        for i in 5..=8 {
+            assert!(covered.contains(&i), "line {i} should be covered");
+        }
+        assert!(!covered.contains(&9));
+    }
+}

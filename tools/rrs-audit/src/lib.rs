@@ -1,0 +1,157 @@
+//! `rrs-audit` — workspace lint pass for the serving crate's unsafe and
+//! lock-free core.
+//!
+//! CI runs this binary as a required gate; `audit_mirror.py` (same
+//! directory) implements the same rules over the same lexer model for
+//! environments without a Rust toolchain.  The two are pinned against
+//! the shared fixture corpus by `tests/audit_fixtures.rs` — rule
+//! numbers, messages, and exit codes must stay identical.
+//!
+//! Usage: `rrs-audit [ROOT] [--json]`.  ROOT defaults to the repo root
+//! found by walking up from the current directory to `ROADMAP.md`; it
+//! scans `ROOT/rust/src`, or ROOT itself when that directory is absent
+//! (fixture mode).  Exit 1 on any error-level finding, 2 when the root
+//! cannot be located.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use rules::{check_file, find_cycles, Finding, LockGraph, ALLOWLIST};
+
+/// Depth-first directory collection; the caller sorts the flat list by
+/// path string to match Python's `sorted(os.walk(...))` scan order.
+fn collect_dirs(d: &Path, out: &mut Vec<PathBuf>) {
+    out.push(d.to_path_buf());
+    let Ok(rd) = fs::read_dir(d) else { return };
+    let mut subs: Vec<PathBuf> = rd
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subs.sort();
+    for s in subs {
+        collect_dirs(&s, out);
+    }
+}
+
+/// Every `.rs` file under `src`, in deterministic scan order.
+pub fn walk_rs_files(src: &Path) -> Vec<PathBuf> {
+    let mut dirs = Vec::new();
+    collect_dirs(src, &mut dirs);
+    dirs.sort_by(|a, b| a.to_string_lossy().cmp(&b.to_string_lossy()));
+    let mut files = Vec::new();
+    for d in dirs {
+        let Ok(rd) = fs::read_dir(&d) else { continue };
+        let mut names: Vec<String> = rd
+            .flatten()
+            .filter(|e| e.path().is_file())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".rs"))
+            .collect();
+        names.sort();
+        for nm in names {
+            files.push(d.join(nm));
+        }
+    }
+    files
+}
+
+/// Run the full audit rooted at `root`: per-file rules plus the
+/// whole-repo lock-order cycle check.  Returns (errors, warnings).
+pub fn run(root: &Path) -> (Vec<Finding>, Vec<Finding>) {
+    let candidate = root.join("rust").join("src");
+    let src = if candidate.is_dir() {
+        candidate
+    } else {
+        // allow pointing straight at a source dir (fixtures)
+        root.to_path_buf()
+    };
+    let mut graph = LockGraph::new();
+    let mut errors: Vec<Finding> = Vec::new();
+    let mut warnings: Vec<Finding> = Vec::new();
+    for p in walk_rs_files(&src) {
+        let rel = p
+            .strip_prefix(root)
+            .map(|r| r.to_string_lossy().replace('\\', "/"))
+            .unwrap_or_else(|_| p.to_string_lossy().replace('\\', "/"));
+        let Ok(text) = fs::read_to_string(&p) else { continue };
+        let (e, w) = check_file(&rel, &text, &mut graph);
+        errors.extend(e);
+        warnings.extend(w);
+    }
+    for cyc in find_cycles(&graph) {
+        errors.push(Finding {
+            file: "<global>".to_string(),
+            line: 0,
+            rule: "R4",
+            msg: format!("lock acquisition cycle: {}", cyc.join(" -> ")),
+        });
+    }
+    (errors, warnings)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `--json` report: same keys as the mirror's JSON mode.
+pub fn to_json(errors: &[Finding], warnings: &[Finding]) -> String {
+    fn arr(items: &[Finding]) -> String {
+        let rows: Vec<String> = items
+            .iter()
+            .map(|f| {
+                format!(
+                    "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"msg\": \"{}\"}}",
+                    json_escape(&f.file),
+                    f.line,
+                    f.rule,
+                    json_escape(&f.msg)
+                )
+            })
+            .collect();
+        if rows.is_empty() {
+            "[]".to_string()
+        } else {
+            format!("[\n{}\n  ]", rows.join(",\n"))
+        }
+    }
+    format!(
+        "{{\n  \"errors\": {},\n  \"warnings\": {}\n}}",
+        arr(errors),
+        arr(warnings)
+    )
+}
+
+/// Human-readable report lines (errors, then warnings, then the summary
+/// line).  The binary prints these verbatim; fixtures compare them
+/// against the mirror's output.
+pub fn render_text(errors: &[Finding], warnings: &[Finding]) -> Vec<String> {
+    let mut out = Vec::with_capacity(errors.len() + warnings.len() + 1);
+    for f in errors {
+        out.push(format!("error[{}] {}:{}: {}", f.rule, f.file, f.line, f.msg));
+    }
+    for f in warnings {
+        out.push(format!("warn[{}] {}:{}: {}", f.rule, f.file, f.line, f.msg));
+    }
+    out.push(format!(
+        "rrs-audit: {} error(s), {} warning(s)",
+        errors.len(),
+        warnings.len()
+    ));
+    out
+}

@@ -1,0 +1,35 @@
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let as_json = argv.iter().any(|a| a == "--json");
+    let root = match argv.iter().find(|a| !a.starts_with("--")) {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                if d.join("ROADMAP.md").exists() {
+                    break d;
+                }
+                if !d.pop() {
+                    eprintln!("audit: cannot locate repo root (no ROADMAP.md)");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+    let (errors, warnings) = rrs_audit::run(&root);
+    if as_json {
+        println!("{}", rrs_audit::to_json(&errors, &warnings));
+    } else {
+        for line in rrs_audit::render_text(&errors, &warnings) {
+            println!("{line}");
+        }
+    }
+    if errors.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,620 @@
+//! Lint rules over the lexed line model.  Rule numbers, messages, and
+//! semantics are pinned 1:1 against `audit_mirror.py` by the shared
+//! fixture corpus (`tests/audit_fixtures.rs`).
+//!
+//!   R1 safety-comment      every `unsafe` fn/impl/block carries a
+//!                          `// SAFETY:` justification.
+//!   R2 panic-free-serving  no panicking APIs in the serving allowlist.
+//!   R3 ordering-note       every `Ordering::Relaxed` is a counter RMW
+//!                          or covered by an `// ORDERING:` note.
+//!   R4 lock-order          the Mutex acquisition graph is acyclic.
+//!   W1 untrusted-indexing  indexing in protocol-boundary fns without a
+//!                          `// BOUNDS:` note (warning only).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{
+    find_from, is_ident_start, is_word, is_word_or_dot, lex, skip_ws, test_regions,
+};
+
+/// Serving-path allowlist: R2/W1 apply to files whose repo-relative path
+/// contains one of these segments.
+pub const ALLOWLIST: [&str; 4] = ["coordinator/", "kvpool/", "runtime/", "obs/"];
+
+const PANIC_PATTERNS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+const COUNTER_RMW: [&str; 4] = ["fetch_add", "fetch_sub", "fetch_max", "fetch_min"];
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number (0 for whole-repo findings like lock cycles).
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Lock acquisition graph: `src lock -> {(dst lock, file, line)}`.
+/// BTree containers give the same sorted iteration the mirror gets from
+/// Python's `sorted()`, so cycle reports are byte-identical.
+pub type LockGraph = BTreeMap<String, BTreeSet<(String, String, usize)>>;
+
+/// `\bunsafe\b\s*(fn|impl|trait|\{|extern)` — an unsafe site needing R1.
+pub(crate) fn unsafe_site(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = find_from(b, i, b"unsafe") {
+        let before_ok = p == 0 || !is_word(b[p - 1]);
+        let after = p + 6;
+        let after_ok = after >= b.len() || !is_word(b[after]);
+        if before_ok && after_ok {
+            let k = skip_ws(b, after);
+            if k < b.len()
+                && (b[k] == b'{'
+                    || b[k..].starts_with(b"fn")
+                    || b[k..].starts_with(b"impl")
+                    || b[k..].starts_with(b"trait")
+                    || b[k..].starts_with(b"extern"))
+            {
+                return true;
+            }
+        }
+        i = p + 1;
+    }
+    false
+}
+
+/// Lines the upward SAFETY scan may pass through: blank/comment-only,
+/// attributes, a lone `}`, and sibling unsafe item heads (one note may
+/// cover a `Send`+`Sync` pair).
+fn attr_or_pass(code: &str) -> bool {
+    let t = code.trim_start();
+    if t.starts_with("#[") || t.starts_with("#![") {
+        return true;
+    }
+    let u = t.strip_prefix('}').unwrap_or(t);
+    if u.trim().is_empty() {
+        return true;
+    }
+    t.starts_with("unsafe impl")
+        || t.starts_with("pub unsafe")
+        || t.starts_with("pub(crate) unsafe")
+}
+
+/// `\blet\s+(mut\s+)?\w+\s*=` — the line binds a named guard.
+fn has_stmt_guard(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = find_from(b, i, b"let") {
+        let before_ok = p == 0 || !is_word(b[p - 1]);
+        let mut j = p + 3;
+        if before_ok && j < b.len() && b[j].is_ascii_whitespace() {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            // try with the optional `mut ` consumed, then without
+            for with_mut in [true, false] {
+                let mut k = j;
+                if with_mut {
+                    let ok = b[k..].starts_with(b"mut")
+                        && k + 3 < b.len()
+                        && b[k + 3].is_ascii_whitespace();
+                    if !ok {
+                        continue;
+                    }
+                    k += 3;
+                    while k < b.len() && b[k].is_ascii_whitespace() {
+                        k += 1;
+                    }
+                }
+                let s = k;
+                while k < b.len() && is_word(b[k]) {
+                    k += 1;
+                }
+                if k == s {
+                    continue;
+                }
+                k = skip_ws(b, k);
+                if k < b.len() && b[k] == b'=' {
+                    return true;
+                }
+            }
+        }
+        i = p + 1;
+    }
+    false
+}
+
+/// `drop\s*\(\s*\w+\s*\)` present (with a literal `drop(` on the line).
+fn drop_releases(code: &str) -> bool {
+    if !code.contains("drop(") {
+        return false;
+    }
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = find_from(b, i, b"drop") {
+        let mut j = skip_ws(b, p + 4);
+        if j < b.len() && b[j] == b'(' {
+            j = skip_ws(b, j + 1);
+            let s = j;
+            while j < b.len() && is_word(b[j]) {
+                j += 1;
+            }
+            if j > s {
+                j = skip_ws(b, j);
+                if j < b.len() && b[j] == b')' {
+                    return true;
+                }
+            }
+        }
+        i = p + 1;
+    }
+    false
+}
+
+/// `lock_recover\s*\(\s*&?NAME\s*\)` starting at `p`.
+fn match_recover(code: &str, p: usize) -> Option<(String, usize)> {
+    let b = code.as_bytes();
+    let mut i = skip_ws(b, p + 12);
+    if i >= b.len() || b[i] != b'(' {
+        return None;
+    }
+    i = skip_ws(b, i + 1);
+    if i < b.len() && b[i] == b'&' {
+        i += 1;
+    }
+    if i >= b.len() || !is_ident_start(b[i]) {
+        return None;
+    }
+    let s = i;
+    i += 1;
+    while i < b.len() && is_word_or_dot(b[i]) {
+        i += 1;
+    }
+    let mut e = i;
+    if b[i..].starts_with(b"()") {
+        i += 2;
+        e = i;
+    }
+    i = skip_ws(b, i);
+    if i < b.len() && b[i] == b')' {
+        Some((code[s..e].to_string(), i + 1))
+    } else {
+        None
+    }
+}
+
+/// Non-greedy `NAME\.lock\s*\(\)` starting at `start`.
+fn match_dot_lock(code: &str, start: usize) -> Option<(String, usize)> {
+    let b = code.as_bytes();
+    let mut j = start + 1;
+    loop {
+        if b[j..].starts_with(b".lock") {
+            let k = skip_ws(b, j + 5);
+            if b[k..].starts_with(b"()") {
+                return Some((code[start..j].to_string(), k + 2));
+            }
+        }
+        if j < b.len() && is_word_or_dot(b[j]) {
+            j += 1;
+        } else {
+            return None;
+        }
+    }
+}
+
+/// All lock acquisitions on a code line, left to right.
+fn lock_matches(code: &str) -> Vec<String> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i..].starts_with(b"lock_recover") {
+            if let Some((name, end)) = match_recover(code, i) {
+                out.push(name);
+                i = end;
+                continue;
+            }
+        }
+        if is_ident_start(b[i]) {
+            if let Some((name, end)) = match_dot_lock(code, i) {
+                out.push(name);
+                i = end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `\bfn\s+NAME` where NAME contains `parse` or `from_json`.
+fn protocol_fn(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while let Some(p) = find_from(b, i, b"fn") {
+        let before_ok = p == 0 || !is_word(b[p - 1]);
+        let mut j = p + 2;
+        if before_ok && j < b.len() && b[j].is_ascii_whitespace() {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            let s = j;
+            while j < b.len() && is_word(b[j]) {
+                j += 1;
+            }
+            let name = &code[s..j];
+            if name.contains("parse") || name.contains("from_json") {
+                return true;
+            }
+        }
+        i = p + 1;
+    }
+    false
+}
+
+/// `\b[a-z_][\w\.]*\[` — indexing through a lowercase (dotted) path.
+fn has_lower_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for p in 0..b.len() {
+        if b[p] != b'[' {
+            continue;
+        }
+        let mut s = p;
+        while s > 0 && is_word_or_dot(b[s - 1]) {
+            s -= 1;
+        }
+        if s == p {
+            continue;
+        }
+        // candidate starts: the run head, or any char right after a `.`
+        // (both are `\b` positions because `.` is a non-word char)
+        for q in s..p {
+            let boundary = q == s || b[q - 1] == b'.';
+            if boundary && (b[q].is_ascii_lowercase() || b[q] == b'_') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Run all per-file rules; lock edges accumulate into `graph` for the
+/// whole-repo R4 cycle check.
+pub fn check_file(
+    relpath: &str,
+    text: &str,
+    graph: &mut LockGraph,
+) -> (Vec<Finding>, Vec<Finding>) {
+    let lines = lex(text);
+    let tests = test_regions(&lines);
+    let in_allow = ALLOWLIST.iter().any(|s| relpath.contains(s));
+    let mut errors: Vec<Finding> = Vec::new();
+    let mut warnings: Vec<Finding> = Vec::new();
+
+    let mut depths = Vec::with_capacity(lines.len());
+    let mut d = 0i32;
+    for ln in &lines {
+        depths.push(d);
+        d += ln.open_delta;
+    }
+
+    // R1: unsafe sites need SAFETY:
+    for i in 0..lines.len() {
+        if tests.contains(&i) || !unsafe_site(&lines[i].code) {
+            continue;
+        }
+        let mut ok = lines[i].comment.contains("SAFETY:");
+        let mut j = i as isize - 1;
+        let mut hops = 0;
+        while !ok && j >= 0 && hops < 10 {
+            let cj = &lines[j as usize];
+            if cj.comment.contains("SAFETY:") {
+                ok = true;
+                break;
+            }
+            let nonblank = !cj.code.trim().is_empty();
+            if nonblank && !attr_or_pass(&cj.code) && !unsafe_site(&cj.code) {
+                break;
+            }
+            j -= 1;
+            hops += 1;
+        }
+        if !ok {
+            errors.push(Finding {
+                file: relpath.to_string(),
+                line: i + 1,
+                rule: "R1",
+                msg: "unsafe site without a `// SAFETY:` justification".to_string(),
+            });
+        }
+    }
+
+    // R2: no panicking APIs in the serving allowlist
+    if in_allow {
+        for i in 0..lines.len() {
+            if tests.contains(&i) {
+                continue;
+            }
+            let code = lines[i].code.as_bytes();
+            for pat in PANIC_PATTERNS {
+                let mut s = 0usize;
+                while let Some(p) = find_from(code, s, pat.as_bytes()) {
+                    // (`.expect_err(` cannot collide: the byte after
+                    // `.expect` is `_`, never `(`)
+                    errors.push(Finding {
+                        file: relpath.to_string(),
+                        line: i + 1,
+                        rule: "R2",
+                        msg: format!(
+                            "panicking `{}` on the serving path",
+                            pat.trim_matches('.')
+                        ),
+                    });
+                    s = p + pat.len();
+                }
+            }
+        }
+    }
+
+    // R3: Ordering::Relaxed requires counter RMW or an ORDERING: note.
+    // A `// ORDERING:` comment covers the remainder of its brace scope.
+    let mut note_stack: Vec<i32> = Vec::new();
+    for i in 0..lines.len() {
+        note_stack.retain(|&nd| nd <= depths[i]);
+        if lines[i].comment.contains("ORDERING:") {
+            note_stack.push(depths[i]);
+        }
+        if tests.contains(&i) || !lines[i].code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        if COUNTER_RMW.iter().any(|k| lines[i].code.contains(k)) {
+            continue;
+        }
+        if lines[i].comment.contains("ORDERING:") || !note_stack.is_empty() {
+            continue;
+        }
+        errors.push(Finding {
+            file: relpath.to_string(),
+            line: i + 1,
+            rule: "R3",
+            msg: "`Ordering::Relaxed` load/store without an `// ORDERING:` note \
+                  (or use a counter RMW)"
+                .to_string(),
+        });
+    }
+
+    // R4 extraction: lock acquisitions with a guard still held
+    let stem = relpath.rsplit('/').next().unwrap_or(relpath);
+    let stem = stem.rsplit_once('.').map(|(s, _)| s).unwrap_or(stem);
+    let mut held: Vec<(i32, String, bool)> = Vec::new();
+    for i in 0..lines.len() {
+        if tests.contains(&i) {
+            continue;
+        }
+        held.retain(|h| h.0 <= depths[i]);
+        let code = &lines[i].code;
+        let stmt_guard = has_stmt_guard(code);
+        for name in lock_matches(code) {
+            let name = name.strip_suffix(".lock").unwrap_or(&name);
+            let canon = format!("{stem}.{name}");
+            for (_, src, sg) in &held {
+                if *sg && src != &canon {
+                    graph
+                        .entry(src.clone())
+                        .or_default()
+                        .insert((canon.clone(), relpath.to_string(), i + 1));
+                }
+            }
+            if stmt_guard {
+                held.push((depths[i], canon, true));
+            }
+            // temporaries (`x.lock()...` in one expression) drop at the
+            // end of the statement — they never hold across another lock
+        }
+        // end-of-statement: temporaries die; statement guards persist to
+        // end of scope (approximation: `drop(g)` also releases)
+        if drop_releases(code) {
+            held.retain(|h| !h.2);
+        }
+    }
+
+    // W1: indexing in protocol-boundary fns
+    if in_allow {
+        let mut cur_fn_depth: Option<i32> = None;
+        for i in 0..lines.len() {
+            if tests.contains(&i) {
+                continue;
+            }
+            if let Some(fd) = cur_fn_depth {
+                if depths[i] <= fd && i > 0 && lines[i].code.trim().starts_with('}') {
+                    cur_fn_depth = None;
+                }
+            }
+            if protocol_fn(&lines[i].code) {
+                cur_fn_depth = Some(depths[i]);
+                continue;
+            }
+            if cur_fn_depth.is_some() && has_lower_index(&lines[i].code) {
+                let prev_ok = i > 0 && lines[i - 1].comment.contains("BOUNDS:");
+                if !lines[i].comment.contains("BOUNDS:") && !prev_ok {
+                    warnings.push(Finding {
+                        file: relpath.to_string(),
+                        line: i + 1,
+                        rule: "W1",
+                        msg: "indexing in a protocol-boundary fn without a \
+                              `// BOUNDS:` note"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+
+    (errors, warnings)
+}
+
+/// White/gray/black DFS over the lock graph; every gray back-edge emits
+/// the cycle path (deterministic order via sorted containers).
+pub fn find_cycles(graph: &LockGraph) -> Vec<Vec<String>> {
+    const WHITE: u8 = 0;
+    const GRAY: u8 = 1;
+
+    fn dfs<'a>(
+        u: &'a str,
+        graph: &'a LockGraph,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+        cycles: &mut Vec<Vec<String>>,
+    ) {
+        color.insert(u, GRAY);
+        stack.push(u);
+        if let Some(edges) = graph.get(u) {
+            for (v, _file, _line) in edges {
+                match color.get(v.as_str()).copied().unwrap_or(WHITE) {
+                    GRAY => {
+                        let k =
+                            stack.iter().position(|x| *x == v.as_str()).unwrap_or(0);
+                        let mut cyc: Vec<String> =
+                            stack[k..].iter().map(|s| s.to_string()).collect();
+                        cyc.push(v.clone());
+                        cycles.push(cyc);
+                    }
+                    WHITE => dfs(v, graph, color, stack, cycles),
+                    _ => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(u, 2);
+    }
+
+    let mut color: BTreeMap<&str, u8> =
+        graph.keys().map(|k| (k.as_str(), WHITE)).collect();
+    let mut stack: Vec<&str> = Vec::new();
+    let mut cycles = Vec::new();
+    let keys: Vec<&str> = graph.keys().map(|k| k.as_str()).collect();
+    for k in keys {
+        if color.get(k).copied().unwrap_or(WHITE) == WHITE {
+            dfs(k, graph, &mut color, &mut stack, &mut cycles);
+        }
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(rel: &str, src: &str) -> (Vec<Finding>, Vec<Finding>) {
+        let mut g = LockGraph::new();
+        check_file(rel, src, &mut g)
+    }
+
+    #[test]
+    fn r1_flags_bare_unsafe_and_accepts_noted() {
+        let (e, _) = check("x.rs", "fn f() {\n    unsafe { g() }\n}");
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].rule, "R1");
+        assert_eq!(e[0].line, 2);
+        let (e, _) = check(
+            "x.rs",
+            "fn f() {\n    // SAFETY: g has no preconditions here.\n    unsafe { g() }\n}",
+        );
+        assert!(e.is_empty(), "{e:?}");
+    }
+
+    #[test]
+    fn r1_note_reaches_through_attributes_and_siblings() {
+        let src = "// SAFETY: detection gates both impls.\n\
+                   #[allow(dead_code)]\nunsafe impl Send for X {}\nunsafe impl Sync for X {}";
+        let (e, _) = check("x.rs", src);
+        assert!(e.is_empty(), "{e:?}");
+    }
+
+    #[test]
+    fn r2_only_fires_inside_allowlist_and_outside_tests() {
+        let src = "fn f(v: &[u32]) {\n    v.first().unwrap();\n}\n\
+                   #[cfg(test)]\nmod t {\n    fn g() { None::<u32>.unwrap(); }\n}";
+        let (e, _) = check("coordinator/x.rs", src);
+        assert_eq!(e.len(), 1);
+        assert_eq!((e[0].rule, e[0].line), ("R2", 2));
+        let (e, _) = check("model/x.rs", src);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn r3_counter_rmw_and_scoped_note_are_exempt() {
+        let (e, _) = check("x.rs", "c.fetch_add(1, Ordering::Relaxed);");
+        assert!(e.is_empty());
+        let (e, _) = check("x.rs", "c.load(Ordering::Relaxed);");
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].rule, "R3");
+        let src = "fn f() {\n    // ORDERING: monotone counter, staleness ok.\n\
+                   \n    let a = c.load(Ordering::Relaxed);\n    let b = d.load(Ordering::Relaxed);\n}";
+        let (e, _) = check("x.rs", src);
+        assert!(e.is_empty(), "{e:?}");
+    }
+
+    #[test]
+    fn r4_builds_edges_and_detects_cycles() {
+        // lock names are file-stem-qualified, so the inversion must sit
+        // in the same file to close the cycle
+        let mut g = LockGraph::new();
+        let ab = "fn ab(t: &T) {\n    let ga = t.a.lock();\n    let gb = t.b.lock();\n}";
+        check_file("m/ab.rs", ab, &mut g);
+        assert_eq!(g.len(), 1, "{g:?}");
+        assert!(find_cycles(&g).is_empty());
+
+        let both = "fn ab(t: &T) {\n    let ga = t.a.lock();\n    let gb = t.b.lock();\n}\n\
+                    fn ba(t: &T) {\n    let gb = t.b.lock();\n    let ga = t.a.lock();\n}";
+        let mut g2 = LockGraph::new();
+        check_file("m/ab.rs", both, &mut g2);
+        let cycles = find_cycles(&g2);
+        assert_eq!(cycles.len(), 1, "{cycles:?}");
+        assert!(cycles[0].contains(&"ab.t.a".to_string()), "{cycles:?}");
+        assert!(cycles[0].contains(&"ab.t.b".to_string()), "{cycles:?}");
+    }
+
+    #[test]
+    fn r4_drop_releases_the_guard() {
+        let mut g = LockGraph::new();
+        let src = "fn f(t: &T) {\n    let ga = t.a.lock();\n    drop(ga);\n    let gb = t.b.lock();\n}";
+        check_file("m/f.rs", src, &mut g);
+        assert!(g.is_empty(), "{g:?}");
+    }
+
+    #[test]
+    fn r4_lock_recover_and_temporaries() {
+        let mut g = LockGraph::new();
+        let src = "fn f(t: &T) {\n    let ga = lock_recover(&t.a);\n    *lock_recover(&t.b) += 1;\n}";
+        check_file("m/f.rs", src, &mut g);
+        // guard ga held while t.b is taken -> one edge, no cycle
+        assert_eq!(g.len(), 1);
+        assert!(g.contains_key("f.t.a"), "{g:?}");
+        // the temporary t.b guard was never held, so no reverse edge
+        assert!(find_cycles(&g).is_empty());
+    }
+
+    #[test]
+    fn w1_wants_bounds_note_on_same_or_previous_line() {
+        let bad = "fn parse_header(b: &[u8]) -> u8 {\n    b[0]\n}";
+        let (_, w) = check("obs/x.rs", bad);
+        assert_eq!(w.len(), 1);
+        assert_eq!((w[0].rule, w[0].line), ("W1", 2));
+        let good = "fn parse_header(b: &[u8]) -> u8 {\n    // BOUNDS: framing check above.\n    b[0]\n}";
+        let (_, w) = check("obs/x.rs", good);
+        assert!(w.is_empty(), "{w:?}");
+        // outside a protocol fn, indexing is fine
+        let (_, w) = check("obs/x.rs", "fn sum(b: &[u8]) -> u8 {\n    b[0]\n}");
+        assert!(w.is_empty());
+    }
+}

@@ -1,0 +1,138 @@
+//! Pins the Rust audit pass and `audit_mirror.py` to each other over
+//! the shared fixture corpus: same findings, same message strings, same
+//! report lines.  Any rule change must update both implementations and
+//! these expectations together.
+
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
+}
+
+fn run_fixtures() -> (Vec<rrs_audit::Finding>, Vec<rrs_audit::Finding>) {
+    rrs_audit::run(&fixture_root())
+}
+
+#[test]
+fn fixture_corpus_produces_the_pinned_findings() {
+    let (errors, warnings) = run_fixtures();
+    let got: Vec<(String, usize, &str)> = errors
+        .iter()
+        .map(|f| (f.file.clone(), f.line, f.rule))
+        .collect();
+    let mut sorted = got.clone();
+    sorted.sort();
+    let want: Vec<(String, usize, &str)> = vec![
+        ("<global>".into(), 0, "R4"),
+        ("missing_safety.rs".into(), 4, "R1"),
+        ("panics/coordinator/bad.rs".into(), 5, "R2"),
+        ("panics/coordinator/bad.rs".into(), 7, "R2"),
+        ("relaxed_no_note.rs".into(), 11, "R3"),
+    ];
+    assert_eq!(sorted, want, "full error list: {errors:?}");
+    assert_eq!(warnings.len(), 1, "{warnings:?}");
+    assert_eq!(warnings[0].file, "idx/obs/parse_bad.rs");
+    assert_eq!(warnings[0].line, 12);
+    assert_eq!(warnings[0].rule, "W1");
+}
+
+#[test]
+fn fixture_messages_match_the_published_wording() {
+    let (errors, warnings) = run_fixtures();
+    let msg = |rule: &str| {
+        errors
+            .iter()
+            .find(|f| f.rule == rule)
+            .map(|f| f.msg.clone())
+            .unwrap_or_default()
+    };
+    assert_eq!(msg("R1"), "unsafe site without a `// SAFETY:` justification");
+    assert_eq!(
+        msg("R3"),
+        "`Ordering::Relaxed` load/store without an `// ORDERING:` note \
+         (or use a counter RMW)"
+    );
+    assert_eq!(
+        msg("R4"),
+        "lock acquisition cycle: ab.t.a -> ab.t.b -> ab.t.a"
+    );
+    assert!(errors
+        .iter()
+        .any(|f| f.msg == "panicking `unwrap()` on the serving path"));
+    assert!(errors
+        .iter()
+        .any(|f| f.msg == "panicking `panic!` on the serving path"));
+    assert_eq!(
+        warnings[0].msg,
+        "indexing in a protocol-boundary fn without a `// BOUNDS:` note"
+    );
+}
+
+#[test]
+fn clean_fixture_contributes_nothing() {
+    let (errors, warnings) = run_fixtures();
+    assert!(errors.iter().all(|f| f.file != "clean.rs"), "{errors:?}");
+    assert!(warnings.iter().all(|f| f.file != "clean.rs"), "{warnings:?}");
+}
+
+/// The binary's report lines must match the Python mirror byte for byte
+/// (modulo the summary line, which names the implementation).  Skips
+/// quietly when `python3` is unavailable.
+#[test]
+fn report_lines_match_python_mirror() {
+    let mirror = Path::new(env!("CARGO_MANIFEST_DIR")).join("audit_mirror.py");
+    let out = std::process::Command::new("python3")
+        .arg(&mirror)
+        .arg(fixture_root())
+        .output();
+    let out = match out {
+        Ok(o) => o,
+        Err(_) => {
+            eprintln!("python3 unavailable; skipping mirror comparison");
+            return;
+        }
+    };
+    assert_eq!(out.status.code(), Some(1), "mirror should exit 1 on fixtures");
+    let text = String::from_utf8_lossy(&out.stdout);
+    let mut mirror_lines: Vec<&str> = text
+        .lines()
+        .filter(|l| !l.starts_with("rrs-audit"))
+        .collect();
+    mirror_lines.sort_unstable();
+
+    let (errors, warnings) = run_fixtures();
+    let rendered = rrs_audit::render_text(&errors, &warnings);
+    let mut ours: Vec<&str> = rendered
+        .iter()
+        .map(String::as_str)
+        .filter(|l| !l.starts_with("rrs-audit"))
+        .collect();
+    ours.sort_unstable();
+    assert_eq!(ours, mirror_lines);
+
+    // and the summary counts agree
+    assert!(text.contains("rrs-audit(mirror): 5 error(s), 1 warning(s)"), "{text}");
+    assert_eq!(
+        rendered.last().map(String::as_str),
+        Some("rrs-audit: 5 error(s), 1 warning(s)")
+    );
+}
+
+/// The audited tree itself must stay clean — the same invariant CI
+/// enforces with `cargo run -p rrs-audit` at the repo root.  Skips when
+/// the checkout layout is unexpected (e.g. the package is vendored
+/// elsewhere).
+#[test]
+fn repo_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .map(Path::to_path_buf)
+        .unwrap_or_default();
+    if !root.join("rust").join("src").is_dir() {
+        eprintln!("no rust/src above the tool; skipping repo sweep");
+        return;
+    }
+    let (errors, _warnings) = rrs_audit::run(&root);
+    assert!(errors.is_empty(), "repo audit regressions: {errors:?}");
+}

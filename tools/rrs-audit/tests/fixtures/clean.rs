@@ -1,0 +1,10 @@
+// Fixture: zero findings.  Exercises the lexer's literal stripping so
+// rule tokens inside strings, raw strings, and chars never match.
+
+pub fn add(a: u32, b: u32) -> u32 {
+    a.wrapping_add(b)
+}
+
+pub fn labels() -> (&'static str, &'static str, char) {
+    ("unsafe { }", r#"x.load(Ordering::Relaxed) // panic!"#, '{')
+}

@@ -1,0 +1,18 @@
+// Fixture: W1 — indexing inside a protocol-boundary fn ("obs/" is in
+// the allowlist) without a BOUNDS note.  Expect exactly one warning.
+
+pub fn sum(b: &[u8]) -> u8 {
+    // not a protocol-boundary fn name: indexing here is unchecked by W1
+    // (this fn sits before any parse fn — the scanner's fn region only
+    // opens at a *parse*/*from_json* name)
+    b[0]
+}
+
+pub fn parse_header(b: &[u8]) -> u8 {
+    b[0]
+}
+
+pub fn parse_checked(b: &[u8]) -> u8 {
+    // BOUNDS: caller guarantees at least one byte (framing check).
+    b[0]
+}

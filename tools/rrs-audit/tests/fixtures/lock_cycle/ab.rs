@@ -1,0 +1,35 @@
+// Fixture: R4 — the two functions acquire a and b in opposite orders
+// while holding a guard, producing the cycle ab.t.a -> ab.t.b -> ab.t.a.
+
+use std::sync::Mutex;
+
+pub struct Two {
+    pub a: Mutex<u32>,
+    pub b: Mutex<u32>,
+}
+
+pub fn ab(t: &Two) -> u32 {
+    let ga = lock_recover(&t.a);
+    let gb = lock_recover(&t.b);
+    *ga + *gb
+}
+
+pub fn ba(t: &Two) -> u32 {
+    let gb = t.b.lock().unwrap_or_else(|e| e.into_inner());
+    let ga = t.a.lock().unwrap_or_else(|e| e.into_inner());
+    *ga + *gb
+}
+
+pub fn ab_released(t: &Two) -> u32 {
+    // dropping the first guard before the second acquisition adds no
+    // edge, so this function must not widen the cycle
+    let ga = lock_recover(&t.a);
+    let x = *ga;
+    drop(ga);
+    let gb = lock_recover(&t.b);
+    x + *gb
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -1,0 +1,25 @@
+// Fixture: R1 — one bare unsafe block, one properly justified.
+
+pub fn bad(x: &[u8]) -> u8 {
+    unsafe { *x.as_ptr() }
+}
+
+pub fn good(x: &[u8]) -> u8 {
+    // SAFETY: the slice is non-empty by the caller's framing contract,
+    // so reading its first byte through the raw pointer is in bounds.
+    unsafe { *x.as_ptr() }
+}
+
+// SAFETY: detection gates both marker impls; one note covers the pair.
+unsafe impl Send for Marker {}
+unsafe impl Sync for Marker {}
+
+pub struct Marker;
+
+#[cfg(test)]
+mod tests {
+    // unsafe in test code is exempt from R1
+    pub fn probe(x: &[u8]) -> u8 {
+        unsafe { *x.as_ptr() }
+    }
+}

@@ -1,0 +1,26 @@
+// Fixture: R2 — panicking APIs on the serving path ("coordinator/" is
+// in the allowlist).  Expect two hits: .unwrap() and panic!.
+
+pub fn serve(v: &[u32]) -> u32 {
+    let first = *v.first().unwrap();
+    if first > 10 {
+        panic!("too big");
+    }
+    first
+}
+
+pub fn serve_quietly(v: &[u32]) -> u32 {
+    // the string literal below must NOT count: it is stripped by the
+    // lexer before rule matching
+    let _label = "call .unwrap() at your peril";
+    v.first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        assert_eq!(super::serve(&[1]), 1);
+        let _ = "7".parse::<u32>().unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: R3 — one bare Relaxed load, one counter RMW (exempt), one
+// covered by a scoped ORDERING note.  Expect exactly one hit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn read_bad(c: &AtomicU64) -> u64 {
+    c.load(Ordering::Relaxed)
+}
+
+pub fn read_ok(c: &AtomicU64) -> u64 {
+    // ORDERING: monotone counter; readers tolerate staleness.
+    c.load(Ordering::Relaxed)
+}
